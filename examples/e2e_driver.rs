@@ -1,0 +1,90 @@
+//! End-to-end driver — the full-system validation run recorded in
+//! EXPERIMENTS.md.
+//!
+//! Trains the `lenet_s` classifier on the full `synmnist` suite (10k train
+//! samples) for a few hundred epochs under FULL training, then under
+//! GRAD-MATCH-PB-WARM at 10% and 30% budgets (plus RANDOM at 10% as the
+//! floor), logging the loss curve and test accuracy over wall-clock time.
+//! This exercises every layer in composition: synthetic data pipeline →
+//! PJRT executables built from the JAX+Pallas artifacts → gradient cache →
+//! OMP selection → weighted-SGD training loop → metrics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_driver           # full run
+//! cargo run --release --example e2e_driver -- --epochs 60 --n-train 4000  # smaller
+//! ```
+
+use anyhow::Result;
+use gradmatch::cli::Cli;
+use gradmatch::coordinator::{write_results, Coordinator};
+
+fn main() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    args.insert(0, "train".into());
+    let cli = Cli::parse(&args)?;
+    let mut cfg = cli.experiment_config()?;
+    if cli.flag("epochs").is_none() {
+        cfg.epochs = 200;
+    }
+    if cli.flag("eval-every").is_none() {
+        cfg.eval_every = 10;
+    }
+    println!(
+        "e2e driver: dataset={} model={} epochs={} n_train={} R={}",
+        cfg.dataset,
+        cfg.model,
+        cfg.epochs,
+        if cfg.n_train == 0 { 10_000 } else { cfg.n_train },
+        cfg.r_interval
+    );
+
+    let mut coord = Coordinator::new(&cfg.artifacts_dir)?;
+    let mut all = Vec::new();
+
+    // FULL skyline
+    let full = coord.full_baseline(&cfg, cfg.seed)?;
+    println!("\n== FULL ==");
+    print_convergence(&full.convergence);
+    println!(
+        "FULL final: acc {:.2}%  time {:.1}s  energy(sim) {:.5} kWh",
+        full.test_acc * 100.0,
+        full.total_secs,
+        full.energy_kwh
+    );
+    all.push(full.clone());
+
+    for (strat, budget) in [
+        ("random", 0.10),
+        ("gradmatch-pb-warm", 0.10),
+        ("gradmatch-pb-warm", 0.30),
+    ] {
+        let mut c = cfg.clone();
+        c.strategy = strat.into();
+        c.budget_frac = budget;
+        println!("\n== {strat} @ {:.0}% ==", budget * 100.0);
+        let r = coord.run_one(&c, c.seed)?;
+        print_convergence(&r.convergence);
+        println!(
+            "{strat} @ {:.0}% final: acc {:.2}% (rel-err {:.2}%)  time {:.1}s  speedup {:.2}x  select {:.1}s  energy-gain {:.2}x",
+            budget * 100.0,
+            r.test_acc * 100.0,
+            100.0 * (full.test_acc - r.test_acc) / full.test_acc,
+            r.total_secs,
+            full.total_secs / r.total_secs.max(1e-9),
+            r.select_secs,
+            full.energy_kwh / r.energy_kwh.max(1e-12),
+        );
+        all.push(r);
+    }
+
+    let path = write_results(&cfg.out_dir, "e2e_driver", &all)?;
+    println!("\nwrote {path}");
+    Ok(())
+}
+
+fn print_convergence(points: &[(usize, f64, f64)]) {
+    println!("  epoch    cum-time    test-acc");
+    for &(e, t, a) in points {
+        println!("  {e:>5}    {t:>7.1}s    {:>6.2}%", a * 100.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! Quickstart: train a classifier on 10% of a synthetic MNIST-scale dataset
+//! with GRAD-MATCH-PB-WARM and compare against RANDOM and full training.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Flags (all optional): `--dataset synmnist --budget 0.1 --epochs 40
+//! --n-train 4000 --seed 42`.
+
+use anyhow::Result;
+use gradmatch::cli::Cli;
+use gradmatch::coordinator::Coordinator;
+
+fn main() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    args.insert(0, "train".into());
+    let cli = Cli::parse(&args)?;
+
+    let mut cfg = cli.experiment_config()?;
+    // quickstart defaults: small but real
+    if cli.flag("epochs").is_none() {
+        cfg.epochs = 40;
+    }
+    if cli.flag("n-train").is_none() {
+        cfg.n_train = 4000;
+    }
+    if cli.flag("eval-every").is_none() {
+        cfg.eval_every = 10;
+    }
+    cfg.r_interval = cfg.r_interval.min(10);
+
+    println!("GRAD-MATCH quickstart — dataset={} model={} budget={:.0}%", cfg.dataset, cfg.model, cfg.budget_frac * 100.0);
+    let mut coord = Coordinator::new(&cfg.artifacts_dir)?;
+
+    let full = coord.full_baseline(&cfg, cfg.seed)?;
+    println!(
+        "\nFULL      : acc {:>6.2}%  time {:>7.2}s  energy(sim) {:.5} kWh",
+        full.test_acc * 100.0,
+        full.total_secs,
+        full.energy_kwh
+    );
+
+    for strat in ["random", "gradmatch-pb", "gradmatch-pb-warm"] {
+        let mut c = cfg.clone();
+        c.strategy = strat.into();
+        let r = coord.run_one(&c, c.seed)?;
+        println!(
+            "{strat:<10}: acc {:>6.2}%  time {:>7.2}s (select {:>5.2}s)  speedup {:>5.2}x  rel-err {:>5.2}%",
+            r.test_acc * 100.0,
+            r.total_secs,
+            r.select_secs,
+            full.total_secs / r.total_secs.max(1e-9),
+            100.0 * (full.test_acc - r.test_acc) / full.test_acc
+        );
+    }
+    println!("\n(energy numbers are simulated — see DESIGN.md §4)");
+    Ok(())
+}

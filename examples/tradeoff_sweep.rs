@@ -1,0 +1,69 @@
+//! Figure-3-style accuracy/efficiency trade-off sweep: every strategy ×
+//! every budget on a dataset, printed as the scatter data (relative error
+//! vs speedup, both w.r.t. full training) plus the Fig.-1 efficiency
+//! summary.
+//!
+//! ```bash
+//! cargo run --release --example tradeoff_sweep -- --dataset synmnist \
+//!     --budgets 0.01,0.03,0.05,0.1 --epochs 60 --n-train 6000
+//! ```
+
+use anyhow::{anyhow, Result};
+use gradmatch::cli::Cli;
+use gradmatch::coordinator::{write_results, Coordinator};
+use gradmatch::selection::paper_strategies;
+
+fn main() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    args.insert(0, "sweep".into());
+    let cli = Cli::parse(&args)?;
+    let mut cfg = cli.experiment_config()?;
+    if cli.flag("epochs").is_none() {
+        cfg.epochs = 60;
+    }
+    if cli.flag("n-train").is_none() {
+        cfg.n_train = 6000;
+    }
+    cfg.r_interval = cfg.r_interval.min(20);
+
+    let budgets: Vec<f64> = match cli.flag_list("budgets") {
+        Some(bs) => bs
+            .iter()
+            .map(|b| b.parse().map_err(|e| anyhow!("budget {b}: {e}")))
+            .collect::<Result<_>>()?,
+        None => vec![0.05, 0.10, 0.20, 0.30],
+    };
+    let strategies: Vec<String> = cli
+        .flag_list("strategies")
+        .unwrap_or_else(|| paper_strategies().into_iter().map(str::to_string).collect());
+    let strat_refs: Vec<&str> = strategies.iter().map(String::as_str).collect();
+
+    println!(
+        "trade-off sweep: dataset={} epochs={} budgets={:?}",
+        cfg.dataset, cfg.epochs, budgets
+    );
+    let mut coord = Coordinator::new(&cfg.artifacts_dir)?;
+    let rows = coord.sweep(&cfg, &strat_refs, &budgets)?;
+
+    println!("\nfull-training skyline acc: {:.2}%\n", rows[0].full_acc * 100.0);
+    println!("speedup-vs-relative-error scatter (paper Fig. 3):");
+    for row in &rows {
+        println!("  {}", row.format());
+    }
+
+    // Fig. 1 style efficiency summary for the paper's flagship variant
+    println!("\nFig.-1 efficiency summary (gradmatch-pb-warm):");
+    for row in rows.iter().filter(|r| r.summary.strategy == "gradmatch-pb-warm") {
+        println!(
+            "  {:>3.0}% subset -> {:>5.2}x speedup at {:>5.2}% accuracy drop",
+            row.summary.budget_frac * 100.0,
+            row.speedup,
+            row.rel_err_pct
+        );
+    }
+
+    let summaries: Vec<_> = rows.into_iter().map(|r| r.summary).collect();
+    let path = write_results(&cfg.out_dir, &format!("tradeoff_{}", cfg.dataset), &summaries)?;
+    println!("\nwrote {path}");
+    Ok(())
+}

@@ -1,0 +1,165 @@
+"""AOT pipeline: lower every L2 entry point to HLO **text** artifacts.
+
+``python -m compile.aot --out ../artifacts`` produces::
+
+    artifacts/
+      manifest.json                 # shapes/dtypes/constants per entry
+      <model>/<entry>.hlo.txt       # one HLO module per entry point
+
+The interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE here, at build time; the Rust coordinator is self-contained
+afterwards.  ``make artifacts`` is a no-op while ``manifest.json`` is newer
+than the python sources.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_entry(args) -> List[Dict]:
+    out = []
+    for a in args:
+        out.append({"shape": list(a.shape), "dtype": str(a.dtype)})
+    return out
+
+
+def entry_points(spec: M.ModelSpec) -> Dict[str, Tuple[Callable, list]]:
+    """(function, example-args) for every AOT entry of one model variant."""
+    d, h, c, b, g, p = spec.d, spec.h, spec.c, spec.batch, spec.chunk, spec.p
+    params = [_sds((d, h)), _sds((h,)), _sds((h, c)), _sds((c,))]
+
+    def pk(f):
+        """Adapt f(spec, params, ...) to flat positional params."""
+        def wrapped(w1, b1, w2, b2, *rest):
+            return f(spec, (w1, b1, w2, b2), *rest)
+        return wrapped
+
+    def tk(w1, b1, w2, b2, m1, mb1, m2, mb2, x, y, w, lr):
+        return M.train_step(spec, (w1, b1, w2, b2), (m1, mb1, m2, mb2), x, y, w, lr)
+
+    s_size = M.state_size(spec)
+
+    def tf(state, x, y, w, lr):
+        return M.train_step_fused(spec, state, x, y, w, lr)
+
+    return {
+        "init": (lambda seed: M.init(spec, seed), [_sds((), jnp.int32)]),
+        "train_step": (
+            tk,
+            params + params + [_sds((b, d)), _sds((b,), jnp.int32), _sds((b,)), _sds(())],
+        ),
+        "train_step_fused": (
+            tf,
+            [_sds((s_size,)), _sds((b, d)), _sds((b,), jnp.int32), _sds((b,)), _sds(())],
+        ),
+        "eval_chunk": (
+            pk(M.eval_chunk),
+            params + [_sds((g, d)), _sds((g,), jnp.int32), _sds((g,))],
+        ),
+        "grads_chunk": (
+            pk(M.grads_chunk),
+            params + [_sds((g, d)), _sds((g,), jnp.int32), _sds((g,))],
+        ),
+        "mean_grad_chunk": (
+            pk(M.mean_grad_chunk),
+            params + [_sds((g, d)), _sds((g,), jnp.int32), _sds((g,))],
+        ),
+        "batch_gradsum_chunk": (
+            pk(M.batch_gradsum_chunk),
+            params + [_sds((g, d)), _sds((g,), jnp.int32), _sds((g,))],
+        ),
+        "corr_chunk": (
+            lambda gm, r: M.corr_chunk(spec, gm, r),
+            [_sds((g, p)), _sds((p,))],
+        ),
+        "sqdist_chunk": (
+            lambda a, bb: M.sqdist_chunk(spec, a, bb),
+            [_sds((g, p)), _sds((g, p))],
+        ),
+    }
+
+
+def lower_model(spec: M.ModelSpec, out_dir: str) -> Dict:
+    """Lower all entries of one model; returns its manifest fragment."""
+    mdir = os.path.join(out_dir, spec.name)
+    os.makedirs(mdir, exist_ok=True)
+    entries = {}
+    for name, (fn, args) in entry_points(spec).items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        rel = f"{spec.name}/{name}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        entries[name] = {
+            "path": rel,
+            "inputs": _shape_entry(args),
+            "outputs": _shape_entry(outs),
+        }
+        print(f"  {rel}: {len(text)} chars, {len(args)} in / {len(outs)} out")
+    return {
+        "d": spec.d,
+        "h": spec.h,
+        "c": spec.c,
+        "batch": spec.batch,
+        "chunk": spec.chunk,
+        "p": spec.p,
+        "state_size": M.state_size(spec),
+        "momentum": M.MOMENTUM,
+        "weight_decay": M.WEIGHT_DECAY,
+        "grad_layout": "w2_row_major_hc_then_bias",
+        "entries": entries,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--models",
+        default=",".join(M.MODELS),
+        help="comma-separated model variant names",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"format": 1, "interchange": "hlo-text", "models": {}}
+    for name in args.models.split(","):
+        spec = M.MODELS[name]
+        print(f"lowering {name} (d={spec.d} h={spec.h} c={spec.c} p={spec.p})")
+        manifest["models"][name] = lower_model(spec, args.out)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

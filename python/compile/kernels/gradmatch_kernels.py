@@ -1,0 +1,192 @@
+"""Layer-1 Pallas kernels for GRAD-MATCH's compute hot spots.
+
+Three kernels cover the selection-side arithmetic the paper runs on GPU
+(V100 batched GEMMs); here they are restated for the TPU execution model
+Pallas exposes, then lowered with ``interpret=True`` so the resulting HLO
+runs on the CPU PJRT client the Rust coordinator embeds:
+
+- ``per_sample_grads``  — fused per-sample last-layer gradient extraction:
+  the rank-1 outer product ``h_i ⊗ err_i`` concatenated with the bias
+  gradient ``err_i``, written tile-by-tile so ``G`` is produced in one pass.
+- ``corr``              — the OMP inner loop ``G @ r`` (residual
+  correlations), tiled over rows so each grid step holds a ``TILE_N × P``
+  gradient tile in VMEM and performs an MXU-friendly mat-vec contraction.
+- ``sqdist``            — pairwise squared distances between gradient rows
+  for CRAIG's facility-location objective, using the
+  ``‖a‖² + ‖b‖² − 2·a·b`` decomposition so the inner term is a
+  ``TILE × TILE`` MXU matmul.
+
+Hardware adaptation notes (GPU paper → TPU kernel shapes): the paper's
+threadblock-per-row-block schedule becomes the BlockSpec index map; tiles
+are sized so a tile of f32 gradients stays well under VMEM (~16 MB) —
+TILE_N=128 rows × P≈5k cols ≈ 2.6 MB.  See DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile used by all kernels. 128 is the MXU lane width on real TPUs and
+# keeps VMEM tiles ≈1–3 MB for the P ranges this project lowers (1.3k–5.2k).
+TILE_N = 128
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# per-sample last-layer gradients
+# ---------------------------------------------------------------------------
+
+
+def _psg_kernel(h_ref, err_ref, out_ref, *, hdim: int, c: int):
+    """One row-tile: out[:, :H*C] = flatten(h ⊗ err); out[:, H*C:] = err."""
+    h = h_ref[...]                       # [T, H]
+    err = err_ref[...]                   # [T, C]
+    t = h.shape[0]
+    outer = h[:, :, None] * err[:, None, :]           # [T, H, C]
+    out_ref[:, : hdim * c] = outer.reshape(t, hdim * c)
+    out_ref[:, hdim * c :] = err
+
+
+def per_sample_grads(h: jax.Array, err: jax.Array) -> jax.Array:
+    """Pallas version of :func:`ref.per_sample_grads_ref`.
+
+    ``h : [N, H]`` hidden activations, ``err : [N, C]`` masked softmax
+    errors; returns ``G : [N, H*C + C]``.  N must be a multiple of the row
+    tile (the AOT path always pads chunks to a fixed multiple-of-128 size).
+    """
+    n, hdim = h.shape
+    c = err.shape[1]
+    p = hdim * c + c
+    tile = min(TILE_N, n)
+    grid = (_ceil_div(n, tile),)
+    return pl.pallas_call(
+        functools.partial(_psg_kernel, hdim=hdim, c=c),
+        out_shape=jax.ShapeDtypeStruct((n, p), h.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, hdim), lambda i: (i, 0)),
+            pl.BlockSpec((tile, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, p), lambda i: (i, 0)),
+        interpret=True,
+    )(h, err)
+
+
+# ---------------------------------------------------------------------------
+# OMP residual correlations:  corr = G @ r
+# ---------------------------------------------------------------------------
+
+
+def _corr_kernel(g_ref, r_ref, out_ref):
+    """One row-tile of the mat-vec: out = G_tile @ r.
+
+    Expressed as a dot contraction (not elementwise-multiply + reduce) so
+    it maps onto the MXU on real TPUs and onto XLA's optimized GEMV on the
+    CPU interpret path (§Perf: ~2× over the broadcast-reduce form).
+    """
+    g = g_ref[...]                       # [T, P]  (VMEM tile)
+    r = r_ref[...]                       # [1, P]  (broadcast to every tile)
+    out_ref[...] = jax.lax.dot_general(
+        g, r, (((1,), (1,)), ((), ())), preferred_element_type=g.dtype
+    )[:, 0]
+
+
+def corr(g: jax.Array, r: jax.Array) -> jax.Array:
+    """Pallas version of :func:`ref.corr_ref`: ``G[N,P] @ r[P] -> [N]``."""
+    n, p = g.shape
+    tile = min(TILE_N, n)
+    grid = (_ceil_div(n, tile),)
+    r2 = r.reshape(1, p)
+    return pl.pallas_call(
+        _corr_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), g.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, p), lambda i: (i, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        interpret=True,
+    )(g, r2)
+
+
+# ---------------------------------------------------------------------------
+# pairwise squared distances (CRAIG facility location)
+# ---------------------------------------------------------------------------
+
+
+def _sqdist_kernel(a_ref, b_ref, out_ref):
+    """One (row-tile, col-tile) block of ‖a_i − b_j‖²."""
+    a = a_ref[...]                       # [TA, P]
+    b = b_ref[...]                       # [TB, P]
+    a2 = jnp.sum(a * a, axis=1)[:, None]
+    b2 = jnp.sum(b * b, axis=1)[None, :]
+    # The cross term is the MXU-shaped contraction: [TA,P] x [P,TB].
+    cross = jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=a.dtype
+    )
+    out_ref[...] = jnp.maximum(a2 + b2 - 2.0 * cross, 0.0)
+
+
+def sqdist(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Pallas version of :func:`ref.sqdist_ref`: ``[NA,P],[NB,P] -> [NA,NB]``."""
+    na, p = a.shape
+    nb = b.shape[0]
+    ta = min(TILE_N, na)
+    tb = min(TILE_N, nb)
+    grid = (_ceil_div(na, ta), _ceil_div(nb, tb))
+    return pl.pallas_call(
+        _sqdist_kernel,
+        out_shape=jax.ShapeDtypeStruct((na, nb), a.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ta, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((tb, p), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((ta, tb), lambda i, j: (i, j)),
+        interpret=True,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# weighted gradient sum:  Gᵀ w  (used by gradient-error diagnostics)
+# ---------------------------------------------------------------------------
+
+
+def _wsum_kernel(g_ref, w_ref, acc_ref):
+    """Accumulate one row-tile's weighted contribution into the output."""
+    i = pl.program_id(0)
+    g = g_ref[...]                       # [T, P]
+    w = w_ref[...]                       # [T, 1]
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.sum(g * w, axis=0)
+
+
+def weighted_gradsum(g: jax.Array, w: jax.Array) -> jax.Array:
+    """Pallas version of :func:`ref.weighted_gradsum_ref`: ``Gᵀ w -> [P]``."""
+    n, p = g.shape
+    tile = min(TILE_N, n)
+    grid = (_ceil_div(n, tile),)
+    w2 = w.reshape(n, 1)
+    return pl.pallas_call(
+        _wsum_kernel,
+        out_shape=jax.ShapeDtypeStruct((p,), g.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, p), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((p,), lambda i: (0,)),
+        interpret=True,
+    )(g, w2)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels in ``gradmatch_kernels.py``.
+
+Every kernel has a reference implementation here written with plain
+``jax.numpy`` ops only.  The pytest suite (``python/tests/test_kernels.py``)
+sweeps shapes/dtypes with hypothesis and asserts ``allclose`` between kernel
+and oracle — this is the L1 correctness signal for the whole stack, because
+the same kernels are baked into the AOT'd HLO the Rust coordinator executes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def per_sample_grads_ref(h, err):
+    """Per-sample last-layer gradient matrix.
+
+    For sample i with hidden activations ``h[i] : [H]`` and softmax error
+    ``err[i] = softmax(logits)_i - onehot(y_i) : [C]`` (already scaled by any
+    mask), the gradient of the cross-entropy w.r.t. the last linear layer
+    ``(W2[H,C], b2[C])`` is the rank-1 outer product ``h_i ⊗ err_i`` plus
+    ``err_i`` for the bias.  Returns ``G : [N, H*C + C]`` with the W2 block
+    flattened in row-major [H, C] order followed by the bias block.
+    """
+    n, hdim = h.shape
+    c = err.shape[1]
+    outer = h[:, :, None] * err[:, None, :]          # [N, H, C]
+    return jnp.concatenate([outer.reshape(n, hdim * c), err], axis=1)
+
+
+def corr_ref(g, r):
+    """OMP residual correlations: ``G @ r`` for ``G : [N, P]``, ``r : [P]``."""
+    return g @ r
+
+
+def sqdist_ref(a, b):
+    """Pairwise squared euclidean distances ``D[i,j] = ||a_i - b_j||^2``."""
+    a2 = jnp.sum(a * a, axis=1)[:, None]
+    b2 = jnp.sum(b * b, axis=1)[None, :]
+    cross = a @ b.T
+    return jnp.maximum(a2 + b2 - 2.0 * cross, 0.0)
+
+
+def weighted_gradsum_ref(g, w):
+    """Weighted column sum ``Gᵀ w`` — the subset's matched gradient."""
+    return g.T @ w

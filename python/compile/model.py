@@ -1,0 +1,286 @@
+"""Layer-2 JAX model: the classifier + selection-support entry points.
+
+This is the build-time half of the training path.  Every public function
+here is jitted and lowered **once** by ``aot.py`` into HLO text under
+``artifacts/<model>/``; the Rust coordinator loads and executes those —
+Python never runs at training time.
+
+Model: a two-layer MLP classifier ``x → relu(x W1 + b1) → W2 + b2`` with
+softmax cross-entropy.  The paper trains ResNet-18 / LeNet on a V100; the
+selection layer only ever consumes *last-layer* gradients, which have the
+same structure for any network ending in a linear layer, so the substitution
+preserves the behaviour the experiments measure (DESIGN.md §4).
+
+Fixed-shape contract (HLO has static shapes; the Rust side pads + masks):
+
+- ``B``  train mini-batch rows  (default 128)
+- ``E``  eval chunk rows        (default 256)
+- ``G``  gradient chunk rows    (default 256)
+- ``P = H*C + C`` last-layer gradient dimension
+
+SGD hyper-parameters follow the paper's setup (§5): momentum 0.9, weight
+decay 5e-4 are baked as constants; the learning rate arrives as a runtime
+scalar so the Rust side owns the cosine-annealing schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gradmatch_kernels as kernels
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 5e-4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static configuration for one AOT'd model variant."""
+
+    name: str
+    d: int            # input features
+    h: int            # hidden width
+    c: int            # classes
+    batch: int = 128  # train mini-batch (B)
+    chunk: int = 256  # eval/grad chunk (E = G)
+
+    @property
+    def p(self) -> int:
+        """Last-layer gradient dimension H*C + C."""
+        return self.h * self.c + self.c
+
+
+# Variant registry. ``*_narrow`` are the Fig-3l "smaller model" proxies
+# (MobileNet stand-ins): same depth, much narrower hidden layer.
+MODELS: Dict[str, ModelSpec] = {
+    spec.name: spec
+    for spec in [
+        ModelSpec("lenet_s", d=784, h=128, c=10),
+        ModelSpec("resnet_s", d=1024, h=256, c=20),
+        ModelSpec("lenet_narrow", d=784, h=32, c=10),
+        ModelSpec("resnet_narrow", d=1024, h=64, c=20),
+    ]
+}
+
+Params = Tuple[jax.Array, jax.Array, jax.Array, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init(spec: ModelSpec, seed: jax.Array) -> Params:
+    """He-initialized parameters from an int32 seed (traced, so one HLO)."""
+    key = jax.random.key(seed.astype(jnp.uint32))
+    k1, k2 = jax.random.split(key)
+    s1 = jnp.sqrt(2.0 / spec.d).astype(jnp.float32)
+    s2 = jnp.sqrt(2.0 / spec.h).astype(jnp.float32)
+    w1 = jax.random.normal(k1, (spec.d, spec.h), jnp.float32) * s1
+    b1 = jnp.zeros((spec.h,), jnp.float32)
+    w2 = jax.random.normal(k2, (spec.h, spec.c), jnp.float32) * s2
+    b2 = jnp.zeros((spec.c,), jnp.float32)
+    return w1, b1, w2, b2
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(params: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Hidden activations and logits."""
+    w1, b1, w2, b2 = params
+    h = jax.nn.relu(x @ w1 + b1)
+    return h, h @ w2 + b2
+
+
+def per_sample_ce(logits: jax.Array, y: jax.Array) -> jax.Array:
+    """Per-sample softmax cross-entropy."""
+    logz = jax.nn.logsumexp(logits, axis=1)
+    true_logit = jnp.take_along_axis(logits, y[:, None], axis=1)[:, 0]
+    return logz - true_logit
+
+
+def weighted_loss(params: Params, x: jax.Array, y: jax.Array, w: jax.Array) -> jax.Array:
+    """Weight-normalized subset loss  Σ w_i ℓ_i / Σ w_i  (Algorithm 1, line 9).
+
+    ``w`` carries both the GRAD-MATCH instance/mini-batch weights and the
+    padding mask (padded rows have w=0), so one scalar path serves every
+    strategy including plain random subsets (w=1 on real rows).
+    """
+    _, logits = forward(params, x)
+    ce = per_sample_ce(logits, y)
+    return jnp.sum(w * ce) / jnp.maximum(jnp.sum(w), 1e-8)
+
+
+# ---------------------------------------------------------------------------
+# train step (weighted mini-batch SGD, momentum + weight decay)
+# ---------------------------------------------------------------------------
+
+
+def train_step(spec: ModelSpec, params: Params, momenta: Params,
+               x: jax.Array, y: jax.Array, w: jax.Array, lr: jax.Array):
+    """One weighted SGD step.  Returns (params', momenta', loss, correct).
+
+    ``correct`` counts argmax hits on rows with w > 0 — the trainer uses it
+    for cheap running train accuracy without a second forward pass.
+    """
+    loss, grads = jax.value_and_grad(weighted_loss)(params, x, y, w)
+    new_params = []
+    new_momenta = []
+    for p, m, g in zip(params, momenta, grads):
+        m2 = MOMENTUM * m + g + WEIGHT_DECAY * p
+        new_params.append(p - lr * m2)
+        new_momenta.append(m2)
+    _, logits = forward(params, x)
+    hit = (jnp.argmax(logits, axis=1) == y) & (w > 0)
+    correct = jnp.sum(hit.astype(jnp.float32))
+    return (*new_params, *new_momenta, loss, correct)
+
+
+# ---------------------------------------------------------------------------
+# fused train step (single packed state tensor)
+# ---------------------------------------------------------------------------
+#
+# PJRT returns multi-output computations as ONE tuple buffer, so the Rust
+# hot loop cannot keep 8 separate param/momentum buffers device-chained.
+# Packing (params, momenta) into a single flat f32 state lets the trainer
+# thread one literal through consecutive steps with no host re-marshalling
+# of the model state (§Perf).  XLA fuses the pack/unpack slices away.
+
+
+def state_shapes(spec: ModelSpec):
+    return [(spec.d, spec.h), (spec.h,), (spec.h, spec.c), (spec.c,)]
+
+
+def state_size(spec: ModelSpec) -> int:
+    return 2 * sum(int(np_prod(s)) for s in state_shapes(spec))
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for v in shape:
+        out *= int(v)
+    return out
+
+
+def pack_state(params: Params, momenta: Params) -> jax.Array:
+    return jnp.concatenate([p.reshape(-1) for p in (*params, *momenta)])
+
+
+def unpack_state(spec: ModelSpec, flat: jax.Array):
+    shapes = state_shapes(spec) * 2
+    out = []
+    off = 0
+    for shp in shapes:
+        n = np_prod(shp)
+        out.append(flat[off : off + n].reshape(shp))
+        off += n
+    return tuple(out[:4]), tuple(out[4:])
+
+
+def train_step_fused(spec: ModelSpec, state: jax.Array,
+                     x: jax.Array, y: jax.Array, w: jax.Array, lr: jax.Array):
+    """One weighted SGD step over the packed state. Returns (state', loss,
+    correct)."""
+    params, momenta = unpack_state(spec, state)
+    out = train_step(spec, params, momenta, x, y, w, lr)
+    new_state = pack_state(out[:4], out[4:8])
+    return new_state, out[8], out[9]
+
+
+# ---------------------------------------------------------------------------
+# eval chunk
+# ---------------------------------------------------------------------------
+
+
+def eval_chunk(spec: ModelSpec, params: Params,
+               x: jax.Array, y: jax.Array, mask: jax.Array):
+    """Masked eval over one fixed-size chunk.
+
+    Returns (Σloss, Σcorrect, per-sample-correct[E], entropy[E]).  The
+    per-sample outputs feed the forgetting-events counter and the entropy
+    baseline (Table 12) with no extra forward passes.
+    """
+    _, logits = forward(params, x)
+    ce = per_sample_ce(logits, y) * mask
+    correct = (jnp.argmax(logits, axis=1) == y).astype(jnp.float32) * mask
+    logp = jax.nn.log_softmax(logits, axis=1)
+    entropy = -jnp.sum(jnp.exp(logp) * logp, axis=1) * mask
+    return jnp.sum(ce), jnp.sum(correct), correct, entropy
+
+
+# ---------------------------------------------------------------------------
+# selection-side entry points (call the L1 Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def _masked_err(params: Params, x: jax.Array, y: jax.Array, mask: jax.Array):
+    h, logits = forward(params, x)
+    probs = jax.nn.softmax(logits, axis=1)
+    err = (probs - jax.nn.one_hot(y, logits.shape[1], dtype=jnp.float32))
+    return h, err * mask[:, None]
+
+
+def grads_chunk(spec: ModelSpec, params: Params,
+                x: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    """Per-sample last-layer gradients ``G[G_chunk, P]`` (L1 fused kernel)."""
+    h, err = _masked_err(params, x, y, mask)
+    return kernels.per_sample_grads(h, err)
+
+
+def mean_grad_chunk(spec: ModelSpec, params: Params,
+                    x: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    """Σ_i grad_i without materializing G — the target-gradient fast path.
+
+    Σ_i h_i ⊗ err_i = hᵀ err is a single [H,G]x[G,C] MXU matmul; XLA fuses
+    the whole thing into one kernel.  The Rust side accumulates chunk sums
+    and divides by the live count.
+    """
+    h, err = _masked_err(params, x, y, mask)
+    w2g = (h.T @ err).reshape(spec.h * spec.c)
+    b2g = jnp.sum(err, axis=0)
+    return jnp.concatenate([w2g, b2g])
+
+
+def corr_chunk(spec: ModelSpec, g: jax.Array, r: jax.Array) -> jax.Array:
+    """OMP residual correlations for one gradient chunk (L1 kernel)."""
+    return kernels.corr(g, r)
+
+
+def sqdist_chunk(spec: ModelSpec, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Pairwise squared gradient distances for CRAIG (L1 kernel)."""
+    return kernels.sqdist(a, b)
+
+
+# ---------------------------------------------------------------------------
+# fused per-mini-batch gradient sums (PB selection fast path)
+# ---------------------------------------------------------------------------
+#
+# The PB variants only consume per-mini-batch mean gradients.  Materializing
+# the per-sample matrix [chunk, P] and averaging host-side reads back
+# chunk/B × too much data (5.2 MB vs 40 KB per chunk for resnet_s); this
+# entry reduces the B-row groups on device — an MXU-shaped [nb,B,H]x[nb,B,C]
+# batched contraction (§Perf).
+
+
+def batch_gradsum_chunk(spec: ModelSpec, params: Params,
+                        x: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    """Per-mini-batch gradient *sums* over one chunk → [chunk/B, P].
+
+    Groups are consecutive B-row blocks of the chunk; masked (padded) rows
+    contribute zero, and the Rust side divides by live counts.
+    """
+    h, err = _masked_err(params, x, y, mask)
+    nb = spec.chunk // spec.batch
+    hg = h.reshape(nb, spec.batch, spec.h)
+    eg = err.reshape(nb, spec.batch, spec.c)
+    # [nb, H, C] batched contraction over the B dimension
+    w2g = jax.lax.dot_general(hg, eg, (((1,), (1,)), ((0,), (0,))))
+    b2g = jnp.sum(eg, axis=1)
+    return jnp.concatenate([w2g.reshape(nb, spec.h * spec.c), b2g], axis=1)

@@ -1,0 +1,63 @@
+"""AOT pipeline checks: lowering produces loadable HLO text + sane manifest."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_contains_entry():
+    spec = M.MODELS["lenet_narrow"]
+    fn, args = aot.entry_points(spec)["corr_chunk"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert "ENTRY" in text and "HloModule" in text
+
+
+def test_entry_points_cover_contract():
+    spec = M.MODELS["lenet_narrow"]
+    eps = aot.entry_points(spec)
+    assert set(eps) == {
+        "init", "train_step", "eval_chunk", "grads_chunk",
+        "mean_grad_chunk", "batch_gradsum_chunk", "corr_chunk", "sqdist_chunk",
+        "train_step_fused",
+    }
+    # train_step: params(4) + momenta(4) + x,y,w,lr
+    assert len(eps["train_step"][1]) == 12
+    # corr_chunk shapes follow the manifest contract
+    g, r = eps["corr_chunk"][1]
+    assert g.shape == (spec.chunk, spec.p) and r.shape == (spec.p,)
+
+
+def test_eval_shapes_match_declared_outputs():
+    spec = M.MODELS["lenet_narrow"]
+    for name, (fn, args) in aot.entry_points(spec).items():
+        outs = jax.eval_shape(fn, *args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        for o in outs:
+            assert all(dim > 0 for dim in o.shape) or o.shape == ()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_consistent_with_registry():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["interchange"] == "hlo-text"
+    for name, spec in M.MODELS.items():
+        mm = man["models"][name]
+        assert mm["p"] == spec.p and mm["d"] == spec.d
+        for entry, meta in mm["entries"].items():
+            path = os.path.join(ART, meta["path"])
+            assert os.path.exists(path), path
+            head = open(path).read(4096)
+            assert "HloModule" in head

@@ -1,0 +1,80 @@
+"""Fused-state train step: pack/unpack correctness and equivalence with the
+unfused step (the Rust trainer's hot path depends on both)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+SPEC = M.ModelSpec("tiny", d=12, h=8, c=4, batch=16, chunk=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init(SPEC, jnp.int32(3))
+
+
+def test_state_size_formula():
+    want = 2 * (12 * 8 + 8 + 8 * 4 + 4)
+    assert M.state_size(SPEC) == want
+
+
+def test_pack_unpack_roundtrip(params):
+    momenta = tuple(jnp.full_like(p, 0.25) for p in params)
+    flat = M.pack_state(params, momenta)
+    assert flat.shape == (M.state_size(SPEC),)
+    p2, m2 = M.unpack_state(SPEC, flat)
+    for a, b in zip(params, p2):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(momenta, m2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pack_layout_params_then_momenta(params):
+    momenta = tuple(jnp.zeros_like(p) for p in params)
+    flat = np.asarray(M.pack_state(params, momenta))
+    n_params = sum(int(np.prod(p.shape)) for p in params)
+    np.testing.assert_array_equal(flat[n_params:], 0.0)
+    np.testing.assert_allclose(flat[: 12 * 8], np.asarray(params[0]).ravel())
+
+
+def test_fused_step_equals_unfused(params):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16, 12)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 4, size=16).astype(np.int32))
+    w = jnp.ones((16,), jnp.float32)
+    momenta = tuple(jnp.full_like(p, 0.01) for p in params)
+    lr = jnp.float32(0.1)
+
+    out = M.train_step(SPEC, params, momenta, x, y, w, lr)
+    state = M.pack_state(params, momenta)
+    new_state, loss_f, correct_f = M.train_step_fused(SPEC, state, x, y, w, lr)
+
+    np.testing.assert_allclose(float(out[8]), float(loss_f), rtol=1e-6)
+    np.testing.assert_allclose(float(out[9]), float(correct_f), rtol=1e-6)
+    want = M.pack_state(tuple(out[:4]), tuple(out[4:8]))
+    np.testing.assert_allclose(np.asarray(new_state), np.asarray(want), rtol=1e-6, atol=1e-7)
+
+
+def test_fused_chain_multiple_steps(params):
+    """Threading the packed state through steps == stepping unfused."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(16, 12)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 4, size=16).astype(np.int32))
+    w = jnp.ones((16,), jnp.float32)
+    lr = jnp.float32(0.05)
+
+    p, m = params, tuple(jnp.zeros_like(v) for v in params)
+    state = M.pack_state(p, m)
+    for _ in range(3):
+        out = M.train_step(SPEC, p, m, x, y, w, lr)
+        p, m = tuple(out[:4]), tuple(out[4:8])
+        state, _, _ = M.train_step_fused(SPEC, state, x, y, w, lr)
+    p2, m2 = M.unpack_state(SPEC, state)
+    for a, b in zip(p, p2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    for a, b in zip(m, m2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps the shape space (rows not necessarily tile-aligned are
+exercised through the model-level chunk padding; the raw kernels require
+tile-divisible rows only when n > TILE, which the sweeps respect).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gradmatch_kernels as K
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _arr(rng, shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# rows: multiples of the tile, plus small (< tile) sizes where a single
+# block covers everything.
+ROWS = st.sampled_from([1, 3, 16, 128, 256, 384])
+HDIM = st.sampled_from([1, 4, 32, 128])
+CDIM = st.sampled_from([2, 5, 10, 20])
+PDIM = st.sampled_from([8, 130, 1290])
+
+
+@given(n=ROWS, h=HDIM, c=CDIM, seed=st.integers(0, 2**31 - 1))
+def test_per_sample_grads_matches_ref(n, h, c, seed):
+    rng = np.random.default_rng(seed)
+    hm, em = _arr(rng, (n, h)), _arr(rng, (n, c))
+    got = K.per_sample_grads(hm, em)
+    want = ref.per_sample_grads_ref(hm, em)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(n=ROWS, p=PDIM, seed=st.integers(0, 2**31 - 1))
+def test_corr_matches_ref(n, p, seed):
+    rng = np.random.default_rng(seed)
+    g, r = _arr(rng, (n, p)), _arr(rng, (p,))
+    np.testing.assert_allclose(K.corr(g, r), ref.corr_ref(g, r), rtol=2e-4, atol=2e-3)
+
+
+@given(na=ROWS, nb=ROWS, p=st.sampled_from([8, 130]), seed=st.integers(0, 2**31 - 1))
+def test_sqdist_matches_ref(na, nb, p, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _arr(rng, (na, p)), _arr(rng, (nb, p))
+    np.testing.assert_allclose(K.sqdist(a, b), ref.sqdist_ref(a, b), rtol=1e-3, atol=1e-3)
+
+
+@given(n=ROWS, p=st.sampled_from([8, 330]), seed=st.integers(0, 2**31 - 1))
+def test_weighted_gradsum_matches_ref(n, p, seed):
+    rng = np.random.default_rng(seed)
+    g, w = _arr(rng, (n, p)), _arr(rng, (n,))
+    np.testing.assert_allclose(
+        K.weighted_gradsum(g, w), ref.weighted_gradsum_ref(g, w), rtol=2e-4, atol=2e-3
+    )
+
+
+# --- analytic invariants -----------------------------------------------------
+
+
+def test_sqdist_diagonal_zero_and_symmetric():
+    rng = np.random.default_rng(0)
+    a = _arr(rng, (64, 33))
+    d = np.asarray(K.sqdist(a, a))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-4)
+    np.testing.assert_allclose(d, d.T, rtol=1e-4, atol=1e-4)
+
+
+def test_sqdist_nonnegative():
+    rng = np.random.default_rng(1)
+    a, b = _arr(rng, (128, 16)), _arr(rng, (128, 16))
+    assert float(np.min(np.asarray(K.sqdist(a, b)))) >= 0.0
+
+
+def test_corr_zero_residual():
+    rng = np.random.default_rng(2)
+    g = _arr(rng, (128, 40))
+    assert np.allclose(K.corr(g, jnp.zeros((40,), jnp.float32)), 0.0)
+
+
+def test_per_sample_grads_bias_block_is_err():
+    rng = np.random.default_rng(3)
+    h, e = _arr(rng, (16, 8)), _arr(rng, (16, 5))
+    g = np.asarray(K.per_sample_grads(h, e))
+    np.testing.assert_allclose(g[:, 8 * 5 :], np.asarray(e), rtol=1e-6)
+
+
+def test_per_sample_grads_layout_row_major():
+    """G[:, j*C + l] must equal h[:, j] * err[:, l] — the layout contract the
+    Rust per-class slicing relies on (manifest: w2_row_major_hc_then_bias)."""
+    rng = np.random.default_rng(4)
+    h, e = _arr(rng, (8, 6)), _arr(rng, (8, 3))
+    g = np.asarray(K.per_sample_grads(h, e))
+    for j in (0, 5):
+        for l in (0, 2):
+            np.testing.assert_allclose(
+                g[:, j * 3 + l], np.asarray(h[:, j] * e[:, l]), rtol=1e-6
+            )
+
+
+def test_weighted_gradsum_recovers_single_row():
+    rng = np.random.default_rng(5)
+    g = _arr(rng, (128, 12))
+    w = np.zeros(128, np.float32)
+    w[7] = 2.5
+    out = np.asarray(K.weighted_gradsum(g, jnp.asarray(w)))
+    np.testing.assert_allclose(out, 2.5 * np.asarray(g)[7], rtol=1e-5, atol=1e-5)

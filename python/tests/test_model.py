@@ -1,0 +1,161 @@
+"""L2 correctness: model semantics that the Rust coordinator depends on."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+SPEC = M.ModelSpec("tiny", d=12, h=8, c=4, batch=16, chunk=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init(SPEC, jnp.int32(7))
+
+
+def _batch(rng, n, spec=SPEC, balanced=True):
+    x = jnp.asarray(rng.normal(size=(n, spec.d)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, spec.c, size=n).astype(np.int32))
+    return x, y
+
+
+def test_init_shapes_and_determinism():
+    p1 = M.init(SPEC, jnp.int32(3))
+    p2 = M.init(SPEC, jnp.int32(3))
+    p3 = M.init(SPEC, jnp.int32(4))
+    assert [a.shape for a in p1] == [(12, 8), (8,), (8, 4), (4,)]
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(a, b)
+    assert not np.allclose(p1[0], p3[0])
+
+
+def test_train_step_decreases_loss_on_fixed_batch(params):
+    rng = np.random.default_rng(0)
+    x, y = _batch(rng, 16)
+    w = jnp.ones((16,), jnp.float32)
+    momenta = tuple(jnp.zeros_like(p) for p in params)
+    p = params
+    losses = []
+    for _ in range(30):
+        out = M.train_step(SPEC, p, momenta, x, y, w, jnp.float32(0.05))
+        p, momenta, loss = out[:4], out[4:8], out[8]
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_weighted_loss_ignores_zero_weight_rows(params):
+    rng = np.random.default_rng(1)
+    x, y = _batch(rng, 16)
+    w = np.ones(16, np.float32)
+    w[8:] = 0.0
+    full = M.weighted_loss(params, x[:8], y[:8], jnp.ones((8,), jnp.float32))
+    masked = M.weighted_loss(params, x, y, jnp.asarray(w))
+    np.testing.assert_allclose(float(full), float(masked), rtol=1e-5)
+
+
+def test_weighted_loss_weight_scale_invariance(params):
+    """Normalized weighting: scaling all weights by a constant is a no-op."""
+    rng = np.random.default_rng(2)
+    x, y = _batch(rng, 16)
+    w = jnp.asarray(rng.uniform(0.1, 2.0, size=16).astype(np.float32))
+    a = M.weighted_loss(params, x, y, w)
+    b = M.weighted_loss(params, x, y, 3.7 * w)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+
+
+def test_grads_chunk_matches_autodiff_per_sample(params):
+    """The L1 kernel output must equal per-sample autodiff last-layer grads."""
+    rng = np.random.default_rng(3)
+    x, y = _batch(rng, 16)
+    mask = jnp.ones((16,), jnp.float32)
+    g = M.grads_chunk(SPEC, params, x, y, mask)
+
+    def single_loss(w2, b2, xi, yi):
+        h = jax.nn.relu(xi @ params[0] + params[1])
+        logits = h @ w2 + b2
+        return M.per_sample_ce(logits[None, :], yi[None])[0]
+
+    gw2, gb2 = jax.vmap(
+        jax.grad(single_loss, argnums=(0, 1)), in_axes=(None, None, 0, 0)
+    )(params[2], params[3], x, y)
+    want = np.concatenate(
+        [np.asarray(gw2).reshape(16, -1), np.asarray(gb2)], axis=1
+    )
+    np.testing.assert_allclose(np.asarray(g), want, rtol=1e-4, atol=1e-5)
+
+
+def test_grads_chunk_mask_zeroes_rows(params):
+    rng = np.random.default_rng(4)
+    x, y = _batch(rng, 16)
+    mask = np.ones(16, np.float32)
+    mask[5] = 0.0
+    g = np.asarray(M.grads_chunk(SPEC, params, x, y, jnp.asarray(mask)))
+    np.testing.assert_allclose(g[5], 0.0, atol=1e-7)
+    assert np.abs(g[4]).sum() > 0
+
+
+def test_mean_grad_chunk_equals_sum_of_per_sample(params):
+    rng = np.random.default_rng(5)
+    x, y = _batch(rng, 16)
+    mask = jnp.asarray((rng.uniform(size=16) > 0.3).astype(np.float32))
+    g = np.asarray(M.grads_chunk(SPEC, params, x, y, mask))
+    mg = np.asarray(M.mean_grad_chunk(SPEC, params, x, y, mask))
+    np.testing.assert_allclose(mg, g.sum(axis=0), rtol=1e-4, atol=1e-5)
+
+
+def test_eval_chunk_counts(params):
+    rng = np.random.default_rng(6)
+    x, y = _batch(rng, 16)
+    mask = np.ones(16, np.float32)
+    mask[12:] = 0.0
+    sloss, scorrect, correct, entropy = M.eval_chunk(
+        SPEC, params, x, y, jnp.asarray(mask)
+    )
+    _, logits = M.forward(params, x)
+    pred = np.argmax(np.asarray(logits), axis=1)
+    want_correct = ((pred == np.asarray(y)) & (mask > 0)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(correct), want_correct)
+    np.testing.assert_allclose(float(scorrect), want_correct.sum())
+    assert float(sloss) > 0
+    # entropy of a C-class distribution is in [0, log C]; masked rows are 0.
+    e = np.asarray(entropy)
+    assert np.all(e >= -1e-6) and np.all(e <= np.log(SPEC.c) + 1e-5)
+    np.testing.assert_allclose(e[12:], 0.0, atol=1e-7)
+
+
+def test_train_step_weight_zero_rows_do_not_affect_update(params):
+    rng = np.random.default_rng(7)
+    x, y = _batch(rng, 16)
+    momenta = tuple(jnp.zeros_like(p) for p in params)
+    w = np.ones(16, np.float32)
+    w[8:] = 0.0
+    out_masked = M.train_step(SPEC, params, momenta, x, y, jnp.asarray(w), jnp.float32(0.1))
+    # corrupt the padded rows wildly — update must not change
+    x2 = np.asarray(x).copy()
+    x2[8:] = 1e3
+    out_masked2 = M.train_step(
+        SPEC, params, momenta, jnp.asarray(x2), y, jnp.asarray(w), jnp.float32(0.1)
+    )
+    for a, b in zip(out_masked[:8], out_masked2[:8]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_momentum_and_weight_decay_math(params):
+    """One step against the hand-written update rule."""
+    rng = np.random.default_rng(8)
+    x, y = _batch(rng, 16)
+    w = jnp.ones((16,), jnp.float32)
+    momenta = tuple(jnp.full_like(p, 0.01) for p in params)
+    lr = 0.2
+    grads = jax.grad(M.weighted_loss)(params, x, y, w)
+    out = M.train_step(SPEC, params, momenta, x, y, w, jnp.float32(lr))
+    for p, m, g, p_new, m_new in zip(params, momenta, grads, out[:4], out[4:8]):
+        m_want = M.MOMENTUM * np.asarray(m) + np.asarray(g) + M.WEIGHT_DECAY * np.asarray(p)
+        np.testing.assert_allclose(np.asarray(m_new), m_want, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(p_new), np.asarray(p) - lr * m_want, rtol=1e-5, atol=1e-6
+        )

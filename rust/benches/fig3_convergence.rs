@@ -1,0 +1,63 @@
+//! Figure 3j (+3k in miniature): test accuracy vs cumulative training time
+//! for all strategies at a 30% budget — the convergence plot.  GRAD-MATCH
+//! variants should reach high accuracy faster (in accounted time) than the
+//! non-PB baselines, and extending the schedule should close the gap to
+//! full training (3k).
+
+use gradmatch::bench_harness as bh;
+use gradmatch::coordinator::Coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let mut coord = Coordinator::new(&bh::artifacts_dir())?;
+    let mut cfg = bh::bench_config("syncifar100", "resnet_s");
+    cfg.budget_frac = 0.30;
+    cfg.epochs = 15;
+    cfg.r_interval = 5;
+    cfg.eval_every = 3;
+
+    bh::section("Fig. 3j — convergence at 30% syncifar100");
+    let full = coord.full_baseline(&cfg, cfg.seed)?;
+    println!("full: acc {:.2}% time {:.1}s", full.test_acc * 100.0, full.total_secs);
+
+    let mut final_accs = Vec::new();
+    for strat in ["random", "glister", "craig-pb", "gradmatch-pb", "gradmatch-pb-warm"] {
+        let mut c = cfg.clone();
+        c.strategy = strat.into();
+        let r = coord.run_one(&c, c.seed)?;
+        println!("\n{strat} (final acc {:.2}%, total {:.1}s):", r.test_acc * 100.0, r.total_secs);
+        for &(e, t, a) in &r.convergence {
+            println!("  epoch {e:>3}  {t:>6.2}s  {:>6.2}%", a * 100.0);
+        }
+        final_accs.push((strat, r.test_acc, r.total_secs));
+    }
+
+    // Fig. 3k: extend gradmatch-pb-warm past the standard endpoint
+    bh::section("Fig. 3k — extended training (gradmatch-pb-warm, 30%)");
+    let mut ext = cfg.clone();
+    ext.strategy = "gradmatch-pb-warm".into();
+    ext.epochs = cfg.epochs * 2;
+    let r = coord.run_one(&ext, ext.seed)?;
+    for &(e, t, a) in &r.convergence {
+        let mark = if e + 1 == cfg.epochs { " <- standard endpoint (*)" } else { "" };
+        println!("  epoch {e:>3}  {t:>6.2}s  {:>6.2}%{mark}", a * 100.0);
+    }
+    let parity = r.convergence.iter().find(|&&(_, _, a)| a >= full.test_acc);
+    let mut all_ok = true;
+    match parity {
+        Some(&(e, t, _)) => {
+            println!("parity with full at epoch {e} ({t:.1}s) — {:.2}x faster overall", full.total_secs / t.max(1e-9));
+            all_ok &= bh::shape_check("3k: parity reached while faster than full", t < full.total_secs);
+        }
+        None => {
+            all_ok &= bh::shape_check(
+                "3k: extended run within 3pp of full",
+                (full.test_acc - r.test_acc) < 0.03,
+            );
+        }
+    }
+    let gm = final_accs.iter().find(|(s, _, _)| *s == "gradmatch-pb-warm").unwrap();
+    let rnd = final_accs.iter().find(|(s, _, _)| *s == "random").unwrap();
+    all_ok &= bh::shape_check("3j: gradmatch-pb-warm >= random at 30%", gm.1 >= rnd.1);
+    println!("\nfig3_convergence: {}", if all_ok { "ALL SHAPE CHECKS PASS" } else { "SOME SHAPE CHECKS FAILED" });
+    Ok(())
+}

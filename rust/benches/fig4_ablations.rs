@@ -1,0 +1,139 @@
+//! Figure 4 ablations (a/b: selection interval R; c: per-batch vs non-PB;
+//! d: warm-start; f: κ sweep; g: λ sweep) — miniature regenerations with
+//! the paper's qualitative shape checks.
+
+use gradmatch::bench_harness as bh;
+use gradmatch::coordinator::Coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let mut coord = Coordinator::new(&bh::artifacts_dir())?;
+    let mut all_ok = true;
+
+    // --- Fig 4a/b: varying R at a 5% budget -------------------------------
+    bh::section("Fig. 4a/b — varying selection interval R (5% synmnist)");
+    bh::table_header(&["strategy", "R", "acc%", "total-s", "select-s"]);
+    let mut r20_time = 0.0;
+    let mut r2_time = 0.0;
+    for r_int in [2usize, 4, 8] {
+        for strat in ["gradmatch", "gradmatch-pb", "craig-pb"] {
+            let mut cfg = bh::bench_config("synmnist", "lenet_s");
+            cfg.budget_frac = 0.05;
+            cfg.epochs = 16;
+            cfg.r_interval = r_int;
+            cfg.strategy = strat.into();
+            let run = coord.run_one(&cfg, cfg.seed)?;
+            bh::table_row(&[
+                strat.into(),
+                format!("{r_int}"),
+                format!("{:.2}", run.test_acc * 100.0),
+                format!("{:.2}", run.total_secs),
+                format!("{:.2}", run.select_secs),
+            ]);
+            if strat == "gradmatch" && r_int == 8 {
+                r20_time = run.select_secs;
+            }
+            if strat == "gradmatch" && r_int == 2 {
+                r2_time = run.select_secs;
+            }
+        }
+    }
+    all_ok &= bh::shape_check(
+        "4a: larger R spends less selection time",
+        r20_time < r2_time,
+    );
+
+    // --- Fig 4c: PB vs non-PB ----------------------------------------------
+    bh::section("Fig. 4c — per-batch vs per-sample variants (syncifar100)");
+    bh::table_header(&["variant", "acc%", "select-s", "total-s"]);
+    let mut pb_sel = 0.0;
+    let mut nonpb_sel = 0.0;
+    for strat in ["gradmatch", "gradmatch-pb", "craig", "craig-pb"] {
+        let mut cfg = bh::bench_config("syncifar100", "resnet_s");
+        cfg.budget_frac = 0.20;
+        cfg.epochs = 10;
+        cfg.r_interval = 5;
+        cfg.strategy = strat.into();
+        let run = coord.run_one(&cfg, cfg.seed)?;
+        bh::table_row(&[
+            strat.into(),
+            format!("{:.2}", run.test_acc * 100.0),
+            format!("{:.2}", run.select_secs),
+            format!("{:.2}", run.total_secs),
+        ]);
+        match strat {
+            "gradmatch" => nonpb_sel = run.select_secs,
+            "gradmatch-pb" => pb_sel = run.select_secs,
+            _ => {}
+        }
+    }
+    all_ok &= bh::shape_check("4c: PB selection cheaper than non-PB", pb_sel < nonpb_sel);
+
+    // --- Fig 4d: warm vs non-warm across budgets ---------------------------
+    bh::section("Fig. 4d — warm-start effect across budgets (syncifar100)");
+    bh::table_header(&["budget%", "gradmatch-pb", "gradmatch-pb-warm"]);
+    let mut warm_wins = 0usize;
+    let budgets = [0.05, 0.10, 0.30];
+    for &b in &budgets {
+        let mut accs = Vec::new();
+        for strat in ["gradmatch-pb", "gradmatch-pb-warm"] {
+            let mut cfg = bh::bench_config("syncifar100", "resnet_s");
+            cfg.budget_frac = b;
+            cfg.epochs = 12;
+            cfg.r_interval = 4;
+            cfg.strategy = strat.into();
+            accs.push(coord.run_one(&cfg, cfg.seed)?.test_acc);
+        }
+        if accs[1] >= accs[0] {
+            warm_wins += 1;
+        }
+        bh::table_row(&[
+            format!("{:.0}", b * 100.0),
+            format!("{:.2}", accs[0] * 100.0),
+            format!("{:.2}", accs[1] * 100.0),
+        ]);
+    }
+    all_ok &= bh::shape_check("4d: warm-start helps on most budgets", warm_wins * 2 >= budgets.len());
+
+    // --- Fig 4f: κ sweep ----------------------------------------------------
+    bh::section("Fig. 4f — warm-start fraction κ (10% syncifar100)");
+    bh::table_header(&["kappa", "acc%"]);
+    let mut kappa_accs = Vec::new();
+    for kappa in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let mut cfg = bh::bench_config("syncifar100", "resnet_s");
+        cfg.budget_frac = 0.10;
+        cfg.epochs = 12;
+        cfg.r_interval = 4;
+        cfg.strategy = "gradmatch-pb-warm".into();
+        cfg.kappa = kappa;
+        let run = coord.run_one(&cfg, cfg.seed)?;
+        bh::table_row(&[format!("{kappa}"), format!("{:.2}", run.test_acc * 100.0)]);
+        kappa_accs.push(run.test_acc);
+    }
+    let mid = kappa_accs[2];
+    all_ok &= bh::shape_check(
+        "4f: κ=0.5 at least matches the κ=0 endpoint",
+        mid >= kappa_accs[0] - 0.02,
+    );
+
+    // --- Fig 4g: λ sweep ----------------------------------------------------
+    bh::section("Fig. 4g — OMP regularizer λ (10% synmnist)");
+    bh::table_header(&["lambda", "acc%", "grad-err"]);
+    for lambda in [0.0, 0.1, 0.5, 5.0, 50.0] {
+        let mut cfg = bh::bench_config("synmnist", "lenet_s");
+        cfg.budget_frac = 0.10;
+        cfg.epochs = 12;
+        cfg.r_interval = 4;
+        cfg.strategy = "gradmatch".into();
+        cfg.lambda = lambda;
+        let run = coord.run_one(&cfg, cfg.seed)?;
+        bh::table_row(&[
+            format!("{lambda}"),
+            format!("{:.2}", run.test_acc * 100.0),
+            run.mean_grad_error
+                .map(|e| format!("{e:.4}"))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!("\nfig4_ablations: {}", if all_ok { "ALL SHAPE CHECKS PASS" } else { "SOME SHAPE CHECKS FAILED" });
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! Hot-path micro benches — the profiling substrate for the §Perf pass
+//! (EXPERIMENTS.md).  Measures each layer's unit costs in isolation:
+//!
+//! - L3→PJRT `train_step` latency (the per-step training cost)
+//! - `grads_chunk` / `mean_grad_chunk` (selection gradient acquisition)
+//! - `corr_chunk` (Pallas) vs Rust GEMV (the OMP inner loop, both backends)
+//! - `sqdist_chunk` (Pallas) vs Rust pairwise distances (CRAIG)
+//! - end-to-end OMP and lazy-greedy selection on realistic ground sets
+//! - literal building overhead (host-side marshalling)
+
+use gradmatch::bench_harness as bh;
+use gradmatch::data::DatasetCard;
+use gradmatch::omp::{omp_select, CorrBackend, OmpOpts, RustCorr, XlaCorr};
+use gradmatch::rng::Rng;
+use gradmatch::runtime::Runtime;
+use gradmatch::submod::{lazy_greedy, naive_greedy, sim_from_sqdist, FacilityLocation};
+use gradmatch::tensor::Matrix;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(bh::artifacts_dir())?;
+    let mut rng = Rng::new(42);
+
+    for model in ["lenet_s", "resnet_s"] {
+        let meta = rt.model(model)?.clone();
+        bh::section(&format!("micro — {model} (d={} h={} c={} P={})", meta.d, meta.h, meta.c, meta.p));
+
+        // --- train_step -----------------------------------------------------
+        let card = DatasetCard::all()
+            .into_iter()
+            .find(|c| c.model == model)
+            .unwrap();
+        let splits = card.generate(1, 600);
+        let mut st = rt.init(model, 1)?;
+        let mut x = vec![0.0f32; meta.batch * meta.d];
+        let mut y = vec![0i32; meta.batch];
+        for s in 0..meta.batch {
+            x[s * meta.d..(s + 1) * meta.d].copy_from_slice(splits.train.x.row(s));
+            y[s] = splits.train.y[s];
+        }
+        let w = vec![1.0f32; meta.batch];
+        bh::bench_iters(&format!("{model}/train_step (B={}, 16-literal)", meta.batch), 30, || {
+            rt.train_step(&mut st, &x, &y, &w, 0.01).unwrap()
+        });
+        let mut fs = gradmatch::runtime::FusedState::from_state(&st)?;
+        bh::bench_iters(&format!("{model}/train_step_fused (packed state)"), 30, || {
+            rt.train_step_fused(&mut fs, &x, &y, &w, 0.01).unwrap()
+        });
+
+        // --- gradient acquisition -------------------------------------------
+        let idx: Vec<usize> = (0..meta.chunk.min(600)).collect();
+        let chunk = gradmatch::data::padded_chunks(&splits.train, &idx, meta.chunk)
+            .next()
+            .unwrap();
+        bh::bench_iters(&format!("{model}/grads_chunk ({}xP)", meta.chunk), 10, || {
+            rt.grads_chunk(&st, &chunk.x, &chunk.y, &chunk.mask).unwrap()
+        });
+        bh::bench_iters(&format!("{model}/mean_grad_chunk (fused)"), 10, || {
+            rt.mean_grad_chunk(&st, &chunk.x, &chunk.y, &chunk.mask).unwrap()
+        });
+
+        // --- OMP inner loop: Pallas corr vs Rust GEMV ------------------------
+        let n = meta.chunk * 4;
+        let g = Matrix::from_vec(n, meta.p, (0..n * meta.p).map(|_| rng.gaussian_f32()).collect());
+        let r: Vec<f32> = (0..meta.p).map(|_| rng.gaussian_f32()).collect();
+        let mut xla = XlaCorr::new(&rt, model, &g)?;
+        bh::bench_iters(&format!("{model}/corr {}x{} (XLA+Pallas)", n, meta.p), 10, || {
+            xla.corr(&r).unwrap()
+        });
+        let mut rust = RustCorr { g: &g };
+        bh::bench_iters(&format!("{model}/corr {}x{} (Rust gemv)", n, meta.p), 10, || {
+            rust.corr(&r).unwrap()
+        });
+
+        // --- full OMP over the ground set ------------------------------------
+        let target: Vec<f32> = (0..meta.p).map(|_| rng.gaussian_f32()).collect();
+        let opts = OmpOpts { k: 16, lambda: 0.5, eps: 1e-12 };
+        bh::bench_iters(&format!("{model}/omp k=16 n={n} (XLA)"), 3, || {
+            omp_select(&mut xla, &|j| g.row(j).to_vec(), &target, opts).unwrap()
+        });
+        bh::bench_iters(&format!("{model}/omp k=16 n={n} (Rust)"), 3, || {
+            omp_select(&mut rust, &|j| g.row(j).to_vec(), &target, opts).unwrap()
+        });
+
+        // --- CRAIG distances --------------------------------------------------
+        let a = Matrix::from_vec(
+            meta.chunk,
+            meta.p,
+            (0..meta.chunk * meta.p).map(|_| rng.gaussian_f32()).collect(),
+        );
+        bh::bench_iters(&format!("{model}/sqdist {0}x{0} (XLA+Pallas)", meta.chunk), 5, || {
+            rt.sqdist_chunk(model, &a, &a).unwrap()
+        });
+        bh::bench_iters(&format!("{model}/sqdist {0}x{0} (Rust)", meta.chunk), 2, || {
+            let mut d = Matrix::zeros(meta.chunk, meta.chunk);
+            for i in 0..meta.chunk {
+                for j in i..meta.chunk {
+                    let v = gradmatch::tensor::sqdist(a.row(i), a.row(j));
+                    d.set(i, j, v);
+                    d.set(j, i, v);
+                }
+            }
+            d
+        });
+    }
+
+    // --- lazy vs naive greedy (backend-independent) --------------------------
+    bh::section("micro — submodular greedy");
+    let n = 600;
+    let gm = Matrix::from_vec(n, 64, (0..n * 64).map(|_| rng.gaussian_f32()).collect());
+    let mut dist = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let v = gradmatch::tensor::sqdist(gm.row(i), gm.row(j));
+            dist.set(i, j, v);
+            dist.set(j, i, v);
+        }
+    }
+    let sim = sim_from_sqdist(&dist);
+    bh::bench_iters(&format!("lazy_greedy n={n} k=60"), 5, || {
+        lazy_greedy(&mut FacilityLocation::new(&sim), 60)
+    });
+    bh::bench_iters(&format!("naive_greedy n={n} k=60"), 2, || {
+        naive_greedy(&mut FacilityLocation::new(&sim), 60)
+    });
+    let lazy = lazy_greedy(&mut FacilityLocation::new(&sim), 60);
+    let naive = naive_greedy(&mut FacilityLocation::new(&sim), 60);
+    println!(
+        "  lazy evals {} vs naive evals {} ({}x fewer)",
+        lazy.evals,
+        naive.evals,
+        naive.evals / lazy.evals.max(1)
+    );
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Tables 3/4/5: top-1 test accuracy and model training time per
+//! (dataset, strategy, budget) — the paper's main data-selection tables,
+//! miniature.  Table 4 block uses MNIST-like budgets (1/3/5/10%); Table 3
+//! block uses 5/10/20/30%; Table 5 (ImageNet-like) runs only the
+//! strategies the paper could scale (GRAD-MATCH variants + CRAIG-PB +
+//! RANDOM) on the larger card.
+
+use gradmatch::bench_harness as bh;
+use gradmatch::coordinator::Coordinator;
+
+fn block(
+    coord: &mut Coordinator,
+    title: &str,
+    dataset: &str,
+    model: &str,
+    n_train: usize,
+    strategies: &[&str],
+    budgets: &[f64],
+) -> anyhow::Result<bool> {
+    bh::section(title);
+    let mut cfg = bh::bench_config(dataset, model);
+    cfg.n_train = n_train;
+    cfg.epochs = 10;
+    cfg.r_interval = 5;
+    let full = coord.full_baseline(&cfg, cfg.seed)?;
+    println!(
+        "FULL (skyline): acc {:.2}%  time {:.2}s",
+        full.test_acc * 100.0,
+        full.total_secs
+    );
+    let mut header = vec!["strategy".to_string()];
+    for &b in budgets {
+        header.push(format!("acc@{:.0}%", b * 100.0));
+    }
+    for &b in budgets {
+        header.push(format!("time@{:.0}%", b * 100.0));
+    }
+    bh::table_header(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    let mut gm_acc_30 = 0.0f64;
+    let mut rnd_acc_30 = 0.0f64;
+    for strat in strategies {
+        let mut row = vec![strat.to_string()];
+        let mut times = Vec::new();
+        for &b in budgets {
+            let mut c = cfg.clone();
+            c.strategy = strat.to_string();
+            c.budget_frac = b;
+            let r = coord.run_one(&c, c.seed)?;
+            row.push(format!("{:.2}", r.test_acc * 100.0));
+            times.push(format!("{:.2}s", r.total_secs));
+            if (b - budgets[budgets.len() - 1]).abs() < 1e-9 {
+                if *strat == "gradmatch-pb-warm" {
+                    gm_acc_30 = r.test_acc;
+                }
+                if *strat == "random" {
+                    rnd_acc_30 = r.test_acc;
+                }
+            }
+        }
+        row.extend(times);
+        bh::table_row(&row);
+    }
+    Ok(gm_acc_30 >= rnd_acc_30)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut coord = Coordinator::new(&bh::artifacts_dir())?;
+    let everything = [
+        "random",
+        "glister",
+        "craig",
+        "craig-pb",
+        "gradmatch",
+        "gradmatch-pb",
+        "gradmatch-pb-warm",
+    ];
+    let scalable = ["random", "craig-pb", "gradmatch", "gradmatch-pb", "gradmatch-pb-warm"];
+
+    let mut all_ok = true;
+    all_ok &= block(
+        &mut coord,
+        "Table 4 — synmnist (MNIST-like budgets)",
+        "synmnist",
+        "lenet_s",
+        1500,
+        &everything,
+        &[0.01, 0.03, 0.05, 0.10],
+    )?;
+    all_ok &= block(
+        &mut coord,
+        "Table 3 — syncifar100",
+        "syncifar100",
+        "resnet_s",
+        1200,
+        &everything,
+        &[0.05, 0.10, 0.20, 0.30],
+    )?;
+    all_ok &= block(
+        &mut coord,
+        "Table 5 — synimagenet (scalable strategies only, as in the paper)",
+        "synimagenet",
+        "resnet_s",
+        3000,
+        &scalable,
+        &[0.05, 0.10, 0.30],
+    )?;
+    bh::shape_check("tables: gradmatch-pb-warm >= random at the top budget on all blocks", all_ok);
+    println!("\ntable3_accuracy: {}", if all_ok { "ALL SHAPE CHECKS PASS" } else { "SOME SHAPE CHECKS FAILED" });
+    Ok(())
+}

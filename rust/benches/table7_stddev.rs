@@ -1,0 +1,50 @@
+//! Table 7: standard deviation of test accuracy over repeated runs.
+//! The paper's observation: warm/PB variants have lower variance than
+//! RANDOM; variance grows as subsets shrink.
+
+use gradmatch::bench_harness as bh;
+use gradmatch::coordinator::Coordinator;
+use gradmatch::stats;
+
+fn main() -> anyhow::Result<()> {
+    let mut coord = Coordinator::new(&bh::artifacts_dir())?;
+    bh::section("Table 7 — test-accuracy std-dev over 3 runs (synmnist)");
+    bh::table_header(&["strategy", "std@5%", "std@30%", "mean@5%", "mean@30%"]);
+    let mut rnd_std5 = 0.0;
+    let mut gm_std5 = 0.0;
+    for strat in ["random", "glister", "craig-pb", "gradmatch-pb", "gradmatch-pb-warm"] {
+        let mut stds = Vec::new();
+        let mut means = Vec::new();
+        for &b in &[0.05, 0.30] {
+            let mut cfg = bh::bench_config("synmnist", "lenet_s");
+            cfg.strategy = strat.into();
+            cfg.budget_frac = b;
+            cfg.epochs = 10;
+            cfg.r_interval = 5;
+            cfg.runs = 3;
+            let runs = coord.run_multi(&cfg)?;
+            let accs: Vec<f64> = runs.iter().map(|r| r.test_acc * 100.0).collect();
+            stds.push(stats::stddev(&accs));
+            means.push(stats::mean(&accs));
+        }
+        bh::table_row(&[
+            strat.into(),
+            format!("{:.3}", stds[0]),
+            format!("{:.3}", stds[1]),
+            format!("{:.2}", means[0]),
+            format!("{:.2}", means[1]),
+        ]);
+        if strat == "random" {
+            rnd_std5 = stds[0];
+        }
+        if strat == "gradmatch-pb-warm" {
+            gm_std5 = stds[0];
+        }
+    }
+    let ok = bh::shape_check(
+        "table7: gradmatch-pb-warm variance <= random variance at 5%",
+        gm_std5 <= rnd_std5 + 0.5,
+    );
+    println!("\ntable7_stddev: {}", if ok { "ALL SHAPE CHECKS PASS" } else { "SOME SHAPE CHECKS FAILED" });
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! Bench harness (criterion is not in the offline vendor set).
+//!
+//! Every file under `rust/benches/` is a `harness = false` binary that uses
+//! this module to (a) run miniature paper-shaped experiments and (b) print
+//! the same rows/series the paper's tables and figures report.  Bench
+//! configs are deliberately small (tiny datasets, tens of epochs) so the
+//! whole `cargo bench` suite completes on one CPU core; the full-scale runs
+//! live in `examples/`.
+
+use std::time::Instant;
+
+use crate::config::ExperimentConfig;
+
+/// Miniature experiment base config shared by the benches: small synthetic
+/// dataset, short schedule, frequent re-selection so every code path runs.
+pub fn bench_config(dataset: &str, model: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: dataset.into(),
+        model: model.into(),
+        strategy: "gradmatch-pb".into(),
+        budget_frac: 0.1,
+        epochs: 12,
+        r_interval: 4,
+        lr0: 0.05,
+        lambda: 0.5,
+        eps: 1e-10,
+        kappa: 0.5,
+        seed: 42,
+        runs: 1,
+        artifacts_dir: artifacts_dir(),
+        out_dir: "results/bench".into(),
+        eval_every: 0,
+        is_valid: false,
+        n_train: 1200,
+        imbalance_frac: 0.3,
+        imbalance_keep: 0.1,
+        label_noise: 0.0,
+        overlap: false,
+    }
+}
+
+/// Artifact dir: honor `GRADMATCH_ARTIFACTS` (CI) else `artifacts`.
+pub fn artifacts_dir() -> String {
+    std::env::var("GRADMATCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+/// Time a closure once (end-to-end benches) — returns (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Time a closure `iters` times and report best/mean (micro benches).
+pub fn bench_iters<T>(label: &str, iters: usize, mut f: impl FnMut() -> T) -> (f64, f64) {
+    assert!(iters > 0);
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let out = f();
+        times.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(out);
+    }
+    let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    println!("  {label:<48} best {:>9.3}ms  mean {:>9.3}ms  ({iters} iters)", best * 1e3, mean * 1e3);
+    (best, mean)
+}
+
+/// Section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Table header/row printing with fixed column layout.
+pub fn table_header(cols: &[&str]) {
+    let row = cols
+        .iter()
+        .map(|c| format!("{c:>14}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    println!("{row}");
+    println!("{}", "-".repeat(row.len().min(120)));
+}
+
+pub fn table_row(cells: &[String]) {
+    println!(
+        "{}",
+        cells.iter().map(|c| format!("{c:>14}")).collect::<Vec<_>>().join(" ")
+    );
+}
+
+/// `assert!`-like check that prints PASS/FAIL without aborting the bench —
+/// the benches verify the paper-*shaped* relationships (who wins, rough
+/// factors) and report them inline.
+pub fn shape_check(label: &str, ok: bool) -> bool {
+    println!("  shape-check [{}] {label}", if ok { "PASS" } else { "FAIL" });
+    ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_config_is_miniature() {
+        let c = bench_config("synmnist", "lenet_s");
+        assert!(c.epochs <= 20);
+        assert!(c.n_train > 0 && c.n_train <= 2000);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn timed_measures() {
+        let (v, secs) = timed(|| {
+            std::thread::sleep(std::time::Duration::from_millis(3));
+            7
+        });
+        assert_eq!(v, 7);
+        assert!(secs >= 0.002);
+    }
+
+    #[test]
+    fn bench_iters_runs_all() {
+        let mut count = 0;
+        let (best, mean) = bench_iters("noop", 5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 5);
+        assert!(best <= mean);
+    }
+
+    #[test]
+    fn shape_check_passthrough() {
+        assert!(shape_check("x", true));
+        assert!(!shape_check("y", false));
+    }
+}

@@ -1,0 +1,174 @@
+//! Checkpointing: save/restore model state (params + momenta) to disk in a
+//! small self-describing binary format, so long experiments can resume and
+//! the examples can hand models between runs.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic  "GMCK1\0"          6 bytes
+//! model  name-len u32 + utf-8 bytes
+//! epoch  u64
+//! dims   d,h,c u32 ×3       (validated against the manifest on load)
+//! state  2·(d·h + h + h·c + c) f32  (ModelState::pack layout)
+//! crc    u32 (FNV-1a over the state bytes)
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{ModelMeta, ModelState};
+
+const MAGIC: &[u8; 6] = b"GMCK1\0";
+
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h = 0x811c9dc5u32;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x01000193);
+    }
+    h
+}
+
+/// Save a model state (+ the epoch it was taken at).
+pub fn save(path: &Path, st: &ModelState, epoch: u64) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    let name = st.meta.name.as_bytes();
+    f.write_all(&(name.len() as u32).to_le_bytes())?;
+    f.write_all(name)?;
+    f.write_all(&epoch.to_le_bytes())?;
+    for v in [st.meta.d as u32, st.meta.h as u32, st.meta.c as u32] {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    let flat = st.pack();
+    let bytes: Vec<u8> = flat.iter().flat_map(|v| v.to_le_bytes()).collect();
+    f.write_all(&bytes)?;
+    f.write_all(&fnv1a(&bytes).to_le_bytes())?;
+    Ok(())
+}
+
+/// Load a model state; validates magic, model identity, dims, and checksum.
+pub fn load(path: &Path, meta: &ModelMeta) -> Result<(ModelState, u64)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 6];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a gradmatch checkpoint", path.display());
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let name_len = u32::from_le_bytes(u32buf) as usize;
+    if name_len > 256 {
+        bail!("checkpoint name too long");
+    }
+    let mut name = vec![0u8; name_len];
+    f.read_exact(&mut name)?;
+    let name = String::from_utf8(name).map_err(|_| anyhow!("bad checkpoint name"))?;
+    if name != meta.name {
+        bail!("checkpoint is for model '{name}', expected '{}'", meta.name);
+    }
+    let mut u64buf = [0u8; 8];
+    f.read_exact(&mut u64buf)?;
+    let epoch = u64::from_le_bytes(u64buf);
+    let mut dims = [0u32; 3];
+    for d in dims.iter_mut() {
+        f.read_exact(&mut u32buf)?;
+        *d = u32::from_le_bytes(u32buf);
+    }
+    if dims != [meta.d as u32, meta.h as u32, meta.c as u32] {
+        bail!("checkpoint dims {dims:?} do not match manifest");
+    }
+    let n_state = 2 * (meta.d * meta.h + meta.h + meta.h * meta.c + meta.c);
+    let mut bytes = vec![0u8; n_state * 4];
+    f.read_exact(&mut bytes)?;
+    f.read_exact(&mut u32buf)?;
+    let want_crc = u32::from_le_bytes(u32buf);
+    if fnv1a(&bytes) != want_crc {
+        bail!("{}: checksum mismatch (corrupt checkpoint)", path.display());
+    }
+    let flat: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((ModelState::unpack(meta, &flat), epoch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn meta() -> ModelMeta {
+        let m = Manifest::parse(
+            r#"{"format":1,"interchange":"hlo-text","models":{"m1":{"d":4,"h":3,
+            "c":2,"batch":8,"chunk":16,"p":8,"momentum":0.9,"weight_decay":0.0005,
+            "entries":{}}}}"#,
+        )
+        .unwrap();
+        m.models["m1"].clone()
+    }
+
+    fn sample_state(meta: &ModelMeta) -> ModelState {
+        let mut st = ModelState::new(
+            meta,
+            (0..12).map(|v| v as f32 * 0.5).collect(),
+            vec![1.0, 2.0, 3.0],
+            (0..6).map(|v| -(v as f32)).collect(),
+            vec![0.1, 0.2],
+        );
+        st.m_w1[3] = 7.5;
+        st
+    }
+
+    #[test]
+    fn roundtrip_preserves_state_and_epoch() {
+        let meta = meta();
+        let st = sample_state(&meta);
+        let dir = std::env::temp_dir().join("gm_ckpt_test");
+        let path = dir.join("a.ckpt");
+        save(&path, &st, 42).unwrap();
+        let (st2, epoch) = load(&path, &meta).unwrap();
+        assert_eq!(epoch, 42);
+        assert_eq!(st.w1, st2.w1);
+        assert_eq!(st.b2, st2.b2);
+        assert_eq!(st.m_w1, st2.m_w1);
+    }
+
+    #[test]
+    fn rejects_wrong_model() {
+        let meta = meta();
+        let st = sample_state(&meta);
+        let path = std::env::temp_dir().join("gm_ckpt_test/b.ckpt");
+        save(&path, &st, 1).unwrap();
+        let mut other = meta.clone();
+        other.name = "different".into();
+        assert!(load(&path, &other).is_err());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let meta = meta();
+        let st = sample_state(&meta);
+        let path = std::env::temp_dir().join("gm_ckpt_test/c.ckpt");
+        save(&path, &st, 1).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path, &meta).is_err());
+    }
+
+    #[test]
+    fn rejects_non_checkpoint_file() {
+        let meta = meta();
+        let path = std::env::temp_dir().join("gm_ckpt_test/d.ckpt");
+        std::fs::write(&path, b"hello world, definitely not a checkpoint").unwrap();
+        assert!(load(&path, &meta).is_err());
+    }
+}

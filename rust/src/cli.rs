@@ -1,0 +1,243 @@
+//! Hand-rolled CLI (clap is not in the offline vendor set).
+//!
+//! ```text
+//! gradmatch train   [--config f.toml] [--set k=v]... [--dataset d] [--strategy s]
+//!                   [--budget 0.1] [--epochs N] [--model m] [--seed n] [--runs n]
+//! gradmatch sweep   [--config f.toml] [--datasets a,b] [--strategies x,y]
+//!                   [--budgets 0.05,0.1,...]
+//! gradmatch select  one-shot selection; dumps indices+weights JSON
+//! gradmatch inspect print the artifact manifest summary
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{ExperimentConfig, Table};
+
+/// Parsed command line.
+#[derive(Clone, Debug)]
+pub struct Cli {
+    pub command: String,
+    /// `--flag value` pairs
+    pub flags: Vec<(String, String)>,
+    /// bare positional args after the command
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// Parse `args` (excluding argv[0]).
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        if args.is_empty() {
+            bail!("usage: gradmatch <train|sweep|select|inspect> [flags]");
+        }
+        let command = args[0].clone();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.push((k.to_string(), v.to_string()));
+                } else {
+                    let v = args
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    flags.push((name.to_string(), v.clone()));
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Cli { command, flags, positional })
+    }
+
+    /// Last value of a flag (repeats allowed: later wins), if present.
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// All values of a repeatable flag (e.g. `--set`).
+    pub fn flag_all(&self, name: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+
+    /// Comma-separated list flag.
+    pub fn flag_list(&self, name: &str) -> Option<Vec<String>> {
+        self.flag(name)
+            .map(|v| v.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect())
+    }
+
+    /// Build the experiment config: file (if given) → `--set` overrides →
+    /// dedicated convenience flags.
+    pub fn experiment_config(&self) -> Result<ExperimentConfig> {
+        let mut table = match self.flag("config") {
+            Some(path) => Table::from_file(std::path::Path::new(path))?,
+            None => Table::default(),
+        };
+        for ov in self.flag_all("set") {
+            table.set(ov)?;
+        }
+        // convenience flags map onto table keys
+        let map: &[(&str, &str)] = &[
+            ("dataset", "experiment.dataset"),
+            ("model", "experiment.model"),
+            ("strategy", "experiment.strategy"),
+            ("budget", "experiment.budget_frac"),
+            ("epochs", "experiment.epochs"),
+            ("r", "experiment.r_interval"),
+            ("lr0", "experiment.lr0"),
+            ("seed", "experiment.seed"),
+            ("runs", "experiment.runs"),
+            ("eval-every", "experiment.eval_every"),
+            ("n-train", "experiment.n_train"),
+            ("lambda", "selection.lambda"),
+            ("kappa", "selection.kappa"),
+            ("imbalance", "selection.is_valid"),
+            ("overlap", "experiment.overlap"),
+            ("label-noise", "selection.label_noise"),
+            ("artifacts", "paths.artifacts"),
+            ("out", "paths.out"),
+        ];
+        for (flag, key) in map {
+            if let Some(v) = self.flag(flag) {
+                // strings need quoting for the table parser unless numeric/bool
+                let needs_quotes = v.parse::<f64>().is_err() && v != "true" && v != "false";
+                let spec = if needs_quotes {
+                    format!("{key}=\"{v}\"")
+                } else {
+                    format!("{key}={v}")
+                };
+                table.set(&spec)?;
+            }
+        }
+        let mut cfg = ExperimentConfig::from_table(&table)?;
+        // default the model variant from the dataset card when the user
+        // picked a dataset but no model
+        if self.flag("model").is_none() && table.get("experiment.model").is_none() {
+            if let Some(card) = crate::data::DatasetCard::by_name(&cfg.dataset) {
+                cfg.model = card.model.to_string();
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Top-level usage text.
+pub fn usage() -> &'static str {
+    "gradmatch — GRAD-MATCH data subset selection (ICML 2021 reproduction)
+
+USAGE:
+  gradmatch train   [--config exp.toml] [--dataset synmnist] [--model lenet_s]
+                    [--strategy gradmatch-pb-warm] [--budget 0.1] [--epochs 60]
+                    [--r 20] [--seed 42] [--runs 1] [--eval-every 5]
+                    [--imbalance true] [--set section.key=value]...
+  gradmatch sweep   [--datasets synmnist,syncifar10] [--strategies random,gradmatch-pb]
+                    [--budgets 0.05,0.1,0.3] [--epochs 60] ...
+  gradmatch select  one-shot subset selection; prints indices+weights JSON
+  gradmatch inspect print artifact manifest summary
+
+Strategies: random, full, full-earlystop, glister, craig[-pb], gradmatch,
+            gradmatch-pb, gradmatch-perclass, entropy, forgetting, featurefl
+            — append -warm for the κ warm-start variants.
+Datasets:   synmnist, syncifar10, syncifar100, synsvhn, synimagenet
+"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_both_styles() {
+        let c = Cli::parse(&args(&["train", "--budget", "0.1", "--epochs=30"])).unwrap();
+        assert_eq!(c.command, "train");
+        assert_eq!(c.flag("budget"), Some("0.1"));
+        assert_eq!(c.flag("epochs"), Some("30"));
+        assert_eq!(c.flag("nope"), None);
+    }
+
+    #[test]
+    fn repeated_set_flags_collected() {
+        let c = Cli::parse(&args(&[
+            "train",
+            "--set",
+            "experiment.epochs=5",
+            "--set",
+            "selection.lambda=0.1",
+        ]))
+        .unwrap();
+        assert_eq!(c.flag_all("set").len(), 2);
+    }
+
+    #[test]
+    fn flag_needs_value() {
+        assert!(Cli::parse(&args(&["train", "--budget"])).is_err());
+    }
+
+    #[test]
+    fn empty_args_error() {
+        assert!(Cli::parse(&[]).is_err());
+    }
+
+    #[test]
+    fn experiment_config_from_flags() {
+        let c = Cli::parse(&args(&[
+            "train",
+            "--dataset",
+            "syncifar10",
+            "--model",
+            "resnet_s",
+            "--strategy",
+            "craig-pb-warm",
+            "--budget",
+            "0.3",
+            "--epochs",
+            "7",
+            "--lambda",
+            "0.25",
+        ]))
+        .unwrap();
+        let cfg = c.experiment_config().unwrap();
+        assert_eq!(cfg.dataset, "syncifar10");
+        assert_eq!(cfg.strategy, "craig-pb-warm");
+        assert_eq!(cfg.epochs, 7);
+        assert!((cfg.lambda - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn set_overrides_beat_convenience_order() {
+        let c = Cli::parse(&args(&["train", "--epochs", "9"])).unwrap();
+        let cfg = c.experiment_config().unwrap();
+        assert_eq!(cfg.epochs, 9);
+    }
+
+    #[test]
+    fn flag_list_splits() {
+        let c = Cli::parse(&args(&["sweep", "--budgets", "0.05, 0.1,0.3"])).unwrap();
+        assert_eq!(
+            c.flag_list("budgets").unwrap(),
+            vec!["0.05".to_string(), "0.1".into(), "0.3".into()]
+        );
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let c = Cli::parse(&args(&["train", "--budget", "0.1", "--budget", "0.2"])).unwrap();
+        assert_eq!(c.flag("budget"), Some("0.2"));
+    }
+}

@@ -1,0 +1,404 @@
+//! Experiment configuration: typed config structs + a TOML-subset parser
+//! (the `toml`/`serde` crates are not in the offline vendor set).
+//!
+//! The grammar covers what experiment files need: `[section]` headers,
+//! `key = value` with string / number / bool / flat-array values, `#`
+//! comments.  `--set section.key=value` CLI overrides reuse the same value
+//! parser, so the launcher and files stay consistent.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed scalar/array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().filter(|v| *v >= 0.0 && v.fract() == 0.0).map(|v| v as usize)
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config parse error on line {0}: {1}")]
+    Parse(usize, String),
+    #[error("missing or mistyped key '{0}'")]
+    Key(String),
+    #[error("unknown {0} '{1}'")]
+    Unknown(&'static str, String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Raw `[section] key=value` table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    map: BTreeMap<String, Value>,
+}
+
+impl Table {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Table, ConfigError> {
+        let mut t = Table::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| ConfigError::Parse(lineno + 1, "unclosed section".into()))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::Parse(lineno + 1, "expected key = value".into()))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = parse_value(v.trim())
+                .ok_or_else(|| ConfigError::Parse(lineno + 1, format!("bad value: {v}")))?;
+            t.map.insert(key, val);
+        }
+        Ok(t)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Table, ConfigError> {
+        Ok(Table::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    /// Apply a `section.key=value` override.
+    pub fn set(&mut self, spec: &str) -> Result<(), ConfigError> {
+        let (k, v) = spec
+            .split_once('=')
+            .ok_or_else(|| ConfigError::Parse(0, format!("override '{spec}' missing '='")))?;
+        let val = parse_value(v.trim())
+            .ok_or_else(|| ConfigError::Parse(0, format!("bad override value: {v}")))?;
+        self.map.insert(k.trim().to_string(), val);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64, ConfigError> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_f64().ok_or_else(|| ConfigError::Key(key.into())),
+        }
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize, ConfigError> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_usize().ok_or_else(|| ConfigError::Key(key.into())),
+        }
+    }
+
+    fn str_or(&self, key: &str, default: &str) -> Result<String, ConfigError> {
+        match self.map.get(key) {
+            None => Ok(default.to_string()),
+            Some(v) => v
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| ConfigError::Key(key.into())),
+        }
+    }
+
+    fn bool_or(&self, key: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_bool().ok_or_else(|| ConfigError::Key(key.into())),
+        }
+    }
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Some(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Some(Value::Bool(true));
+    }
+    if s == "false" {
+        return Some(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            items.push(parse_value(p)?);
+        }
+        return Some(Value::Arr(items));
+    }
+    s.parse::<f64>().ok().map(Value::Num)
+}
+
+// ---------------------------------------------------------------------------
+// typed experiment config
+// ---------------------------------------------------------------------------
+
+/// Full configuration for one training run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// dataset card name (see `data::DatasetCard::by_name`)
+    pub dataset: String,
+    /// model variant (must exist in the artifact manifest)
+    pub model: String,
+    /// selection strategy spec, e.g. "gradmatch-pb-warm" (see selection::parse)
+    pub strategy: String,
+    /// subset fraction of the training set (paper: 0.01 – 0.30)
+    pub budget_frac: f64,
+    /// total training epochs T
+    pub epochs: usize,
+    /// re-select every R epochs (paper default 20)
+    pub r_interval: usize,
+    /// initial learning rate for cosine annealing (paper: 0.01)
+    pub lr0: f64,
+    /// OMP ridge regularizer λ (paper default 0.5)
+    pub lambda: f64,
+    /// OMP tolerance ε
+    pub eps: f64,
+    /// warm-start fraction κ (paper default 0.5)
+    pub kappa: f64,
+    /// master seed
+    pub seed: u64,
+    /// repeated runs for mean/std tables
+    pub runs: usize,
+    /// artifact directory (manifest.json lives here)
+    pub artifacts_dir: String,
+    /// where to write result json/csv
+    pub out_dir: String,
+    /// validate every N epochs (0 = only at end)
+    pub eval_every: usize,
+    /// use validation-set gradients as the matching target (class imbalance)
+    pub is_valid: bool,
+    /// dataset size override (0 = card default) — benches shrink this
+    pub n_train: usize,
+    /// fraction of classes made scarce when `is_valid` (paper: 0.3/0.6/0.9)
+    pub imbalance_frac: f64,
+    /// fraction of samples kept in the scarce classes (paper: 0.1)
+    pub imbalance_keep: f64,
+    /// fraction of training labels flipped to a random wrong class
+    /// (robust-learning extension; 0 = clean)
+    pub label_noise: f64,
+    /// overlapped selection: serve selection from a background worker so
+    /// training never stalls on a selection round (extension; see
+    /// `rust/src/overlap.rs`)
+    pub overlap: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "synmnist".into(),
+            model: "lenet_s".into(),
+            strategy: "gradmatch-pb".into(),
+            budget_frac: 0.10,
+            epochs: 60,
+            r_interval: 20,
+            lr0: 0.05,
+            lambda: 0.5,
+            eps: 1e-10,
+            kappa: 0.5,
+            seed: 42,
+            runs: 1,
+            artifacts_dir: "artifacts".into(),
+            out_dir: "results".into(),
+            eval_every: 5,
+            is_valid: false,
+            n_train: 0,
+            imbalance_frac: 0.3,
+            imbalance_keep: 0.1,
+            label_noise: 0.0,
+            overlap: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Build from a parsed table (missing keys take defaults).
+    pub fn from_table(t: &Table) -> Result<Self, ConfigError> {
+        let d = ExperimentConfig::default();
+        Ok(ExperimentConfig {
+            dataset: t.str_or("experiment.dataset", &d.dataset)?,
+            model: t.str_or("experiment.model", &d.model)?,
+            strategy: t.str_or("experiment.strategy", &d.strategy)?,
+            budget_frac: t.f64_or("experiment.budget_frac", d.budget_frac)?,
+            epochs: t.usize_or("experiment.epochs", d.epochs)?,
+            r_interval: t.usize_or("experiment.r_interval", d.r_interval)?,
+            lr0: t.f64_or("experiment.lr0", d.lr0)?,
+            lambda: t.f64_or("selection.lambda", d.lambda)?,
+            eps: t.f64_or("selection.eps", d.eps)?,
+            kappa: t.f64_or("selection.kappa", d.kappa)?,
+            seed: t.usize_or("experiment.seed", d.seed as usize)? as u64,
+            runs: t.usize_or("experiment.runs", d.runs)?,
+            artifacts_dir: t.str_or("paths.artifacts", &d.artifacts_dir)?,
+            out_dir: t.str_or("paths.out", &d.out_dir)?,
+            eval_every: t.usize_or("experiment.eval_every", d.eval_every)?,
+            is_valid: t.bool_or("selection.is_valid", d.is_valid)?,
+            n_train: t.usize_or("experiment.n_train", d.n_train)?,
+            imbalance_frac: t.f64_or("selection.imbalance_frac", d.imbalance_frac)?,
+            imbalance_keep: t.f64_or("selection.imbalance_keep", d.imbalance_keep)?,
+            label_noise: t.f64_or("selection.label_noise", d.label_noise)?,
+            overlap: t.bool_or("experiment.overlap", d.overlap)?,
+        })
+    }
+
+    /// Validate cross-field constraints.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if !(0.0 < self.budget_frac && self.budget_frac <= 1.0) {
+            return Err(ConfigError::Key("experiment.budget_frac".into()));
+        }
+        if self.epochs == 0 || self.r_interval == 0 {
+            return Err(ConfigError::Key("experiment.epochs/r_interval".into()));
+        }
+        if !(0.0..=1.0).contains(&self.kappa) {
+            return Err(ConfigError::Key("selection.kappa".into()));
+        }
+        if self.lambda < 0.0 {
+            return Err(ConfigError::Key("selection.lambda".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment file
+[experiment]
+dataset = "syncifar10"
+model = "resnet_s"
+strategy = "gradmatch-pb-warm"
+budget_frac = 0.3
+epochs = 300
+r_interval = 20
+seed = 7
+
+[selection]
+lambda = 0.5
+is_valid = false
+
+[paths]
+artifacts = "artifacts"
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let t = Table::parse(SAMPLE).unwrap();
+        assert_eq!(t.get("experiment.dataset").unwrap().as_str(), Some("syncifar10"));
+        assert_eq!(t.get("experiment.epochs").unwrap().as_usize(), Some(300));
+        assert_eq!(t.get("selection.lambda").unwrap().as_f64(), Some(0.5));
+        assert_eq!(t.get("selection.is_valid").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn parse_arrays() {
+        let t = Table::parse("budgets = [0.05, 0.1, 0.3]\n").unwrap();
+        match t.get("budgets").unwrap() {
+            Value::Arr(items) => {
+                assert_eq!(items.len(), 3);
+                assert_eq!(items[1].as_f64(), Some(0.1));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let t = Table::parse("# hi\n\na = 1 # trailing\n").unwrap();
+        assert_eq!(t.get("a").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn bad_lines_error_with_lineno() {
+        let e = Table::parse("a = 1\nbogus line\n").unwrap_err();
+        match e {
+            ConfigError::Parse(2, _) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn typed_config_roundtrip() {
+        let t = Table::parse(SAMPLE).unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.dataset, "syncifar10");
+        assert_eq!(c.model, "resnet_s");
+        assert_eq!(c.epochs, 300);
+        assert_eq!(c.seed, 7);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut t = Table::parse(SAMPLE).unwrap();
+        t.set("experiment.epochs=5").unwrap();
+        t.set("selection.lambda=0.1").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.epochs, 5);
+        assert_eq!(c.lambda, 0.1);
+    }
+
+    #[test]
+    fn defaults_fill_missing() {
+        let c = ExperimentConfig::from_table(&Table::default()).unwrap();
+        assert_eq!(c.dataset, "synmnist");
+        assert_eq!(c.r_interval, 20);
+        assert!((c.lambda - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_catches_bad_values() {
+        let mut c = ExperimentConfig::default();
+        c.budget_frac = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.kappa = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn string_with_spaces_and_override_strings() {
+        let mut t = Table::default();
+        t.set(r#"paths.out="my results/dir""#).unwrap();
+        assert_eq!(t.get("paths.out").unwrap().as_str(), Some("my results/dir"));
+    }
+}

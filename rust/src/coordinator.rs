@@ -1,0 +1,365 @@
+//! Experiment coordinator: config → dataset → strategy → trainer, plus the
+//! multi-run / sweep drivers behind the CLI, the examples, and every bench.
+//!
+//! A [`Coordinator`] owns one PJRT runtime (compiled executables are cached
+//! across runs) and a cache of full-training baselines so speedups and
+//! relative errors are computed against the *same* skyline the paper uses
+//! (FULL for accuracy, RANDOM/FULL time for efficiency).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::{imbalance_indices, DatasetCard, Splits};
+use crate::jsonlite::{arr, num, obj, s, Json};
+use crate::metrics::Phase;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::selection::parse_strategy;
+use crate::stats;
+use crate::trainer::{train, TrainOpts, TrainOutcome};
+
+/// Summary of one (strategy × budget × seed) run.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub dataset: String,
+    pub model: String,
+    pub strategy: String,
+    pub budget_frac: f64,
+    pub seed: u64,
+    pub test_acc: f64,
+    pub train_secs: f64,
+    pub select_secs: f64,
+    pub total_secs: f64,
+    pub energy_kwh: f64,
+    pub selections: usize,
+    pub steps: usize,
+    pub mean_grad_error: Option<f64>,
+    /// fraction of training rows never selected (Table 10)
+    pub redundant_frac: f64,
+    /// (epoch, cum_secs, test_acc) convergence points (Fig. 3j/k)
+    pub convergence: Vec<(usize, f64, f64)>,
+}
+
+impl RunSummary {
+    fn from_outcome(cfg_like: &RunKey, seed: u64, o: &TrainOutcome) -> RunSummary {
+        let never = o.ever_selected.iter().filter(|&&b| !b).count();
+        let conv = o
+            .history
+            .iter()
+            .filter_map(|h| h.test_acc.map(|a| (h.epoch, h.cum_secs, a as f64)))
+            .collect();
+        RunSummary {
+            dataset: cfg_like.dataset.clone(),
+            model: cfg_like.model.clone(),
+            strategy: cfg_like.strategy.clone(),
+            budget_frac: cfg_like.budget_frac,
+            seed,
+            test_acc: o.final_test_acc as f64,
+            train_secs: o.clock.secs(Phase::Train),
+            select_secs: o.clock.secs(Phase::Select),
+            total_secs: o.clock.secs(Phase::Train) + o.clock.secs(Phase::Select),
+            energy_kwh: o.energy_kwh,
+            selections: o.selections,
+            steps: o.steps,
+            mean_grad_error: if o.grad_errors.is_empty() {
+                None
+            } else {
+                Some(o.grad_errors.iter().map(|&e| e as f64).sum::<f64>() / o.grad_errors.len() as f64)
+            },
+            redundant_frac: never as f64 / o.ever_selected.len().max(1) as f64,
+            convergence: conv,
+        }
+    }
+
+    /// Serialize for the results directory.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dataset", s(&self.dataset)),
+            ("model", s(&self.model)),
+            ("strategy", s(&self.strategy)),
+            ("budget_frac", num(self.budget_frac)),
+            ("seed", num(self.seed as f64)),
+            ("test_acc", num(self.test_acc)),
+            ("train_secs", num(self.train_secs)),
+            ("select_secs", num(self.select_secs)),
+            ("total_secs", num(self.total_secs)),
+            ("energy_kwh_simulated", num(self.energy_kwh)),
+            ("selections", num(self.selections as f64)),
+            ("steps", num(self.steps as f64)),
+            ("redundant_frac", num(self.redundant_frac)),
+            (
+                "mean_grad_error",
+                self.mean_grad_error.map(num).unwrap_or(Json::Null),
+            ),
+            (
+                "convergence",
+                arr(self
+                    .convergence
+                    .iter()
+                    .map(|&(e, t, a)| arr(vec![num(e as f64), num(t), num(a)]))
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+#[derive(Clone, Debug)]
+struct RunKey {
+    dataset: String,
+    model: String,
+    strategy: String,
+    budget_frac: f64,
+}
+
+/// Orchestrates runs over one shared runtime.
+pub struct Coordinator {
+    pub rt: Runtime,
+    /// dataset cache keyed by (card, seed, n_override)
+    splits: HashMap<(String, u64, usize), Splits>,
+    /// full-training baselines keyed by (dataset, model, epochs, seed)
+    full_cache: HashMap<(String, String, usize, u64), RunSummary>,
+}
+
+impl Coordinator {
+    pub fn new(artifacts_dir: &str) -> Result<Coordinator> {
+        Ok(Coordinator {
+            rt: Runtime::load(artifacts_dir)?,
+            splits: HashMap::new(),
+            full_cache: HashMap::new(),
+        })
+    }
+
+    /// Generate (or fetch cached) splits for a dataset card.
+    pub fn splits(&mut self, dataset: &str, seed: u64, n_override: usize) -> Result<&Splits> {
+        let key = (dataset.to_string(), seed, n_override);
+        if !self.splits.contains_key(&key) {
+            let card = DatasetCard::by_name(dataset)
+                .ok_or_else(|| anyhow!("unknown dataset card '{dataset}'"))?;
+            self.splits.insert(key.clone(), card.generate(seed, n_override));
+        }
+        Ok(self.splits.get(&key).unwrap())
+    }
+
+    /// Run one experiment configuration for one seed.
+    pub fn run_one(&mut self, cfg: &ExperimentConfig, seed: u64) -> Result<RunSummary> {
+        cfg.validate().map_err(|e| anyhow!("config: {e}"))?;
+        let meta = self.rt.model(&cfg.model)?.clone();
+        let card = DatasetCard::by_name(&cfg.dataset)
+            .ok_or_else(|| anyhow!("unknown dataset card '{}'", cfg.dataset))?;
+        if card.d != meta.d {
+            return Err(anyhow!(
+                "dataset '{}' (d={}) incompatible with model '{}' (d={})",
+                cfg.dataset, card.d, cfg.model, meta.d
+            ));
+        }
+        if card.classes > meta.c {
+            return Err(anyhow!(
+                "dataset '{}' has {} classes but model '{}' only {}",
+                cfg.dataset, card.classes, cfg.model, meta.c
+            ));
+        }
+        // dataset seed is decoupled from run seed so every strategy sees
+        // identical data for a given cfg.seed
+        let mut splits = self.splits(&cfg.dataset, cfg.seed, cfg.n_train)?.clone();
+        if cfg.label_noise > 0.0 {
+            let mut nrng = Rng::new(cfg.seed ^ 0x2077);
+            crate::data::apply_label_noise(&mut splits.train, cfg.label_noise, &mut nrng);
+        }
+
+        // ground set: optionally imbalanced
+        let ground: Vec<usize> = if cfg.is_valid {
+            let mut rng = Rng::new(cfg.seed ^ 0x1337);
+            imbalance_indices(&splits.train, cfg.imbalance_frac, cfg.imbalance_keep, &mut rng)
+        } else {
+            (0..splits.train.len()).collect()
+        };
+
+        let (mut strategy, warm) = parse_strategy(&cfg.strategy, meta.batch)?;
+        let is_early_stop = cfg.strategy.starts_with("full-earlystop")
+            || (cfg.strategy == "full" && cfg.budget_frac < 1.0);
+        let opts = TrainOpts {
+            epochs: cfg.epochs,
+            r_interval: cfg.r_interval,
+            budget_frac: if is_early_stop { 1.0 } else { cfg.budget_frac },
+            lr0: cfg.lr0 as f32,
+            lambda: cfg.lambda as f32,
+            eps: cfg.eps as f32,
+            kappa: cfg.kappa,
+            warm,
+            eval_every: cfg.eval_every,
+            is_valid: cfg.is_valid,
+            seed,
+            early_stop_frac: if is_early_stop { Some(cfg.budget_frac) } else { None },
+            overlap: cfg.overlap,
+        };
+        let st = self.rt.init(&cfg.model, seed as i32)?;
+        let key = RunKey {
+            dataset: cfg.dataset.clone(),
+            model: cfg.model.clone(),
+            strategy: cfg.strategy.clone(),
+            budget_frac: cfg.budget_frac,
+        };
+        let mut selector = if cfg.overlap && !is_early_stop {
+            let base_spec = cfg.strategy.trim_end_matches("-warm").to_string();
+            let budget =
+                ((opts.budget_frac * ground.len() as f64).round() as usize).clamp(1, ground.len());
+            Some(crate::overlap::AsyncSelector::spawn(
+                crate::overlap::SelectorConfig {
+                    artifacts_dir: cfg.artifacts_dir.clone(),
+                    strategy_spec: base_spec,
+                    ground: ground.clone(),
+                    budget,
+                    lambda: cfg.lambda as f32,
+                    eps: cfg.eps as f32,
+                    is_valid: cfg.is_valid,
+                    seed,
+                },
+                splits.train.clone(),
+                splits.val.clone(),
+            )?)
+        } else {
+            None
+        };
+        let (_st, outcome) = crate::trainer::train_overlapped(
+            &self.rt,
+            st,
+            &splits,
+            &ground,
+            strategy.as_mut(),
+            &opts,
+            selector.as_mut(),
+        )?;
+        Ok(RunSummary::from_outcome(&key, seed, &outcome))
+    }
+
+    /// Run `cfg.runs` seeds; returns all summaries.
+    pub fn run_multi(&mut self, cfg: &ExperimentConfig) -> Result<Vec<RunSummary>> {
+        (0..cfg.runs.max(1))
+            .map(|r| self.run_one(cfg, cfg.seed + r as u64))
+            .collect()
+    }
+
+    /// Full-training skyline for (dataset, model, epochs, seed) — cached.
+    pub fn full_baseline(&mut self, cfg: &ExperimentConfig, seed: u64) -> Result<RunSummary> {
+        let key = (cfg.dataset.clone(), cfg.model.clone(), cfg.epochs, seed);
+        if let Some(hit) = self.full_cache.get(&key) {
+            return Ok(hit.clone());
+        }
+        let mut full_cfg = cfg.clone();
+        full_cfg.strategy = "full".into();
+        full_cfg.budget_frac = 1.0;
+        let summary = self.run_one(&full_cfg, seed)?;
+        self.full_cache.insert(key, summary.clone());
+        Ok(summary)
+    }
+
+    /// Sweep strategies × budgets on one dataset — the Fig. 3 scatter data.
+    /// Returns rows (summary, rel_err_pct, speedup, energy_ratio).
+    pub fn sweep(
+        &mut self,
+        base: &ExperimentConfig,
+        strategies: &[&str],
+        budgets: &[f64],
+    ) -> Result<Vec<SweepRow>> {
+        let full = self.full_baseline(base, base.seed)?;
+        let mut rows = Vec::new();
+        for &b in budgets {
+            for &strat in strategies {
+                let mut cfg = base.clone();
+                cfg.strategy = strat.to_string();
+                cfg.budget_frac = b;
+                let runs = self.run_multi(&cfg)?;
+                let accs: Vec<f64> = runs.iter().map(|r| r.test_acc).collect();
+                let times: Vec<f64> = runs.iter().map(|r| r.total_secs).collect();
+                let energies: Vec<f64> = runs.iter().map(|r| r.energy_kwh).collect();
+                rows.push(SweepRow {
+                    summary: runs[0].clone(),
+                    acc_mean: stats::mean(&accs),
+                    acc_std: stats::stddev(&accs),
+                    rel_err_pct: stats::relative_error_pct(
+                        stats::mean(&accs) * 100.0,
+                        full.test_acc * 100.0,
+                    ),
+                    speedup: stats::speedup(stats::mean(&times), full.total_secs),
+                    energy_ratio: full.energy_kwh / stats::mean(&energies).max(1e-12),
+                    full_acc: full.test_acc,
+                });
+            }
+        }
+        Ok(rows)
+    }
+}
+
+/// One row of a Fig.3-style sweep.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub summary: RunSummary,
+    pub acc_mean: f64,
+    pub acc_std: f64,
+    pub rel_err_pct: f64,
+    pub speedup: f64,
+    pub energy_ratio: f64,
+    pub full_acc: f64,
+}
+
+impl SweepRow {
+    /// Paper-shaped table line.
+    pub fn format(&self) -> String {
+        format!(
+            "{:<22} {:>5.0}% | acc {:>6.2}% (±{:.2}) | rel-err {:>6.2}% | speedup {:>5.2}x | energy-gain {:>5.2}x | sel {:>5.1}s",
+            self.summary.strategy,
+            self.summary.budget_frac * 100.0,
+            self.acc_mean * 100.0,
+            self.acc_std * 100.0,
+            self.rel_err_pct,
+            self.speedup,
+            self.energy_ratio,
+            self.summary.select_secs,
+        )
+    }
+}
+
+/// Write summaries to `<out_dir>/<name>.json`.
+pub fn write_results(out_dir: &str, name: &str, rows: &[RunSummary]) -> Result<String> {
+    std::fs::create_dir_all(out_dir)?;
+    let path = format!("{out_dir}/{name}.json");
+    let doc = arr(rows.iter().map(|r| r.to_json()).collect());
+    std::fs::write(&path, doc.dump())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_summary_json_roundtrips() {
+        let r = RunSummary {
+            dataset: "synmnist".into(),
+            model: "lenet_s".into(),
+            strategy: "gradmatch-pb".into(),
+            budget_frac: 0.1,
+            seed: 1,
+            test_acc: 0.93,
+            train_secs: 10.0,
+            select_secs: 2.0,
+            total_secs: 12.0,
+            energy_kwh: 0.001,
+            selections: 3,
+            steps: 480,
+            mean_grad_error: Some(0.05),
+            redundant_frac: 0.7,
+            convergence: vec![(4, 1.0, 0.8), (9, 2.0, 0.9)],
+        };
+        let j = r.to_json();
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.get("strategy").unwrap().as_str(), Some("gradmatch-pb"));
+        assert_eq!(parsed.get("selections").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            parsed.get("convergence").unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+}

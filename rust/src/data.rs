@@ -1,0 +1,508 @@
+//! Dataset substrate: synthetic classification suites standing in for the
+//! paper's MNIST / CIFAR / SVHN / ImageNet (no downloads offline — see
+//! DESIGN.md §4 for the substitution argument), plus splits, the
+//! class-imbalance transform, per-class index views, and the fixed-shape
+//! padded batch iterator the AOT'd executables require.
+//!
+//! Generation model: per class, `clusters` anchor points in a latent space;
+//! samples are anchors + isotropic spread, pushed through a fixed random
+//! `tanh` feature map to the model's input dimension, plus observation
+//! noise.  Low `clusters`/`spread` ⇒ high intra-class redundancy ⇒ subset
+//! selection has signal (like near-duplicate images); `sep` controls class
+//! overlap ⇒ task difficulty.
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// In-memory dataset (row-major features + integer labels).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Matrix,
+    pub y: Vec<i32>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Indices of each class: `out[c]` lists rows with label c.
+    pub fn class_indices(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.classes];
+        for (i, &c) in self.y.iter().enumerate() {
+            out[c as usize].push(i);
+        }
+        out
+    }
+
+    /// Subset view (copies rows).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.gather_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            classes: self.classes,
+        }
+    }
+}
+
+/// Train/val/test triple.
+#[derive(Clone, Debug)]
+pub struct Splits {
+    pub train: Dataset,
+    pub val: Dataset,
+    pub test: Dataset,
+}
+
+/// Named dataset card — the knobs for one synthetic suite.
+#[derive(Clone, Debug)]
+pub struct DatasetCard {
+    pub name: &'static str,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub n_test: usize,
+    pub d: usize,
+    pub classes: usize,
+    /// latent dimension of the generative model
+    pub latent: usize,
+    /// anchor clusters per class (lower ⇒ more redundancy)
+    pub clusters: usize,
+    /// distance between class anchors (higher ⇒ easier)
+    pub sep: f32,
+    /// within-cluster spread
+    pub spread: f32,
+    /// observation noise added in feature space
+    pub noise: f32,
+    /// default model variant for this card
+    pub model: &'static str,
+}
+
+impl DatasetCard {
+    /// The five suites used by the experiment harness (paper's five datasets).
+    pub fn all() -> Vec<DatasetCard> {
+        vec![
+            // MNIST-like: easy, highly redundant → big subset-selection wins
+            DatasetCard { name: "synmnist", n_train: 10_000, n_val: 1_000, n_test: 2_000,
+                d: 784, classes: 10, latent: 24, clusters: 6, sep: 2.4, spread: 1.1,
+                noise: 0.15, model: "lenet_s" },
+            // CIFAR-10-like: moderate difficulty
+            DatasetCard { name: "syncifar10", n_train: 10_000, n_val: 1_000, n_test: 2_000,
+                d: 1024, classes: 10, latent: 32, clusters: 8, sep: 1.9, spread: 1.2,
+                noise: 0.25, model: "resnet_s" },
+            // CIFAR-100-like: many classes, hardest
+            DatasetCard { name: "syncifar100", n_train: 10_000, n_val: 1_000, n_test: 2_000,
+                d: 1024, classes: 20, latent: 32, clusters: 6, sep: 1.6, spread: 1.2,
+                noise: 0.25, model: "resnet_s" },
+            // SVHN-like: noisy observations
+            DatasetCard { name: "synsvhn", n_train: 12_000, n_val: 1_200, n_test: 2_400,
+                d: 1024, classes: 10, latent: 32, clusters: 8, sep: 2.0, spread: 1.2,
+                noise: 0.45, model: "resnet_s" },
+            // ImageNet-like: exercises the scaling path (3x samples)
+            DatasetCard { name: "synimagenet", n_train: 30_000, n_val: 2_000, n_test: 4_000,
+                d: 1024, classes: 20, latent: 40, clusters: 8, sep: 1.7, spread: 1.2,
+                noise: 0.3, model: "resnet_s" },
+        ]
+    }
+
+    /// Lookup by name.
+    pub fn by_name(name: &str) -> Option<DatasetCard> {
+        Self::all().into_iter().find(|c| c.name == name)
+    }
+
+    /// Generate the full train/val/test splits for a seed.
+    ///
+    /// `n_train_override` (when non-zero) shrinks the training split —
+    /// benches use miniature configs.  Teacher map and anchors depend only
+    /// on (card, seed), so different strategies see identical data.
+    pub fn generate(&self, seed: u64, n_train_override: usize) -> Splits {
+        let root = Rng::new(seed ^ fnv(self.name));
+        let mut teacher_rng = root.split(1);
+
+        // fixed random feature map: latent -> d
+        let a = Matrix::from_vec(
+            self.latent,
+            self.d,
+            (0..self.latent * self.d)
+                .map(|_| teacher_rng.gaussian_f32() / (self.latent as f32).sqrt())
+                .collect(),
+        );
+        let bias: Vec<f32> = (0..self.d).map(|_| 0.3 * teacher_rng.gaussian_f32()).collect();
+
+        // class anchors
+        let mut anchors = Vec::with_capacity(self.classes * self.clusters);
+        for _ in 0..self.classes * self.clusters {
+            let v: Vec<f32> = (0..self.latent)
+                .map(|_| self.sep * teacher_rng.gaussian_f32() / 2.0f32.sqrt())
+                .collect();
+            anchors.push(v);
+        }
+
+        let n_train = if n_train_override > 0 { n_train_override } else { self.n_train };
+        let gen = |n: usize, stream: u64| -> Dataset {
+            let mut rng = root.split(stream);
+            let mut x = Matrix::zeros(n, self.d);
+            let mut y = Vec::with_capacity(n);
+            let mut z = vec![0.0f32; self.latent];
+            for i in 0..n {
+                let cls = i % self.classes; // balanced by construction
+                let cluster = rng.usize(self.clusters);
+                let anchor = &anchors[cls * self.clusters + cluster];
+                for (j, zj) in z.iter_mut().enumerate() {
+                    *zj = anchor[j] + self.spread * rng.gaussian_f32();
+                }
+                let row = x.row_mut(i);
+                // row = tanh(z @ A + bias) + noise
+                for (jd, r) in row.iter_mut().enumerate() {
+                    let mut acc = bias[jd];
+                    for (jl, &zj) in z.iter().enumerate() {
+                        acc += zj * a.at(jl, jd);
+                    }
+                    *r = acc.tanh() + self.noise * rng.gaussian_f32();
+                }
+                y.push(cls as i32);
+            }
+            // shuffle rows so classes are interleaved randomly
+            let mut perm: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut perm);
+            let ds = Dataset { x, y, classes: self.classes };
+            ds.subset(&perm)
+        };
+
+        Splits {
+            train: gen(n_train, 2),
+            val: gen(self.n_val, 3),
+            test: gen(self.n_test, 4),
+        }
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Class-imbalance transform (paper §5 "Data selection with class
+/// imbalance"): reduce `frac_classes` of the classes to `keep_frac` of
+/// their samples.  Returns the surviving indices (sorted).
+pub fn imbalance_indices(
+    ds: &Dataset,
+    frac_classes: f64,
+    keep_frac: f64,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let n_classes = ds.classes;
+    let n_reduce = ((n_classes as f64) * frac_classes).round() as usize;
+    let mut classes: Vec<usize> = (0..n_classes).collect();
+    rng.shuffle(&mut classes);
+    let reduced: Vec<usize> = classes.into_iter().take(n_reduce).collect();
+    let per_class = ds.class_indices();
+    let mut keep = Vec::new();
+    for (c, idxs) in per_class.iter().enumerate() {
+        if reduced.contains(&c) {
+            let k = ((idxs.len() as f64) * keep_frac).round().max(1.0) as usize;
+            let chosen = rng.sample_indices(idxs.len(), k.min(idxs.len()));
+            keep.extend(chosen.into_iter().map(|j| idxs[j]));
+        } else {
+            keep.extend_from_slice(idxs);
+        }
+    }
+    keep.sort_unstable();
+    keep
+}
+
+/// Label-noise transform (robust-learning extension; the paper's related
+/// work — Mirzasoleiman et al. 2020b — studies CRAIG under noisy labels,
+/// and GLISTER/GRAD-MATCH handle it via validation-gradient matching):
+/// flip `noise_frac` of the labels to a uniformly random *different* class.
+/// Returns the indices whose labels were flipped.
+pub fn apply_label_noise(ds: &mut Dataset, noise_frac: f64, rng: &mut Rng) -> Vec<usize> {
+    let n_flip = ((ds.len() as f64) * noise_frac).round() as usize;
+    let flips = rng.sample_indices(ds.len(), n_flip.min(ds.len()));
+    for &i in &flips {
+        let old = ds.y[i];
+        let mut new = rng.usize(ds.classes) as i32;
+        while new == old && ds.classes > 1 {
+            new = rng.usize(ds.classes) as i32;
+        }
+        ds.y[i] = new;
+    }
+    flips
+}
+
+/// Fixed-shape padded chunk: the bridge between variable-size index lists
+/// and the static shapes of the AOT'd executables.
+#[derive(Clone, Debug)]
+pub struct PaddedChunk {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    /// 1.0 on live rows, 0.0 on padding
+    pub mask: Vec<f32>,
+    /// dataset row index per live slot
+    pub indices: Vec<usize>,
+    /// number of live rows
+    pub live: usize,
+}
+
+/// Iterate `indices` in fixed-size chunks, zero-padding the last one.
+pub fn padded_chunks<'a>(
+    ds: &'a Dataset,
+    indices: &'a [usize],
+    chunk: usize,
+) -> impl Iterator<Item = PaddedChunk> + 'a {
+    let d = ds.x.cols;
+    indices.chunks(chunk).map(move |slice| {
+        let mut x = vec![0.0f32; chunk * d];
+        let mut y = vec![0i32; chunk];
+        let mut mask = vec![0.0f32; chunk];
+        for (slot, &row) in slice.iter().enumerate() {
+            x[slot * d..(slot + 1) * d].copy_from_slice(ds.x.row(row));
+            y[slot] = ds.y[row];
+            mask[slot] = 1.0;
+        }
+        PaddedChunk { x, y, mask, indices: slice.to_vec(), live: slice.len() }
+    })
+}
+
+/// A weighted training batch (fixed shape, padded) for the train_step entry.
+#[derive(Clone, Debug)]
+pub struct WeightedBatch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    /// selection weight × padding mask
+    pub w: Vec<f32>,
+    pub live: usize,
+}
+
+/// Build shuffled weighted batches over `(indices, weights)` — Algorithm 1
+/// line 9: shuffle the subset, chop into mini-batches of `batch`, carry each
+/// example's selection weight into the loss.
+pub fn weighted_batches(
+    ds: &Dataset,
+    indices: &[usize],
+    weights: &[f32],
+    batch: usize,
+    rng: &mut Rng,
+) -> Vec<WeightedBatch> {
+    assert_eq!(indices.len(), weights.len());
+    let d = ds.x.cols;
+    let mut order: Vec<usize> = (0..indices.len()).collect();
+    rng.shuffle(&mut order);
+    order
+        .chunks(batch)
+        .map(|slice| {
+            let mut x = vec![0.0f32; batch * d];
+            let mut y = vec![0i32; batch];
+            let mut w = vec![0.0f32; batch];
+            for (slot, &oi) in slice.iter().enumerate() {
+                let row = indices[oi];
+                x[slot * d..(slot + 1) * d].copy_from_slice(ds.x.row(row));
+                y[slot] = ds.y[row];
+                w[slot] = weights[oi];
+            }
+            WeightedBatch { x, y, w, live: slice.len() }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_card() -> DatasetCard {
+        DatasetCard {
+            name: "tiny",
+            n_train: 200,
+            n_val: 40,
+            n_test: 40,
+            d: 16,
+            classes: 4,
+            latent: 6,
+            clusters: 2,
+            sep: 5.0,
+            spread: 0.6,
+            noise: 0.05,
+            model: "lenet_s",
+        }
+    }
+
+    #[test]
+    fn cards_exist_and_lookup_works() {
+        assert_eq!(DatasetCard::all().len(), 5);
+        assert!(DatasetCard::by_name("syncifar100").is_some());
+        assert!(DatasetCard::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn generate_shapes_and_determinism() {
+        let card = tiny_card();
+        let s1 = card.generate(7, 0);
+        let s2 = card.generate(7, 0);
+        assert_eq!(s1.train.len(), 200);
+        assert_eq!(s1.val.len(), 40);
+        assert_eq!(s1.train.x.cols, 16);
+        assert_eq!(s1.train.x.data, s2.train.x.data);
+        assert_eq!(s1.train.y, s2.train.y);
+        let s3 = card.generate(8, 0);
+        assert_ne!(s1.train.x.data, s3.train.x.data);
+    }
+
+    #[test]
+    fn n_train_override_shrinks() {
+        let card = tiny_card();
+        let s = card.generate(7, 60);
+        assert_eq!(s.train.len(), 60);
+        assert_eq!(s.test.len(), 40); // test split unchanged
+    }
+
+    #[test]
+    fn classes_are_roughly_balanced() {
+        let card = tiny_card();
+        let s = card.generate(1, 0);
+        let counts = s.train.class_indices();
+        for c in &counts {
+            assert_eq!(c.len(), 50);
+        }
+    }
+
+    #[test]
+    fn features_bounded_by_tanh_plus_noise() {
+        let card = tiny_card();
+        let s = card.generate(2, 0);
+        for v in &s.train.x.data {
+            assert!(v.abs() < 1.0 + 6.0 * card.noise, "{v}");
+        }
+    }
+
+    #[test]
+    fn classes_are_separable_by_centroid_distance() {
+        // sanity that the task is learnable: class centroids differ clearly
+        let card = tiny_card();
+        let s = card.generate(3, 0);
+        let per = s.train.class_indices();
+        let mut cents = Vec::new();
+        for idxs in &per {
+            let mut c = vec![0.0f32; 16];
+            for &i in idxs {
+                crate::tensor::axpy(1.0 / idxs.len() as f32, s.train.x.row(i), &mut c);
+            }
+            cents.push(c);
+        }
+        let d01 = crate::tensor::sqdist(&cents[0], &cents[1]);
+        assert!(d01 > 0.05, "centroids too close: {d01}");
+    }
+
+    #[test]
+    fn imbalance_reduces_selected_classes() {
+        let card = tiny_card();
+        let s = card.generate(4, 0);
+        let mut rng = Rng::new(9);
+        let keep = imbalance_indices(&s.train, 0.5, 0.1, &mut rng);
+        let sub = s.train.subset(&keep);
+        let counts: Vec<usize> = sub.class_indices().iter().map(|v| v.len()).collect();
+        let small = counts.iter().filter(|&&c| c <= 6).count();
+        let full = counts.iter().filter(|&&c| c == 50).count();
+        assert_eq!(small, 2, "{counts:?}");
+        assert_eq!(full, 2, "{counts:?}");
+    }
+
+    #[test]
+    fn imbalance_keeps_at_least_one_per_class() {
+        let card = tiny_card();
+        let s = card.generate(5, 0);
+        let mut rng = Rng::new(10);
+        let keep = imbalance_indices(&s.train, 1.0, 0.0, &mut rng);
+        let sub = s.train.subset(&keep);
+        for c in sub.class_indices() {
+            assert!(!c.is_empty());
+        }
+    }
+
+    #[test]
+    fn label_noise_flips_exactly_the_requested_fraction() {
+        let card = tiny_card();
+        let s = card.generate(11, 0);
+        let mut ds = s.train.clone();
+        let orig = ds.y.clone();
+        let mut rng = Rng::new(1);
+        let flips = apply_label_noise(&mut ds, 0.25, &mut rng);
+        assert_eq!(flips.len(), 50); // 25% of 200
+        let changed = ds.y.iter().zip(&orig).filter(|(a, b)| a != b).count();
+        assert_eq!(changed, 50);
+        // every flipped label is different from the original and in range
+        for &i in &flips {
+            assert_ne!(ds.y[i], orig[i]);
+            assert!((ds.y[i] as usize) < ds.classes);
+        }
+    }
+
+    #[test]
+    fn label_noise_zero_is_identity() {
+        let card = tiny_card();
+        let s = card.generate(12, 0);
+        let mut ds = s.train.clone();
+        let orig = ds.y.clone();
+        let mut rng = Rng::new(2);
+        let flips = apply_label_noise(&mut ds, 0.0, &mut rng);
+        assert!(flips.is_empty());
+        assert_eq!(ds.y, orig);
+    }
+
+    #[test]
+    fn padded_chunks_cover_all_indices_once() {
+        let card = tiny_card();
+        let s = card.generate(6, 0);
+        let idx: Vec<usize> = (0..s.train.len()).step_by(3).collect();
+        let chunks: Vec<_> = padded_chunks(&s.train, &idx, 32).collect();
+        let total_live: usize = chunks.iter().map(|c| c.live).sum();
+        assert_eq!(total_live, idx.len());
+        let mut seen: Vec<usize> = chunks.iter().flat_map(|c| c.indices.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, idx);
+        // mask matches live count; padding rows are zeroed
+        for ch in &chunks {
+            assert_eq!(ch.mask.iter().filter(|&&m| m > 0.0).count(), ch.live);
+            for slot in ch.live..32 {
+                assert_eq!(ch.y[slot], 0);
+                assert!(ch.x[slot * 16..(slot + 1) * 16].iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_batches_preserve_weights_and_rows() {
+        let card = tiny_card();
+        let s = card.generate(7, 0);
+        let idx: Vec<usize> = (0..50).collect();
+        let wts: Vec<f32> = (0..50).map(|i| i as f32 + 1.0).collect();
+        let mut rng = Rng::new(11);
+        let batches = weighted_batches(&s.train, &idx, &wts, 16, &mut rng);
+        assert_eq!(batches.len(), 4); // ceil(50/16)
+        let mut wsum = 0.0f32;
+        let mut live = 0usize;
+        for b in &batches {
+            wsum += b.w.iter().sum::<f32>();
+            live += b.live;
+        }
+        assert_eq!(live, 50);
+        assert!((wsum - wts.iter().sum::<f32>()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn weighted_batches_shuffle_depends_on_rng() {
+        let card = tiny_card();
+        let s = card.generate(8, 0);
+        let idx: Vec<usize> = (0..40).collect();
+        let wts = vec![1.0f32; 40];
+        let b1 = weighted_batches(&s.train, &idx, &wts, 8, &mut Rng::new(1));
+        let b2 = weighted_batches(&s.train, &idx, &wts, 8, &mut Rng::new(2));
+        assert_ne!(b1[0].y, b2[0].y);
+    }
+}

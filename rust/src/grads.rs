@@ -1,0 +1,220 @@
+//! Gradient acquisition layer: runs the AOT'd gradient entry points over a
+//! dataset and exposes the views the selection strategies need —
+//! per-sample last-layer gradients, per-mini-batch (PB) aggregates,
+//! per-class column slices (the paper's per-class-per-gradient
+//! approximation), and mean/target gradients.
+
+use anyhow::Result;
+
+use crate::data::{padded_chunks, Dataset};
+use crate::runtime::{ModelState, Runtime};
+use crate::tensor::{axpy, dot, norm2, Matrix};
+
+/// Per-sample gradients for a set of dataset rows.
+#[derive(Clone, Debug)]
+pub struct GradientStore {
+    /// `[rows.len(), P]` — one last-layer gradient per row
+    pub g: Matrix,
+    /// dataset index of each gradient row
+    pub rows: Vec<usize>,
+}
+
+/// Compute per-sample last-layer gradients for `indices` (chunked through
+/// the `grads_chunk` executable; padding rows are dropped).
+pub fn per_sample_grads(
+    rt: &Runtime,
+    st: &ModelState,
+    ds: &Dataset,
+    indices: &[usize],
+) -> Result<GradientStore> {
+    let meta = &st.meta;
+    let mut g = Matrix::zeros(indices.len(), meta.p);
+    let mut cursor = 0usize;
+    for chunk in padded_chunks(ds, indices, meta.chunk) {
+        let gm = rt.grads_chunk(st, &chunk.x, &chunk.y, &chunk.mask)?;
+        for slot in 0..chunk.live {
+            g.row_mut(cursor).copy_from_slice(gm.row(slot));
+            cursor += 1;
+        }
+    }
+    debug_assert_eq!(cursor, indices.len());
+    Ok(GradientStore { g, rows: indices.to_vec() })
+}
+
+/// Mean last-layer gradient over `indices` — the matching target
+/// ∇L(θ).  Uses the fused `mean_grad_chunk` fast path (never materializes
+/// the per-sample matrix).
+pub fn mean_gradient(
+    rt: &Runtime,
+    st: &ModelState,
+    ds: &Dataset,
+    indices: &[usize],
+) -> Result<Vec<f32>> {
+    let meta = &st.meta;
+    let mut acc = vec![0.0f32; meta.p];
+    for chunk in padded_chunks(ds, indices, meta.chunk) {
+        let partial = rt.mean_grad_chunk(st, &chunk.x, &chunk.y, &chunk.mask)?;
+        axpy(1.0, &partial, &mut acc);
+    }
+    let n = indices.len().max(1) as f32;
+    for v in acc.iter_mut() {
+        *v /= n;
+    }
+    Ok(acc)
+}
+
+/// Per-mini-batch mean gradients computed with the **device-side group
+/// reduction** (`batch_gradsum_chunk`) — the PB fast path: readback is
+/// `[n/B, P]` instead of `[n, P]` (§Perf: ~2× on PB selection rounds).
+/// Groups are consecutive `meta.batch`-row blocks of `order`.
+pub fn per_batch_grads_fused(
+    rt: &Runtime,
+    st: &ModelState,
+    ds: &Dataset,
+    order: &[usize],
+) -> Result<(Matrix, Vec<Vec<usize>>)> {
+    let meta = &st.meta;
+    let b = meta.batch;
+    let nb_total = order.len().div_ceil(b);
+    let mut bg = Matrix::zeros(nb_total, meta.p);
+    let mut members: Vec<Vec<usize>> = Vec::with_capacity(nb_total);
+    let mut batch_cursor = 0usize;
+    for chunk in padded_chunks(ds, order, meta.chunk) {
+        let sums = rt.batch_gradsum_chunk(st, &chunk.x, &chunk.y, &chunk.mask)?;
+        let groups_in_chunk = meta.chunk / b;
+        for gi in 0..groups_in_chunk {
+            let lo = gi * b;
+            if lo >= chunk.live {
+                break;
+            }
+            let hi = ((gi + 1) * b).min(chunk.live);
+            let live = (hi - lo) as f32;
+            let row = bg.row_mut(batch_cursor);
+            row.copy_from_slice(sums.row(gi));
+            for v in row.iter_mut() {
+                *v /= live;
+            }
+            members.push(chunk.indices[lo..hi].to_vec());
+            batch_cursor += 1;
+        }
+    }
+    debug_assert_eq!(batch_cursor, nb_total);
+    Ok((bg, members))
+}
+
+/// Per-mini-batch aggregation (the PB variants): group gradient rows into
+/// consecutive batches of `batch` and average.  Returns the batch-gradient
+/// matrix and the member rows of each batch.
+pub fn per_batch_grads(store: &GradientStore, batch: usize) -> (Matrix, Vec<Vec<usize>>) {
+    assert!(batch > 0);
+    let n = store.g.rows;
+    let p = store.g.cols;
+    let nb = n.div_ceil(batch);
+    let mut bg = Matrix::zeros(nb, p);
+    let mut members = Vec::with_capacity(nb);
+    for b in 0..nb {
+        let lo = b * batch;
+        let hi = ((b + 1) * batch).min(n);
+        let row = bg.row_mut(b);
+        for i in lo..hi {
+            axpy(1.0, store.g.row(i), row);
+        }
+        let cnt = (hi - lo) as f32;
+        for v in row.iter_mut() {
+            *v /= cnt;
+        }
+        members.push(store.rows[lo..hi].to_vec());
+    }
+    (bg, members)
+}
+
+/// Column indices of class `cls` in the last-layer gradient layout
+/// (`w2_row_major_hc_then_bias`): W2 entries `{j*C + cls : j < H}` plus the
+/// bias entry `H*C + cls`.  This is the paper's *per-gradient*
+/// approximation — class-c rows only have nonzero error in a few logits,
+/// and their own logit dominates, so OMP runs on this (H+1)-dim slice.
+pub fn class_columns(h: usize, c: usize, cls: usize) -> Vec<usize> {
+    assert!(cls < c);
+    let mut cols: Vec<usize> = (0..h).map(|j| j * c + cls).collect();
+    cols.push(h * c + cls);
+    cols
+}
+
+/// Gradient-matching error ‖ Σᵢ wᵢ gᵢ − target ‖ — the `Err` term of
+/// Theorem 1, reported in Table 9 and logged at every selection round.
+pub fn gradient_error(g_sel: &Matrix, weights: &[f32], target: &[f32]) -> f32 {
+    assert_eq!(g_sel.rows, weights.len());
+    assert_eq!(g_sel.cols, target.len());
+    let mut fitted = vec![0.0f32; target.len()];
+    for (i, &w) in weights.iter().enumerate() {
+        if w != 0.0 {
+            axpy(w, g_sel.row(i), &mut fitted);
+        }
+    }
+    let diff = crate::tensor::sub(&fitted, target);
+    norm2(&diff)
+}
+
+/// Cosine similarity between a matched gradient and the target — a cheap
+/// health metric (Theorem 4's descent condition needs it positive).
+pub fn match_cosine(g_sel: &Matrix, weights: &[f32], target: &[f32]) -> f32 {
+    let mut fitted = vec![0.0f32; target.len()];
+    for (i, &w) in weights.iter().enumerate() {
+        axpy(w, g_sel.row(i), &mut fitted);
+    }
+    let denom = norm2(&fitted) * norm2(target);
+    if denom <= 1e-20 {
+        return 0.0;
+    }
+    dot(&fitted, target) / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_columns_layout() {
+        // h=3, c=2: class 0 -> [0, 2, 4, 6]; class 1 -> [1, 3, 5, 7]
+        assert_eq!(class_columns(3, 2, 0), vec![0, 2, 4, 6]);
+        assert_eq!(class_columns(3, 2, 1), vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn class_columns_cover_p_exactly_once() {
+        let (h, c) = (5, 4);
+        let mut all: Vec<usize> = (0..c).flat_map(|cls| class_columns(h, c, cls)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..h * c + c).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn per_batch_grads_averages_rows() {
+        let g = Matrix::from_vec(5, 2, vec![1., 1., 3., 3., 5., 5., 7., 7., 9., 9.]);
+        let store = GradientStore { g, rows: vec![10, 11, 12, 13, 14] };
+        let (bg, members) = per_batch_grads(&store, 2);
+        assert_eq!(bg.rows, 3);
+        assert_eq!(bg.row(0), &[2.0, 2.0]); // mean of rows 0,1
+        assert_eq!(bg.row(2), &[9.0, 9.0]); // lone last row
+        assert_eq!(members[0], vec![10, 11]);
+        assert_eq!(members[2], vec![14]);
+    }
+
+    #[test]
+    fn gradient_error_zero_for_exact_match() {
+        let g = Matrix::from_vec(2, 3, vec![1., 0., 0., 0., 1., 0.]);
+        let target = [2.0f32, 3.0, 0.0];
+        let err = gradient_error(&g, &[2.0, 3.0], &target);
+        assert!(err < 1e-6);
+        let err2 = gradient_error(&g, &[0.0, 0.0], &target);
+        assert!((err2 - (13.0f32).sqrt()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn match_cosine_signs() {
+        let g = Matrix::from_vec(1, 2, vec![1.0, 0.0]);
+        assert!((match_cosine(&g, &[1.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!((match_cosine(&g, &[-1.0], &[1.0, 0.0]) + 1.0).abs() < 1e-6);
+        assert_eq!(match_cosine(&g, &[0.0], &[1.0, 0.0]), 0.0);
+    }
+}

@@ -1,0 +1,39 @@
+//! GRAD-MATCH: gradient-matching data subset selection for efficient training.
+//!
+//! Reproduction of *Killamsetty et al., "GRAD-MATCH: Gradient Matching based
+//! Data Subset Selection for Efficient Deep Model Training", ICML 2021* as a
+//! three-layer system:
+//!
+//! - **Layer 1 (Pallas, build time)** — the gradient-matching compute kernels
+//!   (per-sample last-layer gradients, OMP residual correlations, pairwise
+//!   gradient distances) in `python/compile/kernels/`.
+//! - **Layer 2 (JAX, build time)** — the classifier forward/backward and the
+//!   selection-support entry points in `python/compile/model.py`, lowered once
+//!   to HLO text under `artifacts/` by `python/compile/aot.py`.
+//! - **Layer 3 (this crate, run time)** — the adaptive data-selection
+//!   coordinator: dataset substrate, gradient cache, selection strategies
+//!   (GRAD-MATCH / GRAD-MATCH-PB / CRAIG / CRAIG-PB / GLISTER / RANDOM /
+//!   FULL-EARLYSTOP plus warm-start wrappers), the weighted-SGD training loop,
+//!   and the experiment harness. Python is never on the training path.
+
+pub mod bench_harness;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod grads;
+pub mod jsonlite;
+pub mod linalg;
+pub mod metrics;
+pub mod omp;
+pub mod overlap;
+pub mod rng;
+pub mod runtime;
+pub mod selection;
+pub mod stats;
+pub mod submod;
+pub mod tensor;
+pub mod testutil;
+pub mod theory;
+pub mod trainer;

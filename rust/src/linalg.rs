@@ -1,0 +1,322 @@
+//! Solvers for the OMP inner problem (substrate — no LAPACK offline).
+//!
+//! GRAD-MATCH's weight re-fit (Algorithm 2, line `w ← argmin Errλ`) is a
+//! ridge-regularized least squares over the selected gradient rows:
+//!
+//! ```text
+//!   w* = argmin_w ‖ G_Sᵀ w − g_target ‖² + λ‖w‖²
+//!      = (G_S G_Sᵀ + λI)⁻¹ G_S g_target
+//! ```
+//!
+//! with `|S| = k` small (≤ a few hundred), so dense Cholesky on the k×k
+//! normal matrix is the right tool.  [`CholFactor::extend`] supports the
+//! OMP hot path: when one row joins the support, the factor is updated in
+//! O(k²) instead of re-factorized in O(k³).
+
+use crate::tensor::{dot, gemv_t, Matrix};
+
+/// Error type for solver failures (non-SPD systems etc.).
+#[derive(Debug, thiserror::Error)]
+pub enum LinalgError {
+    #[error("matrix not positive definite at pivot {0} (value {1})")]
+    NotPositiveDefinite(usize, f64),
+    #[error("dimension mismatch: {0}")]
+    Dimension(String),
+}
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`, kept in f64 for
+/// stability (the gram entries come from f32 gradient dot products).
+#[derive(Clone, Debug)]
+pub struct CholFactor {
+    n: usize,
+    /// row-major lower triangle, full n×n storage
+    l: Vec<f64>,
+}
+
+impl CholFactor {
+    /// Factor a dense SPD matrix given row-major (f32) data.
+    pub fn factor(a: &Matrix) -> Result<Self, LinalgError> {
+        if a.rows != a.cols {
+            return Err(LinalgError::Dimension(format!("{}x{}", a.rows, a.cols)));
+        }
+        let n = a.rows;
+        let mut f = CholFactor { n: 0, l: Vec::new() };
+        // build incrementally via extend — one code path to test
+        for j in 0..n {
+            let col: Vec<f64> = (0..=j).map(|i| a.at(j, i) as f64).collect();
+            f.extend(&col)?;
+        }
+        Ok(f)
+    }
+
+    /// Empty factor for incremental construction.
+    pub fn empty() -> Self {
+        CholFactor { n: 0, l: Vec::new() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Grow the factor by one row/column of the underlying SPD matrix.
+    ///
+    /// `new_row` is the new matrix row `A[n, 0..=n]` (length n+1, last
+    /// element the diagonal).  O(n²).
+    pub fn extend(&mut self, new_row: &[f64]) -> Result<(), LinalgError> {
+        let n = self.n;
+        if new_row.len() != n + 1 {
+            return Err(LinalgError::Dimension(format!(
+                "extend: expected {} entries, got {}",
+                n + 1,
+                new_row.len()
+            )));
+        }
+        // Re-pack into (n+1)x(n+1) storage.
+        let m = n + 1;
+        let mut l = vec![0.0f64; m * m];
+        for i in 0..n {
+            l[i * m..i * m + n].copy_from_slice(&self.l[i * n..i * n + n]);
+        }
+        // forward-solve L x = new_row[..n]
+        for j in 0..n {
+            let mut v = new_row[j];
+            for k in 0..j {
+                v -= l[n * m + k] * l[j * m + k];
+            }
+            l[n * m + j] = v / l[j * m + j];
+        }
+        let mut diag = new_row[n];
+        for k in 0..n {
+            diag -= l[n * m + k] * l[n * m + k];
+        }
+        if diag <= 0.0 || !diag.is_finite() {
+            return Err(LinalgError::NotPositiveDefinite(n, diag));
+        }
+        l[n * m + n] = diag.sqrt();
+        self.l = l;
+        self.n = m;
+        Ok(())
+    }
+
+    /// Solve `A x = b` via forward/backward substitution.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>, LinalgError> {
+        if b.len() != self.n {
+            return Err(LinalgError::Dimension(format!(
+                "solve: {} vs {}",
+                b.len(),
+                self.n
+            )));
+        }
+        let n = self.n;
+        let l = &self.l;
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut v = b[i];
+            for k in 0..i {
+                v -= l[i * n + k] * y[k];
+            }
+            y[i] = v / l[i * n + i];
+        }
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut v = y[i];
+            for k in i + 1..n {
+                v -= l[k * n + i] * x[k];
+            }
+            x[i] = v / l[i * n + i];
+        }
+        Ok(x)
+    }
+}
+
+/// Solve the ridge-regularized gradient-matching weights for a support.
+///
+/// `g_sel` holds the selected gradient rows (`k × p`), `target` the gradient
+/// to match (`p`).  Returns `w` with `‖G_selᵀ w − target‖² + λ‖w‖²` minimal.
+pub fn ridge_weights(g_sel: &Matrix, target: &[f32], lambda: f32) -> Result<Vec<f32>, LinalgError> {
+    if g_sel.cols != target.len() {
+        return Err(LinalgError::Dimension(format!(
+            "ridge: {} vs {}",
+            g_sel.cols,
+            target.len()
+        )));
+    }
+    let k = g_sel.rows;
+    let mut a = crate::tensor::gram(g_sel);
+    for i in 0..k {
+        a.data[i * k + i] += lambda;
+    }
+    let f = CholFactor::factor(&a)?;
+    let rhs: Vec<f64> = (0..k).map(|i| dot(g_sel.row(i), target) as f64).collect();
+    Ok(f.solve(&rhs)?.into_iter().map(|v| v as f32).collect())
+}
+
+/// Non-negative ridge weights via iterated clamp-and-re-solve (a simplified
+/// active-set NNLS in the spirit of Lawson–Hanson): solve the ridge system,
+/// drop negative-weight rows from the support, re-solve, and repeat until
+/// the support is feasible.  Terminates in ≤ k passes since the support
+/// shrinks monotonically.  Keeps weights interpretable as per-sample
+/// importance (matches CORDS' non-negative OMP).
+pub fn ridge_weights_nonneg(
+    g_sel: &Matrix,
+    target: &[f32],
+    lambda: f32,
+) -> Result<Vec<f32>, LinalgError> {
+    let k = g_sel.rows;
+    let mut support: Vec<usize> = (0..k).collect();
+    loop {
+        if support.is_empty() {
+            return Ok(vec![0.0; k]);
+        }
+        let sub = if support.len() == k {
+            g_sel.clone()
+        } else {
+            g_sel.gather_rows(&support)
+        };
+        let w = ridge_weights(&sub, target, lambda)?;
+        if w.iter().all(|&v| v >= 0.0) {
+            let mut out = vec![0.0f32; k];
+            for (slot, &i) in support.iter().enumerate() {
+                out[i] = w[slot];
+            }
+            return Ok(out);
+        }
+        let next: Vec<usize> = support
+            .iter()
+            .zip(&w)
+            .filter(|(_, &wv)| wv > 0.0)
+            .map(|(&i, _)| i)
+            .collect();
+        if next.len() == support.len() {
+            // all weights nonnegative already handled; defensive guard
+            let mut out = vec![0.0f32; k];
+            for (slot, &i) in support.iter().enumerate() {
+                out[i] = w[slot].max(0.0);
+            }
+            return Ok(out);
+        }
+        support = next;
+    }
+}
+
+/// Residual `target − G_selᵀ w` (the OMP residual vector).
+pub fn residual(g_sel: &Matrix, w: &[f32], target: &[f32]) -> Vec<f32> {
+    let mut fitted = vec![0.0f32; g_sel.cols];
+    gemv_t(g_sel, w, &mut fitted);
+    crate::tensor::sub(target, &fitted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::norm2;
+
+    fn spd(n: usize, rng: &mut Rng) -> Matrix {
+        // A = B Bᵀ + n·I is SPD
+        let b = Matrix::from_vec(n, n, (0..n * n).map(|_| rng.gaussian_f32()).collect());
+        let mut a = crate::tensor::gram(&b);
+        for i in 0..n {
+            a.data[i * n + i] += n as f32;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_solves_spd_systems() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 2, 5, 12, 40] {
+            let a = spd(n, &mut rng);
+            let f = CholFactor::factor(&a).unwrap();
+            let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7) - 1.0).collect();
+            let mut b = vec![0.0f64; n];
+            for i in 0..n {
+                for j in 0..n {
+                    b[i] += a.at(i, j) as f64 * x_true[j];
+                }
+            }
+            let x = f.solve(&b).unwrap();
+            for i in 0..n {
+                assert!((x[i] - x_true[i]).abs() < 1e-3, "n={n} i={i}: {} vs {}", x[i], x_true[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn factor_rejects_non_spd() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigvals 3, -1
+        assert!(CholFactor::factor(&a).is_err());
+    }
+
+    #[test]
+    fn extend_matches_batch_factor() {
+        let mut rng = Rng::new(2);
+        let a = spd(8, &mut rng);
+        let batch = CholFactor::factor(&a).unwrap();
+        let mut inc = CholFactor::empty();
+        for j in 0..8 {
+            let row: Vec<f64> = (0..=j).map(|i| a.at(j, i) as f64).collect();
+            inc.extend(&row).unwrap();
+        }
+        for i in 0..batch.l.len() {
+            assert!((batch.l[i] - inc.l[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ridge_weights_zero_lambda_recovers_exact_combination() {
+        // target is an exact combination of rows -> tiny residual at λ→0
+        let g = Matrix::from_vec(2, 4, vec![1., 0., 1., 0., 0., 1., 0., 1.]);
+        let target = [2.0f32, 3.0, 2.0, 3.0]; // 2*row0 + 3*row1
+        let w = ridge_weights(&g, &target, 1e-6).unwrap();
+        assert!((w[0] - 2.0).abs() < 1e-3 && (w[1] - 3.0).abs() < 1e-3, "{w:?}");
+        let r = residual(&g, &w, &target);
+        assert!(norm2(&r) < 1e-2);
+    }
+
+    #[test]
+    fn ridge_lambda_shrinks_weights() {
+        let mut rng = Rng::new(3);
+        let g = Matrix::from_vec(3, 10, (0..30).map(|_| rng.gaussian_f32()).collect());
+        let target: Vec<f32> = (0..10).map(|_| rng.gaussian_f32()).collect();
+        let w0 = ridge_weights(&g, &target, 1e-4).unwrap();
+        let w1 = ridge_weights(&g, &target, 100.0).unwrap();
+        assert!(norm2(&w1) < norm2(&w0));
+    }
+
+    #[test]
+    fn ridge_weights_match_normal_equation_residual_orthogonality() {
+        // At λ=0 the residual must be orthogonal to every selected row.
+        let mut rng = Rng::new(4);
+        let g = Matrix::from_vec(4, 16, (0..64).map(|_| rng.gaussian_f32()).collect());
+        let target: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+        let w = ridge_weights(&g, &target, 1e-7).unwrap();
+        let r = residual(&g, &w, &target);
+        for i in 0..4 {
+            assert!(dot(g.row(i), &r).abs() < 1e-2, "row {i} not orthogonal");
+        }
+    }
+
+    #[test]
+    fn nonneg_weights_are_nonneg_and_no_worse_than_zero() {
+        let mut rng = Rng::new(5);
+        for trial in 0..20 {
+            let g = Matrix::from_vec(5, 8, (0..40).map(|_| rng.gaussian_f32()).collect());
+            let target: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            let w = ridge_weights_nonneg(&g, &target, 0.5).unwrap();
+            assert!(w.iter().all(|&v| v >= 0.0), "trial {trial}: {w:?}");
+            // fit must beat the empty fit unless all weights got clamped away
+            if w.iter().any(|&v| v > 0.0) {
+                let r = residual(&g, &w, &target);
+                assert!(norm2(&r) <= norm2(&target) + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn residual_of_zero_weights_is_target() {
+        let g = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let r = residual(&g, &[0.0, 0.0], &[7.0, 8.0, 9.0]);
+        assert_eq!(r, vec![7.0, 8.0, 9.0]);
+    }
+}

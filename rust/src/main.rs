@@ -1,0 +1,180 @@
+//! `gradmatch` — leader binary: train / sweep / select / inspect.
+
+use anyhow::{anyhow, Result};
+
+use gradmatch::cli::{usage, Cli};
+use gradmatch::coordinator::{write_results, Coordinator};
+use gradmatch::data::DatasetCard;
+use gradmatch::jsonlite::{arr, num, obj, Json};
+use gradmatch::rng::Rng;
+use gradmatch::selection::{parse_strategy, SelectCtx};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") || args.is_empty() {
+        println!("{}", usage());
+        return;
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = Cli::parse(args)?;
+    match cli.command.as_str() {
+        "train" => cmd_train(&cli),
+        "sweep" => cmd_sweep(&cli),
+        "select" => cmd_select(&cli),
+        "inspect" => cmd_inspect(&cli),
+        other => Err(anyhow!("unknown command '{other}'\n\n{}", usage())),
+    }
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let cfg = cli.experiment_config()?;
+    println!(
+        "train: dataset={} model={} strategy={} budget={:.0}% epochs={} R={} runs={}",
+        cfg.dataset,
+        cfg.model,
+        cfg.strategy,
+        cfg.budget_frac * 100.0,
+        cfg.epochs,
+        cfg.r_interval,
+        cfg.runs
+    );
+    let mut coord = Coordinator::new(&cfg.artifacts_dir)?;
+    let runs = coord.run_multi(&cfg)?;
+    for r in &runs {
+        println!(
+            "  seed {:>3}: test-acc {:>6.2}%  train {:>7.2}s  select {:>6.2}s  energy(sim) {:.5} kWh  selections {}",
+            r.seed,
+            r.test_acc * 100.0,
+            r.train_secs,
+            r.select_secs,
+            r.energy_kwh,
+            r.selections
+        );
+    }
+    let name = format!(
+        "train_{}_{}_{}_{}",
+        cfg.dataset,
+        cfg.model,
+        cfg.strategy,
+        (cfg.budget_frac * 100.0) as usize
+    );
+    let path = write_results(&cfg.out_dir, &name, &runs)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_sweep(cli: &Cli) -> Result<()> {
+    let base = cli.experiment_config()?;
+    let datasets = cli
+        .flag_list("datasets")
+        .unwrap_or_else(|| vec![base.dataset.clone()]);
+    let strategies: Vec<String> = cli.flag_list("strategies").unwrap_or_else(|| {
+        gradmatch::selection::paper_strategies()
+            .into_iter()
+            .map(str::to_string)
+            .collect()
+    });
+    let budgets: Vec<f64> = match cli.flag_list("budgets") {
+        Some(bs) => bs
+            .iter()
+            .map(|b| b.parse::<f64>().map_err(|e| anyhow!("budget '{b}': {e}")))
+            .collect::<Result<_>>()?,
+        None => vec![0.05, 0.1, 0.3],
+    };
+    let mut coord = Coordinator::new(&base.artifacts_dir)?;
+    for ds in &datasets {
+        let mut cfg = base.clone();
+        cfg.dataset = ds.clone();
+        if let Some(card) = DatasetCard::by_name(ds) {
+            cfg.model = card.model.to_string();
+        }
+        println!("\n== sweep {ds} (model {}) ==", cfg.model);
+        let strat_refs: Vec<&str> = strategies.iter().map(String::as_str).collect();
+        let rows = coord.sweep(&cfg, &strat_refs, &budgets)?;
+        println!("full-training skyline acc: {:.2}%", rows[0].full_acc * 100.0);
+        for row in &rows {
+            println!("  {}", row.format());
+        }
+        let summaries: Vec<_> = rows.into_iter().map(|r| r.summary).collect();
+        write_results(&base.out_dir, &format!("sweep_{ds}"), &summaries)?;
+    }
+    Ok(())
+}
+
+fn cmd_select(cli: &Cli) -> Result<()> {
+    let cfg = cli.experiment_config()?;
+    let mut coord = Coordinator::new(&cfg.artifacts_dir)?;
+    let meta = coord.rt.model(&cfg.model)?.clone();
+    let splits = coord.splits(&cfg.dataset, cfg.seed, cfg.n_train)?.clone();
+    let ground: Vec<usize> = (0..splits.train.len()).collect();
+    let budget = ((cfg.budget_frac * ground.len() as f64).round() as usize).max(1);
+    let st = coord.rt.init(&cfg.model, cfg.seed as i32)?;
+    let (mut strategy, _) = parse_strategy(&cfg.strategy, meta.batch)?;
+    let mut rng = Rng::new(cfg.seed);
+    let sel = strategy.select(&mut SelectCtx {
+        rt: &coord.rt,
+        state: &st,
+        train: &splits.train,
+        ground: &ground,
+        val: &splits.val,
+        budget,
+        lambda: cfg.lambda as f32,
+        eps: cfg.eps as f32,
+        is_valid: cfg.is_valid,
+        rng: &mut rng,
+    })?;
+    let doc = obj(vec![
+        ("strategy", Json::Str(cfg.strategy.clone())),
+        ("budget", num(budget as f64)),
+        ("selected", num(sel.indices.len() as f64)),
+        (
+            "grad_error",
+            sel.grad_error.map(|e| num(e as f64)).unwrap_or(Json::Null),
+        ),
+        (
+            "indices",
+            arr(sel.indices.iter().map(|&i| num(i as f64)).collect()),
+        ),
+        (
+            "weights",
+            arr(sel.weights.iter().map(|&w| num(w as f64)).collect()),
+        ),
+    ]);
+    println!("{}", doc.dump());
+    Ok(())
+}
+
+fn cmd_inspect(cli: &Cli) -> Result<()> {
+    let artifacts = cli.flag("artifacts").unwrap_or("artifacts");
+    let manifest = gradmatch::runtime::Manifest::load(std::path::Path::new(artifacts))?;
+    println!("artifact manifest @ {artifacts} (interchange: hlo-text)");
+    let mut names: Vec<_> = manifest.models.keys().collect();
+    names.sort();
+    for name in names {
+        let m = &manifest.models[name];
+        println!(
+            "  {name:<16} d={:<5} h={:<4} c={:<3} P={:<6} B={} chunk={} entries={}",
+            m.d,
+            m.h,
+            m.c,
+            m.p,
+            m.batch,
+            m.chunk,
+            m.entries.len()
+        );
+    }
+    println!("\ndataset cards:");
+    for card in DatasetCard::all() {
+        println!(
+            "  {:<13} n={:<6} d={:<5} classes={:<3} model={}",
+            card.name, card.n_train, card.d, card.classes, card.model
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,379 @@
+//! Orthogonal Matching Pursuit (Algorithm 2) — the heart of GRAD-MATCH.
+//!
+//! Minimizes `Errλ(w, X) = ‖ Σ_{i∈X} wᵢ gᵢ − target ‖² + λ‖w‖²` greedily:
+//! each round picks the candidate with the largest |correlation| against
+//! the current residual, re-fits the ridge weights on the grown support,
+//! and stops at the budget `k` or tolerance `ε` (Theorem 3's set-cover
+//! stopping rule).
+//!
+//! The per-round hot spot is the ground-set correlation `G @ r`; it is
+//! abstracted behind [`CorrBackend`] so the same solver runs against the
+//! XLA/Pallas `corr_chunk` executable (the production path) or a plain
+//! Rust GEMV (per-class slices, tests, benches).  The support re-fit uses
+//! an incrementally-extended Cholesky factor: O(k²) per round instead of
+//! re-factorizing in O(k³).
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::CholFactor;
+use crate::runtime::Runtime;
+use crate::tensor::{dot, norm2, Matrix};
+
+/// Correlation oracle: `corr(r)[j] = g_j · r` over the whole ground set.
+pub trait CorrBackend {
+    fn corr(&mut self, r: &[f32]) -> Result<Vec<f32>>;
+    /// number of candidates
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Rust GEMV backend over a borrowed candidate matrix.
+pub struct RustCorr<'a> {
+    pub g: &'a Matrix,
+}
+
+impl CorrBackend for RustCorr<'_> {
+    fn corr(&mut self, r: &[f32]) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.g.rows];
+        crate::tensor::gemv(self.g, r, &mut out);
+        Ok(out)
+    }
+
+    fn len(&self) -> usize {
+        self.g.rows
+    }
+}
+
+/// XLA backend: the candidate matrix is padded once into fixed-shape
+/// chunks and marshalled into input literals **once**; every OMP round
+/// executes the Pallas `corr_chunk` kernel per chunk with only the fresh
+/// residual re-marshalled (§Perf: caching the chunk literals removed the
+/// dominant per-iteration marshalling cost; device-buffer reuse is not
+/// safe with xla_extension 0.5.1 — see `Runtime::exec_ref`).
+pub struct XlaCorr<'a> {
+    rt: &'a Runtime,
+    model: String,
+    chunk_lits: Vec<xla::Literal>,
+    n: usize,
+}
+
+impl<'a> XlaCorr<'a> {
+    /// Pad `g` (n×P) into chunk-row blocks for the given model variant.
+    pub fn new(rt: &'a Runtime, model: &str, g: &Matrix) -> Result<Self> {
+        let meta = rt.model(model)?;
+        if g.cols != meta.p {
+            return Err(anyhow!(
+                "XlaCorr: candidate dim {} != model P {} (per-class slices use RustCorr)",
+                g.cols,
+                meta.p
+            ));
+        }
+        let rows = meta.chunk;
+        let mut chunk_lits = Vec::new();
+        let mut i = 0usize;
+        while i < g.rows {
+            let hi = (i + rows).min(g.rows);
+            let mut m = Matrix::zeros(rows, g.cols);
+            for (slot, r) in (i..hi).enumerate() {
+                m.row_mut(slot).copy_from_slice(g.row(r));
+            }
+            chunk_lits.push(Runtime::matrix_literal(&m)?);
+            i = hi;
+        }
+        Ok(XlaCorr { rt, model: model.to_string(), chunk_lits, n: g.rows })
+    }
+}
+
+impl CorrBackend for XlaCorr<'_> {
+    fn corr(&mut self, r: &[f32]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.n);
+        for lit in &self.chunk_lits {
+            let v = self.rt.corr_chunk_lit(&self.model, lit, r)?;
+            out.extend_from_slice(&v);
+        }
+        out.truncate(self.n);
+        Ok(out)
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+}
+
+/// Outcome of one OMP run.
+#[derive(Clone, Debug)]
+pub struct OmpResult {
+    /// selected candidate indices (into the ground set), in pick order
+    pub selected: Vec<usize>,
+    /// matching weights, aligned with `selected` (non-negative)
+    pub weights: Vec<f32>,
+    /// final ‖residual‖
+    pub residual_norm: f32,
+    /// rounds executed
+    pub iters: usize,
+}
+
+/// OMP configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct OmpOpts {
+    /// budget k (max support size)
+    pub k: usize,
+    /// ridge regularizer λ (Eq. 1; paper default 0.5)
+    pub lambda: f32,
+    /// tolerance ε: stop once ‖r‖² + λ‖w‖² ≤ ε
+    pub eps: f32,
+}
+
+/// Run Algorithm 2 against a correlation backend.
+///
+/// `row` must return the gradient row of candidate `j` (used for the
+/// support Gram updates and the residual; only selected rows are fetched,
+/// so PB/per-class callers can keep the full matrix wherever it lives).
+pub fn omp_select(
+    backend: &mut dyn CorrBackend,
+    row: &dyn Fn(usize) -> Vec<f32>,
+    target: &[f32],
+    opts: OmpOpts,
+) -> Result<OmpResult> {
+    let n = backend.len();
+    let k = opts.k.min(n);
+    let mut selected: Vec<usize> = Vec::with_capacity(k);
+    let mut sel_rows: Vec<Vec<f32>> = Vec::with_capacity(k);
+    let mut weights: Vec<f32> = Vec::new();
+    let mut taken = vec![false; n];
+    let mut chol = CholFactor::empty();
+    let mut rhs: Vec<f64> = Vec::with_capacity(k);
+    let mut residual = target.to_vec();
+    let mut iters = 0usize;
+
+    while selected.len() < k {
+        // E_λ stopping rule (Algorithm 2's `while E_λ(X) ≥ ε`)
+        let e_lambda = dot(&residual, &residual)
+            + opts.lambda * weights.iter().map(|w| w * w).sum::<f32>();
+        if e_lambda <= opts.eps {
+            break;
+        }
+        iters += 1;
+
+        // argmax_j |g_j · r| over un-selected candidates
+        let corr = backend.corr(&residual)?;
+        let mut best = usize::MAX;
+        let mut best_v = 0.0f32;
+        for (j, &c) in corr.iter().enumerate() {
+            let a = c.abs();
+            if !taken[j] && a > best_v {
+                best = j;
+                best_v = a;
+            }
+        }
+        if best == usize::MAX || best_v <= 1e-12 {
+            break; // nothing correlates with the residual
+        }
+        taken[best] = true;
+        let g_new = row(best);
+
+        // extend (G_S G_Sᵀ + λI) Cholesky by the new candidate
+        let mut new_row: Vec<f64> = sel_rows.iter().map(|r| dot(r, &g_new) as f64).collect();
+        new_row.push(dot(&g_new, &g_new) as f64 + opts.lambda as f64);
+        if chol.extend(&new_row).is_err() {
+            // numerically dependent candidate — skip it and continue
+            continue;
+        }
+        rhs.push(dot(&g_new, target) as f64);
+        selected.push(best);
+        sel_rows.push(g_new);
+
+        // re-fit weights on the grown support, recompute residual
+        let w64 = chol.solve(&rhs)?;
+        weights = w64.iter().map(|&v| v as f32).collect();
+        residual.copy_from_slice(target);
+        for (r, &w) in sel_rows.iter().zip(&weights) {
+            crate::tensor::axpy(-w, r, &mut residual);
+        }
+    }
+
+    // final non-negativity fixup (CORDS-style): iterated clamp + re-solve
+    if weights.iter().any(|&w| w < 0.0) {
+        let mut g_sel = Matrix::zeros(sel_rows.len(), target.len());
+        for (slot, r) in sel_rows.iter().enumerate() {
+            g_sel.row_mut(slot).copy_from_slice(r);
+        }
+        weights = crate::linalg::ridge_weights_nonneg(&g_sel, target, opts.lambda)
+            .map_err(|e| anyhow!("omp nonneg re-solve: {e}"))?;
+        residual.copy_from_slice(target);
+        for (r, &w) in sel_rows.iter().zip(&weights) {
+            crate::tensor::axpy(-w, r, &mut residual);
+        }
+    }
+
+    Ok(OmpResult {
+        selected,
+        weights,
+        residual_norm: norm2(&residual),
+        iters,
+    })
+}
+
+/// Convenience: run OMP over an in-memory candidate matrix with RustCorr.
+pub fn omp_select_rust(g: &Matrix, target: &[f32], opts: OmpOpts) -> Result<OmpResult> {
+    let mut backend = RustCorr { g };
+    omp_select(&mut backend, &|j| g.row(j).to_vec(), target, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testutil::forall;
+
+    fn opts(k: usize) -> OmpOpts {
+        OmpOpts { k, lambda: 1e-4, eps: 1e-12 }
+    }
+
+    #[test]
+    fn recovers_sparse_combination_of_orthogonal_rows() {
+        // rows = scaled identity; target = 2 e0 + 5 e3
+        let mut g = Matrix::zeros(6, 6);
+        for i in 0..6 {
+            g.set(i, i, 1.0);
+        }
+        let mut target = vec![0.0f32; 6];
+        target[0] = 2.0;
+        target[3] = 5.0;
+        let r = omp_select_rust(&g, &target, opts(2)).unwrap();
+        let mut sel = r.selected.clone();
+        sel.sort_unstable();
+        assert_eq!(sel, vec![0, 3]);
+        assert!(r.residual_norm < 1e-3, "{}", r.residual_norm);
+        // weights align with the picks
+        for (j, &s) in r.selected.iter().enumerate() {
+            let want = if s == 0 { 2.0 } else { 5.0 };
+            assert!((r.weights[j] - want).abs() < 0.01, "{:?}", r.weights);
+        }
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut rng = Rng::new(1);
+        let g = Matrix::from_vec(50, 8, (0..400).map(|_| rng.gaussian_f32()).collect());
+        let target: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+        let r = omp_select_rust(&g, &target, opts(5)).unwrap();
+        assert!(r.selected.len() <= 5);
+        assert_eq!(r.selected.len(), r.weights.len());
+    }
+
+    #[test]
+    fn no_duplicate_selections() {
+        forall(20, |gen| {
+            let n = gen.int(3, 30);
+            let p = gen.int(2, 10);
+            let g = gen.matrix(n, p);
+            let target = gen.gauss_vec(p);
+            let r = omp_select_rust(&g, &target, opts(n)).unwrap();
+            let mut s = r.selected.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), r.selected.len());
+        });
+    }
+
+    #[test]
+    fn weights_nonnegative() {
+        forall(30, |gen| {
+            let n = gen.int(4, 40);
+            let p = gen.int(3, 12);
+            let g = gen.matrix(n, p);
+            let target = gen.gauss_vec(p);
+            let k = gen.int(1, n.min(8));
+            let r = omp_select_rust(&g, &target, OmpOpts { k, lambda: 0.5, eps: 1e-12 }).unwrap();
+            assert!(r.weights.iter().all(|&w| w >= 0.0), "{:?}", r.weights);
+        });
+    }
+
+    #[test]
+    fn residual_never_exceeds_target_norm_much() {
+        // with λ small, fitted residual must not be (meaningfully) worse
+        // than the empty solution
+        forall(30, |gen| {
+            let n = gen.int(4, 30);
+            let p = gen.int(2, 10);
+            let g = gen.matrix(n, p);
+            let target = gen.gauss_vec(p);
+            let r = omp_select_rust(&g, &target, opts(n.min(6))).unwrap();
+            assert!(r.residual_norm <= norm2(&target) * 1.01 + 1e-4);
+        });
+    }
+
+    #[test]
+    fn larger_budget_fits_at_least_as_well() {
+        let mut rng = Rng::new(5);
+        let g = Matrix::from_vec(40, 10, (0..400).map(|_| rng.gaussian_f32()).collect());
+        let target: Vec<f32> = (0..10).map(|_| rng.gaussian_f32()).collect();
+        let r2 = omp_select_rust(&g, &target, opts(2)).unwrap();
+        let r8 = omp_select_rust(&g, &target, opts(8)).unwrap();
+        assert!(r8.residual_norm <= r2.residual_norm + 1e-4);
+    }
+
+    #[test]
+    fn eps_stopping_selects_fewer() {
+        let mut g = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            g.set(i, i, 1.0);
+        }
+        let target = [10.0f32, 0.01, 0.0, 0.0];
+        // generous eps: should stop after the big coordinate is matched
+        let r = omp_select_rust(
+            &g,
+            &target,
+            OmpOpts { k: 4, lambda: 1e-6, eps: 0.01 },
+        )
+        .unwrap();
+        assert_eq!(r.selected, vec![0]);
+    }
+
+    #[test]
+    fn zero_target_selects_nothing() {
+        let mut rng = Rng::new(6);
+        let g = Matrix::from_vec(10, 5, (0..50).map(|_| rng.gaussian_f32()).collect());
+        let r = omp_select_rust(&g, &[0.0; 5], opts(5)).unwrap();
+        assert!(r.selected.is_empty());
+        assert_eq!(r.residual_norm, 0.0);
+    }
+
+    #[test]
+    fn duplicate_rows_are_skippable() {
+        // ground set of identical rows: OMP must not crash on the singular
+        // support; one row suffices
+        let g = Matrix::from_vec(5, 3, vec![1.0, 2.0, 3.0].repeat(5));
+        let target = [2.0f32, 4.0, 6.0];
+        let r = omp_select_rust(&g, &target, opts(5)).unwrap();
+        assert!(r.residual_norm < 1e-2, "{}", r.residual_norm);
+        assert!(!r.selected.is_empty());
+    }
+
+    #[test]
+    fn lambda_extremes_fig4g_semantics() {
+        // Fig. 4g: λ=0 is allowed and fits tightly on an easy problem;
+        // huge λ crushes the weights so the fit degenerates toward the
+        // empty solution — both ends of the paper's λ sweep.
+        let mut rng = Rng::new(7);
+        let g = Matrix::from_vec(20, 6, (0..120).map(|_| rng.gaussian_f32()).collect());
+        // target is a positive combination of rows, so it is representable
+        // under the non-negative weight constraint
+        let mut target = vec![0.0f32; 6];
+        for i in [1usize, 4, 9] {
+            crate::tensor::axpy(0.5 + i as f32 * 0.2, g.row(i), &mut target);
+        }
+        // λ=0 must run without error and beat the empty fit (the greedy
+        // support under the non-negativity constraint need not be exact)
+        let r0 = omp_select_rust(&g, &target, OmpOpts { k: 8, lambda: 0.0, eps: 1e-12 }).unwrap();
+        assert!(r0.residual_norm < 0.75 * norm2(&target), "{}", r0.residual_norm);
+        let rbig =
+            omp_select_rust(&g, &target, OmpOpts { k: 8, lambda: 1e6, eps: 1e-12 }).unwrap();
+        assert!(rbig.residual_norm > 0.9 * norm2(&target), "{}", rbig.residual_norm);
+        let wnorm: f32 = rbig.weights.iter().map(|w| w * w).sum::<f32>().sqrt();
+        assert!(wnorm < 1e-2, "weights should be crushed: {wnorm}");
+    }
+}

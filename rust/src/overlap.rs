@@ -1,0 +1,158 @@
+//! Overlapped selection: run data selection in a background worker so the
+//! training loop never stalls on a selection round.
+//!
+//! The paper amortizes selection cost by selecting only every `R` epochs;
+//! this module removes it from the critical path entirely — the trainer
+//! keeps stepping on the *stale* subset while the worker computes the next
+//! one against a parameter snapshot, and swaps it in when ready (a
+//! double-buffered subset).  On a multi-core box this hides the full
+//! selection latency; on one core it still bounds tail latency per epoch.
+//!
+//! The worker owns its **own** PJRT runtime (the xla client handles are not
+//! `Send`, and executables are compiled per thread) plus clones of the
+//! train/val splits; only parameter snapshots ([`ModelState`], plain
+//! host buffers) and [`Selection`]s cross the channel.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Dataset;
+use crate::rng::Rng;
+use crate::runtime::{ModelState, Runtime};
+use crate::selection::{parse_strategy, SelectCtx, Selection};
+
+/// A selection request: parameter snapshot + a tag that seeds the
+/// per-round RNG (so overlapped and synchronous runs draw the same
+/// shuffles for a given epoch).
+pub struct SelectRequest {
+    pub state: ModelState,
+    pub rng_tag: u64,
+}
+
+/// Background selection worker.
+pub struct AsyncSelector {
+    req_tx: Option<Sender<SelectRequest>>,
+    res_rx: Receiver<Result<Selection>>,
+    handle: Option<JoinHandle<()>>,
+    /// requests in flight (0 or 1 — the trainer never stacks requests)
+    pub inflight: usize,
+}
+
+/// Static configuration the worker needs to rebuild the selection context.
+#[derive(Clone)]
+pub struct SelectorConfig {
+    pub artifacts_dir: String,
+    pub strategy_spec: String,
+    pub ground: Vec<usize>,
+    pub budget: usize,
+    pub lambda: f32,
+    pub eps: f32,
+    pub is_valid: bool,
+    pub seed: u64,
+}
+
+impl AsyncSelector {
+    /// Spawn the worker with its own runtime + dataset copies.
+    pub fn spawn(cfg: SelectorConfig, train: Dataset, val: Dataset) -> Result<AsyncSelector> {
+        let (req_tx, req_rx) = channel::<SelectRequest>();
+        let (res_tx, res_rx) = channel::<Result<Selection>>();
+        let handle = std::thread::Builder::new()
+            .name("gradmatch-selector".into())
+            .spawn(move || {
+                // own runtime + strategy; failures are reported per request
+                let rt = match Runtime::load(&cfg.artifacts_dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = res_tx.send(Err(anyhow!("selector runtime: {e}")));
+                        return;
+                    }
+                };
+                let batch = rt
+                    .manifest
+                    .models
+                    .values()
+                    .next()
+                    .map(|m| m.batch)
+                    .unwrap_or(128);
+                let mut strategy = match parse_strategy(&cfg.strategy_spec, batch) {
+                    Ok((s, _)) => s,
+                    Err(e) => {
+                        let _ = res_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let root = Rng::new(cfg.seed ^ 0xDA7A);
+                while let Ok(req) = req_rx.recv() {
+                    let mut rng = root.split(req.rng_tag);
+                    let out = strategy.select(&mut SelectCtx {
+                        rt: &rt,
+                        state: &req.state,
+                        train: &train,
+                        ground: &cfg.ground,
+                        val: &val,
+                        budget: cfg.budget,
+                        lambda: cfg.lambda,
+                        eps: cfg.eps,
+                        is_valid: cfg.is_valid,
+                        rng: &mut rng,
+                    });
+                    if res_tx.send(out).is_err() {
+                        break; // trainer gone
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawning selector thread: {e}"))?;
+        Ok(AsyncSelector {
+            req_tx: Some(req_tx),
+            res_rx,
+            handle: Some(handle),
+            inflight: 0,
+        })
+    }
+
+    /// Submit a snapshot for selection (non-blocking). At most one request
+    /// should be in flight; the trainer checks `inflight` first.
+    pub fn request(&mut self, state: ModelState, rng_tag: u64) -> Result<()> {
+        self.req_tx
+            .as_ref()
+            .expect("selector shut down")
+            .send(SelectRequest { state, rng_tag })
+            .map_err(|_| anyhow!("selector thread died"))?;
+        self.inflight += 1;
+        Ok(())
+    }
+
+    /// Non-blocking poll for a finished selection.
+    pub fn try_recv(&mut self) -> Result<Option<Selection>> {
+        match self.res_rx.try_recv() {
+            Ok(res) => {
+                self.inflight = self.inflight.saturating_sub(1);
+                res.map(Some)
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(anyhow!("selector thread died")),
+        }
+    }
+
+    /// Blocking wait for a finished selection.
+    pub fn recv(&mut self) -> Result<Selection> {
+        let res = self
+            .res_rx
+            .recv()
+            .map_err(|_| anyhow!("selector thread died"))?;
+        self.inflight = self.inflight.saturating_sub(1);
+        res
+    }
+}
+
+impl Drop for AsyncSelector {
+    fn drop(&mut self) {
+        // closing the request channel lets the worker loop exit
+        self.req_tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,576 @@
+//! PJRT runtime: load the AOT'd HLO-text artifacts and execute them.
+//!
+//! This is the only module that talks to the `xla` crate.  It owns the CPU
+//! PJRT client, parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`), compiles each HLO module once on first use,
+//! and exposes typed wrappers for the seven entry points of a model
+//! variant.  Everything above (trainer, selection) works with plain
+//! `Vec<f32>` / [`crate::tensor::Matrix`] buffers.
+//!
+//! Perf note: executables are cached; input literals for the train step are
+//! built from reused host buffers.  See EXPERIMENTS.md §Perf for the
+//! literal-vs-buffer execution measurements.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonlite::Json;
+use crate::tensor::Matrix;
+
+/// Static metadata of one model variant, mirrored from the manifest.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d: usize,
+    pub h: usize,
+    pub c: usize,
+    /// train mini-batch rows (B)
+    pub batch: usize,
+    /// eval/grad chunk rows (E = G)
+    pub chunk: usize,
+    /// last-layer gradient dimension H*C + C
+    pub p: usize,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// entry name -> artifact path (relative to artifact root)
+    pub entries: HashMap<String, String>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub models: HashMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    /// Parse the manifest file under `root`.
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        if j.get("interchange").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("manifest: unsupported interchange format");
+        }
+        let mut models = HashMap::new();
+        let mobj = j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing models"))?;
+        for (name, m) in mobj {
+            let u = |k: &str| -> Result<usize> {
+                m.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("manifest: {name}.{k}"))
+            };
+            let f = |k: &str| -> Result<f32> {
+                m.get(k)
+                    .and_then(Json::as_f64)
+                    .map(|v| v as f32)
+                    .ok_or_else(|| anyhow!("manifest: {name}.{k}"))
+            };
+            let mut entries = HashMap::new();
+            let eobj = m
+                .get("entries")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow!("manifest: {name}.entries"))?;
+            for (ename, e) in eobj {
+                let path = e
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("manifest: {name}.{ename}.path"))?;
+                entries.insert(ename.clone(), path.to_string());
+            }
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    d: u("d")?,
+                    h: u("h")?,
+                    c: u("c")?,
+                    batch: u("batch")?,
+                    chunk: u("chunk")?,
+                    p: u("p")?,
+                    momentum: f("momentum")?,
+                    weight_decay: f("weight_decay")?,
+                    entries,
+                },
+            );
+        }
+        Ok(Manifest { models })
+    }
+}
+
+/// Model parameters + momentum buffers, host-side.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub m_w1: Vec<f32>,
+    pub m_b1: Vec<f32>,
+    pub m_w2: Vec<f32>,
+    pub m_b2: Vec<f32>,
+    pub meta: ModelMeta,
+}
+
+impl ModelState {
+    /// Zero-momentum state from raw parameter buffers.
+    pub fn new(meta: &ModelMeta, w1: Vec<f32>, b1: Vec<f32>, w2: Vec<f32>, b2: Vec<f32>) -> Self {
+        assert_eq!(w1.len(), meta.d * meta.h);
+        assert_eq!(b1.len(), meta.h);
+        assert_eq!(w2.len(), meta.h * meta.c);
+        assert_eq!(b2.len(), meta.c);
+        ModelState {
+            m_w1: vec![0.0; w1.len()],
+            m_b1: vec![0.0; b1.len()],
+            m_w2: vec![0.0; w2.len()],
+            m_b2: vec![0.0; b2.len()],
+            w1,
+            b1,
+            w2,
+            b2,
+            meta: meta.clone(),
+        }
+    }
+
+    /// Total parameter count (excluding momenta).
+    pub fn param_count(&self) -> usize {
+        self.w1.len() + self.b1.len() + self.w2.len() + self.b2.len()
+    }
+
+    /// Pack (params, momenta) into the flat layout of `train_step_fused`.
+    pub fn pack(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(2 * self.param_count());
+        for v in [&self.w1, &self.b1, &self.w2, &self.b2, &self.m_w1, &self.m_b1, &self.m_w2, &self.m_b2] {
+            out.extend_from_slice(v);
+        }
+        out
+    }
+
+    /// Inverse of [`ModelState::pack`].
+    pub fn unpack(meta: &ModelMeta, flat: &[f32]) -> ModelState {
+        let sizes = [
+            meta.d * meta.h,
+            meta.h,
+            meta.h * meta.c,
+            meta.c,
+            meta.d * meta.h,
+            meta.h,
+            meta.h * meta.c,
+            meta.c,
+        ];
+        assert_eq!(flat.len(), sizes.iter().sum::<usize>(), "unpack: state size");
+        let mut parts = Vec::with_capacity(8);
+        let mut off = 0;
+        for n in sizes {
+            parts.push(flat[off..off + n].to_vec());
+            off += n;
+        }
+        let mut it = parts.into_iter();
+        let (w1, b1, w2, b2) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+        let mut st = ModelState::new(meta, w1, b1, w2, b2);
+        st.m_w1 = it.next().unwrap();
+        st.m_b1 = it.next().unwrap();
+        st.m_w2 = it.next().unwrap();
+        st.m_b2 = it.next().unwrap();
+        st
+    }
+}
+
+/// Device-friendly packed training state: one literal threaded through
+/// consecutive `train_step_fused` executions, so the model state is never
+/// re-marshalled host-side between steps (§Perf).
+pub struct FusedState {
+    /// packed (params, momenta) literal, updated in place per step
+    lit: xla::Literal,
+    pub meta: ModelMeta,
+}
+
+impl FusedState {
+    /// Pack a host-side state.
+    pub fn from_state(st: &ModelState) -> Result<FusedState> {
+        let flat = st.pack();
+        Ok(FusedState { lit: xla::Literal::vec1(&flat), meta: st.meta.clone() })
+    }
+
+    /// Download to a host-side state (selection / eval boundaries).
+    pub fn to_state(&self) -> Result<ModelState> {
+        let flat = self.lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(ModelState::unpack(&self.meta, &flat))
+    }
+}
+
+/// The PJRT runtime: client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    root: PathBuf,
+    exes: RefCell<HashMap<(String, String), xla::PjRtLoadedExecutable>>,
+    /// executions per entry (telemetry for the perf pass)
+    pub exec_counts: RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&root)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            root,
+            exes: RefCell::new(HashMap::new()),
+            exec_counts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Model metadata by name.
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.manifest
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model variant '{name}'"))
+    }
+
+    fn ensure_compiled(&self, model: &str, entry: &str) -> Result<()> {
+        let key = (model.to_string(), entry.to_string());
+        if self.exes.borrow().contains_key(&key) {
+            return Ok(());
+        }
+        let meta = self.model(model)?;
+        let rel = meta
+            .entries
+            .get(entry)
+            .ok_or_else(|| anyhow!("model '{model}' has no entry '{entry}'"))?;
+        let path = self.root.join(rel);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {model}/{entry}: {e:?}"))?;
+        self.exes.borrow_mut().insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute an entry point; returns the flattened tuple of outputs.
+    pub fn exec(&self, model: &str, entry: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.exec_ref(model, entry, &refs)
+    }
+
+    /// Execute with borrowed input literals.
+    ///
+    /// Lifetime notes: the vendored xla crate's `execute()` is patched
+    /// (third_party/xla/xla_rs/xla_rs.cc) to free its input device
+    /// buffers after the outputs are ready — upstream 0.1.6 leaked every
+    /// input (~2.3 MB/step in the train loop, OOMing real runs; §Perf).
+    /// Re-using caller-held `PjRtBuffer`s across executions via
+    /// `execute_b` is NOT safe with xla_extension 0.5.1 (the second use
+    /// trips buffer-aliasing checks), so all hot paths stay on cached
+    /// *literals* + per-call transfer.
+    pub fn exec_ref(
+        &self,
+        model: &str,
+        entry: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(model, entry)?;
+        *self
+            .exec_counts
+            .borrow_mut()
+            .entry(format!("{model}/{entry}"))
+            .or_insert(0) += 1;
+        let exes = self.exes.borrow();
+        let exe = exes.get(&(model.to_string(), entry.to_string())).unwrap();
+        let bufs = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {model}/{entry}: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback {model}/{entry}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → always a tuple
+        lit.to_tuple().map_err(|e| anyhow!("untuple {model}/{entry}: {e:?}"))
+    }
+
+    /// `corr_chunk` against a pre-marshalled gradient-chunk literal (the
+    /// OMP hot path: the chunk literal is built once; only the transfer
+    /// and the fresh residual are per-iteration).
+    pub fn corr_chunk_lit(
+        &self,
+        model: &str,
+        g_lit: &xla::Literal,
+        r: &[f32],
+    ) -> Result<Vec<f32>> {
+        let r_lit = xla::Literal::vec1(r);
+        let outs = self.exec_ref(model, "corr_chunk", &[g_lit, &r_lit])?;
+        outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Marshal a row-major matrix into a 2-D literal (for literal caching).
+    pub fn matrix_literal(m: &Matrix) -> Result<xla::Literal> {
+        lit2(&m.data, m.rows, m.cols)
+    }
+
+    // -- typed wrappers ------------------------------------------------------
+
+    /// Initialize model parameters from a seed.
+    pub fn init(&self, model: &str, seed: i32) -> Result<ModelState> {
+        let meta = self.model(model)?.clone();
+        let outs = self.exec(model, "init", &[xla::Literal::scalar(seed)])?;
+        let v = |i: usize| -> Result<Vec<f32>> {
+            outs[i].to_vec::<f32>().map_err(|e| anyhow!("init out {i}: {e:?}"))
+        };
+        Ok(ModelState::new(&meta, v(0)?, v(1)?, v(2)?, v(3)?))
+    }
+
+    fn params_literals(&self, st: &ModelState) -> Result<Vec<xla::Literal>> {
+        let m = &st.meta;
+        Ok(vec![
+            lit2(&st.w1, m.d, m.h)?,
+            lit1(&st.b1),
+            lit2(&st.w2, m.h, m.c)?,
+            lit1(&st.b2),
+        ])
+    }
+
+    /// One weighted SGD step.  Mutates `st` in place; returns (loss, correct).
+    pub fn train_step(
+        &self,
+        st: &mut ModelState,
+        x: &[f32],
+        y: &[i32],
+        w: &[f32],
+        lr: f32,
+    ) -> Result<(f32, f32)> {
+        let m = st.meta.clone();
+        assert_eq!(x.len(), m.batch * m.d, "train_step x shape");
+        assert_eq!(y.len(), m.batch);
+        assert_eq!(w.len(), m.batch);
+        let mut inputs = self.params_literals(st)?;
+        inputs.push(lit2(&st.m_w1, m.d, m.h)?);
+        inputs.push(lit1(&st.m_b1));
+        inputs.push(lit2(&st.m_w2, m.h, m.c)?);
+        inputs.push(lit1(&st.m_b2));
+        inputs.push(lit2(x, m.batch, m.d)?);
+        inputs.push(xla::Literal::vec1(y));
+        inputs.push(lit1(w));
+        inputs.push(xla::Literal::scalar(lr));
+        let outs = self.exec(&m.name, "train_step", &inputs)?;
+        let v = |i: usize| -> Result<Vec<f32>> {
+            outs[i].to_vec::<f32>().map_err(|e| anyhow!("train_step out {i}: {e:?}"))
+        };
+        st.w1 = v(0)?;
+        st.b1 = v(1)?;
+        st.w2 = v(2)?;
+        st.b2 = v(3)?;
+        st.m_w1 = v(4)?;
+        st.m_b1 = v(5)?;
+        st.m_w2 = v(6)?;
+        st.m_b2 = v(7)?;
+        let loss = scalar_f32(&outs[8])?;
+        let correct = scalar_f32(&outs[9])?;
+        Ok((loss, correct))
+    }
+
+    /// One weighted SGD step over a packed state (the trainer hot loop).
+    /// The state literal is threaded through without host conversion;
+    /// only loss/correct scalars are read back.
+    pub fn train_step_fused(
+        &self,
+        fs: &mut FusedState,
+        x: &[f32],
+        y: &[i32],
+        w: &[f32],
+        lr: f32,
+    ) -> Result<(f32, f32)> {
+        let m = fs.meta.clone();
+        debug_assert_eq!(x.len(), m.batch * m.d);
+        let x_lit = lit2(x, m.batch, m.d)?;
+        let y_lit = xla::Literal::vec1(y);
+        let w_lit = lit1(w);
+        let lr_lit = xla::Literal::scalar(lr);
+        let mut outs =
+            self.exec_ref(&m.name, "train_step_fused", &[&fs.lit, &x_lit, &y_lit, &w_lit, &lr_lit])?;
+        let correct = scalar_f32(&outs[2])?;
+        let loss = scalar_f32(&outs[1])?;
+        fs.lit = outs.swap_remove(0);
+        Ok((loss, correct))
+    }
+
+    /// Masked eval over one chunk: (Σloss, Σcorrect, correct[E], entropy[E]).
+    pub fn eval_chunk(
+        &self,
+        st: &ModelState,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<(f32, f32, Vec<f32>, Vec<f32>)> {
+        let m = &st.meta;
+        assert_eq!(x.len(), m.chunk * m.d, "eval_chunk x shape");
+        let mut inputs = self.params_literals(st)?;
+        inputs.push(lit2(x, m.chunk, m.d)?);
+        inputs.push(xla::Literal::vec1(y));
+        inputs.push(lit1(mask));
+        let outs = self.exec(&m.name, "eval_chunk", &inputs)?;
+        Ok((
+            scalar_f32(&outs[0])?,
+            scalar_f32(&outs[1])?,
+            outs[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            outs[3].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+        ))
+    }
+
+    /// Per-sample last-layer gradients for one chunk → `[chunk, P]`.
+    pub fn grads_chunk(
+        &self,
+        st: &ModelState,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<Matrix> {
+        let m = &st.meta;
+        let mut inputs = self.params_literals(st)?;
+        inputs.push(lit2(x, m.chunk, m.d)?);
+        inputs.push(xla::Literal::vec1(y));
+        inputs.push(lit1(mask));
+        let outs = self.exec(&m.name, "grads_chunk", &inputs)?;
+        let data = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(Matrix::from_vec(m.chunk, m.p, data))
+    }
+
+    /// Sum of per-sample gradients for one chunk → `[P]` (fused fast path).
+    pub fn mean_grad_chunk(
+        &self,
+        st: &ModelState,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<Vec<f32>> {
+        let m = &st.meta;
+        let mut inputs = self.params_literals(st)?;
+        inputs.push(lit2(x, m.chunk, m.d)?);
+        inputs.push(xla::Literal::vec1(y));
+        inputs.push(lit1(mask));
+        let outs = self.exec(&m.name, "mean_grad_chunk", &inputs)?;
+        outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Per-mini-batch gradient *sums* for one chunk → `[chunk/B, P]`
+    /// (device-side reduction; the PB fast path — §Perf).
+    pub fn batch_gradsum_chunk(
+        &self,
+        st: &ModelState,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<Matrix> {
+        let m = &st.meta;
+        let mut inputs = self.params_literals(st)?;
+        inputs.push(lit2(x, m.chunk, m.d)?);
+        inputs.push(xla::Literal::vec1(y));
+        inputs.push(lit1(mask));
+        let outs = self.exec(&m.name, "batch_gradsum_chunk", &inputs)?;
+        let data = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(Matrix::from_vec(m.chunk / m.batch, m.p, data))
+    }
+
+    /// OMP residual correlations over one padded gradient chunk.
+    pub fn corr_chunk(&self, model: &str, g: &Matrix, r: &[f32]) -> Result<Vec<f32>> {
+        let m = self.model(model)?;
+        assert_eq!(g.rows, m.chunk, "corr_chunk rows");
+        assert_eq!(g.cols, m.p, "corr_chunk cols");
+        assert_eq!(r.len(), m.p);
+        let outs = self.exec(model, "corr_chunk", &[lit2(&g.data, g.rows, g.cols)?, lit1(r)])?;
+        outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Pairwise squared distances between two padded gradient chunks.
+    pub fn sqdist_chunk(&self, model: &str, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        let m = self.model(model)?;
+        assert_eq!(a.rows, m.chunk);
+        assert_eq!(b.rows, m.chunk);
+        let outs = self.exec(
+            model,
+            "sqdist_chunk",
+            &[lit2(&a.data, a.rows, a.cols)?, lit2(&b.data, b.rows, b.cols)?],
+        )?;
+        let data = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(Matrix::from_vec(m.chunk, m.chunk, data))
+    }
+}
+
+fn lit1(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn lit2(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(v.len(), rows * cols);
+    xla::Literal::vec1(v)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape [{rows},{cols}]: {e:?}"))
+}
+
+fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+    l.to_vec::<f32>()
+        .map_err(|e| anyhow!("{e:?}"))?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty scalar"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE_MANIFEST: &str = r#"{
+      "format": 1, "interchange": "hlo-text",
+      "models": {"m1": {"d": 4, "h": 3, "c": 2, "batch": 8, "chunk": 16,
+                         "p": 8, "momentum": 0.9, "weight_decay": 0.0005,
+                         "grad_layout": "w2_row_major_hc_then_bias",
+                         "entries": {"init": {"path": "m1/init.hlo.txt",
+                                              "inputs": [], "outputs": []}}}}}"#;
+
+    #[test]
+    fn manifest_parses_fields() {
+        let m = Manifest::parse(SAMPLE_MANIFEST).unwrap();
+        let meta = &m.models["m1"];
+        assert_eq!(meta.d, 4);
+        assert_eq!(meta.p, 8);
+        assert!((meta.momentum - 0.9).abs() < 1e-6);
+        assert_eq!(meta.entries["init"], "m1/init.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_rejects_wrong_interchange() {
+        let bad = SAMPLE_MANIFEST.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn model_state_shape_checks() {
+        let m = Manifest::parse(SAMPLE_MANIFEST).unwrap();
+        let meta = m.models["m1"].clone();
+        let st = ModelState::new(
+            &meta,
+            vec![0.0; 12],
+            vec![0.0; 3],
+            vec![0.0; 6],
+            vec![0.0; 2],
+        );
+        assert_eq!(st.param_count(), 23);
+        assert_eq!(st.m_w1.len(), 12);
+    }
+}

@@ -1,0 +1,683 @@
+//! Selection strategies: GRAD-MATCH and every baseline the paper compares
+//! against (§5), behind one [`Strategy`] trait the trainer drives every `R`
+//! epochs (Algorithm 1).
+//!
+//! | spec string            | algorithm                                            |
+//! |------------------------|------------------------------------------------------|
+//! | `gradmatch`            | OMP, per-class + per-gradient approx (paper default) |
+//! | `gradmatch-perclass`   | OMP per class on full-P gradients (Table 11)         |
+//! | `gradmatch-pb`         | OMP over per-mini-batch gradients                    |
+//! | `craig` / `craig-pb`   | facility location over gradient distances            |
+//! | `glister`              | Taylor-approximation greedy on val-gradient dots     |
+//! | `random`               | uniform subset                                       |
+//! | `full`                 | entire ground set (skyline / early-stop baseline)    |
+//! | `entropy`              | max predictive entropy (Table 12)                    |
+//! | `forgetting`           | forgetting-events counter (Table 12)                 |
+//! | `featurefl`            | facility location on raw features (Table 12)         |
+//!
+//! A trailing `-warm` on any spec enables the κ warm-start schedule, which
+//! the trainer owns (`T_f = κ·T·k/n` full epochs first — §4 of the paper).
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Dataset;
+use crate::grads;
+use crate::omp::{omp_select, OmpOpts, XlaCorr};
+use crate::rng::Rng;
+use crate::runtime::{ModelState, Runtime};
+use crate::submod::{lazy_greedy, sim_from_sqdist, FacilityLocation};
+use crate::tensor::Matrix;
+
+/// Everything a strategy may look at when selecting.
+pub struct SelectCtx<'a> {
+    pub rt: &'a Runtime,
+    pub state: &'a ModelState,
+    pub train: &'a Dataset,
+    /// ground set: dataset rows eligible for selection (handles imbalance)
+    pub ground: &'a [usize],
+    pub val: &'a Dataset,
+    /// subset size k (samples)
+    pub budget: usize,
+    /// OMP ridge λ
+    pub lambda: f32,
+    /// OMP tolerance ε
+    pub eps: f32,
+    /// match validation gradients instead of training gradients (L = L_V)
+    pub is_valid: bool,
+    pub rng: &'a mut Rng,
+}
+
+/// A selected weighted subset.  `indices` are dataset rows; `weights`
+/// align 1:1 (non-negative; the weighted loss normalizes, so scale is
+/// irrelevant).
+#[derive(Clone, Debug, Default)]
+pub struct Selection {
+    pub indices: Vec<usize>,
+    pub weights: Vec<f32>,
+    /// gradient-matching residual where the strategy computes one
+    pub grad_error: Option<f32>,
+}
+
+impl Selection {
+    fn push(&mut self, idx: usize, w: f32) {
+        self.indices.push(idx);
+        self.weights.push(w);
+    }
+}
+
+/// A data-selection strategy (Algorithm 1's OMP slot, or a baseline).
+pub trait Strategy {
+    fn name(&self) -> String;
+    /// Whether re-selection every R epochs is useful (adaptive strategies).
+    fn is_adaptive(&self) -> bool {
+        true
+    }
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection>;
+}
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+/// Ground-set rows per class.
+fn ground_per_class(ds: &Dataset, ground: &[usize]) -> Vec<Vec<usize>> {
+    let mut per = vec![Vec::new(); ds.classes];
+    for &i in ground {
+        per[ds.y[i] as usize].push(i);
+    }
+    per
+}
+
+/// Split budget k across classes proportionally to class sizes (largest
+/// remainder; every non-empty class gets ≥ 1 when k ≥ #classes).
+pub fn split_budget(k: usize, sizes: &[usize]) -> Vec<usize> {
+    let total: usize = sizes.iter().sum();
+    if total == 0 {
+        return vec![0; sizes.len()];
+    }
+    let mut out = vec![0usize; sizes.len()];
+    let mut rems: Vec<(f64, usize)> = Vec::new();
+    let mut assigned = 0usize;
+    for (c, &s) in sizes.iter().enumerate() {
+        let exact = k as f64 * s as f64 / total as f64;
+        let base = (exact.floor() as usize).min(s);
+        out[c] = base;
+        assigned += base;
+        rems.push((exact - base as f64, c));
+    }
+    rems.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut left = k.saturating_sub(assigned);
+    for &(_, c) in rems.iter().cycle().take(rems.len() * 2) {
+        if left == 0 {
+            break;
+        }
+        if out[c] < sizes[c] {
+            out[c] += 1;
+            left -= 1;
+        }
+    }
+    out
+}
+
+/// Target (mean) gradient for a scope of training rows, or — when
+/// `is_valid` — for the matching validation rows of the same classes.
+fn target_gradient(ctx: &SelectCtx<'_>, train_rows: &[usize], class: Option<usize>) -> Result<Vec<f32>> {
+    if ctx.is_valid {
+        let rows: Vec<usize> = match class {
+            Some(c) => (0..ctx.val.len()).filter(|&i| ctx.val.y[i] as usize == c).collect(),
+            None => (0..ctx.val.len()).collect(),
+        };
+        if rows.is_empty() {
+            // no validation rows for this class — fall back to train target
+            return grads::mean_gradient(ctx.rt, ctx.state, ctx.train, train_rows);
+        }
+        grads::mean_gradient(ctx.rt, ctx.state, ctx.val, &rows)
+    } else {
+        grads::mean_gradient(ctx.rt, ctx.state, ctx.train, train_rows)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GRAD-MATCH
+// ---------------------------------------------------------------------------
+
+/// Which GRAD-MATCH variant to run (Table 11 compares them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradMatchVariant {
+    /// per-class + per-gradient (last-layer class slice) — paper default
+    PerClassPerGradient,
+    /// per-class on full last-layer gradients
+    PerClass,
+    /// per-mini-batch ground set (GRAD-MATCH-PB)
+    PerBatch,
+}
+
+/// GRAD-MATCH: OMP-based gradient matching (Algorithm 1 + 2).
+pub struct GradMatch {
+    pub variant: GradMatchVariant,
+    /// mini-batch size for the PB ground set
+    pub batch: usize,
+    /// route full-P correlations through the XLA/Pallas kernel
+    pub use_xla: bool,
+}
+
+impl GradMatch {
+    pub fn new(variant: GradMatchVariant, batch: usize, use_xla: bool) -> Self {
+        GradMatch { variant, batch, use_xla }
+    }
+
+    fn select_per_class(&self, ctx: &mut SelectCtx<'_>, per_gradient: bool) -> Result<Selection> {
+        let meta = &ctx.state.meta;
+        let per_class = ground_per_class(ctx.train, ctx.ground);
+        let sizes: Vec<usize> = per_class.iter().map(Vec::len).collect();
+        let budgets = split_budget(ctx.budget, &sizes);
+        let mut out = Selection::default();
+        let mut err_acc = 0.0f64;
+        let mut err_n = 0usize;
+        for (cls, rows) in per_class.iter().enumerate() {
+            let k_c = budgets[cls];
+            if rows.is_empty() || k_c == 0 {
+                continue;
+            }
+            let store = grads::per_sample_grads(ctx.rt, ctx.state, ctx.train, rows)?;
+            let target_full = target_gradient(ctx, rows, Some(cls))?;
+            let (g, target): (Matrix, Vec<f32>) = if per_gradient {
+                let cols = grads::class_columns(meta.h, meta.c, cls);
+                (store.g.gather_cols(&cols), cols.iter().map(|&j| target_full[j]).collect())
+            } else {
+                (store.g.clone(), target_full)
+            };
+            let omp_opts = OmpOpts { k: k_c, lambda: ctx.lambda, eps: ctx.eps };
+            let res = if !per_gradient && self.use_xla {
+                let mut backend = XlaCorr::new(ctx.rt, &meta.name, &g)?;
+                omp_select(&mut backend, &|j| g.row(j).to_vec(), &target, omp_opts)?
+            } else {
+                crate::omp::omp_select_rust(&g, &target, omp_opts)?
+            };
+            // OMP fits the class *mean* gradient; calibrate to the class
+            // *sum* (×n_c) so weights are comparable with CRAIG's medoid
+            // counts and the paper's Err(w, X) accounting (Table 9).  The
+            // weighted loss normalizes, so training is scale-invariant.
+            let scale = rows.len() as f32;
+            for (slot, &j) in res.selected.iter().enumerate() {
+                out.push(rows[j], res.weights[slot] * scale);
+            }
+            err_acc += res.residual_norm as f64;
+            err_n += 1;
+        }
+        if err_n > 0 {
+            out.grad_error = Some((err_acc / err_n as f64) as f32);
+        }
+        Ok(out)
+    }
+
+    fn select_per_batch(&self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
+        let meta = &ctx.state.meta;
+        // deterministic-per-round shuffle defines the mini-batch ground set
+        let mut order = ctx.ground.to_vec();
+        ctx.rng.shuffle(&mut order);
+        // device-side group reduction — never materializes per-sample grads
+        let (bg, members) =
+            grads::per_batch_grads_fused(ctx.rt, ctx.state, ctx.train, &order)?;
+        let target = target_gradient(ctx, &order, None)?;
+        let b_k = (ctx.budget / self.batch).max(1).min(bg.rows);
+        let omp_opts = OmpOpts { k: b_k, lambda: ctx.lambda, eps: ctx.eps };
+        let res = if self.use_xla {
+            let mut backend = XlaCorr::new(ctx.rt, &meta.name, &bg)?;
+            omp_select(&mut backend, &|j| bg.row(j).to_vec(), &target, omp_opts)?
+        } else {
+            crate::omp::omp_select_rust(&bg, &target, omp_opts)?
+        };
+        let mut out = Selection::default();
+        // same sum-calibration as the per-class path (×n over the mean fit)
+        let scale = order.len() as f32;
+        for (slot, &b) in res.selected.iter().enumerate() {
+            let w = res.weights[slot] * scale / members[b].len().max(1) as f32;
+            for &row in &members[b] {
+                out.push(row, w);
+            }
+        }
+        out.grad_error = Some(res.residual_norm);
+        Ok(out)
+    }
+}
+
+impl Strategy for GradMatch {
+    fn name(&self) -> String {
+        match self.variant {
+            GradMatchVariant::PerClassPerGradient => "gradmatch".into(),
+            GradMatchVariant::PerClass => "gradmatch-perclass".into(),
+            GradMatchVariant::PerBatch => "gradmatch-pb".into(),
+        }
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
+        match self.variant {
+            GradMatchVariant::PerClassPerGradient => self.select_per_class(ctx, true),
+            GradMatchVariant::PerClass => self.select_per_class(ctx, false),
+            GradMatchVariant::PerBatch => self.select_per_batch(ctx),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CRAIG (facility location over gradient distances)
+// ---------------------------------------------------------------------------
+
+/// CRAIG baseline: maximize the facility-location lower bound F̂ (§3.2 /
+/// Appendix B.7), weights = medoid counts.
+pub struct Craig {
+    pub per_batch: bool,
+    pub batch: usize,
+    /// route full-P pairwise distances through the XLA/Pallas kernel
+    pub use_xla: bool,
+}
+
+impl Craig {
+    fn sqdist_matrix(&self, ctx: &SelectCtx<'_>, g: &Matrix) -> Result<Matrix> {
+        if self.use_xla && g.cols == ctx.state.meta.p {
+            let meta = &ctx.state.meta;
+            let rows = meta.chunk;
+            let nblocks = g.rows.div_ceil(rows);
+            // pad row blocks once
+            let mut blocks = Vec::with_capacity(nblocks);
+            for bi in 0..nblocks {
+                let lo = bi * rows;
+                let hi = ((bi + 1) * rows).min(g.rows);
+                let mut m = Matrix::zeros(rows, g.cols);
+                for (slot, r) in (lo..hi).enumerate() {
+                    m.row_mut(slot).copy_from_slice(g.row(r));
+                }
+                blocks.push((m, lo, hi));
+            }
+            let mut dist = Matrix::zeros(g.rows, g.rows);
+            for (ba, lo_a, hi_a) in &blocks {
+                for (bb, lo_b, hi_b) in &blocks {
+                    let d = ctx.rt.sqdist_chunk(&ctx.state.meta.name, ba, bb)?;
+                    for (ia, ra) in (*lo_a..*hi_a).enumerate() {
+                        for (ib, rb) in (*lo_b..*hi_b).enumerate() {
+                            dist.set(ra, rb, d.at(ia, ib));
+                        }
+                    }
+                }
+            }
+            Ok(dist)
+        } else {
+            // Rust fallback (per-gradient slices / tests)
+            let mut dist = Matrix::zeros(g.rows, g.rows);
+            for i in 0..g.rows {
+                for j in i..g.rows {
+                    let d = crate::tensor::sqdist(g.row(i), g.row(j));
+                    dist.set(i, j, d);
+                    dist.set(j, i, d);
+                }
+            }
+            Ok(dist)
+        }
+    }
+
+    fn select_ground(
+        &self,
+        ctx: &SelectCtx<'_>,
+        g: &Matrix,
+        k: usize,
+    ) -> Result<(Vec<usize>, Vec<f32>)> {
+        let dist = self.sqdist_matrix(ctx, g)?;
+        let sim = sim_from_sqdist(&dist);
+        let mut fl = FacilityLocation::new(&sim);
+        let res = lazy_greedy(&mut fl, k);
+        let w = fl.medoid_weights(&res.selected);
+        Ok((res.selected, w))
+    }
+}
+
+impl Strategy for Craig {
+    fn name(&self) -> String {
+        if self.per_batch { "craig-pb".into() } else { "craig".into() }
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
+        let meta = ctx.state.meta.clone();
+        let mut out = Selection::default();
+        if self.per_batch {
+            let mut order = ctx.ground.to_vec();
+            ctx.rng.shuffle(&mut order);
+            let (bg, members) =
+                grads::per_batch_grads_fused(ctx.rt, ctx.state, ctx.train, &order)?;
+            let b_k = (ctx.budget / self.batch).max(1).min(bg.rows);
+            let (sel, w) = self.select_ground(ctx, &bg, b_k)?;
+            for (slot, &b) in sel.iter().enumerate() {
+                for &row in &members[b] {
+                    out.push(row, w[slot]);
+                }
+            }
+        } else {
+            // per-class + per-gradient slices (keeps the n_c² distance
+            // matrices cheap — same approximation CRAIG itself adopts)
+            let per_class = ground_per_class(ctx.train, ctx.ground);
+            let sizes: Vec<usize> = per_class.iter().map(Vec::len).collect();
+            let budgets = split_budget(ctx.budget, &sizes);
+            for (cls, rows) in per_class.iter().enumerate() {
+                if rows.is_empty() || budgets[cls] == 0 {
+                    continue;
+                }
+                let store = grads::per_sample_grads(ctx.rt, ctx.state, ctx.train, rows)?;
+                let cols = grads::class_columns(meta.h, meta.c, cls);
+                let g = store.g.gather_cols(&cols);
+                let (sel, w) = self.select_ground(ctx, &g, budgets[cls])?;
+                for (slot, &j) in sel.iter().enumerate() {
+                    out.push(rows[j], w[slot]);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GLISTER (Taylor-approximation greedy)
+// ---------------------------------------------------------------------------
+
+/// GLISTER baseline: the Taylor approximation of the bi-level objective
+/// reduces to scoring each candidate by `∇L_V(θ) · g_j` (§3.2); selection
+/// is top-k, unweighted.
+pub struct Glister;
+
+impl Strategy for Glister {
+    fn name(&self) -> String {
+        "glister".into()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
+        // validation mean gradient (GLISTER always uses the val set)
+        let val_rows: Vec<usize> = (0..ctx.val.len()).collect();
+        let v = grads::mean_gradient(ctx.rt, ctx.state, ctx.val, &val_rows)?;
+        // per-class proportional budgets (CORDS-style) — plain global top-k
+        // of the Taylor gains collapses onto whichever class currently has
+        // the largest aligned gradients
+        let per_class = ground_per_class(ctx.train, ctx.ground);
+        let sizes: Vec<usize> = per_class.iter().map(Vec::len).collect();
+        let budgets = split_budget(ctx.budget, &sizes);
+        let mut out = Selection::default();
+        for (cls, rows) in per_class.iter().enumerate() {
+            if rows.is_empty() || budgets[cls] == 0 {
+                continue;
+            }
+            let store = grads::per_sample_grads(ctx.rt, ctx.state, ctx.train, rows)?;
+            let mut scores = vec![0.0f32; store.g.rows];
+            crate::tensor::gemv(&store.g, &v, &mut scores);
+            let mut order: Vec<usize> = (0..scores.len()).collect();
+            order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+            for &j in order.iter().take(budgets[cls]) {
+                out.push(store.rows[j], 1.0);
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RANDOM / FULL
+// ---------------------------------------------------------------------------
+
+/// Uniform random subset (re-sampled every selection round).
+pub struct Random;
+
+impl Strategy for Random {
+    fn name(&self) -> String {
+        "random".into()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
+        let k = ctx.budget.min(ctx.ground.len());
+        let picks = ctx.rng.sample_indices(ctx.ground.len(), k);
+        let mut out = Selection::default();
+        for j in picks {
+            out.push(ctx.ground[j], 1.0);
+        }
+        Ok(out)
+    }
+}
+
+/// Entire ground set — full training and the FULL-EARLYSTOP baseline (the
+/// trainer handles the early-stop budget).
+pub struct Full;
+
+impl Strategy for Full {
+    fn name(&self) -> String {
+        "full".into()
+    }
+
+    fn is_adaptive(&self) -> bool {
+        false
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
+        let mut out = Selection::default();
+        for &i in ctx.ground {
+            out.push(i, 1.0);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table-12 extra baselines
+// ---------------------------------------------------------------------------
+
+/// Max-entropy uncertainty sampling.
+pub struct Entropy;
+
+impl Strategy for Entropy {
+    fn name(&self) -> String {
+        "entropy".into()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
+        let mut ent = Vec::with_capacity(ctx.ground.len());
+        for chunk in crate::data::padded_chunks(ctx.train, ctx.ground, ctx.state.meta.chunk) {
+            let (_, _, _, e) = ctx.rt.eval_chunk(ctx.state, &chunk.x, &chunk.y, &chunk.mask)?;
+            for slot in 0..chunk.live {
+                ent.push((e[slot], chunk.indices[slot]));
+            }
+        }
+        ent.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut out = Selection::default();
+        for &(_, idx) in ent.iter().take(ctx.budget) {
+            out.push(idx, 1.0);
+        }
+        Ok(out)
+    }
+}
+
+/// Forgetting events (Toneva et al. 2019): count correct→incorrect flips
+/// across selection rounds; select the most-forgotten samples.
+pub struct Forgetting {
+    prev_correct: Vec<f32>,
+    counts: Vec<f32>,
+    n: usize,
+}
+
+impl Forgetting {
+    pub fn new() -> Self {
+        Forgetting { prev_correct: Vec::new(), counts: Vec::new(), n: 0 }
+    }
+}
+
+impl Default for Forgetting {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Strategy for Forgetting {
+    fn name(&self) -> String {
+        "forgetting".into()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
+        let n_total = ctx.train.len();
+        if self.n != n_total {
+            self.prev_correct = vec![0.0; n_total];
+            self.counts = vec![0.0; n_total];
+            self.n = n_total;
+        }
+        for chunk in crate::data::padded_chunks(ctx.train, ctx.ground, ctx.state.meta.chunk) {
+            let (_, _, correct, _) =
+                ctx.rt.eval_chunk(ctx.state, &chunk.x, &chunk.y, &chunk.mask)?;
+            for slot in 0..chunk.live {
+                let idx = chunk.indices[slot];
+                if self.prev_correct[idx] > 0.5 && correct[slot] < 0.5 {
+                    self.counts[idx] += 1.0;
+                }
+                self.prev_correct[idx] = correct[slot];
+            }
+        }
+        // rank by forgetting count; break ties by a stable jitter so early
+        // rounds (all-zero counts) still pick a spread-out subset
+        let mut scored: Vec<(f32, usize)> = ctx
+            .ground
+            .iter()
+            .map(|&i| (self.counts[i] + 1e-6 * ((i * 2654435761) % 1000) as f32, i))
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut out = Selection::default();
+        for &(_, idx) in scored.iter().take(ctx.budget) {
+            out.push(idx, 1.0);
+        }
+        Ok(out)
+    }
+}
+
+/// Facility location on raw features (model-independent; Table 12).
+pub struct FeatureFL;
+
+impl Strategy for FeatureFL {
+    fn name(&self) -> String {
+        "featurefl".into()
+    }
+
+    fn is_adaptive(&self) -> bool {
+        false // features never change — select once
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
+        let per_class = ground_per_class(ctx.train, ctx.ground);
+        let sizes: Vec<usize> = per_class.iter().map(Vec::len).collect();
+        let budgets = split_budget(ctx.budget, &sizes);
+        let mut out = Selection::default();
+        for (cls, rows) in per_class.iter().enumerate() {
+            if rows.is_empty() || budgets[cls] == 0 {
+                continue;
+            }
+            let x = ctx.train.x.gather_rows(rows);
+            let mut dist = Matrix::zeros(rows.len(), rows.len());
+            for i in 0..rows.len() {
+                for j in i..rows.len() {
+                    let d = crate::tensor::sqdist(x.row(i), x.row(j));
+                    dist.set(i, j, d);
+                    dist.set(j, i, d);
+                }
+            }
+            let sim = sim_from_sqdist(&dist);
+            let mut fl = FacilityLocation::new(&sim);
+            let res = lazy_greedy(&mut fl, budgets[cls]);
+            let w = fl.medoid_weights(&res.selected);
+            for (slot, &j) in res.selected.iter().enumerate() {
+                out.push(rows[j], w[slot]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// spec parsing
+// ---------------------------------------------------------------------------
+
+/// Parse a strategy spec like `gradmatch-pb-warm`.
+/// Returns the strategy and whether warm-start is requested.
+pub fn parse_strategy(spec: &str, batch: usize) -> Result<(Box<dyn Strategy>, bool)> {
+    let mut s = spec.trim().to_lowercase();
+    let warm = s.ends_with("-warm");
+    if warm {
+        s.truncate(s.len() - "-warm".len());
+    }
+    let b: Box<dyn Strategy> = match s.as_str() {
+        "gradmatch" => Box::new(GradMatch::new(GradMatchVariant::PerClassPerGradient, batch, true)),
+        "gradmatch-perclass" => Box::new(GradMatch::new(GradMatchVariant::PerClass, batch, true)),
+        "gradmatch-pb" => Box::new(GradMatch::new(GradMatchVariant::PerBatch, batch, true)),
+        "gradmatch-rust" => Box::new(GradMatch::new(GradMatchVariant::PerClassPerGradient, batch, false)),
+        "gradmatch-pb-rust" => Box::new(GradMatch::new(GradMatchVariant::PerBatch, batch, false)),
+        "craig" => Box::new(Craig { per_batch: false, batch, use_xla: false }),
+        "craig-pb" => Box::new(Craig { per_batch: true, batch, use_xla: true }),
+        "glister" => Box::new(Glister),
+        "random" => Box::new(Random),
+        "full" | "full-earlystop" => Box::new(Full),
+        "entropy" => Box::new(Entropy),
+        "forgetting" => Box::new(Forgetting::new()),
+        "featurefl" => Box::new(FeatureFL),
+        other => return Err(anyhow!("unknown strategy '{other}' (from spec '{spec}')")),
+    };
+    Ok((b, warm))
+}
+
+/// All strategy specs the paper's Figure 3 sweeps compare.
+pub fn paper_strategies() -> Vec<&'static str> {
+    vec![
+        "random", "random-warm",
+        "glister", "glister-warm",
+        "craig", "craig-warm", "craig-pb", "craig-pb-warm",
+        "gradmatch", "gradmatch-warm", "gradmatch-pb", "gradmatch-pb-warm",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_budget_exact_and_proportional() {
+        let b = split_budget(10, &[50, 30, 20]);
+        assert_eq!(b.iter().sum::<usize>(), 10);
+        assert_eq!(b, vec![5, 3, 2]);
+    }
+
+    #[test]
+    fn split_budget_handles_remainders() {
+        let b = split_budget(10, &[33, 33, 34]);
+        assert_eq!(b.iter().sum::<usize>(), 10);
+        assert!(b.iter().all(|&k| (3..=4).contains(&k)));
+    }
+
+    #[test]
+    fn split_budget_caps_at_class_size() {
+        let b = split_budget(10, &[2, 100]);
+        assert_eq!(b.iter().sum::<usize>(), 10);
+        assert!(b[0] <= 2);
+    }
+
+    #[test]
+    fn split_budget_empty_classes() {
+        let b = split_budget(6, &[0, 10, 0, 10]);
+        assert_eq!(b.iter().sum::<usize>(), 6);
+        assert_eq!(b[0], 0);
+        assert_eq!(b[2], 0);
+    }
+
+    #[test]
+    fn parse_strategy_specs() {
+        for spec in paper_strategies() {
+            let (s, warm) = parse_strategy(spec, 128).unwrap();
+            assert_eq!(warm, spec.ends_with("-warm"));
+            assert!(!s.name().is_empty());
+        }
+        assert!(parse_strategy("bogus", 128).is_err());
+        let (s, warm) = parse_strategy("gradmatch-pb-warm", 32).unwrap();
+        assert!(warm);
+        assert_eq!(s.name(), "gradmatch-pb");
+        let (s, _) = parse_strategy("FULL-EARLYSTOP", 32).unwrap();
+        assert_eq!(s.name(), "full");
+        assert!(!s.is_adaptive());
+    }
+}

@@ -1,0 +1,197 @@
+//! Statistics for the experiment tables: summary stats, relative error /
+//! speedup derivations, and the Wilcoxon signed-rank test the paper uses to
+//! claim significance (Table 8).
+
+/// Mean of a sample (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased (n−1) standard deviation; 0 for n < 2.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (averages the middle pair for even n).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Relative error in % against a skyline accuracy:
+/// `100 · (acc_full − acc) / acc_full` (the y-axis of Fig. 3 scatter plots).
+pub fn relative_error_pct(acc: f64, acc_full: f64) -> f64 {
+    100.0 * (acc_full - acc) / acc_full
+}
+
+/// Speedup w.r.t. full training (the x-axis of Fig. 3 scatter plots).
+pub fn speedup(time: f64, time_full: f64) -> f64 {
+    time_full / time.max(1e-12)
+}
+
+/// Standard normal CDF via the erf-free Abramowitz–Stegun 7.1.26 polynomial.
+pub fn normal_cdf(z: f64) -> f64 {
+    // Φ(z) = 0.5 * erfc(-z/√2); approximate erf with A&S 7.1.26 (|ε|<1.5e-7)
+    let x = z / std::f64::consts::SQRT_2;
+    let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let erf = 1.0 - poly * (-x * x).exp();
+    let erf = if x < 0.0 { -erf } else { erf };
+    0.5 * (1.0 + erf)
+}
+
+/// Result of a Wilcoxon signed-rank test.
+#[derive(Clone, Copy, Debug)]
+pub struct Wilcoxon {
+    /// signed-rank statistic W (sum of ranks of positive differences)
+    pub w_plus: f64,
+    /// number of non-zero paired differences used
+    pub n: usize,
+    /// one-tailed p-value for H1: sample `a` > sample `b`
+    pub p_one_tailed: f64,
+}
+
+/// One-tailed Wilcoxon signed-rank test on paired samples (H1: a > b).
+///
+/// Uses the normal approximation with tie-corrected variance — the same
+/// regime the paper operates in (dozens of paired cells across datasets ×
+/// budgets).  Zero differences are dropped (Wilcoxon's original treatment).
+pub fn wilcoxon_signed_rank(a: &[f64], b: &[f64]) -> Wilcoxon {
+    assert_eq!(a.len(), b.len(), "wilcoxon: paired samples");
+    let mut diffs: Vec<f64> = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| x - y)
+        .filter(|d| *d != 0.0)
+        .collect();
+    let n = diffs.len();
+    if n == 0 {
+        return Wilcoxon { w_plus: 0.0, n: 0, p_one_tailed: 0.5 };
+    }
+    // rank |d| with midranks for ties
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| diffs[i].abs().partial_cmp(&diffs[j].abs()).unwrap());
+    let mut ranks = vec![0.0f64; n];
+    let mut tie_correction = 0.0f64;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && diffs[order[j + 1]].abs() == diffs[order[i]].abs() {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        let t = (j - i + 1) as f64;
+        if t > 1.0 {
+            tie_correction += t * t * t - t;
+        }
+        for k in i..=j {
+            ranks[order[k]] = avg_rank;
+        }
+        i = j + 1;
+    }
+    let w_plus: f64 = diffs
+        .iter()
+        .zip(&ranks)
+        .filter(|(d, _)| **d > 0.0)
+        .map(|(_, r)| r)
+        .sum();
+    let nf = n as f64;
+    let mu = nf * (nf + 1.0) / 4.0;
+    let sigma2 = nf * (nf + 1.0) * (2.0 * nf + 1.0) / 24.0 - tie_correction / 48.0;
+    let sigma = sigma2.max(1e-12).sqrt();
+    // continuity correction toward the mean
+    let cc = if w_plus == mu { 0.0 } else { 0.5 * (w_plus - mu).signum() };
+    let z = (w_plus - mu - cc) / sigma;
+    let p = 1.0 - normal_cdf(z);
+    diffs.clear();
+    Wilcoxon { w_plus, n, p_one_tailed: p.clamp(0.0, 1.0) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_median() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935).abs() < 1e-6);
+        assert!((median(&xs) - 4.5).abs() < 1e-12);
+        assert!((median(&[3.0, 1.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stddev_degenerate() {
+        assert_eq!(stddev(&[]), 0.0);
+        assert_eq!(stddev(&[1.0]), 0.0);
+        assert_eq!(stddev(&[5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn relerr_speedup() {
+        assert!((relative_error_pct(93.0, 95.0) - 2.1052631).abs() < 1e-4);
+        assert!((speedup(1.0, 4.0) - 4.0).abs() < 1e-12);
+        assert!(relative_error_pct(95.0, 95.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normal_cdf_sanity() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((normal_cdf(-1.96) - 0.025).abs() < 1e-3);
+        assert!(normal_cdf(6.0) > 0.999999);
+    }
+
+    #[test]
+    fn wilcoxon_clear_dominance() {
+        // a beats b in all 12 pairs -> tiny one-tailed p
+        let a: Vec<f64> = (0..12).map(|i| 90.0 + i as f64 * 0.1 + 1.0).collect();
+        let b: Vec<f64> = (0..12).map(|i| 90.0 + i as f64 * 0.1).collect();
+        let w = wilcoxon_signed_rank(&a, &b);
+        assert_eq!(w.n, 12);
+        assert!(w.p_one_tailed < 0.01, "p={}", w.p_one_tailed);
+    }
+
+    #[test]
+    fn wilcoxon_no_difference() {
+        let a: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let w = wilcoxon_signed_rank(&a, &a);
+        assert_eq!(w.n, 0);
+        assert!((w.p_one_tailed - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wilcoxon_symmetric_alternating() {
+        // symmetric wins/losses of equal magnitude -> p near 0.5
+        let a: Vec<f64> = (0..20).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
+        let b: Vec<f64> = (0..20).map(|i| if i % 2 == 0 { 0.0 } else { 1.0 }).collect();
+        let w = wilcoxon_signed_rank(&a, &b);
+        assert!((w.p_one_tailed - 0.5).abs() < 0.15, "p={}", w.p_one_tailed);
+    }
+
+    #[test]
+    fn wilcoxon_direction_matters() {
+        let a: Vec<f64> = (0..15).map(|i| i as f64 + 2.0).collect();
+        let b: Vec<f64> = (0..15).map(|i| i as f64).collect();
+        let fwd = wilcoxon_signed_rank(&a, &b);
+        let rev = wilcoxon_signed_rank(&b, &a);
+        assert!(fwd.p_one_tailed < 0.05);
+        assert!(rev.p_one_tailed > 0.9);
+    }
+}

@@ -1,0 +1,357 @@
+//! Submodular maximization substrate: facility location + lazy greedy.
+//!
+//! Powers the CRAIG baseline (Mirzasoleiman et al. 2020 — facility location
+//! over gradient-space distances, medoid-count weights; §3.2 / Appendix B.7
+//! of the paper) and the feature-space facility-location baseline of
+//! Table 12.  The lazy greedy implementation exploits submodularity: stale
+//! upper bounds sit in a max-heap and are only refreshed when popped
+//! (Minoux's accelerated greedy), which in practice evaluates a small
+//! fraction of the O(n·k) gains the naive greedy needs.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::tensor::Matrix;
+
+/// Facility-location objective over a precomputed similarity matrix:
+/// `F(S) = Σ_i max_{j∈S} sim[i][j]` (sims must be ≥ 0).
+pub struct FacilityLocation<'a> {
+    /// `[n, n]` pairwise similarities (ground set × ground set)
+    pub sim: &'a Matrix,
+    /// best coverage per element under the current selection
+    cover: Vec<f32>,
+}
+
+impl<'a> FacilityLocation<'a> {
+    pub fn new(sim: &'a Matrix) -> Self {
+        assert_eq!(sim.rows, sim.cols, "facility location needs square sims");
+        FacilityLocation { sim, cover: vec![0.0; sim.rows] }
+    }
+
+    /// Number of ground-set elements.
+    pub fn n(&self) -> usize {
+        self.sim.rows
+    }
+
+    /// Marginal gain of adding `j` to the current selection.
+    pub fn gain(&self, j: usize) -> f64 {
+        let mut g = 0.0f64;
+        let col_stride = self.sim.cols;
+        for i in 0..self.sim.rows {
+            let s = self.sim.data[i * col_stride + j];
+            let c = self.cover[i];
+            if s > c {
+                g += (s - c) as f64;
+            }
+        }
+        g
+    }
+
+    /// Commit element `j` (update coverage).
+    pub fn commit(&mut self, j: usize) {
+        for i in 0..self.sim.rows {
+            let s = self.sim.at(i, j);
+            if s > self.cover[i] {
+                self.cover[i] = s;
+            }
+        }
+    }
+
+    /// Current objective value.
+    pub fn value(&self) -> f64 {
+        self.cover.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Medoid-count weights for a selection: `w_j = |{i : j = argmax_{s∈S}
+    /// sim[i][s]}|` — CRAIG's weights (Lemma 2).  Every element votes for
+    /// its best-covering selected medoid.
+    pub fn medoid_weights(&self, selected: &[usize]) -> Vec<f32> {
+        let mut w = vec![0.0f32; selected.len()];
+        if selected.is_empty() {
+            return w;
+        }
+        for i in 0..self.sim.rows {
+            let mut best = 0usize;
+            let mut best_s = f32::NEG_INFINITY;
+            for (slot, &j) in selected.iter().enumerate() {
+                let s = self.sim.at(i, j);
+                if s > best_s {
+                    best_s = s;
+                    best = slot;
+                }
+            }
+            w[best] += 1.0;
+        }
+        w
+    }
+}
+
+#[derive(PartialEq)]
+struct HeapItem {
+    gain: f64,
+    item: usize,
+    /// round when this gain was computed (staleness marker)
+    round: usize,
+}
+
+impl Eq for HeapItem {}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.gain
+            .partial_cmp(&other.gain)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.item.cmp(&self.item))
+    }
+}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Result of a greedy maximization.
+#[derive(Clone, Debug)]
+pub struct GreedyResult {
+    pub selected: Vec<usize>,
+    /// objective value after each pick (monotone nondecreasing)
+    pub values: Vec<f64>,
+    /// total gain evaluations performed (lazy-greedy efficiency metric)
+    pub evals: usize,
+}
+
+/// Lazy (accelerated) greedy under a cardinality constraint `k`.
+pub fn lazy_greedy(fl: &mut FacilityLocation<'_>, k: usize) -> GreedyResult {
+    let n = fl.n();
+    let k = k.min(n);
+    let mut heap = BinaryHeap::with_capacity(n);
+    let mut evals = 0usize;
+    for j in 0..n {
+        let g = fl.gain(j);
+        evals += 1;
+        heap.push(HeapItem { gain: g, item: j, round: 0 });
+    }
+    let mut selected = Vec::with_capacity(k);
+    let mut values = Vec::with_capacity(k);
+    let mut taken = vec![false; n];
+    let mut round = 0usize;
+    while selected.len() < k {
+        let top = match heap.pop() {
+            Some(t) => t,
+            None => break,
+        };
+        if taken[top.item] {
+            continue;
+        }
+        if top.round == round {
+            // fresh bound — by submodularity it is the true max
+            fl.commit(top.item);
+            taken[top.item] = true;
+            selected.push(top.item);
+            values.push(fl.value());
+            round += 1;
+        } else {
+            let g = fl.gain(top.item);
+            evals += 1;
+            heap.push(HeapItem { gain: g, item: top.item, round });
+        }
+    }
+    GreedyResult { selected, values, evals }
+}
+
+/// Naive greedy (reference for tests; O(n·k) gain evaluations).
+pub fn naive_greedy(fl: &mut FacilityLocation<'_>, k: usize) -> GreedyResult {
+    let n = fl.n();
+    let k = k.min(n);
+    let mut selected = Vec::with_capacity(k);
+    let mut values = Vec::with_capacity(k);
+    let mut taken = vec![false; n];
+    let mut evals = 0usize;
+    for _ in 0..k {
+        let mut best = usize::MAX;
+        let mut best_g = f64::NEG_INFINITY;
+        for j in 0..n {
+            if taken[j] {
+                continue;
+            }
+            let g = fl.gain(j);
+            evals += 1;
+            if g > best_g {
+                best_g = g;
+                best = j;
+            }
+        }
+        if best == usize::MAX {
+            break;
+        }
+        fl.commit(best);
+        taken[best] = true;
+        selected.push(best);
+        values.push(fl.value());
+    }
+    GreedyResult { selected, values, evals }
+}
+
+/// Greedy set cover (Theorem 3 regime): select until the objective reaches
+/// `target_value` or the ground set is exhausted.
+pub fn greedy_cover(fl: &mut FacilityLocation<'_>, target_value: f64) -> GreedyResult {
+    let n = fl.n();
+    let mut res = GreedyResult { selected: Vec::new(), values: Vec::new(), evals: 0 };
+    let mut taken = vec![false; n];
+    while fl.value() < target_value && res.selected.len() < n {
+        let mut best = usize::MAX;
+        let mut best_g = 0.0f64;
+        for j in 0..n {
+            if taken[j] {
+                continue;
+            }
+            let g = fl.gain(j);
+            res.evals += 1;
+            if g > best_g {
+                best_g = g;
+                best = j;
+            }
+        }
+        if best == usize::MAX || best_g <= 0.0 {
+            break;
+        }
+        fl.commit(best);
+        taken[best] = true;
+        res.selected.push(best);
+        res.values.push(fl.value());
+    }
+    res
+}
+
+/// Build a similarity matrix from squared distances:
+/// `sim[i][j] = d_max − dist[i][j]` (the CRAIG kernelization — constant
+/// shift makes similarities non-negative without changing the argmax
+/// structure).
+pub fn sim_from_sqdist(dist: &Matrix) -> Matrix {
+    let d_max = dist.data.iter().cloned().fold(0.0f32, f32::max);
+    let mut sim = Matrix::zeros(dist.rows, dist.cols);
+    for i in 0..dist.data.len() {
+        sim.data[i] = d_max - dist.data[i];
+    }
+    sim
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testutil::forall;
+
+    fn random_sim(n: usize, rng: &mut Rng) -> Matrix {
+        // symmetric nonneg similarities with self-similarity maximal
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..i {
+                let v = rng.f32();
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+            m.set(i, i, 1.5);
+        }
+        m
+    }
+
+    #[test]
+    fn lazy_equals_naive_greedy() {
+        forall(15, |g| {
+            let n = g.int(3, 25);
+            let mut rng = Rng::new(g.case as u64 + 100);
+            let sim = random_sim(n, &mut rng);
+            let k = g.int(1, n);
+            let lazy = lazy_greedy(&mut FacilityLocation::new(&sim), k);
+            let naive = naive_greedy(&mut FacilityLocation::new(&sim), k);
+            assert_eq!(lazy.selected, naive.selected, "n={n} k={k}");
+            assert!(lazy.evals <= naive.evals);
+        });
+    }
+
+    #[test]
+    fn greedy_values_monotone_nondecreasing() {
+        let mut rng = Rng::new(3);
+        let sim = random_sim(30, &mut rng);
+        let res = lazy_greedy(&mut FacilityLocation::new(&sim), 10);
+        for w in res.values.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9);
+        }
+    }
+
+    #[test]
+    fn diminishing_returns_of_gain() {
+        // submodularity: gain(j | S) >= gain(j | S ∪ {e})
+        let mut rng = Rng::new(4);
+        let sim = random_sim(12, &mut rng);
+        let mut fl = FacilityLocation::new(&sim);
+        let j = 5;
+        let before = fl.gain(j);
+        fl.commit(2);
+        let after = fl.gain(j);
+        assert!(after <= before + 1e-9);
+    }
+
+    #[test]
+    fn medoid_weights_sum_to_ground_set_size() {
+        let mut rng = Rng::new(5);
+        let sim = random_sim(20, &mut rng);
+        let mut fl = FacilityLocation::new(&sim);
+        let res = lazy_greedy(&mut fl, 4);
+        let w = fl.medoid_weights(&res.selected);
+        let total: f32 = w.iter().sum();
+        assert!((total - 20.0).abs() < 1e-5);
+        assert!(w.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn every_element_covers_itself_when_selected() {
+        let mut rng = Rng::new(6);
+        let sim = random_sim(8, &mut rng);
+        let mut fl = FacilityLocation::new(&sim);
+        let res = lazy_greedy(&mut fl, 8);
+        // selecting everything covers every row at its self-similarity
+        assert_eq!(res.selected.len(), 8);
+        assert!((fl.value() - 8.0 * 1.5) < 1e-4);
+    }
+
+    #[test]
+    fn greedy_cover_reaches_target_or_exhausts() {
+        let mut rng = Rng::new(7);
+        let sim = random_sim(15, &mut rng);
+        let full_value = {
+            let mut fl = FacilityLocation::new(&sim);
+            lazy_greedy(&mut fl, 15);
+            fl.value()
+        };
+        let mut fl = FacilityLocation::new(&sim);
+        let res = greedy_cover(&mut fl, 0.8 * full_value);
+        assert!(fl.value() >= 0.8 * full_value);
+        assert!(res.selected.len() < 15, "cover should need fewer than all");
+    }
+
+    #[test]
+    fn sim_from_sqdist_properties() {
+        let d = Matrix::from_vec(2, 2, vec![0.0, 4.0, 4.0, 0.0]);
+        let s = sim_from_sqdist(&d);
+        // self-sim maximal, all entries nonneg
+        assert_eq!(s.at(0, 0), 4.0);
+        assert_eq!(s.at(0, 1), 0.0);
+        assert!(s.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn first_pick_is_global_best() {
+        let mut rng = Rng::new(8);
+        let sim = random_sim(20, &mut rng);
+        let res = lazy_greedy(&mut FacilityLocation::new(&sim), 1);
+        let mut fl2 = FacilityLocation::new(&sim);
+        let best = (0..20)
+            .max_by(|&a, &b| fl2.gain(a).partial_cmp(&fl2.gain(b)).unwrap())
+            .unwrap();
+        let _ = &mut fl2;
+        assert_eq!(res.selected[0], best);
+    }
+}

@@ -1,0 +1,346 @@
+//! Minimal dense f32 linear algebra for the coordinator side.
+//!
+//! The *hot* gradient math runs inside the AOT'd XLA executables (L1/L2);
+//! this module provides the coordinator-side pieces — the Rust OMP backend
+//! used for per-class-per-gradient slices, small normal-equation systems,
+//! diagnostics, and a reference implementation the runtime tests compare
+//! against.  Row-major `Matrix` + free-function kernels, no generics, no
+//! allocation in inner loops.
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a flat row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_vec: shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of column `c` (rows are contiguous, columns are not).
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Gather a sub-matrix of the given rows.
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Gather a sub-matrix of the given columns.
+    pub fn gather_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            for (j, &c) in idx.iter().enumerate() {
+                out.data[r * idx.len() + j] = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// vector kernels
+// ---------------------------------------------------------------------------
+
+/// Dot product. Accumulates in f64 for stability on long gradient vectors.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc as f32
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// `a - b` into a new vector.
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Squared euclidean distance between two rows.
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        acc += d * d;
+    }
+    acc as f32
+}
+
+/// Index of the maximum value (first on ties). Panics on empty input.
+pub fn argmax(xs: &[f32]) -> usize {
+    assert!(!xs.is_empty());
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// matrix kernels
+// ---------------------------------------------------------------------------
+
+/// `out = M v` (GEMV).  Rows are contiguous so this is cache-friendly.
+pub fn gemv(m: &Matrix, v: &[f32], out: &mut [f32]) {
+    assert_eq!(m.cols, v.len());
+    assert_eq!(m.rows, out.len());
+    for r in 0..m.rows {
+        out[r] = dot(m.row(r), v);
+    }
+}
+
+/// `out = Mᵀ v` without forming the transpose (column accumulation).
+pub fn gemv_t(m: &Matrix, v: &[f32], out: &mut [f32]) {
+    assert_eq!(m.rows, v.len());
+    assert_eq!(m.cols, out.len());
+    out.fill(0.0);
+    for r in 0..m.rows {
+        axpy(v[r], m.row(r), out);
+    }
+}
+
+/// `C = A B` — blocked ikj loop; adequate for the coordinator-side sizes
+/// (support matrices k ≤ a few hundred). Big GEMMs live in XLA.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "gemm: inner dims");
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    const BLK: usize = 64;
+    for kk in (0..a.cols).step_by(BLK) {
+        let kend = (kk + BLK).min(a.cols);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+            for k in kk..kend {
+                let aik = arow[k];
+                if aik != 0.0 {
+                    axpy(aik, b.row(k), crow);
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Gram matrix `A Aᵀ` (symmetric, computed once per OMP support update).
+pub fn gram(a: &Matrix) -> Matrix {
+    let mut g = Matrix::zeros(a.rows, a.rows);
+    for i in 0..a.rows {
+        for j in i..a.rows {
+            let v = dot(a.row(i), a.row(j));
+            g.data[i * a.rows + j] = v;
+            g.data[j * a.rows + i] = v;
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f32, b: f32, tol: f32) {
+        assert!((a - b).abs() <= tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn matrix_basics() {
+        let mut m = Matrix::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+        assert_eq!(m.col(2), vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn eye_is_identity_under_gemm() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Matrix::eye(2);
+        assert_eq!(gemm(&a, &i), a);
+        assert_eq!(gemm(&i, &a), a);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at(2, 1), 6.0);
+    }
+
+    #[test]
+    fn dot_axpy_norm() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, -5.0, 6.0];
+        approx(dot(&a, &b), 12.0, 1e-6);
+        let mut y = b;
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [6.0, -1.0, 12.0]);
+        approx(norm2(&[3.0, 4.0]), 5.0, 1e-6);
+    }
+
+    #[test]
+    fn gemv_matches_manual() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let mut out = vec![0.0; 2];
+        gemv(&m, &[1.0, 0.0, -1.0], &mut out);
+        assert_eq!(out, vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn gemv_t_matches_explicit_transpose() {
+        let m = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let v = [1.0f32, -1.0, 2.0];
+        let mut fast = vec![0.0; 2];
+        gemv_t(&m, &v, &mut fast);
+        let t = m.transpose();
+        let mut slow = vec![0.0; 2];
+        gemv(&t, &v, &mut slow);
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn gemm_matches_manual_3x3() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = gemm(&a, &b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let a = Matrix::from_vec(3, 4, (0..12).map(|v| v as f32 * 0.3 - 1.0).collect());
+        let g = gram(&a);
+        for i in 0..3 {
+            assert!(g.at(i, i) >= 0.0);
+            for j in 0..3 {
+                approx(g.at(i, j), g.at(j, i), 1e-6);
+            }
+        }
+        approx(g.at(0, 0), dot(a.row(0), a.row(0)), 1e-5);
+    }
+
+    #[test]
+    fn gather_rows_cols() {
+        let a = Matrix::from_vec(3, 3, (1..=9).map(|v| v as f32).collect());
+        let r = a.gather_rows(&[2, 0]);
+        assert_eq!(r.data, vec![7., 8., 9., 1., 2., 3.]);
+        let c = a.gather_cols(&[1]);
+        assert_eq!(c.data, vec![2., 5., 8.]);
+    }
+
+    #[test]
+    fn sqdist_and_argmax() {
+        approx(sqdist(&[0.0, 0.0], &[3.0, 4.0]), 25.0, 1e-6);
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn gemm_random_vs_naive() {
+        let mut rng = crate::rng::Rng::new(11);
+        let a = Matrix::from_vec(17, 23, (0..17 * 23).map(|_| rng.gaussian_f32()).collect());
+        let b = Matrix::from_vec(23, 9, (0..23 * 9).map(|_| rng.gaussian_f32()).collect());
+        let c = gemm(&a, &b);
+        for i in 0..17 {
+            for j in 0..9 {
+                let mut acc = 0.0f32;
+                for k in 0..23 {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                approx(c.at(i, j), acc, 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,474 @@
+//! Empirical verification of the paper's theory (Section 2/3 + Appendix B).
+//!
+//! The convergence claims (Theorems 1–3) and the weak-submodularity bound
+//! (Theorem 2 on `F_λ`) are stated for convex losses, so they can be
+//! *checked numerically* on small convex problems where everything —
+//! optimal loss, Lipschitz constants, the `Err` terms — is computable
+//! exactly.  This module implements:
+//!
+//! - a pure-Rust **L2-regularized logistic regression** substrate (strongly
+//!   convex ⇒ unique θ*, computable σ_T and μ),
+//! - an **adaptive-selection gradient-descent runner** that trains on a
+//!   weighted subset re-selected every R steps while recording the exact
+//!   `Err(w^t, X^t, L, L_T, θ_t)` sequence,
+//! - the **Theorem-1 bound evaluators** (cases 1 and 3),
+//! - a **γ-weak-submodularity estimator** for `F_λ(X) = L_max − E_λ(X)`
+//!   that empirically tests `F(j|S) ≥ γ·F(j|T)` for nested `S ⊆ T` and
+//!   compares with the Theorem-2 lower bound `λ/(λ + k·∇²_max)`.
+//!
+//! The property tests in this module are the reproduction of the paper's
+//! theoretical contribution; `rust/benches` covers the empirical one.
+
+use crate::linalg::ridge_weights;
+use crate::rng::Rng;
+use crate::tensor::{axpy, dot, norm2, Matrix};
+
+/// Binary logistic regression with L2 regularization:
+/// `L_T(θ) = (1/n) Σ log(1 + exp(−y_i x_iᵀθ)) + (μ/2)‖θ‖²`, y ∈ {−1, +1}.
+#[derive(Clone, Debug)]
+pub struct Logistic {
+    pub x: Matrix,
+    /// labels in {−1.0, +1.0}
+    pub y: Vec<f32>,
+    /// strong-convexity parameter (L2 coefficient)
+    pub mu: f32,
+}
+
+impl Logistic {
+    /// Random linearly-separable-ish instance.
+    pub fn random(n: usize, d: usize, rng: &mut Rng, mu: f32) -> Logistic {
+        let teacher: Vec<f32> = (0..d).map(|_| rng.gaussian_f32()).collect();
+        let mut x = Matrix::zeros(n, d);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let row = x.row_mut(i);
+            for v in row.iter_mut() {
+                *v = rng.gaussian_f32();
+            }
+            let margin = dot(row, &teacher) + 0.3 * rng.gaussian_f32();
+            y.push(if margin >= 0.0 { 1.0 } else { -1.0 });
+        }
+        Logistic { x, y, mu }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Per-sample loss ℓ_i(θ) = log(1 + exp(−y_i x_iᵀθ)) (no regularizer).
+    pub fn sample_loss(&self, theta: &[f32], i: usize) -> f64 {
+        let m = (self.y[i] * dot(self.x.row(i), theta)) as f64;
+        // numerically stable log(1 + exp(-m))
+        if m > 0.0 {
+            (-m).exp().ln_1p()
+        } else {
+            -m + m.exp().ln_1p()
+        }
+    }
+
+    /// Full loss L_T(θ).
+    pub fn loss(&self, theta: &[f32]) -> f64 {
+        let data: f64 = (0..self.n()).map(|i| self.sample_loss(theta, i)).sum::<f64>()
+            / self.n() as f64;
+        data + 0.5 * self.mu as f64 * dot(theta, theta) as f64
+    }
+
+    /// Per-sample gradient ∇ℓ_i(θ) (no regularizer) — row in the gradient
+    /// ground set the selection matches.
+    pub fn sample_grad(&self, theta: &[f32], i: usize) -> Vec<f32> {
+        let m = self.y[i] * dot(self.x.row(i), theta);
+        let s = sigmoid(-m); // = 1 − σ(m)
+        let coef = -self.y[i] * s;
+        self.x.row(i).iter().map(|&v| coef * v).collect()
+    }
+
+    /// Full gradient ∇L_T(θ) (with regularizer).
+    pub fn grad(&self, theta: &[f32]) -> Vec<f32> {
+        let mut g = vec![0.0f32; self.d()];
+        for i in 0..self.n() {
+            axpy(1.0 / self.n() as f32, &self.sample_grad(theta, i), &mut g);
+        }
+        axpy(self.mu, theta, &mut g);
+        g
+    }
+
+    /// Solve to near-optimality with plain GD (convex ⇒ global optimum).
+    pub fn solve(&self, steps: usize, lr: f32) -> Vec<f32> {
+        let mut theta = vec![0.0f32; self.d()];
+        for _ in 0..steps {
+            let g = self.grad(&theta);
+            axpy(-lr, &g, &mut theta);
+        }
+        theta
+    }
+
+    /// Upper bound σ_T on per-sample gradient norms over observed iterates
+    /// (Lipschitz-continuity constant of the data term).
+    pub fn sigma_bound(&self, theta: &[f32]) -> f32 {
+        (0..self.n())
+            .map(|i| norm2(&self.sample_grad(theta, i)))
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// One run of adaptive-selection gradient descent (the Theorem-1 regime:
+/// full GD on the weighted subset, re-selected every `r` steps with OMP).
+#[derive(Clone, Debug)]
+pub struct AdaptiveRun {
+    /// loss L(θ_t) per step
+    pub losses: Vec<f64>,
+    /// exact Err(w^t, X^t, L, L_T, θ_t) per step
+    pub errs: Vec<f64>,
+    /// min_t L(θ_t)
+    pub best_loss: f64,
+}
+
+/// Options for [`adaptive_gd`].
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveOpts {
+    pub steps: usize,
+    pub r: usize,
+    pub k: usize,
+    pub lambda: f32,
+    pub lr: f32,
+}
+
+/// Run adaptive data selection + GD on a logistic problem, recording the
+/// exact gradient-matching error sequence of Theorem 1.
+pub fn adaptive_gd(problem: &Logistic, opts: &AdaptiveOpts) -> AdaptiveRun {
+    let n = problem.n();
+    let mut theta = vec![0.0f32; problem.d()];
+    let mut losses = Vec::with_capacity(opts.steps);
+    let mut errs = Vec::with_capacity(opts.steps);
+    let mut subset: Vec<usize> = (0..opts.k.min(n)).collect();
+    let mut weights = vec![n as f32 / opts.k as f32; subset.len()];
+
+    for t in 0..opts.steps {
+        if t % opts.r == 0 {
+            // per-sample gradient ground set at the current θ
+            let mut g = Matrix::zeros(n, problem.d());
+            for i in 0..n {
+                g.row_mut(i).copy_from_slice(&problem.sample_grad(&theta, i));
+            }
+            // target: SUM of gradients (matches the paper's Err definition
+            // over the unnormalized training loss)
+            let mut target = vec![0.0f32; problem.d()];
+            for i in 0..n {
+                axpy(1.0, g.row(i), &mut target);
+            }
+            let res = crate::omp::omp_select_rust(
+                &g,
+                &target,
+                crate::omp::OmpOpts { k: opts.k, lambda: opts.lambda, eps: 1e-12 },
+            )
+            .expect("omp");
+            if !res.selected.is_empty() {
+                subset = res.selected;
+                weights = res.weights;
+            }
+        }
+
+        losses.push(problem.loss(&theta));
+
+        // weighted subset gradient (normalized to the mean-loss scale) +
+        // regularizer, exactly the update Algorithm 1 line 9 performs
+        let mut gw = vec![0.0f32; problem.d()];
+        for (slot, &i) in subset.iter().enumerate() {
+            axpy(weights[slot] / n as f32, &problem.sample_grad(&theta, i), &mut gw);
+        }
+        axpy(problem.mu, &theta, &mut gw);
+
+        // exact Err term (mean-loss scale)
+        let full = problem.grad(&theta);
+        let diff = crate::tensor::sub(&gw, &full);
+        errs.push(norm2(&diff) as f64);
+
+        axpy(-opts.lr, &gw, &mut theta);
+    }
+    let best_loss = losses.iter().cloned().fold(f64::INFINITY, f64::min);
+    AdaptiveRun { losses, errs, best_loss }
+}
+
+/// Theorem 1 case (3) bound (strongly convex):
+/// `2σ_T²/(μ(T+1)) + Σ_t 2Dt/(T(T+1)) · Err_t`.
+pub fn theorem1_strongly_convex_bound(
+    sigma: f64,
+    mu: f64,
+    d_bound: f64,
+    errs: &[f64],
+) -> f64 {
+    let t_total = errs.len() as f64;
+    let mut err_term = 0.0;
+    for (t, e) in errs.iter().enumerate() {
+        err_term += 2.0 * d_bound * (t as f64 + 1.0) / (t_total * (t_total + 1.0)) * e;
+    }
+    2.0 * sigma * sigma / (mu * (t_total + 1.0)) + err_term
+}
+
+/// Theorem 1 case (1) bound (Lipschitz-continuous, convex):
+/// `Dσ_T/√T + (D/T)·Σ_t Err_t`.
+pub fn theorem1_lipschitz_bound(sigma: f64, d_bound: f64, errs: &[f64]) -> f64 {
+    let t_total = errs.len() as f64;
+    let err_sum: f64 = errs.iter().sum();
+    d_bound * sigma / t_total.sqrt() + d_bound / t_total * err_sum
+}
+
+// ---------------------------------------------------------------------------
+// weak submodularity of F_λ (Theorem 2)
+// ---------------------------------------------------------------------------
+
+/// `E_λ(X) = min_w ‖ G_Xᵀ w − target ‖² + λ‖w‖²` (squared-error form used
+/// in the weak-submodularity analysis).
+pub fn e_lambda(g: &Matrix, subset: &[usize], target: &[f32], lambda: f32) -> f64 {
+    if subset.is_empty() {
+        return dot(target, target) as f64;
+    }
+    let sub = g.gather_rows(subset);
+    let w = match ridge_weights(&sub, target, lambda) {
+        Ok(w) => w,
+        Err(_) => return dot(target, target) as f64,
+    };
+    let r = crate::linalg::residual(&sub, &w, target);
+    (dot(&r, &r) + lambda * dot(&w, &w)) as f64
+}
+
+/// `F_λ(X) = L_max − E_λ(X)` with `L_max = E_λ(∅) = ‖target‖²`.
+pub fn f_lambda(g: &Matrix, subset: &[usize], target: &[f32], lambda: f32) -> f64 {
+    dot(target, target) as f64 - e_lambda(g, subset, target, lambda)
+}
+
+/// Empirical submodularity ratio (Das & Kempe / Elenberg): the minimum
+/// over sampled disjoint pairs `(S, T)` of
+/// `Σ_{j∈T} F(j|S)  /  (F(S∪T) − F(S))` — the quantity the RSC argument
+/// of Theorem 2 actually lower-bounds by `m/M = λ/(λ + k·∇²_max)`.
+/// Pairs whose joint gain sits below the f32 noise floor are skipped.
+pub fn estimate_gamma(
+    g: &Matrix,
+    target: &[f32],
+    lambda: f32,
+    trials: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let n = g.rows;
+    let mut gamma: f64 = 1.0;
+    for _ in 0..trials {
+        // disjoint S, T sampled together
+        let total = 2 + rng.usize((n - 1).max(1));
+        let pool = rng.sample_indices(n, total.min(n));
+        let s_size = rng.usize(pool.len() - 1);
+        let s_set: Vec<usize> = pool[..s_size].to_vec();
+        let t_set: Vec<usize> = pool[s_size..].to_vec();
+        if t_set.is_empty() {
+            continue;
+        }
+        let f_s = f_lambda(g, &s_set, target, lambda);
+        let mut union = s_set.clone();
+        union.extend_from_slice(&t_set);
+        let joint_gain = f_lambda(g, &union, target, lambda) - f_s;
+        if joint_gain <= 1e-3 {
+            continue; // below the f32 noise floor — no information
+        }
+        let mut single_sum = 0.0f64;
+        for &j in &t_set {
+            let mut s_j = s_set.clone();
+            s_j.push(j);
+            single_sum += (f_lambda(g, &s_j, target, lambda) - f_s).max(0.0);
+        }
+        gamma = gamma.min((single_sum / joint_gain).clamp(0.0, 1.0));
+    }
+    gamma
+}
+
+/// Theorem 2's lower bound on γ: `λ / (λ + k·∇²_max)`.
+pub fn gamma_lower_bound(g: &Matrix, k: usize, lambda: f32) -> f64 {
+    let max_norm2 = (0..g.rows)
+        .map(|i| dot(g.row(i), g.row(i)))
+        .fold(0.0f32, f32::max) as f64;
+    lambda as f64 / (lambda as f64 + k as f64 * max_norm2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    fn problem(seed: u64, n: usize, d: usize) -> Logistic {
+        let mut rng = Rng::new(seed);
+        Logistic::random(n, d, &mut rng, 0.1)
+    }
+
+    #[test]
+    fn logistic_gradient_matches_finite_differences() {
+        let p = problem(1, 30, 6);
+        let mut rng = Rng::new(2);
+        let theta: Vec<f32> = (0..6).map(|_| 0.5 * rng.gaussian_f32()).collect();
+        let g = p.grad(&theta);
+        let eps = 1e-3f32;
+        for j in 0..6 {
+            let mut tp = theta.clone();
+            tp[j] += eps;
+            let mut tm = theta.clone();
+            tm[j] -= eps;
+            let fd = (p.loss(&tp) - p.loss(&tm)) / (2.0 * eps as f64);
+            assert!(
+                (fd - g[j] as f64).abs() < 2e-3,
+                "coord {j}: fd {fd} vs analytic {}",
+                g[j]
+            );
+        }
+    }
+
+    #[test]
+    fn gd_converges_to_low_gradient_norm() {
+        let p = problem(3, 60, 8);
+        let theta = p.solve(3000, 0.5);
+        assert!(norm2(&p.grad(&theta)) < 1e-3);
+    }
+
+    #[test]
+    fn full_budget_adaptive_run_has_small_err_and_descends() {
+        // with budget = n, OMP finds a (sparse) exact fit at each selection
+        // point; the Err terms between re-selections come only from θ
+        // drifting — they stay small and the loss descends
+        let p = problem(4, 40, 6);
+        let opts = AdaptiveOpts { steps: 100, r: 10, k: 40, lambda: 1e-4, lr: 0.5 };
+        let run = adaptive_gd(&p, &opts);
+        let max_err = run.errs.iter().cloned().fold(0.0, f64::max);
+        assert!(max_err < 0.15, "max err {max_err}");
+        // err is ~0 right after each re-selection
+        assert!(run.errs[0] < 1e-3, "post-selection err {}", run.errs[0]);
+        assert!(run.losses.last().unwrap() < &run.losses[0]);
+    }
+
+    #[test]
+    fn theorem1_strongly_convex_bound_holds() {
+        // the paper's headline guarantee: min_t L(θ_t) − L(θ*) is bounded
+        // by the optimization term + the gradient-matching error term
+        let p = problem(5, 60, 8);
+        let theta_star = p.solve(4000, 0.5);
+        let l_star = p.loss(&theta_star);
+        for k in [6usize, 15, 30] {
+            let opts = AdaptiveOpts { steps: 120, r: 10, k, lambda: 0.1, lr: 0.2 };
+            let run = adaptive_gd(&p, &opts);
+            let sigma = p.sigma_bound(&theta_star).max(p.sigma_bound(&vec![0.0; 8])) as f64 + 1.0;
+            let d_bound = 2.0 * (norm2(&theta_star) as f64 + 1.0);
+            let bound = theorem1_strongly_convex_bound(sigma, p.mu as f64, d_bound, &run.errs);
+            let gap = run.best_loss - l_star;
+            assert!(
+                gap <= bound + 1e-6,
+                "k={k}: gap {gap} exceeds Theorem-1 bound {bound}"
+            );
+            assert!(gap >= -1e-6, "optimum is optimal");
+        }
+    }
+
+    #[test]
+    fn theorem1_lipschitz_bound_holds() {
+        let p = problem(6, 50, 6);
+        let theta_star = p.solve(4000, 0.5);
+        let l_star = p.loss(&theta_star);
+        let opts = AdaptiveOpts { steps: 100, r: 5, k: 12, lambda: 0.1, lr: 0.2 };
+        let run = adaptive_gd(&p, &opts);
+        let sigma = p.sigma_bound(&theta_star) as f64 + 1.0;
+        let d_bound = 2.0 * (norm2(&theta_star) as f64 + 1.0);
+        let bound = theorem1_lipschitz_bound(sigma, d_bound, &run.errs);
+        assert!(run.best_loss - l_star <= bound + 1e-6);
+    }
+
+    #[test]
+    fn larger_budget_gives_smaller_err_terms() {
+        let p = problem(7, 60, 8);
+        let mut means = Vec::new();
+        for k in [5usize, 20, 60] {
+            let opts = AdaptiveOpts { steps: 40, r: 5, k, lambda: 0.1, lr: 0.2 };
+            let run = adaptive_gd(&p, &opts);
+            means.push(run.errs.iter().sum::<f64>() / run.errs.len() as f64);
+        }
+        assert!(means[2] <= means[0] + 1e-9, "{means:?}");
+    }
+
+    #[test]
+    fn e_lambda_monotone_nonincreasing_in_subset() {
+        // adding elements can only improve the best fit (E_λ decreases)
+        forall(20, |gen| {
+            let n = gen.int(4, 16);
+            let d = gen.int(2, 6);
+            let g = gen.matrix(n, d);
+            let target = gen.gauss_vec(d);
+            let k1 = gen.int(1, n / 2 + 1);
+            let s1 = gen.subset(n, k1);
+            let mut s2 = s1.clone();
+            for j in 0..n {
+                if !s2.contains(&j) {
+                    s2.push(j);
+                    break;
+                }
+            }
+            let e1 = e_lambda(&g, &s1, &target, 0.5);
+            let e2 = e_lambda(&g, &s2, &target, 0.5);
+            assert!(e2 <= e1 + 1e-4, "E_λ must not grow: {e1} -> {e2}");
+        });
+    }
+
+    #[test]
+    fn f_lambda_nonnegative_and_zero_on_empty() {
+        forall(20, |gen| {
+            let n = gen.int(3, 12);
+            let d = gen.int(2, 5);
+            let g = gen.matrix(n, d);
+            let target = gen.gauss_vec(d);
+            assert_eq!(f_lambda(&g, &[], &target, 0.5), 0.0);
+            let ks = gen.int(1, n);
+            let s = gen.subset(n, ks);
+            assert!(f_lambda(&g, &s, &target, 0.5) >= -1e-4);
+        });
+    }
+
+    #[test]
+    fn empirical_gamma_respects_theorem2_lower_bound() {
+        // Theorem 2: γ ≥ λ/(λ + k·∇²max).  The empirical γ over sampled
+        // nested pairs must sit above that bound.
+        let mut rng = Rng::new(11);
+        for trial in 0..5 {
+            let n = 10;
+            let d = 6;
+            let mut grng = Rng::new(100 + trial);
+            let g = Matrix::from_vec(n, d, (0..n * d).map(|_| grng.gaussian_f32()).collect());
+            let target: Vec<f32> = (0..d).map(|_| grng.gaussian_f32()).collect();
+            // λ large enough that the gains sit well above f32 noise and
+            // the Theorem-2 bound is non-vacuous
+            let lambda = 5.0f32;
+            let gamma = estimate_gamma(&g, &target, lambda, 200, &mut rng);
+            let lb = gamma_lower_bound(&g, n, lambda);
+            assert!(
+                gamma >= lb - 1e-3,
+                "trial {trial}: empirical γ {gamma} below Theorem-2 bound {lb}"
+            );
+            assert!(gamma <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn gamma_bound_increases_with_lambda() {
+        let mut rng = Rng::new(12);
+        let g = Matrix::from_vec(8, 4, (0..32).map(|_| rng.gaussian_f32()).collect());
+        let lb_small = gamma_lower_bound(&g, 8, 0.01);
+        let lb_big = gamma_lower_bound(&g, 8, 10.0);
+        assert!(lb_big > lb_small);
+        assert!(lb_small > 0.0 && lb_big < 1.0);
+    }
+}

@@ -1,0 +1,355 @@
+//! The adaptive-selection training loop (Algorithm 1).
+//!
+//! Every `R` epochs the strategy re-selects a weighted subset; in between,
+//! weighted mini-batch SGD runs on the AOT'd `train_step` executable with
+//! cosine-annealed learning rate (paper §5 setup).  Warm-start (`-warm`
+//! variants) runs `T_f = κ·T·k/n` epochs of full training first; the
+//! FULL-EARLYSTOP baseline is full training cut at the subset-time budget.
+//!
+//! Wall-clock and (simulated) energy are split into train / select / eval
+//! phases so the harness can report the paper's cost accounting (selection
+//! overhead *is* charged to the strategies, as in the paper).
+
+use anyhow::Result;
+
+use crate::data::{padded_chunks, weighted_batches, Dataset, Splits};
+use crate::metrics::{Phase, PhaseClock, PowerModel};
+use crate::rng::Rng;
+use crate::runtime::{ModelState, Runtime};
+use crate::selection::{SelectCtx, Selection, Strategy};
+
+/// Training-loop options (a subset of `config::ExperimentConfig`).
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub epochs: usize,
+    pub r_interval: usize,
+    pub budget_frac: f64,
+    pub lr0: f32,
+    pub lambda: f32,
+    pub eps: f32,
+    /// warm-start fraction κ (only used when `warm`)
+    pub kappa: f64,
+    pub warm: bool,
+    /// evaluate test accuracy every N epochs (0 ⇒ only at the end)
+    pub eval_every: usize,
+    /// match validation gradients (class-imbalance setting)
+    pub is_valid: bool,
+    pub seed: u64,
+    /// FULL-EARLYSTOP: truncate full training to `frac` of the epochs
+    pub early_stop_frac: Option<f64>,
+    /// overlapped selection: when set, selection requests are served by an
+    /// [`crate::overlap::AsyncSelector`] passed to [`train_overlapped`] and
+    /// training never stalls on a selection round
+    pub overlap: bool,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            epochs: 60,
+            r_interval: 20,
+            budget_frac: 0.1,
+            lr0: 0.05,
+            lambda: 0.5,
+            eps: 1e-10,
+            kappa: 0.5,
+            warm: false,
+            eval_every: 0,
+            is_valid: false,
+            seed: 42,
+            early_stop_frac: None,
+            overlap: false,
+        }
+    }
+}
+
+/// One epoch's log line (feeds Fig. 3j/k convergence plots).
+#[derive(Clone, Debug)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub mean_loss: f32,
+    pub lr: f32,
+    pub test_acc: Option<f32>,
+    /// cumulative accounted seconds (train+select) at end of epoch
+    pub cum_secs: f64,
+}
+
+/// Outcome of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub final_test_acc: f32,
+    pub clock: PhaseClock,
+    pub energy_kwh: f64,
+    pub history: Vec<EpochLog>,
+    /// selection rounds executed
+    pub selections: usize,
+    /// per-row flag: was this training row ever in a selected subset?
+    pub ever_selected: Vec<bool>,
+    /// strategy-reported gradient-matching residuals per selection round
+    pub grad_errors: Vec<f32>,
+    /// SGD steps executed
+    pub steps: usize,
+    /// subset size used (samples)
+    pub budget: usize,
+}
+
+/// Masked accuracy over a dataset via the eval executable.
+pub fn evaluate(rt: &Runtime, st: &ModelState, ds: &Dataset) -> Result<f32> {
+    let idx: Vec<usize> = (0..ds.len()).collect();
+    let mut correct = 0.0f32;
+    for chunk in padded_chunks(ds, &idx, st.meta.chunk) {
+        let (_, c, _, _) = rt.eval_chunk(st, &chunk.x, &chunk.y, &chunk.mask)?;
+        correct += c;
+    }
+    Ok(correct / ds.len() as f32)
+}
+
+/// Cosine-annealed learning rate (Loshchilov & Hutter; paper §5).
+pub fn cosine_lr(lr0: f32, epoch: usize, total: usize) -> f32 {
+    let t = epoch as f32 / total.max(1) as f32;
+    lr0 * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+}
+
+/// Train a model with an adaptive selection strategy.
+///
+/// `ground` is the eligible training-row set (the imbalance transform may
+/// have removed rows); `state` is consumed as the initial parameters and
+/// returned trained inside the outcome's caller-visible `st` (passed by
+/// value to keep runs independent).
+pub fn train(
+    rt: &Runtime,
+    st: ModelState,
+    splits: &Splits,
+    ground: &[usize],
+    strategy: &mut dyn Strategy,
+    opts: &TrainOpts,
+) -> Result<(ModelState, TrainOutcome)> {
+    train_overlapped(rt, st, splits, ground, strategy, opts, None)
+}
+
+/// [`train`] with an optional background selector (`opts.overlap`): at a
+/// due epoch the parameter snapshot is *submitted* and training continues
+/// on the stale subset; the fresh subset is swapped in whenever it lands.
+/// Worker compute is off the accounted critical path (see DESIGN.md —
+/// energy accounting stays with the synchronous mode).
+pub fn train_overlapped(
+    rt: &Runtime,
+    st: ModelState,
+    splits: &Splits,
+    ground: &[usize],
+    strategy: &mut dyn Strategy,
+    opts: &TrainOpts,
+    mut selector: Option<&mut crate::overlap::AsyncSelector>,
+) -> Result<(ModelState, TrainOutcome)> {
+    let n = ground.len();
+    let budget = ((opts.budget_frac * n as f64).round() as usize).clamp(1, n);
+    let meta = st.meta.clone();
+    let mut rng = Rng::new(opts.seed ^ 0xDA7A);
+    let mut clock = PhaseClock::new();
+    let mut history = Vec::new();
+    let mut ever_selected = vec![false; splits.train.len()];
+    let mut grad_errors = Vec::new();
+    let mut selections = 0usize;
+    let mut steps = 0usize;
+
+    // FULL-EARLYSTOP truncation
+    let epochs = match opts.early_stop_frac {
+        Some(f) => ((opts.epochs as f64 * f).round() as usize).max(1),
+        None => opts.epochs,
+    };
+
+    // warm-start: T_f = κ·T·(k/n) epochs of full training (§4 of the paper)
+    let t_f = if opts.warm {
+        ((opts.kappa * opts.epochs as f64 * budget as f64 / n as f64).round() as usize)
+            .min(epochs)
+    } else {
+        0
+    };
+
+    // current subset (starts as a random subset for non-warm runs — matches
+    // Algorithm 1's initial X^(0))
+    let mut current: Selection = {
+        let mut s = Selection::default();
+        let picks = rng.sample_indices(n, budget);
+        for j in picks {
+            s.indices.push(ground[j]);
+            s.weights.push(1.0);
+        }
+        s
+    };
+    let full_selection: Selection = {
+        let mut s = Selection::default();
+        for &i in ground {
+            s.indices.push(i);
+            s.weights.push(1.0);
+        }
+        s
+    };
+    let mut selected_once = false;
+
+    // the hot loop threads one packed-state literal through consecutive
+    // fused train steps; host-side snapshots are taken only at selection
+    // and evaluation boundaries (§Perf)
+    let mut fs = crate::runtime::FusedState::from_state(&st)?;
+
+    for epoch in 0..epochs {
+        // --- selection (Algorithm 1 lines 2-8) -----------------------------
+        let in_subset_phase = epoch >= t_f;
+        let due = in_subset_phase && (epoch - t_f) % opts.r_interval == 0;
+        if let Some(sel_worker) = selector.as_deref_mut() {
+            // overlapped mode: poll for a finished round, submit a new one
+            if let Some(sel) = sel_worker.try_recv()? {
+                if !sel.indices.is_empty() {
+                    if let Some(e) = sel.grad_error {
+                        grad_errors.push(e);
+                    }
+                    for &i in &sel.indices {
+                        ever_selected[i] = true;
+                    }
+                    current = sel;
+                    selected_once = true;
+                    selections += 1;
+                }
+            }
+            if due && sel_worker.inflight == 0 {
+                sel_worker.request(fs.to_state()?, 1000 + epoch as u64)?;
+            }
+        } else if due && (strategy.is_adaptive() || !selected_once) {
+            let st_snap = fs.to_state()?;
+            let mut sel_rng = rng.split(1000 + epoch as u64);
+            let sel = clock.time(Phase::Select, || {
+                let mut ctx = SelectCtx {
+                    rt,
+                    state: &st_snap,
+                    train: &splits.train,
+                    ground,
+                    val: &splits.val,
+                    budget,
+                    lambda: opts.lambda,
+                    eps: opts.eps,
+                    is_valid: opts.is_valid,
+                    rng: &mut sel_rng,
+                };
+                strategy.select(&mut ctx)
+            })?;
+            if !sel.indices.is_empty() {
+                if let Some(e) = sel.grad_error {
+                    grad_errors.push(e);
+                }
+                for &i in &sel.indices {
+                    ever_selected[i] = true;
+                }
+                current = sel;
+                selected_once = true;
+                selections += 1;
+            }
+        }
+
+        let active = if in_subset_phase { &current } else { &full_selection };
+        if !in_subset_phase {
+            for &i in &active.indices {
+                ever_selected[i] = true;
+            }
+        }
+
+        // degenerate guard: all weights zero ⇒ fall back to uniform
+        let wsum: f32 = active.weights.iter().sum();
+        let weights: Vec<f32> = if wsum <= 1e-12 {
+            vec![1.0; active.indices.len()]
+        } else {
+            active.weights.clone()
+        };
+
+        // --- weighted mini-batch SGD (Algorithm 1 line 9) -------------------
+        let lr = cosine_lr(opts.lr0, epoch, opts.epochs);
+        let mut epoch_rng = rng.split(2000 + epoch as u64);
+        let batches = weighted_batches(
+            &splits.train,
+            &active.indices,
+            &weights,
+            meta.batch,
+            &mut epoch_rng,
+        );
+        let mut loss_acc = 0.0f64;
+        let mut nb = 0usize;
+        clock.time(Phase::Train, || -> Result<()> {
+            for b in &batches {
+                let (loss, _) = rt.train_step_fused(&mut fs, &b.x, &b.y, &b.w, lr)?;
+                loss_acc += loss as f64;
+                nb += 1;
+                steps += 1;
+            }
+            Ok(())
+        })?;
+
+        // --- evaluation ------------------------------------------------------
+        let test_acc = if opts.eval_every > 0
+            && (epoch % opts.eval_every == opts.eval_every - 1 || epoch + 1 == epochs)
+        {
+            let st_snap = fs.to_state()?;
+            Some(clock.time(Phase::Eval, || evaluate(rt, &st_snap, &splits.test))?)
+        } else {
+            None
+        };
+
+        history.push(EpochLog {
+            epoch,
+            mean_loss: (loss_acc / nb.max(1) as f64) as f32,
+            lr,
+            test_acc,
+            cum_secs: clock.secs(Phase::Train) + clock.secs(Phase::Select),
+        });
+    }
+
+    let st = fs.to_state()?;
+    let final_test_acc = match history.last().and_then(|h| h.test_acc) {
+        Some(a) => a,
+        None => clock.time(Phase::Eval, || evaluate(rt, &st, &splits.test))?,
+    };
+    let energy_kwh = clock.energy_kwh(&PowerModel::default());
+    Ok((
+        st,
+        TrainOutcome {
+            final_test_acc,
+            clock,
+            energy_kwh,
+            history,
+            selections,
+            ever_selected,
+            grad_errors,
+            steps,
+            budget,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_lr_endpoints_and_monotonicity() {
+        let lr0 = 0.1f32;
+        assert!((cosine_lr(lr0, 0, 100) - lr0).abs() < 1e-6);
+        assert!(cosine_lr(lr0, 100, 100) < 1e-6);
+        let mut prev = f32::INFINITY;
+        for t in 0..=100 {
+            let lr = cosine_lr(lr0, t, 100);
+            assert!(lr <= prev + 1e-7);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn cosine_lr_half_point() {
+        assert!((cosine_lr(0.1, 50, 100) - 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn train_opts_defaults_match_paper() {
+        let o = TrainOpts::default();
+        assert_eq!(o.r_interval, 20);
+        assert!((o.lambda - 0.5).abs() < 1e-6);
+        assert!((o.kappa - 0.5).abs() < 1e-6);
+    }
+}

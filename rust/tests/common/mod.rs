@@ -1,0 +1,27 @@
+//! Shared fixtures for the integration tests.
+
+use gradmatch::data::{DatasetCard, Splits};
+use gradmatch::runtime::Runtime;
+
+/// Artifact dir for tests — honors `GRADMATCH_ARTIFACTS`.
+pub fn artifacts_dir() -> String {
+    std::env::var("GRADMATCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+/// Shared runtime (compiling executables once per test binary).
+pub fn runtime() -> Runtime {
+    Runtime::load(artifacts_dir()).expect("artifacts missing — run `make artifacts`")
+}
+
+/// Small lenet_s-compatible dataset (784-dim) for fast integration runs.
+pub fn tiny_mnist(n: usize) -> Splits {
+    let card = DatasetCard::by_name("synmnist").unwrap();
+    card.generate(7, n)
+}
+
+pub fn assert_close(a: f32, b: f32, tol: f32, what: &str) {
+    assert!(
+        (a - b).abs() <= tol,
+        "{what}: {a} vs {b} (tol {tol})"
+    );
+}

@@ -1,0 +1,319 @@
+//! Integration: the AOT'd HLO executables compute what the Rust reference
+//! math says they should — the cross-layer correctness contract between
+//! python/compile (L1+L2) and the coordinator (L3).
+
+mod common;
+
+use common::{assert_close, runtime, tiny_mnist};
+use gradmatch::data::padded_chunks;
+use gradmatch::rng::Rng;
+use gradmatch::tensor::{dot, Matrix};
+
+const MODEL: &str = "lenet_narrow"; // smallest variant: d=784 h=32 c=10 P=330
+
+/// Rust-side forward pass: returns (hidden, logits) for one sample.
+fn forward_ref(
+    st: &gradmatch::runtime::ModelState,
+    x: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let m = &st.meta;
+    let mut h = vec![0.0f32; m.h];
+    for j in 0..m.h {
+        let mut acc = st.b1[j];
+        for i in 0..m.d {
+            acc += x[i] * st.w1[i * m.h + j];
+        }
+        h[j] = acc.max(0.0);
+    }
+    let mut logits = vec![0.0f32; m.c];
+    for c in 0..m.c {
+        let mut acc = st.b2[c];
+        for j in 0..m.h {
+            acc += h[j] * st.w2[j * m.c + c];
+        }
+        logits[c] = acc;
+    }
+    (h, logits)
+}
+
+fn softmax(v: &[f32]) -> Vec<f32> {
+    let mx = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = v.iter().map(|&x| (x - mx).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let rt = runtime();
+    let a = rt.init(MODEL, 3).unwrap();
+    let b = rt.init(MODEL, 3).unwrap();
+    let c = rt.init(MODEL, 4).unwrap();
+    assert_eq!(a.w1, b.w1);
+    assert_eq!(a.w2, b.w2);
+    assert_ne!(a.w1, c.w1);
+    // He-init scale sanity: std ≈ sqrt(2/d)
+    let std: f32 = (a.w1.iter().map(|v| v * v).sum::<f32>() / a.w1.len() as f32).sqrt();
+    let want = (2.0f32 / a.meta.d as f32).sqrt();
+    assert_close(std, want, want * 0.2, "init std");
+}
+
+#[test]
+fn grads_chunk_matches_rust_reference_math() {
+    let rt = runtime();
+    let st = rt.init(MODEL, 1).unwrap();
+    let splits = tiny_mnist(600);
+    let idx: Vec<usize> = (0..40).collect();
+    let chunk = padded_chunks(&splits.train, &idx, st.meta.chunk).next().unwrap();
+    let g = rt.grads_chunk(&st, &chunk.x, &chunk.y, &chunk.mask).unwrap();
+    let m = st.meta.clone();
+    for s in [0usize, 7, 39] {
+        let x = &chunk.x[s * m.d..(s + 1) * m.d];
+        let (h, logits) = forward_ref(&st, x);
+        let p = softmax(&logits);
+        let y = chunk.y[s] as usize;
+        // expected row: flatten(h ⊗ err) ++ err
+        for (j, &hj) in h.iter().enumerate().step_by(5) {
+            for c in (0..m.c).step_by(3) {
+                let err = p[c] - if c == y { 1.0 } else { 0.0 };
+                assert_close(
+                    g.at(s, j * m.c + c),
+                    hj * err,
+                    2e-4,
+                    &format!("grad[{s}][{j},{c}]"),
+                );
+            }
+        }
+        for c in 0..m.c {
+            let err = p[c] - if c == y { 1.0 } else { 0.0 };
+            assert_close(g.at(s, m.h * m.c + c), err, 2e-4, "bias grad");
+        }
+    }
+    // padded rows must be zero
+    for s in 40..st.meta.chunk {
+        assert!(g.row(s).iter().all(|&v| v == 0.0), "padding row {s} nonzero");
+    }
+}
+
+#[test]
+fn mean_grad_chunk_equals_column_sum_of_grads() {
+    let rt = runtime();
+    let st = rt.init(MODEL, 2).unwrap();
+    let splits = tiny_mnist(600);
+    let idx: Vec<usize> = (5..77).collect();
+    let chunk = padded_chunks(&splits.train, &idx, st.meta.chunk).next().unwrap();
+    let g = rt.grads_chunk(&st, &chunk.x, &chunk.y, &chunk.mask).unwrap();
+    let mg = rt.mean_grad_chunk(&st, &chunk.x, &chunk.y, &chunk.mask).unwrap();
+    for col in (0..st.meta.p).step_by(17) {
+        let sum: f32 = (0..st.meta.chunk).map(|r| g.at(r, col)).sum();
+        assert_close(mg[col], sum, 3e-3, &format!("mean_grad col {col}"));
+    }
+}
+
+#[test]
+fn corr_chunk_matches_rust_gemv() {
+    let rt = runtime();
+    let meta = rt.model(MODEL).unwrap().clone();
+    let mut rng = Rng::new(9);
+    let g = Matrix::from_vec(
+        meta.chunk,
+        meta.p,
+        (0..meta.chunk * meta.p).map(|_| rng.gaussian_f32()).collect(),
+    );
+    let r: Vec<f32> = (0..meta.p).map(|_| rng.gaussian_f32()).collect();
+    let got = rt.corr_chunk(MODEL, &g, &r).unwrap();
+    for row in (0..meta.chunk).step_by(31) {
+        let want = dot(g.row(row), &r);
+        assert_close(got[row], want, 3e-2_f32.max(want.abs() * 1e-3), "corr row");
+    }
+}
+
+#[test]
+fn sqdist_chunk_matches_rust_sqdist() {
+    let rt = runtime();
+    let meta = rt.model(MODEL).unwrap().clone();
+    let mut rng = Rng::new(10);
+    let a = Matrix::from_vec(
+        meta.chunk,
+        meta.p,
+        (0..meta.chunk * meta.p).map(|_| rng.gaussian_f32()).collect(),
+    );
+    let b = Matrix::from_vec(
+        meta.chunk,
+        meta.p,
+        (0..meta.chunk * meta.p).map(|_| rng.gaussian_f32()).collect(),
+    );
+    let d = rt.sqdist_chunk(MODEL, &a, &b).unwrap();
+    for i in (0..meta.chunk).step_by(63) {
+        for j in (0..meta.chunk).step_by(47) {
+            let want = gradmatch::tensor::sqdist(a.row(i), b.row(j));
+            assert_close(d.at(i, j), want, want.abs() * 5e-3 + 0.05, "sqdist cell");
+        }
+    }
+}
+
+#[test]
+fn train_step_descends_and_matches_update_rule_shape() {
+    let rt = runtime();
+    let mut st = rt.init(MODEL, 5).unwrap();
+    let splits = tiny_mnist(600);
+    let m = st.meta.clone();
+    let idx: Vec<usize> = (0..m.batch).collect();
+    let mut x = vec![0.0f32; m.batch * m.d];
+    let mut y = vec![0i32; m.batch];
+    for (s, &i) in idx.iter().enumerate() {
+        x[s * m.d..(s + 1) * m.d].copy_from_slice(splits.train.x.row(i));
+        y[s] = splits.train.y[i];
+    }
+    let w = vec![1.0f32; m.batch];
+    let w1_before = st.w1.clone();
+    let (loss0, _) = rt.train_step(&mut st, &x, &y, &w, 0.05).unwrap();
+    assert_ne!(st.w1, w1_before, "params must move");
+    let mut last = loss0;
+    for _ in 0..25 {
+        let (loss, _) = rt.train_step(&mut st, &x, &y, &w, 0.05).unwrap();
+        last = loss;
+    }
+    assert!(
+        last < loss0 * 0.6,
+        "fixed-batch loss should drop: {loss0} -> {last}"
+    );
+}
+
+#[test]
+fn train_step_zero_lr_is_identity_on_params() {
+    let rt = runtime();
+    let mut st = rt.init(MODEL, 6).unwrap();
+    let splits = tiny_mnist(600);
+    let m = st.meta.clone();
+    let mut x = vec![0.0f32; m.batch * m.d];
+    let mut y = vec![0i32; m.batch];
+    for s in 0..m.batch {
+        x[s * m.d..(s + 1) * m.d].copy_from_slice(splits.train.x.row(s));
+        y[s] = splits.train.y[s];
+    }
+    let w = vec![1.0f32; m.batch];
+    let w1 = st.w1.clone();
+    let b2 = st.b2.clone();
+    rt.train_step(&mut st, &x, &y, &w, 0.0).unwrap();
+    assert_eq!(st.w1, w1);
+    assert_eq!(st.b2, b2);
+    // momentum buffers still accumulate the gradient
+    assert!(st.m_w2.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn fused_train_step_matches_unfused() {
+    let rt = runtime();
+    let splits = tiny_mnist(600);
+    let m = rt.model(MODEL).unwrap().clone();
+    let mut x = vec![0.0f32; m.batch * m.d];
+    let mut y = vec![0i32; m.batch];
+    for s in 0..m.batch {
+        x[s * m.d..(s + 1) * m.d].copy_from_slice(splits.train.x.row(s));
+        y[s] = splits.train.y[s];
+    }
+    let w = vec![1.0f32; m.batch];
+    let mut st = rt.init(MODEL, 11).unwrap();
+    let mut fs = gradmatch::runtime::FusedState::from_state(&st).unwrap();
+    for step in 0..4 {
+        let (l1, c1) = rt.train_step(&mut st, &x, &y, &w, 0.05).unwrap();
+        let (l2, c2) = rt.train_step_fused(&mut fs, &x, &y, &w, 0.05).unwrap();
+        assert_close(l1, l2, 1e-5 + l1.abs() * 1e-4, &format!("fused loss step {step}"));
+        assert_close(c1, c2, 0.5, "fused correct");
+    }
+    let st2 = fs.to_state().unwrap();
+    for (a, b) in st.w1.iter().zip(&st2.w1) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+    for (a, b) in st.m_w2.iter().zip(&st2.m_w2) {
+        assert!((a - b).abs() < 1e-4, "momentum {a} vs {b}");
+    }
+}
+
+#[test]
+fn batch_gradsum_matches_per_sample_grouping() {
+    let rt = runtime();
+    let st = rt.init(MODEL, 13).unwrap();
+    let splits = tiny_mnist(700);
+    // 300 rows: two full 128-batches + one 44-row tail across two chunks
+    let order: Vec<usize> = (0..300).collect();
+    let (bg, members) =
+        gradmatch::grads::per_batch_grads_fused(&rt, &st, &splits.train, &order).unwrap();
+    let store = gradmatch::grads::per_sample_grads(&rt, &st, &splits.train, &order).unwrap();
+    let (bg_ref, members_ref) = gradmatch::grads::per_batch_grads(&store, st.meta.batch);
+    assert_eq!(bg.rows, bg_ref.rows);
+    assert_eq!(members, members_ref);
+    for b in 0..bg.rows {
+        for col in (0..st.meta.p).step_by(13) {
+            assert_close(
+                bg.at(b, col),
+                bg_ref.at(b, col),
+                2e-4 + bg_ref.at(b, col).abs() * 1e-3,
+                &format!("batch {b} col {col}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn pack_unpack_roundtrip() {
+    let rt = runtime();
+    let st = rt.init(MODEL, 12).unwrap();
+    let flat = st.pack();
+    assert_eq!(flat.len(), 2 * st.param_count());
+    let st2 = gradmatch::runtime::ModelState::unpack(&st.meta, &flat);
+    assert_eq!(st.w1, st2.w1);
+    assert_eq!(st.b2, st2.b2);
+    assert_eq!(st.m_b1, st2.m_b1);
+}
+
+#[test]
+fn eval_chunk_counts_are_consistent() {
+    let rt = runtime();
+    let st = rt.init(MODEL, 7).unwrap();
+    let splits = tiny_mnist(600);
+    let idx: Vec<usize> = (0..100).collect();
+    let mut total_correct = 0.0;
+    for chunk in padded_chunks(&splits.train, &idx, st.meta.chunk) {
+        let (sl, sc, correct, entropy) =
+            rt.eval_chunk(&st, &chunk.x, &chunk.y, &chunk.mask).unwrap();
+        assert!(sl >= 0.0);
+        let live_correct: f32 = correct.iter().sum();
+        assert_close(sc, live_correct, 1e-3, "eval count");
+        // entropy ∈ [0, ln C] on live rows, 0 on padding
+        for (s, &e) in entropy.iter().enumerate() {
+            if s < chunk.live {
+                assert!(e >= -1e-5 && e <= (st.meta.c as f32).ln() + 1e-4, "{e}");
+            } else {
+                assert_eq!(e, 0.0);
+            }
+        }
+        total_correct += sc;
+    }
+    assert!(total_correct <= 100.0);
+}
+
+#[test]
+fn xla_corr_backend_equals_rust_backend_inside_omp() {
+    use gradmatch::omp::{omp_select, CorrBackend, OmpOpts, RustCorr, XlaCorr};
+    let rt = runtime();
+    let meta = rt.model(MODEL).unwrap().clone();
+    let mut rng = Rng::new(11);
+    // 3 chunks worth of candidates, arbitrary rows
+    let n = meta.chunk * 2 + 57;
+    let g = Matrix::from_vec(n, meta.p, (0..n * meta.p).map(|_| rng.gaussian_f32()).collect());
+    let target: Vec<f32> = (0..meta.p).map(|_| rng.gaussian_f32()).collect();
+    let mut xla = XlaCorr::new(&rt, MODEL, &g).unwrap();
+    let mut rust = RustCorr { g: &g };
+    let cx = xla.corr(&target).unwrap();
+    let cr = rust.corr(&target).unwrap();
+    assert_eq!(cx.len(), cr.len());
+    for i in (0..n).step_by(97) {
+        assert_close(cx[i], cr[i], cr[i].abs() * 2e-3 + 5e-2, "corr backend");
+    }
+    let opts = OmpOpts { k: 6, lambda: 0.5, eps: 1e-12 };
+    let rx = omp_select(&mut xla, &|j| g.row(j).to_vec(), &target, opts).unwrap();
+    let rr = omp_select(&mut rust, &|j| g.row(j).to_vec(), &target, opts).unwrap();
+    assert_eq!(rx.selected, rr.selected, "same support through both backends");
+}

@@ -1,0 +1,273 @@
+//! Integration: the full training loop (Algorithm 1) over the live runtime —
+//! learning actually happens, warm-start / early-stop / R-interval semantics
+//! hold, and the coordinator produces coherent summaries.
+
+mod common;
+
+use common::runtime;
+use gradmatch::config::ExperimentConfig;
+use gradmatch::coordinator::Coordinator;
+use gradmatch::data::DatasetCard;
+use gradmatch::selection::parse_strategy;
+use gradmatch::trainer::{evaluate, train, TrainOpts};
+
+fn mini_cfg(strategy: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: "synmnist".into(),
+        model: "lenet_narrow".into(),
+        strategy: strategy.into(),
+        budget_frac: 0.10,
+        epochs: 8,
+        r_interval: 4,
+        lr0: 0.05,
+        n_train: 800,
+        eval_every: 0,
+        artifacts_dir: common::artifacts_dir(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn training_improves_over_init() {
+    let rt = runtime();
+    let card = DatasetCard::by_name("synmnist").unwrap();
+    let splits = card.generate(3, 800);
+    let ground: Vec<usize> = (0..800).collect();
+    let st = rt.init("lenet_narrow", 1).unwrap();
+    let acc0 = evaluate(&rt, &st, &splits.test).unwrap();
+    let (mut strategy, _) = parse_strategy("random", 128).unwrap();
+    let opts = TrainOpts { epochs: 10, r_interval: 5, budget_frac: 0.2, ..Default::default() };
+    let (st_after, out) = train(&rt, st, &splits, &ground, strategy.as_mut(), &opts).unwrap();
+    let acc1 = evaluate(&rt, &st_after, &splits.test).unwrap();
+    assert!(
+        acc1 > acc0 + 0.2,
+        "training should lift accuracy well above chance: {acc0} -> {acc1}"
+    );
+    assert_eq!(out.final_test_acc, acc1);
+    assert!(out.steps > 0);
+}
+
+#[test]
+fn loss_history_trends_down() {
+    let rt = runtime();
+    let card = DatasetCard::by_name("synmnist").unwrap();
+    let splits = card.generate(4, 800);
+    let ground: Vec<usize> = (0..800).collect();
+    let st = rt.init("lenet_narrow", 2).unwrap();
+    let (mut strategy, _) = parse_strategy("random", 128).unwrap();
+    let opts = TrainOpts { epochs: 12, r_interval: 6, budget_frac: 0.3, ..Default::default() };
+    let (_, out) = train(&rt, st, &splits, &ground, strategy.as_mut(), &opts).unwrap();
+    let first = out.history[0].mean_loss;
+    let last = out.history.last().unwrap().mean_loss;
+    assert!(last < first * 0.8, "loss {first} -> {last}");
+    // cumulative time is monotone
+    for w in out.history.windows(2) {
+        assert!(w[1].cum_secs >= w[0].cum_secs);
+    }
+}
+
+#[test]
+fn r_interval_controls_selection_count() {
+    let rt = runtime();
+    let card = DatasetCard::by_name("synmnist").unwrap();
+    let splits = card.generate(5, 600);
+    let ground: Vec<usize> = (0..600).collect();
+    for (r, expect) in [(2usize, 5usize), (5, 2), (10, 1)] {
+        let st = rt.init("lenet_narrow", 3).unwrap();
+        let (mut strategy, _) = parse_strategy("random", 128).unwrap();
+        let opts = TrainOpts {
+            epochs: 10,
+            r_interval: r,
+            budget_frac: 0.2,
+            ..Default::default()
+        };
+        let (_, out) = train(&rt, st, &splits, &ground, strategy.as_mut(), &opts).unwrap();
+        assert_eq!(out.selections, expect, "R={r}");
+    }
+}
+
+#[test]
+fn non_adaptive_strategy_selects_once() {
+    let rt = runtime();
+    let card = DatasetCard::by_name("synmnist").unwrap();
+    let splits = card.generate(6, 600);
+    let ground: Vec<usize> = (0..600).collect();
+    let st = rt.init("lenet_narrow", 4).unwrap();
+    let (mut strategy, _) = parse_strategy("featurefl", 128).unwrap();
+    let opts = TrainOpts { epochs: 9, r_interval: 3, budget_frac: 0.2, ..Default::default() };
+    let (_, out) = train(&rt, st, &splits, &ground, strategy.as_mut(), &opts).unwrap();
+    assert_eq!(out.selections, 1, "featurefl is not adaptive");
+}
+
+#[test]
+fn warm_start_runs_full_epochs_first() {
+    let rt = runtime();
+    let card = DatasetCard::by_name("synmnist").unwrap();
+    let splits = card.generate(7, 640);
+    let ground: Vec<usize> = (0..640).collect();
+    let st = rt.init("lenet_narrow", 5).unwrap();
+    let (mut strategy, warm) = parse_strategy("random-warm", 128).unwrap();
+    assert!(warm);
+    // κ=1, frac=0.5 ⇒ T_f = 1·20·0.5 = 10 warm epochs of 5 batches (640/128),
+    // then 10 subset epochs of ⌈320/128⌉=3 batches
+    let opts = TrainOpts {
+        epochs: 20,
+        r_interval: 50,
+        budget_frac: 0.5,
+        kappa: 1.0,
+        warm: true,
+        ..Default::default()
+    };
+    let (_, out) = train(&rt, st, &splits, &ground, strategy.as_mut(), &opts).unwrap();
+    assert_eq!(out.steps, 10 * 5 + 10 * 3, "warm/subset step split");
+    // warm phase touches every sample
+    assert!(out.ever_selected.iter().all(|&b| b));
+}
+
+#[test]
+fn early_stop_truncates_epochs() {
+    let rt = runtime();
+    let card = DatasetCard::by_name("synmnist").unwrap();
+    let splits = card.generate(8, 640);
+    let ground: Vec<usize> = (0..640).collect();
+    let st = rt.init("lenet_narrow", 6).unwrap();
+    let (mut strategy, _) = parse_strategy("full", 128).unwrap();
+    let opts = TrainOpts {
+        epochs: 20,
+        budget_frac: 1.0,
+        early_stop_frac: Some(0.25),
+        ..Default::default()
+    };
+    let (_, out) = train(&rt, st, &splits, &ground, strategy.as_mut(), &opts).unwrap();
+    assert_eq!(out.history.len(), 5, "20 epochs * 0.25");
+    assert_eq!(out.steps, 5 * 5); // 640/128 = 5 batches per epoch
+}
+
+#[test]
+fn coordinator_summary_fields_are_coherent() {
+    let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
+    let cfg = mini_cfg("gradmatch-pb");
+    let r = coord.run_one(&cfg, 42).unwrap();
+    assert_eq!(r.strategy, "gradmatch-pb");
+    assert!(r.test_acc > 0.2 && r.test_acc <= 1.0, "{}", r.test_acc);
+    assert!(r.total_secs >= r.train_secs);
+    assert!(r.select_secs > 0.0, "gradmatch-pb must spend selection time");
+    assert!(r.selections >= 1);
+    assert!(r.redundant_frac > 0.0 && r.redundant_frac < 1.0, "{}", r.redundant_frac);
+    assert!(r.mean_grad_error.is_some());
+    assert!(r.energy_kwh > 0.0);
+}
+
+#[test]
+fn coordinator_full_baseline_is_cached_and_budget_one() {
+    let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
+    let cfg = mini_cfg("gradmatch-pb");
+    let a = coord.full_baseline(&cfg, cfg.seed).unwrap();
+    let b = coord.full_baseline(&cfg, cfg.seed).unwrap();
+    assert_eq!(a.test_acc, b.test_acc);
+    assert_eq!(a.strategy, "full");
+    assert!(a.redundant_frac < 1e-9, "full training uses everything");
+}
+
+#[test]
+fn run_multi_seeds_differ_but_are_reproducible() {
+    let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
+    let mut cfg = mini_cfg("random");
+    cfg.runs = 2;
+    cfg.epochs = 4;
+    let rs = coord.run_multi(&cfg).unwrap();
+    assert_eq!(rs.len(), 2);
+    assert_ne!(rs[0].seed, rs[1].seed);
+    let rs2 = coord.run_multi(&cfg).unwrap();
+    assert_eq!(rs[0].test_acc, rs2[0].test_acc, "same seed same result");
+}
+
+#[test]
+fn imbalanced_run_uses_reduced_ground_set() {
+    let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
+    let mut cfg = mini_cfg("gradmatch");
+    cfg.is_valid = true;
+    cfg.epochs = 4;
+    cfg.r_interval = 2;
+    let r = coord.run_one(&cfg, 42).unwrap();
+    // 30% of classes reduced by 90% ⇒ ground ≈ 0.73·n; redundant fraction
+    // must reflect that many rows are not even eligible
+    assert!(r.redundant_frac > 0.2, "{}", r.redundant_frac);
+    assert!(r.test_acc > 0.2);
+}
+
+#[test]
+fn overlapped_selection_trains_and_selects() {
+    let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
+    let mut cfg = mini_cfg("gradmatch-pb");
+    cfg.overlap = true;
+    cfg.epochs = 10;
+    cfg.r_interval = 2;
+    let r = coord.run_one(&cfg, 42).unwrap();
+    // background rounds must have landed and been applied
+    assert!(r.selections >= 1, "no overlapped selection applied");
+    assert!(r.test_acc > 0.3, "{}", r.test_acc);
+    // main-thread selection time is only request/poll overhead
+    assert!(r.select_secs < 0.5, "overlap should keep selection off the critical path: {}", r.select_secs);
+}
+
+#[test]
+fn overlapped_matches_sync_quality_roughly() {
+    let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
+    let mut sync_cfg = mini_cfg("gradmatch-pb");
+    sync_cfg.epochs = 10;
+    sync_cfg.r_interval = 3;
+    let sync = coord.run_one(&sync_cfg, 7).unwrap();
+    let mut ov_cfg = sync_cfg.clone();
+    ov_cfg.overlap = true;
+    let ov = coord.run_one(&ov_cfg, 7).unwrap();
+    // stale-subset training may lag slightly but must stay in the same band
+    assert!(
+        ov.test_acc > sync.test_acc - 0.15,
+        "overlap {} vs sync {}",
+        ov.test_acc,
+        sync.test_acc
+    );
+}
+
+#[test]
+fn label_noise_robustness_validation_matching_helps() {
+    // robust-learning extension: with 30% flipped labels, validation-
+    // gradient GRAD-MATCH should beat random selection trained on the
+    // same noisy data
+    let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
+    let mut base = mini_cfg("random");
+    base.label_noise = 0.3;
+    base.epochs = 10;
+    base.r_interval = 5;
+    base.budget_frac = 0.2;
+    let rnd = coord.run_one(&base, 11).unwrap();
+    let mut gm = base.clone();
+    gm.strategy = "gradmatch".into();
+    gm.is_valid = true; // clean validation target
+    gm.imbalance_frac = 0.0; // noise experiment, no class imbalance
+    let g = coord.run_one(&gm, 11).unwrap();
+    assert!(
+        g.test_acc > rnd.test_acc - 0.05,
+        "gradmatch(val) {} vs random {} under label noise",
+        g.test_acc,
+        rnd.test_acc
+    );
+}
+
+#[test]
+fn sweep_produces_rows_with_sane_relationships() {
+    let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
+    let mut cfg = mini_cfg("gradmatch-pb");
+    cfg.epochs = 6;
+    cfg.r_interval = 3;
+    let rows = coord.sweep(&cfg, &["random", "gradmatch-pb"], &[0.1, 0.3]).unwrap();
+    assert_eq!(rows.len(), 4);
+    for row in &rows {
+        // at miniature scale selection overhead can eat some of the win;
+        // the full-scale speedup shape is asserted by the benches/examples
+        assert!(row.speedup > 0.8, "subset training should beat full time: {}", row.speedup);
+        assert!(row.acc_mean > 0.0 && row.acc_mean <= 1.0);
+        assert!(row.energy_ratio > 0.0);
+    }
+}
