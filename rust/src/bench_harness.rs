@@ -72,6 +72,98 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+// ---------------------------------------------------------------------------
+// machine-readable bench reports (the perf trajectory)
+// ---------------------------------------------------------------------------
+
+/// One timed record: label + best/mean seconds + iteration count.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub label: String,
+    pub best_s: f64,
+    pub mean_s: f64,
+    pub iters: usize,
+}
+
+/// Collects [`bench_iters`]-style timings plus derived scalar notes
+/// (speedups, check outcomes) and writes them as JSON so successive PRs
+/// can diff the perf trajectory (`BENCH_micro.json` et al.).
+#[derive(Default)]
+pub struct BenchReport {
+    pub bench: String,
+    pub records: Vec<BenchRecord>,
+    pub notes: Vec<(String, f64)>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> Self {
+        BenchReport { bench: bench.into(), records: Vec::new(), notes: Vec::new() }
+    }
+
+    /// Time `f` like [`bench_iters`] and record the result.
+    pub fn rec<T>(&mut self, label: &str, iters: usize, f: impl FnMut() -> T) -> (f64, f64) {
+        let (best, mean) = bench_iters(label, iters, f);
+        self.records.push(BenchRecord { label: label.into(), best_s: best, mean_s: mean, iters });
+        (best, mean)
+    }
+
+    /// Record a derived scalar (speedup factor, pass/fail as 1/0, …).
+    pub fn note(&mut self, key: &str, value: f64) {
+        self.notes.push((key.into(), value));
+    }
+
+    /// Serialize to JSON text.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.bench)));
+        s.push_str("  \"records\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"label\": \"{}\", \"best_ms\": {:.6}, \"mean_ms\": {:.6}, \"iters\": {}}}{}\n",
+                json_escape(&r.label),
+                r.best_s * 1e3,
+                r.mean_s * 1e3,
+                r.iters,
+                if i + 1 < self.records.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"notes\": {\n");
+        for (i, (k, v)) in self.notes.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {}{}\n",
+                json_escape(k),
+                if v.is_finite() { format!("{v:.6}") } else { "null".into() },
+                if i + 1 < self.notes.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+
+    /// Write the JSON report; prints the destination for the console log.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        println!("\nwrote {path} ({} records, {} notes)", self.records.len(), self.notes.len());
+        Ok(())
+    }
+}
+
 /// Table header/row printing with fixed column layout.
 pub fn table_header(cols: &[&str]) {
     let row = cols
@@ -135,5 +227,20 @@ mod tests {
     fn shape_check_passthrough() {
         assert!(shape_check("x", true));
         assert!(!shape_check("y", false));
+    }
+
+    #[test]
+    fn bench_report_json_is_parseable() {
+        let mut rep = BenchReport::new("unit");
+        rep.rec("noop \"quoted\"", 2, || 1 + 1);
+        rep.note("speedup", 2.5);
+        rep.note("pass", 1.0);
+        let j = crate::jsonlite::Json::parse(&rep.to_json()).unwrap();
+        assert_eq!(j.get("bench").and_then(crate::jsonlite::Json::as_str), Some("unit"));
+        let recs = j.get("records").and_then(crate::jsonlite::Json::as_arr).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].get("best_ms").and_then(crate::jsonlite::Json::as_f64).is_some());
+        let notes = j.get("notes").and_then(crate::jsonlite::Json::as_obj).unwrap();
+        assert_eq!(notes.len(), 2);
     }
 }

@@ -42,16 +42,31 @@ impl Value {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("config parse error on line {0}: {1}")]
     Parse(usize, String),
-    #[error("missing or mistyped key '{0}'")]
     Key(String),
-    #[error("unknown {0} '{1}'")]
     Unknown(&'static str, String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse(line, msg) => write!(f, "config parse error on line {line}: {msg}"),
+            ConfigError::Key(k) => write!(f, "missing or mistyped key '{k}'"),
+            ConfigError::Unknown(what, v) => write!(f, "unknown {what} '{v}'"),
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 /// Raw `[section] key=value` table.

@@ -7,8 +7,9 @@
 use anyhow::Result;
 
 use crate::data::{padded_chunks, Dataset};
+use crate::par::{dot, norm2};
 use crate::runtime::{ModelState, Runtime};
-use crate::tensor::{axpy, dot, norm2, Matrix};
+use crate::tensor::{axpy, Matrix};
 
 /// Per-sample gradients for a set of dataset rows.
 #[derive(Clone, Debug)]

@@ -16,24 +16,37 @@
 //!   FULL-EARLYSTOP plus warm-start wrappers), the weighted-SGD training loop,
 //!   and the experiment harness. Python is never on the training path.
 
+// Math/substrate core — always built (works with --no-default-features).
 pub mod bench_harness;
-pub mod checkpoint;
 pub mod cli;
 pub mod config;
-pub mod coordinator;
 pub mod data;
-pub mod grads;
 pub mod jsonlite;
 pub mod linalg;
 pub mod metrics;
 pub mod omp;
-pub mod overlap;
+pub mod par;
 pub mod rng;
-pub mod runtime;
-pub mod selection;
 pub mod stats;
 pub mod submod;
 pub mod tensor;
 pub mod testutil;
 pub mod theory;
+
+// XLA/PJRT interop layer — gated behind the (default-on) `xla` feature so
+// the crate builds with no xla dependency at all.  The vendored stub makes
+// these compile everywhere; real execution needs the xla_extension tree.
+#[cfg(feature = "xla")]
+pub mod checkpoint;
+#[cfg(feature = "xla")]
+pub mod coordinator;
+#[cfg(feature = "xla")]
+pub mod grads;
+#[cfg(feature = "xla")]
+pub mod overlap;
+#[cfg(feature = "xla")]
+pub mod runtime;
+#[cfg(feature = "xla")]
+pub mod selection;
+#[cfg(feature = "xla")]
 pub mod trainer;

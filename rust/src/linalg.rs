@@ -16,13 +16,24 @@
 use crate::tensor::{dot, gemv_t, Matrix};
 
 /// Error type for solver failures (non-SPD systems etc.).
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LinalgError {
-    #[error("matrix not positive definite at pivot {0} (value {1})")]
     NotPositiveDefinite(usize, f64),
-    #[error("dimension mismatch: {0}")]
     Dimension(String),
 }
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinalgError::NotPositiveDefinite(pivot, v) => {
+                write!(f, "matrix not positive definite at pivot {pivot} (value {v})")
+            }
+            LinalgError::Dimension(d) => write!(f, "dimension mismatch: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
 
 /// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`, kept in f64 for
 /// stability (the gram entries come from f32 gradient dot products).
@@ -142,7 +153,8 @@ pub fn ridge_weights(g_sel: &Matrix, target: &[f32], lambda: f32) -> Result<Vec<
         )));
     }
     let k = g_sel.rows;
-    let mut a = crate::tensor::gram(g_sel);
+    // parallel blocked Gram build — the O(k²·P) piece of every re-fit
+    let mut a = crate::par::gram(g_sel);
     for i in 0..k {
         a.data[i * k + i] += lambda;
     }

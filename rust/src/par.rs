@@ -1,0 +1,420 @@
+//! Parallel blocked compute layer for the selection hot path.
+//!
+//! The coordinator-side kernels in [`crate::tensor`] are deliberately
+//! plain — they are the *reference* implementations the runtime tests and
+//! the property tests compare against.  This module provides the
+//! *production* versions the hot paths call:
+//!
+//! - [`dot`] / [`sqdist`] — 4-accumulator unrolled inner loops (f64
+//!   accumulation, same as the reference, but the independent lanes let
+//!   the CPU overlap the FMA chains instead of serializing on one
+//!   accumulator);
+//! - [`gemv`] — chunked row-parallel GEMV over scoped threads (the OMP
+//!   ground-set correlation `G·v`, the Batch-OMP Gram columns `G·g_s`,
+//!   and GLISTER's Taylor scores);
+//! - [`gram`] / [`pairwise_sqdist`] — symmetric pairwise builds with
+//!   row-level work stealing (an atomic cursor hands out rows, so the
+//!   shrinking-triangle imbalance is absorbed), used by the ridge re-fit
+//!   normal matrix and the CRAIG / facility-location similarity builds;
+//! - [`colsum_pos`] — clamped column sums, the facility-location initial
+//!   gains (`cover = 0`), parallel over column blocks.
+//!
+//! Everything is std-only (`std::thread::scope`), allocation-free in the
+//! inner loops, and falls back to single-thread execution below a
+//! flop threshold so tiny per-class slices don't pay spawn overhead.
+//! Thread count comes from `available_parallelism`, overridable with
+//! `GRADMATCH_THREADS=<n>` (set `1` to force the serial path, e.g. for
+//! bit-stable A/B runs).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::tensor::Matrix;
+
+/// Mul-adds below which threading costs more than it saves.
+const PAR_MIN_FLOPS: usize = 1 << 16;
+
+/// Worker-thread count: `GRADMATCH_THREADS` override, else the machine.
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("GRADMATCH_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+// ---------------------------------------------------------------------------
+// unrolled scalar kernels
+// ---------------------------------------------------------------------------
+
+/// Dot product with 4 independent f64 accumulator lanes.
+///
+/// Same precision model as the reference [`crate::tensor::dot`] (every
+/// product is taken in f64); the lanes only change the summation order,
+/// so results agree to f32 round-off.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let n4 = n - n % 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i < n4 {
+        s0 += a[i] as f64 * b[i] as f64;
+        s1 += a[i + 1] as f64 * b[i + 1] as f64;
+        s2 += a[i + 2] as f64 * b[i + 2] as f64;
+        s3 += a[i + 3] as f64 * b[i + 3] as f64;
+        i += 4;
+    }
+    let mut tail = 0.0f64;
+    while i < n {
+        tail += a[i] as f64 * b[i] as f64;
+        i += 1;
+    }
+    (((s0 + s1) + (s2 + s3)) + tail) as f32
+}
+
+/// Euclidean norm via the unrolled dot.
+#[inline]
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// Squared euclidean distance with 4 accumulator lanes.
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let n4 = n - n % 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i < n4 {
+        let d0 = (a[i] - b[i]) as f64;
+        let d1 = (a[i + 1] - b[i + 1]) as f64;
+        let d2 = (a[i + 2] - b[i + 2]) as f64;
+        let d3 = (a[i + 3] - b[i + 3]) as f64;
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+        i += 4;
+    }
+    let mut tail = 0.0f64;
+    while i < n {
+        let d = (a[i] - b[i]) as f64;
+        tail += d * d;
+        i += 1;
+    }
+    (((s0 + s1) + (s2 + s3)) + tail) as f32
+}
+
+// ---------------------------------------------------------------------------
+// row-parallel GEMV
+// ---------------------------------------------------------------------------
+
+/// `out = M v`, rows split into contiguous blocks across `threads`
+/// scoped workers.  Exposed for the property tests; use [`gemv`] for the
+/// policy-driven entry point.
+pub fn gemv_threads(m: &Matrix, v: &[f32], out: &mut [f32], threads: usize) {
+    assert_eq!(m.cols, v.len(), "gemv: cols vs v");
+    assert_eq!(m.rows, out.len(), "gemv: rows vs out");
+    if m.rows == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, m.rows);
+    if threads == 1 {
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = dot(m.row(r), v);
+        }
+        return;
+    }
+    let rows_per = m.rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (blk, chunk) in out.chunks_mut(rows_per).enumerate() {
+            let lo = blk * rows_per;
+            s.spawn(move || {
+                for (i, o) in chunk.iter_mut().enumerate() {
+                    *o = dot(m.row(lo + i), v);
+                }
+            });
+        }
+    });
+}
+
+/// `out = M v` — parallel when the problem is big enough to pay for it.
+pub fn gemv(m: &Matrix, v: &[f32], out: &mut [f32]) {
+    let threads = if m.rows * m.cols >= PAR_MIN_FLOPS { num_threads() } else { 1 };
+    gemv_threads(m, v, out, threads);
+}
+
+// ---------------------------------------------------------------------------
+// symmetric pairwise builds (gram, sqdist matrices)
+// ---------------------------------------------------------------------------
+
+/// Build the symmetric n×n matrix with `m[i][j] = f(i, j)` by evaluating
+/// the upper triangle and mirroring.  Rows are handed out by an atomic
+/// cursor (work stealing), which balances the shrinking triangle rows
+/// without unsafe shared writes: workers buffer `(row, values)` locally
+/// and the caller scatters after the join.  The buffering transiently
+/// holds a second copy of the upper triangle (~n²/2 extra f32) — fine at
+/// the per-class/chunk sizes this layer serves (n ≤ a few thousand);
+/// ground sets much beyond that should go through the XLA `sqdist_chunk`
+/// path instead.
+pub fn symmetric_pairwise_threads(
+    n: usize,
+    threads: usize,
+    f: impl Fn(usize, usize) -> f32 + Sync,
+) -> Matrix {
+    let mut m = Matrix::zeros(n, n);
+    if n == 0 {
+        return m;
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        for i in 0..n {
+            for j in i..n {
+                let v = f(i, j);
+                m.data[i * n + j] = v;
+                m.data[j * n + i] = v;
+            }
+        }
+        return m;
+    }
+    let cursor = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, Vec<f32>)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let mut local: Vec<(usize, Vec<f32>)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let row: Vec<f32> = (i..n).map(|j| f(i, j)).collect();
+                    local.push((i, row));
+                }
+                results.lock().unwrap().append(&mut local);
+            });
+        }
+    });
+    for (i, row) in results.into_inner().unwrap() {
+        for (off, v) in row.into_iter().enumerate() {
+            let j = i + off;
+            m.data[i * n + j] = v;
+            m.data[j * n + i] = v;
+        }
+    }
+    m
+}
+
+fn symmetric_threads_for(n: usize, flops_per_entry: usize) -> usize {
+    if n * n / 2 * flops_per_entry.max(1) >= PAR_MIN_FLOPS {
+        num_threads()
+    } else {
+        1
+    }
+}
+
+/// Gram matrix `A Aᵀ` (parallel twin of [`crate::tensor::gram`]).
+pub fn gram(a: &Matrix) -> Matrix {
+    symmetric_pairwise_threads(a.rows, symmetric_threads_for(a.rows, a.cols), |i, j| {
+        dot(a.row(i), a.row(j))
+    })
+}
+
+/// Symmetric pairwise squared-distance matrix over the rows of `a` — the
+/// CRAIG / facility-location similarity substrate.
+pub fn pairwise_sqdist(a: &Matrix) -> Matrix {
+    symmetric_pairwise_threads(a.rows, symmetric_threads_for(a.rows, a.cols), |i, j| {
+        sqdist(a.row(i), a.row(j))
+    })
+}
+
+// ---------------------------------------------------------------------------
+// clamped column sums (facility-location initial gains)
+// ---------------------------------------------------------------------------
+
+/// `out[j] = Σ_i max(m[i][j], 0)` in f64 — exactly the facility-location
+/// marginal gain of `j` under an empty selection, for every `j` at once.
+/// Parallel over column blocks (each worker owns a disjoint slice of the
+/// output and scans all rows for its columns).
+pub fn colsum_pos_threads(m: &Matrix, threads: usize) -> Vec<f64> {
+    let (rows, cols) = (m.rows, m.cols);
+    let mut out = vec![0.0f64; cols];
+    if cols == 0 || rows == 0 {
+        return out;
+    }
+    let threads = threads.clamp(1, cols);
+    let cols_per = cols.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (blk, chunk) in out.chunks_mut(cols_per).enumerate() {
+            let lo = blk * cols_per;
+            s.spawn(move || {
+                for i in 0..rows {
+                    let row = m.row(i);
+                    for (off, acc) in chunk.iter_mut().enumerate() {
+                        let v = row[lo + off];
+                        if v > 0.0 {
+                            *acc += v as f64;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Policy-driven [`colsum_pos_threads`].
+pub fn colsum_pos(m: &Matrix) -> Vec<f64> {
+    let threads = if m.rows * m.cols >= PAR_MIN_FLOPS { num_threads() } else { 1 };
+    colsum_pos_threads(m, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor;
+    use crate::testutil::forall;
+
+    fn close(a: f32, b: f32, what: &str) {
+        let tol = 1e-5 * (1.0 + b.abs());
+        assert!((a - b).abs() <= tol, "{what}: {a} vs {b} (tol {tol})");
+    }
+
+    #[test]
+    fn dot_matches_reference_across_shapes() {
+        forall(40, |g| {
+            let n = g.int(0, 257);
+            let a = g.gauss_vec(n);
+            let b = g.gauss_vec(n);
+            close(dot(&a, &b), tensor::dot(&a, &b), "dot");
+            close(norm2(&a), tensor::norm2(&a), "norm2");
+        });
+    }
+
+    #[test]
+    fn sqdist_matches_reference_across_shapes() {
+        forall(40, |g| {
+            let n = g.int(0, 203);
+            let a = g.gauss_vec(n);
+            let b = g.gauss_vec(n);
+            close(sqdist(&a, &b), tensor::sqdist(&a, &b), "sqdist");
+        });
+    }
+
+    #[test]
+    fn gemv_parallel_matches_scalar_reference() {
+        forall(25, |g| {
+            let rows = g.int(1, 90);
+            let cols = g.int(1, 40);
+            let m = g.matrix(rows, cols);
+            let v = g.gauss_vec(cols);
+            let mut want = vec![0.0f32; rows];
+            tensor::gemv(&m, &v, &mut want);
+            // force the threaded path even on tiny shapes
+            for threads in [1usize, 3, 8] {
+                let mut got = vec![0.0f32; rows];
+                gemv_threads(&m, &v, &mut got, threads);
+                for r in 0..rows {
+                    close(got[r], want[r], &format!("gemv t={threads} row {r}"));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn gemv_policy_entry_matches_reference_on_large_shape() {
+        // big enough to cross PAR_MIN_FLOPS and exercise the real policy
+        let mut rng = crate::rng::Rng::new(21);
+        let m = Matrix::from_vec(700, 128, (0..700 * 128).map(|_| rng.gaussian_f32()).collect());
+        let v: Vec<f32> = (0..128).map(|_| rng.gaussian_f32()).collect();
+        let mut want = vec![0.0f32; 700];
+        tensor::gemv(&m, &v, &mut want);
+        let mut got = vec![0.0f32; 700];
+        gemv(&m, &v, &mut got);
+        for r in 0..700 {
+            close(got[r], want[r], &format!("row {r}"));
+        }
+    }
+
+    #[test]
+    fn gram_matches_scalar_reference() {
+        forall(20, |g| {
+            let rows = g.int(1, 40);
+            let cols = g.int(1, 24);
+            let a = g.matrix(rows, cols);
+            let want = tensor::gram(&a);
+            for threads in [1usize, 4] {
+                let got = symmetric_pairwise_threads(rows, threads, |i, j| dot(a.row(i), a.row(j)));
+                for i in 0..rows {
+                    for j in 0..rows {
+                        close(got.at(i, j), want.at(i, j), &format!("gram t={threads} ({i},{j})"));
+                    }
+                }
+            }
+            let got = gram(&a);
+            for i in 0..rows {
+                close(got.at(i, i), want.at(i, i), "gram policy diag");
+            }
+        });
+    }
+
+    #[test]
+    fn pairwise_sqdist_matches_scalar_reference() {
+        forall(20, |g| {
+            let rows = g.int(1, 35);
+            let cols = g.int(1, 20);
+            let a = g.matrix(rows, cols);
+            for threads in [1usize, 5] {
+                let got =
+                    symmetric_pairwise_threads(rows, threads, |i, j| sqdist(a.row(i), a.row(j)));
+                for i in 0..rows {
+                    for j in 0..rows {
+                        let want = tensor::sqdist(a.row(i), a.row(j));
+                        close(got.at(i, j), want, &format!("sqdist t={threads} ({i},{j})"));
+                    }
+                    assert_eq!(got.at(i, i), 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn colsum_pos_matches_naive_clamped_sums() {
+        forall(25, |g| {
+            let rows = g.int(1, 40);
+            let cols = g.int(1, 30);
+            let m = g.matrix(rows, cols);
+            for threads in [1usize, 4] {
+                let got = colsum_pos_threads(&m, threads);
+                for j in 0..cols {
+                    let want: f64 =
+                        (0..rows).map(|i| (m.at(i, j).max(0.0)) as f64).sum();
+                    assert!(
+                        (got[j] - want).abs() <= 1e-6 * (1.0 + want.abs()),
+                        "col {j} t={threads}: {} vs {want}",
+                        got[j]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn empty_shapes_are_safe() {
+        let m = Matrix::zeros(0, 5);
+        let mut out = vec![];
+        gemv(&m, &[0.0; 5], &mut out);
+        assert!(symmetric_pairwise_threads(0, 4, |_, _| 0.0).data.is_empty());
+        assert!(colsum_pos(&Matrix::zeros(0, 0)).is_empty());
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn num_threads_is_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

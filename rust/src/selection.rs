@@ -106,14 +106,25 @@ pub fn split_budget(k: usize, sizes: &[usize]) -> Vec<usize> {
         rems.push((exact - base as f64, c));
     }
     rems.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // Hand out the remainder in largest-remainder order until it is gone
+    // or every class is saturated.  (A bounded `cycle().take(2·len)` pass
+    // could strand budget when only a few classes still had spare
+    // capacity; the progress guard makes exhaustion explicit.)
     let mut left = k.saturating_sub(assigned);
-    for &(_, c) in rems.iter().cycle().take(rems.len() * 2) {
-        if left == 0 {
-            break;
+    while left > 0 {
+        let mut progressed = false;
+        for &(_, c) in &rems {
+            if left == 0 {
+                break;
+            }
+            if out[c] < sizes[c] {
+                out[c] += 1;
+                left -= 1;
+                progressed = true;
+            }
         }
-        if out[c] < sizes[c] {
-            out[c] += 1;
-            left -= 1;
+        if !progressed {
+            break; // every class saturated — k exceeds the ground set
         }
     }
     out
@@ -303,16 +314,9 @@ impl Craig {
             }
             Ok(dist)
         } else {
-            // Rust fallback (per-gradient slices / tests)
-            let mut dist = Matrix::zeros(g.rows, g.rows);
-            for i in 0..g.rows {
-                for j in i..g.rows {
-                    let d = crate::tensor::sqdist(g.row(i), g.row(j));
-                    dist.set(i, j, d);
-                    dist.set(j, i, d);
-                }
-            }
-            Ok(dist)
+            // Rust fallback (per-gradient slices / tests) — parallel
+            // blocked pairwise distances
+            Ok(crate::par::pairwise_sqdist(g))
         }
     }
 
@@ -405,7 +409,7 @@ impl Strategy for Glister {
             }
             let store = grads::per_sample_grads(ctx.rt, ctx.state, ctx.train, rows)?;
             let mut scores = vec![0.0f32; store.g.rows];
-            crate::tensor::gemv(&store.g, &v, &mut scores);
+            crate::par::gemv(&store.g, &v, &mut scores);
             let mut order: Vec<usize> = (0..scores.len()).collect();
             order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
             for &j in order.iter().take(budgets[cls]) {
@@ -571,14 +575,7 @@ impl Strategy for FeatureFL {
                 continue;
             }
             let x = ctx.train.x.gather_rows(rows);
-            let mut dist = Matrix::zeros(rows.len(), rows.len());
-            for i in 0..rows.len() {
-                for j in i..rows.len() {
-                    let d = crate::tensor::sqdist(x.row(i), x.row(j));
-                    dist.set(i, j, d);
-                    dist.set(j, i, d);
-                }
-            }
+            let dist = crate::par::pairwise_sqdist(&x);
             let sim = sim_from_sqdist(&dist);
             let mut fl = FacilityLocation::new(&sim);
             let res = lazy_greedy(&mut fl, budgets[cls]);
@@ -655,6 +652,26 @@ mod tests {
         let b = split_budget(10, &[2, 100]);
         assert_eq!(b.iter().sum::<usize>(), 10);
         assert!(b[0] <= 2);
+    }
+
+    #[test]
+    fn split_budget_drains_leftovers_into_spare_capacity() {
+        // only one class has spare capacity — every leftover must land
+        // there, however many passes that takes
+        let b = split_budget(12, &[1, 1, 1, 40]);
+        assert_eq!(b.iter().sum::<usize>(), 12);
+        assert!(b[..3].iter().all(|&x| x <= 1));
+        // k ≥ total: saturate everything and terminate
+        assert_eq!(split_budget(30, &[10, 3]), vec![10, 3]);
+        // invariant sweep: Σout == min(k, Σsizes) and out[c] ≤ sizes[c]
+        for k in 0..=20 {
+            for sizes in [vec![0usize, 7, 2], vec![5, 5, 5], vec![1, 0, 13], vec![2, 2]] {
+                let total: usize = sizes.iter().sum();
+                let out = split_budget(k, &sizes);
+                assert_eq!(out.iter().sum::<usize>(), k.min(total), "k={k} sizes={sizes:?}");
+                assert!(out.iter().zip(&sizes).all(|(o, s)| o <= s), "k={k} sizes={sizes:?}");
+            }
+        }
     }
 
     #[test]

@@ -127,8 +127,11 @@ pub fn lazy_greedy(fl: &mut FacilityLocation<'_>, k: usize) -> GreedyResult {
     let k = k.min(n);
     let mut heap = BinaryHeap::with_capacity(n);
     let mut evals = 0usize;
-    for j in 0..n {
-        let g = fl.gain(j);
+    // Under the empty selection `cover` is all-zero, so every initial
+    // gain is the clamped column sum Σ_i max(sim[i][j], 0) — computed for
+    // all n columns at once on the parallel blocked layer (the O(n²)
+    // heap-seeding pass that used to dominate small-k builds).
+    for (j, g) in crate::par::colsum_pos(fl.sim).into_iter().enumerate() {
         evals += 1;
         heap.push(HeapItem { gain: g, item: j, round: 0 });
     }

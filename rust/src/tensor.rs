@@ -158,16 +158,30 @@ pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
     acc as f32
 }
 
-/// Index of the maximum value (first on ties). Panics on empty input.
+/// Index of the maximum value. Panics on empty input.
+///
+/// NaN-safe: NaN entries never win (every comparison with NaN is false,
+/// and a NaN is never adopted as the running best).  Ties keep the
+/// *first* occurrence.  If *every* entry is NaN, index 0 is returned —
+/// callers treating the result as "no signal" get a stable answer
+/// instead of whichever NaN happened to sit first in a naive scan.
 pub fn argmax(xs: &[f32]) -> usize {
     assert!(!xs.is_empty());
-    let mut best = 0;
+    let mut best: Option<usize> = None;
     for (i, &v) in xs.iter().enumerate() {
-        if v > xs[best] {
-            best = i;
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            None => best = Some(i),
+            Some(b) => {
+                if v > xs[b] {
+                    best = Some(i);
+                }
+            }
         }
     }
-    best
+    best.unwrap_or(0)
 }
 
 // ---------------------------------------------------------------------------
@@ -325,6 +339,22 @@ mod tests {
     fn sqdist_and_argmax() {
         approx(sqdist(&[0.0, 0.0], &[3.0, 4.0]), 25.0, 1e-6);
         assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn argmax_is_nan_safe() {
+        // NaN entries must never win, wherever they sit
+        assert_eq!(argmax(&[f32::NAN, 1.0, 3.0]), 2);
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(argmax(&[2.0, 7.0, f32::NAN]), 1);
+        // ties keep the first occurrence even after a leading NaN
+        assert_eq!(argmax(&[f32::NAN, 4.0, 4.0]), 1);
+        // negative values still beat "no candidate"
+        assert_eq!(argmax(&[f32::NAN, -2.0, -1.0, f32::NAN]), 2);
+        // all-NaN input degrades to index 0 (documented fallback)
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        // -inf/inf still behave
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::INFINITY]), 1);
     }
 
     #[test]

