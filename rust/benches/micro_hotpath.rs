@@ -8,17 +8,31 @@
 //! - end-to-end OMP: the seed per-round-GEMV solver vs the Batch-OMP
 //!   correlation recurrence, with identity checks on the selected
 //!   support (n=4096, P=256 — the acceptance ground set)
+//! - the **selection round**: serial-classes baseline (one gradient pass
+//!   + one target pass per class, serial solves) vs the staged fan-out
+//!   engine (single ground pass, class-parallel solves) at C ∈ {10, 100}
+//!   with imbalanced class sizes, on the synthetic gradient oracle —
+//!   with the staging-vs-solve speedup decomposition in the JSON notes
 //! - L3→PJRT `train_step` latency, gradient acquisition, Pallas
 //!   `corr_chunk`/`sqdist_chunk` vs Rust (skipped with a note when the
 //!   HLO artifacts / PJRT backend are unavailable)
 //! - lazy vs naive submodular greedy
 
 use gradmatch::bench_harness as bh;
-use gradmatch::data::DatasetCard;
-use gradmatch::omp::{omp_select, omp_select_ref, CorrBackend, OmpOpts, RustCorr, XlaCorr};
+use gradmatch::data::{Dataset, DatasetCard};
+use gradmatch::grads::{
+    class_columns, mean_gradient_with, per_sample_grads_with, stage_class_grads_with, StageWidth,
+    SynthGrads,
+};
+use gradmatch::omp::{
+    omp_select, omp_select_ref, omp_select_rust, CorrBackend, OmpOpts, RustCorr, XlaCorr,
+};
 use gradmatch::par;
 use gradmatch::rng::Rng;
 use gradmatch::runtime::Runtime;
+use gradmatch::selection::{
+    solve_classes_omp, split_budget, GradMatch, GradMatchVariant, SelectCtx, Selection, Strategy,
+};
 use gradmatch::submod::{lazy_greedy, naive_greedy, sim_from_sqdist, FacilityLocation};
 use gradmatch::tensor::{self, Matrix};
 
@@ -158,6 +172,190 @@ fn main() -> anyhow::Result<()> {
     );
     bh::shape_check("lazy greedy matches naive selection", lazy.selected == naive.selected);
 
+    // --- selection round: serial classes vs staged fan-out -------------------
+    // End-to-end per-class GRAD-MATCH rounds on the synthetic gradient
+    // oracle (dispatch-shaped cost, no device needed): the serial-classes
+    // baseline pays one padded gradient pass + one target pass per class
+    // and solves serially; the engine pays one staged ground pass and
+    // fans the solves out.  C=10 and C=100, imbalanced class sizes (the
+    // imbalance is exactly what makes per-class padding waste hurt).
+    bh::section(&format!(
+        "micro — selection round: serial classes vs staged fan-out ({} threads)",
+        par::num_threads()
+    ));
+    for &(c, heavy_n, small_n, tag) in
+        &[(10usize, 512usize, 96usize, "c10"), (100, 256, 32, "c100")]
+    {
+        let (h, d, chunk) = (32usize, 64usize, 256usize);
+        let p = h * c + c;
+        let heavy_classes = (c / 5).max(1);
+        let mut y: Vec<i32> = Vec::new();
+        for cls in 0..c {
+            let n_c = if cls < heavy_classes { heavy_n } else { small_n };
+            y.extend(std::iter::repeat(cls as i32).take(n_c));
+        }
+        let mut shuffle_rng = Rng::new(4242);
+        shuffle_rng.shuffle(&mut y);
+        let n = y.len();
+        let ds = Dataset {
+            x: Matrix::from_vec(n, d, (0..n * d).map(|_| shuffle_rng.gaussian_f32()).collect()),
+            y,
+            classes: c,
+        };
+        let ground: Vec<usize> = (0..n).collect();
+        let budget = (n / 10).max(c);
+        let (lambda, eps) = (0.5f32, 1e-12f32);
+
+        // class row lists + budgets are identical on both paths
+        let mut per_class: Vec<Vec<usize>> = vec![Vec::new(); c];
+        for &i in &ground {
+            per_class[ds.y[i] as usize].push(i);
+        }
+        let sizes: Vec<usize> = per_class.iter().map(Vec::len).collect();
+        let budgets = split_budget(budget, &sizes);
+
+        // the pre-engine serial round (per-class passes, serial solves)
+        let serial_round = || -> Selection {
+            let mut out = Selection::default();
+            for (cls, rows) in per_class.iter().enumerate() {
+                if rows.is_empty() || budgets[cls] == 0 {
+                    continue;
+                }
+                let mut oracle = SynthGrads::new(chunk, p);
+                let store = per_sample_grads_with(&mut oracle, &ds, rows).unwrap();
+                let target_full = mean_gradient_with(&mut oracle, &ds, rows).unwrap();
+                let cols = class_columns(h, c, cls);
+                let g = store.g.gather_cols(&cols);
+                let target: Vec<f32> = cols.iter().map(|&j| target_full[j]).collect();
+                let res = omp_select_rust(
+                    &g,
+                    &target,
+                    OmpOpts { k: budgets[cls], lambda, eps },
+                )
+                .unwrap();
+                let scale = rows.len() as f32;
+                for (slot, &j) in res.selected.iter().enumerate() {
+                    out.indices.push(rows[j]);
+                    out.weights.push(res.weights[slot] * scale);
+                }
+            }
+            out
+        };
+        // the engine round (one staged pass, class fan-out)
+        let fanout_round = || -> Selection {
+            let mut oracle = SynthGrads::new(chunk, p);
+            let stages = stage_class_grads_with(
+                &mut oracle,
+                &ds,
+                &ground,
+                h,
+                c,
+                StageWidth::ClassSlice,
+                true,
+            )
+            .unwrap();
+            let targets: Vec<Vec<f32>> = stages
+                .iter()
+                .enumerate()
+                .map(|(cls, s)| {
+                    class_columns(h, c, cls).iter().map(|&j| s.target_full[j]).collect()
+                })
+                .collect();
+            solve_classes_omp(&stages, &budgets, &targets, lambda, eps, true).unwrap()
+        };
+
+        let (round_serial, _) =
+            report.rec(&format!("round {tag} n={n} (serial classes)"), 3, serial_round);
+        let (round_fanout, _) =
+            report.rec(&format!("round {tag} n={n} (staged fan-out)"), 3, fanout_round);
+        let round_speedup = round_serial / round_fanout.max(1e-12);
+        report.note(&format!("round_speedup_{tag}"), round_speedup);
+
+        // decomposition: staging alone (acquisition passes) …
+        let (stage_serial, _) =
+            report.rec(&format!("round {tag} staging (per-class passes)"), 3, || {
+                let mut total = 0usize;
+                for rows in per_class.iter().filter(|r| !r.is_empty()) {
+                    let mut oracle = SynthGrads::new(chunk, p);
+                    let store = per_sample_grads_with(&mut oracle, &ds, rows).unwrap();
+                    let target = mean_gradient_with(&mut oracle, &ds, rows).unwrap();
+                    total += store.g.rows + target.len();
+                }
+                total
+            });
+        let (stage_fanout, _) =
+            report.rec(&format!("round {tag} staging (single pass)"), 3, || {
+                let mut oracle = SynthGrads::new(chunk, p);
+                stage_class_grads_with(&mut oracle, &ds, &ground, h, c, StageWidth::ClassSlice, true)
+                    .unwrap()
+                    .len()
+            });
+        report.note(
+            &format!("round_staging_speedup_{tag}"),
+            stage_serial / stage_fanout.max(1e-12),
+        );
+        // … and the solve fan-out alone (same staged inputs)
+        let mut oracle = SynthGrads::new(chunk, p);
+        let stages =
+            stage_class_grads_with(&mut oracle, &ds, &ground, h, c, StageWidth::ClassSlice, true)
+                .unwrap();
+        let targets: Vec<Vec<f32>> = stages
+            .iter()
+            .enumerate()
+            .map(|(cls, s)| class_columns(h, c, cls).iter().map(|&j| s.target_full[j]).collect())
+            .collect();
+        let (solve_serial, _) = report.rec(&format!("round {tag} solves (serial)"), 3, || {
+            solve_classes_omp(&stages, &budgets, &targets, lambda, eps, false).unwrap()
+        });
+        let (solve_fanout, _) = report.rec(&format!("round {tag} solves (fan-out)"), 3, || {
+            solve_classes_omp(&stages, &budgets, &targets, lambda, eps, true).unwrap()
+        });
+        report.note(
+            &format!("round_solve_speedup_{tag}"),
+            solve_serial / solve_fanout.max(1e-12),
+        );
+
+        // dispatch-count contract (also pinned by tests/round_engine.rs)
+        let mut count_oracle = SynthGrads::new(chunk, p);
+        stage_class_grads_with(&mut count_oracle, &ds, &ground, h, c, StageWidth::ClassSlice, true)
+            .unwrap();
+        let staged_dispatches = count_oracle.grad_calls + count_oracle.mean_calls;
+        let serial_dispatches: usize =
+            sizes.iter().filter(|&&s| s > 0).map(|&s| 2 * s.div_ceil(chunk)).sum();
+        report.note(&format!("round_dispatches_staged_{tag}"), staged_dispatches as f64);
+        report.note(&format!("round_dispatches_serial_{tag}"), serial_dispatches as f64);
+        bh::shape_check(
+            &format!(
+                "round {tag}: staged pass = ⌈n/chunk⌉ = {} dispatches (serial {})",
+                n.div_ceil(chunk),
+                serial_dispatches
+            ),
+            staged_dispatches == n.div_ceil(chunk),
+        );
+
+        // the fan-out path is pinned to the serial reference
+        let a = serial_round();
+        let b = fanout_round();
+        let supports_equal = a.indices == b.indices;
+        let weights_close = a
+            .weights
+            .iter()
+            .zip(&b.weights)
+            .all(|(x, y)| (x - y).abs() <= 1e-4 * (1.0 + y.abs()));
+        bh::shape_check(&format!("round {tag}: fan-out support == serial"), supports_equal);
+        bh::shape_check(&format!("round {tag}: fan-out weights within 1e-4"), weights_close);
+        report.note(
+            &format!("round_identical_support_{tag}"),
+            if supports_equal { 1.0 } else { 0.0 },
+        );
+        if tag == "c10" {
+            bh::shape_check(
+                &format!("round c10: staged fan-out >= 2x over serial classes ({round_speedup:.2}x)"),
+                round_speedup >= 2.0,
+            );
+        }
+    }
+
     // --- XLA/PJRT-backed sections (need HLO artifacts) -----------------------
     // A failure here must not discard the pure-Rust records above: note
     // it and still write the report.
@@ -265,6 +463,36 @@ fn xla_sections(rt: &Runtime, report: &mut bh::BenchReport) -> anyhow::Result<()
         report.rec(&format!("{model}/sqdist {0}x{0} (Rust parallel)", meta.chunk), 2, || {
             par::pairwise_sqdist(&a)
         });
+
+        // --- live selection round: serial classes vs staged fan-out -----------
+        let ground: Vec<usize> = (0..splits.train.len()).collect();
+        let live_round = |parallel: bool| {
+            let mut s =
+                GradMatch::new(GradMatchVariant::PerClassPerGradient, meta.batch, false);
+            s.parallel = parallel;
+            let mut sel_rng = Rng::new(99);
+            s.select(&mut SelectCtx {
+                rt,
+                state: &st,
+                train: &splits.train,
+                ground: &ground,
+                val: &splits.val,
+                budget: (ground.len() / 10).max(1),
+                lambda: 0.5,
+                eps: 1e-10,
+                is_valid: false,
+                rng: &mut sel_rng,
+            })
+            .unwrap()
+        };
+        let (live_serial, _) = report
+            .rec(&format!("{model}/round gradmatch (serial classes)"), 3, || live_round(false));
+        let (live_fanout, _) = report
+            .rec(&format!("{model}/round gradmatch (staged fan-out)"), 3, || live_round(true));
+        report.note(
+            &format!("{model}/round_live_speedup"),
+            live_serial / live_fanout.max(1e-12),
+        );
     }
     Ok(())
 }

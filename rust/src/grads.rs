@@ -3,13 +3,154 @@
 //! per-sample last-layer gradients, per-mini-batch (PB) aggregates,
 //! per-class column slices (the paper's per-class-per-gradient
 //! approximation), and mean/target gradients.
+//!
+//! # Single-pass class-sliced staging
+//!
+//! Per-class strategies used to issue one padded `grads_chunk` pass *per
+//! class* (each paying its own chunk-padding waste) plus a second
+//! `mean_grad_chunk` pass per class for the train-side target —
+//! `Σ_c ⌈n_c/chunk⌉ + Σ_c ⌈n_c/chunk⌉` runtime dispatches per selection
+//! round.  [`stage_class_grads`] replaces all of that with **one** padded
+//! pass over the full ground set (`⌈|ground|/chunk⌉` dispatches): each
+//! live row's gradient is scattered directly into its class's staged
+//! matrix (the `(H+1)`-dim class column slice, or the full-P row for the
+//! PerClass variant), and the per-class train-side targets fall out
+//! for free as f64-accumulated column means of the same pass.  GLISTER
+//! needs only the scalar Taylor gains, so it streams through
+//! [`score_grads`] (same one-pass dispatch count, O(chunk·P) transient
+//! memory).  The [`GradOracle`] seam keeps every pass testable without a
+//! device — the dispatch-count contract above is pinned by a counting
+//! oracle in `tests/round_engine.rs`.
+//!
+//! Memory: staging holds all classes at once — `[|ground|, H+1]` on the
+//! per-gradient path (cheaper than the old transient full-P stores), or
+//! `[|ground|, P]` on the PerClass full-P path (the old path's *peak*
+//! was one class at a time; set `GradMatch::parallel = false` to fall
+//! back to the serial per-class passes on memory-constrained full-P
+//! runs — the paper-default per-gradient variant never pays this).
 
 use anyhow::Result;
 
-use crate::data::{padded_chunks, Dataset};
+use crate::data::{padded_chunks, Dataset, PaddedChunk};
 use crate::par::{dot, norm2};
 use crate::runtime::{ModelState, Runtime};
 use crate::tensor::{axpy, Matrix};
+
+/// Chunk-level gradient oracle: the runtime entry points an acquisition
+/// pass may dispatch, behind a seam so tests and benches can substitute
+/// synthetic ([`SynthGrads`]) or counting implementations.  Production
+/// code goes through [`RtGrads`] (the AOT'd executables).
+pub trait GradOracle {
+    /// fixed rows of every padded dispatch (the executables' static shape)
+    fn chunk_rows(&self) -> usize;
+    /// last-layer gradient dimension P
+    fn p(&self) -> usize;
+    /// per-sample last-layer gradients of one padded chunk → `[chunk, P]`
+    fn grads_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix>;
+    /// masked gradient *sum* of one padded chunk → `[P]` (fused fast path)
+    fn mean_grad_chunk(&mut self, chunk: &PaddedChunk) -> Result<Vec<f32>>;
+}
+
+/// The production oracle: a model snapshot driven through the runtime.
+pub struct RtGrads<'a> {
+    pub rt: &'a Runtime,
+    pub st: &'a ModelState,
+}
+
+impl GradOracle for RtGrads<'_> {
+    fn chunk_rows(&self) -> usize {
+        self.st.meta.chunk
+    }
+
+    fn p(&self) -> usize {
+        self.st.meta.p
+    }
+
+    fn grads_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
+        self.rt.grads_chunk(self.st, &chunk.x, &chunk.y, &chunk.mask)
+    }
+
+    fn mean_grad_chunk(&mut self, chunk: &PaddedChunk) -> Result<Vec<f32>> {
+        self.rt.mean_grad_chunk(self.st, &chunk.x, &chunk.y, &chunk.mask)
+    }
+}
+
+/// Deterministic synthetic oracle for tests and benches: pseudo-gradients
+/// computed host-side from the chunk contents, with dispatch-shaped cost
+/// (every call runs over the full *padded* shape, like the fixed-shape
+/// executables) and per-entry-point call counters.  A row's gradient
+/// depends only on its `(x, y)` values, so staged and per-class passes
+/// see bit-identical rows regardless of chunking.
+pub struct SynthGrads {
+    pub chunk: usize,
+    pub p: usize,
+    /// `grads_chunk` dispatches issued
+    pub grad_calls: usize,
+    /// `mean_grad_chunk` dispatches issued
+    pub mean_calls: usize,
+}
+
+impl SynthGrads {
+    pub fn new(chunk: usize, p: usize) -> Self {
+        SynthGrads { chunk, p, grad_calls: 0, mean_calls: 0 }
+    }
+
+    fn compute(&self, chunk: &PaddedChunk) -> Matrix {
+        let d = chunk.x.len() / self.chunk;
+        let mut out = Matrix::zeros(self.chunk, self.p);
+        // every slot is computed — padded slots have zeroed inputs and so
+        // produce zero rows, but they still cost flops, mirroring the
+        // fixed-shape executables (a dispatch pays for the whole padded
+        // chunk however few rows are live — the waste the staged
+        // single-pass engine eliminates)
+        for slot in 0..self.chunk {
+            let x = &chunk.x[slot * d..(slot + 1) * d];
+            let (mut a0, mut a1) = (0.0f32, 0.0f32);
+            for (j, &v) in x.iter().enumerate() {
+                if j % 2 == 0 {
+                    a0 += v;
+                } else {
+                    a1 -= v;
+                }
+            }
+            // cheap deterministic basis (integer hash, no transcendentals
+            // — the bench runs millions of these entries)
+            let label = chunk.y[slot] as usize;
+            let row = out.row_mut(slot);
+            for (j, r) in row.iter_mut().enumerate() {
+                let t1 = ((j * 37 + label * 17) % 101) as f32 * 0.02 - 1.0;
+                let t2 = ((j * 11 + label * 29) % 97) as f32 * 0.02 - 0.97;
+                *r = a0 * t1 + a1 * t2;
+            }
+        }
+        out
+    }
+}
+
+impl GradOracle for SynthGrads {
+    fn chunk_rows(&self) -> usize {
+        self.chunk
+    }
+
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn grads_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
+        self.grad_calls += 1;
+        Ok(self.compute(chunk))
+    }
+
+    fn mean_grad_chunk(&mut self, chunk: &PaddedChunk) -> Result<Vec<f32>> {
+        self.mean_calls += 1;
+        let gm = self.compute(chunk);
+        let mut sum = vec![0.0f32; self.p];
+        for slot in 0..chunk.live {
+            axpy(1.0, gm.row(slot), &mut sum);
+        }
+        Ok(sum)
+    }
+}
 
 /// Per-sample gradients for a set of dataset rows.
 #[derive(Clone, Debug)]
@@ -28,11 +169,20 @@ pub fn per_sample_grads(
     ds: &Dataset,
     indices: &[usize],
 ) -> Result<GradientStore> {
-    let meta = &st.meta;
-    let mut g = Matrix::zeros(indices.len(), meta.p);
+    per_sample_grads_with(&mut RtGrads { rt, st }, ds, indices)
+}
+
+/// [`per_sample_grads`] over an explicit oracle.
+pub fn per_sample_grads_with(
+    oracle: &mut dyn GradOracle,
+    ds: &Dataset,
+    indices: &[usize],
+) -> Result<GradientStore> {
+    let (rows, p) = (oracle.chunk_rows(), oracle.p());
+    let mut g = Matrix::zeros(indices.len(), p);
     let mut cursor = 0usize;
-    for chunk in padded_chunks(ds, indices, meta.chunk) {
-        let gm = rt.grads_chunk(st, &chunk.x, &chunk.y, &chunk.mask)?;
+    for chunk in padded_chunks(ds, indices, rows) {
+        let gm = oracle.grads_chunk(&chunk)?;
         for slot in 0..chunk.live {
             g.row_mut(cursor).copy_from_slice(gm.row(slot));
             cursor += 1;
@@ -51,10 +201,19 @@ pub fn mean_gradient(
     ds: &Dataset,
     indices: &[usize],
 ) -> Result<Vec<f32>> {
-    let meta = &st.meta;
-    let mut acc = vec![0.0f32; meta.p];
-    for chunk in padded_chunks(ds, indices, meta.chunk) {
-        let partial = rt.mean_grad_chunk(st, &chunk.x, &chunk.y, &chunk.mask)?;
+    mean_gradient_with(&mut RtGrads { rt, st }, ds, indices)
+}
+
+/// [`mean_gradient`] over an explicit oracle.
+pub fn mean_gradient_with(
+    oracle: &mut dyn GradOracle,
+    ds: &Dataset,
+    indices: &[usize],
+) -> Result<Vec<f32>> {
+    let (rows, p) = (oracle.chunk_rows(), oracle.p());
+    let mut acc = vec![0.0f32; p];
+    for chunk in padded_chunks(ds, indices, rows) {
+        let partial = oracle.mean_grad_chunk(&chunk)?;
         axpy(1.0, &partial, &mut acc);
     }
     let n = indices.len().max(1) as f32;
@@ -62,6 +221,208 @@ pub fn mean_gradient(
         *v /= n;
     }
     Ok(acc)
+}
+
+// ---------------------------------------------------------------------------
+// single-pass class-sliced staging (the parallel round engine's feed)
+// ---------------------------------------------------------------------------
+
+/// Which per-class matrix the staged pass scatters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageWidth {
+    /// the `(H+1)`-dim class column slice — the paper's per-gradient
+    /// approximation (GRAD-MATCH default, CRAIG per-class)
+    ClassSlice,
+    /// the full P-dim last-layer gradient (PerClass variant, GLISTER)
+    Full,
+}
+
+/// One class's slice of the staged single-pass gradient store.
+#[derive(Clone, Debug)]
+pub struct ClassStage {
+    /// `[n_c, width]` staged gradients (width = H+1 or P), rows in ground
+    /// order
+    pub g: Matrix,
+    /// dataset row per staged row (same order as `g`)
+    pub rows: Vec<usize>,
+    /// full-P mean gradient of this class's rows — the train-side
+    /// matching target, free as the f64-accumulated column means of the
+    /// staged pass.  All-zero when the class is empty; **empty** when the
+    /// stage was built with `want_targets = false` (callers like CRAIG
+    /// that never match a target skip the O(n·P) accumulation).
+    pub target_full: Vec<f32>,
+}
+
+/// Stage per-class gradient matrices — and, when `want_targets`,
+/// train-side class targets — from one padded pass over `ground` (see
+/// the module docs for the dispatch-count contract).  Returns one
+/// [`ClassStage`] per class `0..c`; classes absent from `ground` get an
+/// empty stage.
+pub fn stage_class_grads(
+    rt: &Runtime,
+    st: &ModelState,
+    ds: &Dataset,
+    ground: &[usize],
+    width: StageWidth,
+    want_targets: bool,
+) -> Result<Vec<ClassStage>> {
+    let (h, c) = (st.meta.h, st.meta.c);
+    stage_class_grads_with(&mut RtGrads { rt, st }, ds, ground, h, c, width, want_targets)
+}
+
+/// [`stage_class_grads`] over an explicit oracle (`h`/`c` give the class
+/// column layout; the oracle's P must equal `h*c + c`).
+pub fn stage_class_grads_with(
+    oracle: &mut dyn GradOracle,
+    ds: &Dataset,
+    ground: &[usize],
+    h: usize,
+    c: usize,
+    width: StageWidth,
+    want_targets: bool,
+) -> Result<Vec<ClassStage>> {
+    let (chunk_rows, p) = (oracle.chunk_rows(), oracle.p());
+    // exact per-class allocations up front (ground order == scatter order)
+    let mut sizes = vec![0usize; c];
+    for &i in ground {
+        sizes[ds.y[i] as usize] += 1;
+    }
+    let w = match width {
+        StageWidth::ClassSlice => h + 1,
+        StageWidth::Full => p,
+    };
+    let slice_cols: Vec<Vec<usize>> = match width {
+        StageWidth::ClassSlice => (0..c).map(|cls| class_columns(h, c, cls)).collect(),
+        StageWidth::Full => Vec::new(),
+    };
+    let mut gs: Vec<Matrix> = sizes.iter().map(|&n| Matrix::zeros(n, w)).collect();
+    let mut rows: Vec<Vec<usize>> = sizes.iter().map(|&n| Vec::with_capacity(n)).collect();
+    let mut acc: Vec<Vec<f64>> =
+        if want_targets { (0..c).map(|_| vec![0.0f64; p]).collect() } else { Vec::new() };
+    let mut cursor = vec![0usize; c];
+    for chunk in padded_chunks(ds, ground, chunk_rows) {
+        let gm = oracle.grads_chunk(&chunk)?;
+        for slot in 0..chunk.live {
+            let idx = chunk.indices[slot];
+            let cls = ds.y[idx] as usize;
+            let src = gm.row(slot);
+            let dst = gs[cls].row_mut(cursor[cls]);
+            match width {
+                StageWidth::Full => dst.copy_from_slice(src),
+                StageWidth::ClassSlice => {
+                    for (o, &j) in slice_cols[cls].iter().enumerate() {
+                        dst[o] = src[j];
+                    }
+                }
+            }
+            if want_targets {
+                for (a, &v) in acc[cls].iter_mut().zip(src.iter()) {
+                    *a += v as f64;
+                }
+            }
+            rows[cls].push(idx);
+            cursor[cls] += 1;
+        }
+    }
+    debug_assert_eq!(cursor, sizes);
+    let mut out = Vec::with_capacity(c);
+    for (cls, (g, r)) in gs.into_iter().zip(rows).enumerate() {
+        let target_full: Vec<f32> = if want_targets {
+            let n = r.len().max(1) as f64;
+            acc[cls].iter().map(|&v| (v / n) as f32).collect()
+        } else {
+            Vec::new()
+        };
+        out.push(ClassStage { g, rows: r, target_full });
+    }
+    Ok(out)
+}
+
+/// Per-sample scores `g_i · v` for every row of `indices`, streamed
+/// chunk-by-chunk from **one** padded pass (GLISTER's Taylor gains
+/// against the validation gradient): `⌈n/chunk⌉` dispatches and
+/// O(chunk·P) transient memory — the `[n, P]` per-sample store is never
+/// materialized.  Scores come back in `indices` order.
+pub fn score_grads(
+    rt: &Runtime,
+    st: &ModelState,
+    ds: &Dataset,
+    indices: &[usize],
+    v: &[f32],
+) -> Result<Vec<f32>> {
+    score_grads_with(&mut RtGrads { rt, st }, ds, indices, v)
+}
+
+/// [`score_grads`] over an explicit oracle.
+pub fn score_grads_with(
+    oracle: &mut dyn GradOracle,
+    ds: &Dataset,
+    indices: &[usize],
+    v: &[f32],
+) -> Result<Vec<f32>> {
+    let chunk_rows = oracle.chunk_rows();
+    let mut out = Vec::with_capacity(indices.len());
+    let mut buf = vec![0.0f32; chunk_rows];
+    for chunk in padded_chunks(ds, indices, chunk_rows) {
+        let gm = oracle.grads_chunk(&chunk)?;
+        crate::par::gemv(&gm, v, &mut buf);
+        out.extend_from_slice(&buf[..chunk.live]);
+    }
+    Ok(out)
+}
+
+/// Per-class full-P mean gradients over `rows` of `ds` in **one** padded
+/// pass of the `grads_chunk` entry.  Classes absent from `rows` yield
+/// `None`.
+///
+/// Dispatch-vs-readback tradeoff: this replaces `Σ_c ⌈n_c/chunk⌉` fused
+/// `mean_grad_chunk` dispatches with `⌈n/chunk⌉` `grads_chunk`
+/// dispatches, but each readback grows from `[P]` to `[chunk, P]` —
+/// ~chunk× more device-to-host bytes.  Use it where the oracle is
+/// host-side (tests/benches) or readback is cheap; the GRAD-MATCH
+/// staged round keeps the fused per-class means for its validation
+/// targets precisely because readback dominates on real PJRT backends.
+pub fn class_mean_gradients(
+    rt: &Runtime,
+    st: &ModelState,
+    ds: &Dataset,
+    rows: &[usize],
+    c: usize,
+) -> Result<Vec<Option<Vec<f32>>>> {
+    class_mean_gradients_with(&mut RtGrads { rt, st }, ds, rows, c)
+}
+
+/// [`class_mean_gradients`] over an explicit oracle.
+pub fn class_mean_gradients_with(
+    oracle: &mut dyn GradOracle,
+    ds: &Dataset,
+    rows: &[usize],
+    c: usize,
+) -> Result<Vec<Option<Vec<f32>>>> {
+    let (chunk_rows, p) = (oracle.chunk_rows(), oracle.p());
+    let mut acc: Vec<Vec<f64>> = (0..c).map(|_| vec![0.0f64; p]).collect();
+    let mut count = vec![0usize; c];
+    for chunk in padded_chunks(ds, rows, chunk_rows) {
+        let gm = oracle.grads_chunk(&chunk)?;
+        for slot in 0..chunk.live {
+            let cls = ds.y[chunk.indices[slot]] as usize;
+            for (a, &v) in acc[cls].iter_mut().zip(gm.row(slot)) {
+                *a += v as f64;
+            }
+            count[cls] += 1;
+        }
+    }
+    Ok(acc
+        .into_iter()
+        .zip(count)
+        .map(|(a, n)| {
+            if n == 0 {
+                None
+            } else {
+                Some(a.iter().map(|&v| (v / n as f64) as f32).collect())
+            }
+        })
+        .collect())
 }
 
 /// Per-mini-batch mean gradients computed with the **device-side group
@@ -173,6 +534,117 @@ pub fn match_cosine(g_sel: &Matrix, weights: &[f32], target: &[f32]) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Rng;
+
+    /// Tiny synthetic dataset with the given class labels.
+    fn toy_dataset(d: usize, y: Vec<i32>, classes: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let n = y.len();
+        let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian_f32()).collect());
+        Dataset { x, y, classes }
+    }
+
+    #[test]
+    fn synth_oracle_rows_are_chunking_invariant() {
+        // the same dataset row must produce the same pseudo-gradient
+        // whatever chunk it lands in — the property the staging
+        // equivalence tests lean on
+        let (h, c) = (3usize, 2usize);
+        let p = h * c + c;
+        let ds = toy_dataset(5, vec![0, 1, 1, 0, 1, 0, 0], 2, 9);
+        let idx: Vec<usize> = (0..7).collect();
+        let mut o_small = SynthGrads::new(2, p);
+        let mut o_big = SynthGrads::new(16, p);
+        let a = per_sample_grads_with(&mut o_small, &ds, &idx).unwrap();
+        let b = per_sample_grads_with(&mut o_big, &ds, &idx).unwrap();
+        assert_eq!(a.g.data, b.g.data);
+        assert_eq!(o_small.grad_calls, 4); // ⌈7/2⌉
+        assert_eq!(o_big.grad_calls, 1); // ⌈7/16⌉
+        assert_eq!(o_small.mean_calls, 0);
+    }
+
+    #[test]
+    fn staged_pass_scatters_rows_in_ground_order() {
+        let (h, c) = (2usize, 3usize);
+        let p = h * c + c;
+        let ds = toy_dataset(4, vec![2, 0, 1, 2, 0, 1, 2, 0], 3, 11);
+        let ground = vec![6usize, 1, 3, 4, 0, 7];
+        let mut oracle = SynthGrads::new(4, p);
+        let stages =
+            stage_class_grads_with(&mut oracle, &ds, &ground, h, c, StageWidth::Full, true)
+                .unwrap();
+        assert_eq!(stages.len(), 3);
+        // class 0 rows in ground order: 1, 4, 7; class 2: 6, 3, 0
+        assert_eq!(stages[0].rows, vec![1, 4, 7]);
+        assert_eq!(stages[1].rows, Vec::<usize>::new());
+        assert_eq!(stages[2].rows, vec![6, 3, 0]);
+        assert_eq!(stages[0].g.rows, 3);
+        assert_eq!(stages[0].g.cols, p);
+        // empty class: empty stage, zero target
+        assert_eq!(stages[1].g.rows, 0);
+        assert!(stages[1].target_full.iter().all(|&v| v == 0.0));
+        // exactly one padded pass: ⌈6/4⌉ = 2 dispatches, no mean calls
+        assert_eq!(oracle.grad_calls, 2);
+        assert_eq!(oracle.mean_calls, 0);
+        // target accumulation is opt-in: without it the scatter is
+        // identical and target_full stays empty
+        let mut no_t = SynthGrads::new(4, p);
+        let lean =
+            stage_class_grads_with(&mut no_t, &ds, &ground, h, c, StageWidth::Full, false)
+                .unwrap();
+        for (a, b) in lean.iter().zip(&stages) {
+            assert_eq!(a.g.data, b.g.data);
+            assert_eq!(a.rows, b.rows);
+            assert!(a.target_full.is_empty());
+        }
+    }
+
+    #[test]
+    fn staged_targets_match_per_class_means() {
+        let (h, c) = (3usize, 2usize);
+        let p = h * c + c;
+        let ds = toy_dataset(6, vec![0, 1, 0, 1, 0, 1, 0, 0, 1, 0], 2, 13);
+        let ground: Vec<usize> = (0..10).collect();
+        let mut oracle = SynthGrads::new(3, p);
+        let stages =
+            stage_class_grads_with(&mut oracle, &ds, &ground, h, c, StageWidth::ClassSlice, true)
+                .unwrap();
+        for cls in 0..c {
+            let mut mean_oracle = SynthGrads::new(3, p);
+            let want = mean_gradient_with(&mut mean_oracle, &ds, &stages[cls].rows).unwrap();
+            assert!(mean_oracle.mean_calls > 0);
+            for (a, b) in stages[cls].target_full.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+            // staged slice matches the gathered per-class store
+            let mut ps_oracle = SynthGrads::new(3, p);
+            let store = per_sample_grads_with(&mut ps_oracle, &ds, &stages[cls].rows).unwrap();
+            let cols = class_columns(h, c, cls);
+            assert_eq!(stages[cls].g.data, store.g.gather_cols(&cols).data);
+        }
+    }
+
+    #[test]
+    fn class_mean_gradients_single_pass_matches_filtered_means() {
+        let (h, c) = (2usize, 3usize);
+        let p = h * c + c;
+        let ds = toy_dataset(5, vec![0, 2, 0, 2, 2, 0], 3, 17);
+        let rows: Vec<usize> = (0..6).collect();
+        let mut oracle = SynthGrads::new(4, p);
+        let means = class_mean_gradients_with(&mut oracle, &ds, &rows, c).unwrap();
+        assert_eq!(oracle.grad_calls, 2); // ⌈6/4⌉
+        assert!(means[1].is_none(), "class 1 absent");
+        for cls in [0usize, 2] {
+            let class_rows: Vec<usize> =
+                rows.iter().copied().filter(|&i| ds.y[i] as usize == cls).collect();
+            let mut ref_oracle = SynthGrads::new(4, p);
+            let want = mean_gradient_with(&mut ref_oracle, &ds, &class_rows).unwrap();
+            let got = means[cls].as_ref().unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "cls {cls}: {a} vs {b}");
+            }
+        }
+    }
 
     #[test]
     fn class_columns_layout() {

@@ -40,13 +40,26 @@
 //! row `g_new` instead of a fresh residual every round, and skip rounds
 //! touch the device not at all.
 //!
+//! ## Gram-update batching
+//!
+//! The Cholesky-extend step needs the dots of every support row against
+//! the candidate atom (`sel_rows[i]·g_new`, `O(s·P)` per round).  The
+//! support is stored as one *growing row-major matrix* (`sel_mat`, rows
+//! appended contiguously per accepted atom), so those dots are a single
+//! [`crate::par::gemv`] over the support instead of a serial per-row
+//! loop — row-parallel once `s·P` crosses the flop floor, and exactly the
+//! same per-row `par::dot` arithmetic either way.  Under the selection
+//! round's class-level fan-out the GEMV degrades to serial per the
+//! [`crate::par`] depth guard, so class tasks never nest spawns.
+//!
 //! The per-round hot spot stays abstracted behind [`CorrBackend`] so the
 //! same solver runs against the XLA/Pallas `corr_chunk` executable (the
 //! production path) or the parallel Rust GEMV (per-class slices, tests,
 //! benches).  The support re-fit uses an incrementally-extended Cholesky
 //! factor: O(k²) per round instead of re-factorizing in O(k³).
-//! [`omp_select_ref`] preserves the seed per-round-GEMV solver as the
-//! equivalence/benchmark baseline.
+//! [`omp_select_ref`] preserves the seed per-round-GEMV solver (with the
+//! seed's serial per-row support dots) as the equivalence/benchmark
+//! baseline.
 
 use anyhow::{anyhow, Result};
 
@@ -190,7 +203,9 @@ pub fn omp_select(
     let n = backend.len();
     let k = opts.k.min(n);
     let mut selected: Vec<usize> = Vec::with_capacity(k);
-    let mut sel_rows: Vec<Vec<f32>> = Vec::with_capacity(k);
+    // support rows, stored contiguously row-major so the Cholesky-extend
+    // support dots batch through one GEMV (see the module docs)
+    let mut sel_mat = Matrix { rows: 0, cols: target.len(), data: Vec::with_capacity(k * target.len()) };
     let mut weights: Vec<f32> = Vec::new();
     let mut taken = vec![false; n];
     let mut chol = CholFactor::empty();
@@ -252,8 +267,11 @@ pub fn omp_select(
         taken[best] = true;
         let g_new = row(best);
 
-        // extend (G_S G_Sᵀ + λI) Cholesky by the new candidate
-        let mut new_row: Vec<f64> = sel_rows.iter().map(|r| par::dot(r, &g_new) as f64).collect();
+        // extend (G_S G_Sᵀ + λI) Cholesky by the new candidate — the
+        // support dots batched as one GEMV over the row-major support
+        let mut support_dots = vec![0.0f32; sel_mat.rows];
+        par::gemv(&sel_mat, &g_new, &mut support_dots);
+        let mut new_row: Vec<f64> = support_dots.iter().map(|&v| v as f64).collect();
         new_row.push(par::dot(&g_new, &g_new) as f64 + opts.lambda as f64);
         if chol.extend(&new_row).is_err() {
             // numerically dependent candidate — skip it and continue (no
@@ -264,18 +282,19 @@ pub fn omp_select(
         selected.push(best);
         // the one GEMV per accepted atom: κ = G·g_new
         gram_cols.push(backend.corr(&g_new)?);
-        sel_rows.push(g_new);
+        sel_mat.data.extend_from_slice(&g_new);
+        sel_mat.rows += 1;
 
         // re-fit weights on the grown support, recompute residual
         let w64 = chol.solve(&rhs)?;
         weights = w64.iter().map(|&v| v as f32).collect();
         residual.copy_from_slice(target);
-        for (r, &w) in sel_rows.iter().zip(&weights) {
-            crate::tensor::axpy(-w, r, &mut residual);
+        for (i, &w) in weights.iter().enumerate() {
+            crate::tensor::axpy(-w, sel_mat.row(i), &mut residual);
         }
     }
 
-    finish(sel_rows, selected, weights, residual, target, opts, iters)
+    finish(sel_mat, selected, weights, residual, target, opts, iters)
 }
 
 /// Seed solver: the per-round residual GEMV formulation (`corr = G·r`
@@ -292,7 +311,9 @@ pub fn omp_select_ref(
     let n = backend.len();
     let k = opts.k.min(n);
     let mut selected: Vec<usize> = Vec::with_capacity(k);
-    let mut sel_rows: Vec<Vec<f32>> = Vec::with_capacity(k);
+    // same row-major support storage as the production solver (storage
+    // only — the seed's serial per-row support dots are kept below)
+    let mut sel_mat = Matrix { rows: 0, cols: target.len(), data: Vec::with_capacity(k * target.len()) };
     let mut weights: Vec<f32> = Vec::new();
     let mut taken = vec![false; n];
     let mut chol = CholFactor::empty();
@@ -325,29 +346,33 @@ pub fn omp_select_ref(
         taken[best] = true;
         let g_new = row(best);
 
-        let mut new_row: Vec<f64> = sel_rows.iter().map(|r| dot(r, &g_new) as f64).collect();
+        // the seed's serial per-row support-dot loop (the batched twin is
+        // omp_select's par::gemv — the micro benches compare the two)
+        let mut new_row: Vec<f64> =
+            (0..sel_mat.rows).map(|i| dot(sel_mat.row(i), &g_new) as f64).collect();
         new_row.push(dot(&g_new, &g_new) as f64 + opts.lambda as f64);
         if chol.extend(&new_row).is_err() {
             continue;
         }
         rhs.push(dot(&g_new, target) as f64);
         selected.push(best);
-        sel_rows.push(g_new);
+        sel_mat.data.extend_from_slice(&g_new);
+        sel_mat.rows += 1;
 
         let w64 = chol.solve(&rhs)?;
         weights = w64.iter().map(|&v| v as f32).collect();
         residual.copy_from_slice(target);
-        for (r, &w) in sel_rows.iter().zip(&weights) {
-            crate::tensor::axpy(-w, r, &mut residual);
+        for (i, &w) in weights.iter().enumerate() {
+            crate::tensor::axpy(-w, sel_mat.row(i), &mut residual);
         }
     }
 
-    finish(sel_rows, selected, weights, residual, target, opts, iters)
+    finish(sel_mat, selected, weights, residual, target, opts, iters)
 }
 
 /// Shared tail: CORDS-style non-negativity fixup + result assembly.
 fn finish(
-    sel_rows: Vec<Vec<f32>>,
+    sel_mat: Matrix,
     selected: Vec<usize>,
     mut weights: Vec<f32>,
     mut residual: Vec<f32>,
@@ -356,15 +381,11 @@ fn finish(
     iters: usize,
 ) -> Result<OmpResult> {
     if weights.iter().any(|&w| w < 0.0) {
-        let mut g_sel = Matrix::zeros(sel_rows.len(), target.len());
-        for (slot, r) in sel_rows.iter().enumerate() {
-            g_sel.row_mut(slot).copy_from_slice(r);
-        }
-        weights = crate::linalg::ridge_weights_nonneg(&g_sel, target, opts.lambda)
+        weights = crate::linalg::ridge_weights_nonneg(&sel_mat, target, opts.lambda)
             .map_err(|e| anyhow!("omp nonneg re-solve: {e}"))?;
         residual.copy_from_slice(target);
-        for (r, &w) in sel_rows.iter().zip(&weights) {
-            crate::tensor::axpy(-w, r, &mut residual);
+        for (i, &w) in weights.iter().enumerate() {
+            crate::tensor::axpy(-w, sel_mat.row(i), &mut residual);
         }
     }
 

@@ -11,13 +11,32 @@
 //!   accumulator);
 //! - [`gemv`] — chunked row-parallel GEMV over scoped threads (the OMP
 //!   ground-set correlation `G·v`, the Batch-OMP Gram columns `G·g_s`,
-//!   and GLISTER's Taylor scores);
+//!   the batched Cholesky-extend support dots, and GLISTER's Taylor
+//!   scores);
 //! - [`gram`] / [`pairwise_sqdist`] — symmetric pairwise builds with
 //!   row-level work stealing (an atomic cursor hands out rows, so the
 //!   shrinking-triangle imbalance is absorbed), used by the ridge re-fit
 //!   normal matrix and the CRAIG / facility-location similarity builds;
 //! - [`colsum_pos`] — clamped column sums, the facility-location initial
-//!   gains (`cover = 0`), parallel over column blocks.
+//!   gains (`cover = 0`), parallel over column blocks;
+//! - [`map_tasks`] / [`for_chunks`] — the *task* substrate of the parallel
+//!   selection-round engine: coarse class-level closures fan out across
+//!   scoped workers with work stealing and deterministic (input-order)
+//!   results.
+//!
+//! # Two levels of parallelism, one machine
+//!
+//! The selection round exposes parallelism at two altitudes: *inside* a
+//! kernel (rows of one GEMV) and *across classes* (independent per-class
+//! OMP / facility-location solves).  Running both at once oversubscribes
+//! the cores, so every worker spawned by [`map_tasks`] is marked with a
+//! thread-local depth flag ([`in_task`]) and every policy-driven kernel
+//! entry point ([`gemv`], [`gram`], [`pairwise_sqdist`], [`colsum_pos`],
+//! [`for_chunks`], nested [`map_tasks`]) degrades to its serial path when
+//! the flag is set.  Class-level fan-out therefore *replaces* — never
+//! multiplies — kernel-level threading, and the results are identical
+//! either way (each output element is computed by exactly one worker with
+//! the same arithmetic).
 //!
 //! Everything is std-only (`std::thread::scope`), allocation-free in the
 //! inner loops, and falls back to single-thread execution below a
@@ -26,6 +45,7 @@
 //! `GRADMATCH_THREADS=<n>` (set `1` to force the serial path, e.g. for
 //! bit-stable A/B runs).
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -42,6 +62,124 @@ pub fn num_threads() -> usize {
         }
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+thread_local! {
+    /// Set on [`map_tasks`] worker threads for the worker's lifetime.
+    static IN_TASK: Cell<bool> = Cell::new(false);
+}
+
+/// Whether the current thread is a class-level task worker.  Inner
+/// policy-driven kernels consult this to take their serial paths instead
+/// of oversubscribing the machine with nested spawns.
+pub fn in_task() -> bool {
+    IN_TASK.with(|c| c.get())
+}
+
+/// Thread count policy for a kernel of `work` mul-adds: serial below the
+/// flop floor or inside a class-level task, else the machine.
+pub(crate) fn policy_threads(work: usize) -> usize {
+    if in_task() || work < PAR_MIN_FLOPS {
+        1
+    } else {
+        num_threads()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// class-level task fan-out
+// ---------------------------------------------------------------------------
+
+/// Run `f` over every item on `threads` scoped workers with an atomic
+/// work-stealing cursor; results come back in **input order** regardless
+/// of which worker ran which item, so merges downstream are
+/// deterministic.  Workers carry the [`in_task`] depth flag.  Exposed for
+/// tests; use [`map_tasks`] for the policy-driven entry point.
+pub fn map_tasks_threads<I: Sync, T: Send>(
+    items: &[I],
+    threads: usize,
+    f: impl Fn(&I) -> T + Sync,
+) -> Vec<T> {
+    let n = items.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads == 1 || n <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                IN_TASK.with(|c| c.set(true));
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = f(&items[i]);
+                    *slots[i].lock().unwrap() = Some(out);
+                }
+                IN_TASK.with(|c| c.set(false));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every task slot is filled"))
+        .collect()
+}
+
+/// Policy-driven [`map_tasks_threads`]: class-level fan-out across the
+/// machine, degrading to a plain serial map when already inside a task
+/// (no nested fan-out) or when only one worker is available.  Tasks are
+/// assumed coarse (a whole per-class solve), so there is no flop floor.
+pub fn map_tasks<I: Sync, T: Send>(items: &[I], f: impl Fn(&I) -> T + Sync) -> Vec<T> {
+    let threads = if in_task() { 1 } else { num_threads() };
+    map_tasks_threads(items, threads, f)
+}
+
+/// Apply `f(lo, chunk)` to disjoint contiguous chunks of `out` on
+/// `threads` scoped workers (`lo` is the chunk's start offset in `out`).
+/// Exposed for tests; use [`for_chunks`] for the policy entry point.
+pub fn for_chunks_threads<T: Send>(
+    out: &mut [T],
+    threads: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        f(0, out);
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (blk, chunk) in out.chunks_mut(per).enumerate() {
+            let lo = blk * per;
+            let fr = &f;
+            s.spawn(move || fr(lo, chunk));
+        }
+    });
+}
+
+/// Policy-driven [`for_chunks_threads`] for an elementwise pass costing
+/// `work` mul-adds total (e.g. facility-location coverage updates).
+pub fn for_chunks<T: Send>(out: &mut [T], work: usize, f: impl Fn(usize, &mut [T]) + Sync) {
+    for_chunks_threads(out, policy_threads(work), f);
+}
+
+/// Whether fanning `tasks` coarse tasks out beats keeping kernel-level
+/// threading.  Fan-out workers run their inner kernels serially (the
+/// depth guard), so it only wins when the tasks alone can occupy every
+/// worker — or when the largest task sits below the kernel-parallel flop
+/// floor anyway, in which case its inner kernels would run serial in
+/// either mode and fan-out is free concurrency.  `max_task_work` is the
+/// largest single inner-kernel cost (mul-adds) across the tasks.
+pub fn fanout_wins(tasks: usize, max_task_work: usize) -> bool {
+    tasks > 1 && (tasks >= num_threads() || max_task_work < PAR_MIN_FLOPS)
 }
 
 // ---------------------------------------------------------------------------
@@ -142,10 +280,10 @@ pub fn gemv_threads(m: &Matrix, v: &[f32], out: &mut [f32], threads: usize) {
     });
 }
 
-/// `out = M v` — parallel when the problem is big enough to pay for it.
+/// `out = M v` — parallel when the problem is big enough to pay for it
+/// (and serial inside a class-level task — see the module docs).
 pub fn gemv(m: &Matrix, v: &[f32], out: &mut [f32]) {
-    let threads = if m.rows * m.cols >= PAR_MIN_FLOPS { num_threads() } else { 1 };
-    gemv_threads(m, v, out, threads);
+    gemv_threads(m, v, out, policy_threads(m.rows * m.cols));
 }
 
 // ---------------------------------------------------------------------------
@@ -210,11 +348,7 @@ pub fn symmetric_pairwise_threads(
 }
 
 fn symmetric_threads_for(n: usize, flops_per_entry: usize) -> usize {
-    if n * n / 2 * flops_per_entry.max(1) >= PAR_MIN_FLOPS {
-        num_threads()
-    } else {
-        1
-    }
+    policy_threads(n * n / 2 * flops_per_entry.max(1))
 }
 
 /// Gram matrix `A Aᵀ` (parallel twin of [`crate::tensor::gram`]).
@@ -241,6 +375,23 @@ pub fn pairwise_sqdist(a: &Matrix) -> Matrix {
 /// Parallel over column blocks (each worker owns a disjoint slice of the
 /// output and scans all rows for its columns).
 pub fn colsum_pos_threads(m: &Matrix, threads: usize) -> Vec<f64> {
+    colsum_impl(m, threads, true)
+}
+
+/// Policy-driven [`colsum_pos_threads`].
+pub fn colsum_pos(m: &Matrix) -> Vec<f64> {
+    colsum_pos_threads(m, policy_threads(m.rows * m.cols))
+}
+
+/// Plain (unclamped) f64 column sums `out[j] = Σ_i m[i][j]` — the
+/// distance-backed facility-location heap seed, where clamping would
+/// understate the gain upper bound on slightly-negative device-computed
+/// squared distances.
+pub fn colsum(m: &Matrix) -> Vec<f64> {
+    colsum_impl(m, policy_threads(m.rows * m.cols), false)
+}
+
+fn colsum_impl(m: &Matrix, threads: usize, clamp_pos: bool) -> Vec<f64> {
     let (rows, cols) = (m.rows, m.cols);
     let mut out = vec![0.0f64; cols];
     if cols == 0 || rows == 0 {
@@ -256,7 +407,7 @@ pub fn colsum_pos_threads(m: &Matrix, threads: usize) -> Vec<f64> {
                     let row = m.row(i);
                     for (off, acc) in chunk.iter_mut().enumerate() {
                         let v = row[lo + off];
-                        if v > 0.0 {
+                        if !clamp_pos || v > 0.0 {
                             *acc += v as f64;
                         }
                     }
@@ -265,12 +416,6 @@ pub fn colsum_pos_threads(m: &Matrix, threads: usize) -> Vec<f64> {
         }
     });
     out
-}
-
-/// Policy-driven [`colsum_pos_threads`].
-pub fn colsum_pos(m: &Matrix) -> Vec<f64> {
-    let threads = if m.rows * m.cols >= PAR_MIN_FLOPS { num_threads() } else { 1 };
-    colsum_pos_threads(m, threads)
 }
 
 #[cfg(test)]
@@ -400,6 +545,17 @@ mod tests {
                     );
                 }
             }
+            // the unclamped twin keeps negative entries (gaussian input
+            // makes the two differ on almost every column)
+            let plain = colsum(&m);
+            for j in 0..cols {
+                let want: f64 = (0..rows).map(|i| m.at(i, j) as f64).sum();
+                assert!(
+                    (plain[j] - want).abs() <= 1e-6 * (1.0 + want.abs()),
+                    "colsum col {j}: {} vs {want}",
+                    plain[j]
+                );
+            }
         });
     }
 
@@ -416,5 +572,92 @@ mod tests {
     #[test]
     fn num_threads_is_positive() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn map_tasks_preserves_input_order() {
+        let items: Vec<usize> = (0..57).collect();
+        let want: Vec<usize> = items.iter().map(|&i| i * i + 1).collect();
+        for threads in [1usize, 2, 4, 9] {
+            let got = map_tasks_threads(&items, threads, |&i| i * i + 1);
+            assert_eq!(got, want, "threads={threads}");
+        }
+        assert_eq!(map_tasks(&items, |&i| i * i + 1), want);
+        let empty: Vec<usize> = Vec::new();
+        assert!(map_tasks(&empty, |&i| i).is_empty());
+    }
+
+    #[test]
+    fn task_workers_carry_the_depth_flag() {
+        assert!(!in_task(), "test thread must start outside a task");
+        let items: Vec<usize> = (0..16).collect();
+        let flags = map_tasks_threads(&items, 4, |_| in_task());
+        assert!(flags.iter().all(|&f| f), "every task must see in_task()");
+        assert!(!in_task(), "flag must not leak back to the caller");
+    }
+
+    #[test]
+    fn nested_fanout_degrades_to_serial_on_the_worker() {
+        // inside a task, a nested map_tasks must run inline on the same
+        // worker thread (no second level of spawns)
+        let items: Vec<usize> = (0..8).collect();
+        let ok = map_tasks_threads(&items, 4, |_| {
+            let me = std::thread::current().id();
+            let inner: Vec<usize> = (0..4).collect();
+            let tids = map_tasks(&inner, |_| std::thread::current().id());
+            tids.iter().all(|&t| t == me)
+        });
+        assert!(ok.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn inner_kernels_stay_correct_inside_tasks() {
+        // policy kernels degrade to serial inside a task but must return
+        // the same values
+        let mut rng = crate::rng::Rng::new(33);
+        let m = Matrix::from_vec(600, 128, (0..600 * 128).map(|_| rng.gaussian_f32()).collect());
+        let v: Vec<f32> = (0..128).map(|_| rng.gaussian_f32()).collect();
+        let mut want = vec![0.0f32; 600];
+        gemv(&m, &v, &mut want);
+        let items = [0usize, 1, 2];
+        let got = map_tasks_threads(&items, 3, |_| {
+            let mut out = vec![0.0f32; 600];
+            gemv(&m, &v, &mut out);
+            out
+        });
+        for g in got {
+            assert_eq!(g, want);
+        }
+    }
+
+    #[test]
+    fn fanout_policy_never_trades_away_kernel_threading() {
+        // a single task never fans out
+        assert!(!fanout_wins(0, 0));
+        assert!(!fanout_wins(1, 1 << 30));
+        // tiny tasks (inner kernels serial either way) always fan out
+        assert!(fanout_wins(2, PAR_MIN_FLOPS - 1));
+        // big tasks fan out only when they can occupy the machine
+        let t = num_threads();
+        assert!(fanout_wins(t.max(2), 1 << 30));
+        if t > 2 {
+            assert!(!fanout_wins(2, 1 << 30));
+        }
+    }
+
+    #[test]
+    fn for_chunks_covers_every_element_once() {
+        for threads in [1usize, 2, 5] {
+            let mut out = vec![0u32; 37];
+            for_chunks_threads(&mut out, threads, |lo, chunk| {
+                for (off, v) in chunk.iter_mut().enumerate() {
+                    *v += (lo + off) as u32 + 1;
+                }
+            });
+            let want: Vec<u32> = (1..=37).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+        let mut empty: Vec<u32> = Vec::new();
+        for_chunks(&mut empty, 1 << 20, |_, _| panic!("no chunks on empty input"));
     }
 }

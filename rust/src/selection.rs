@@ -17,15 +17,51 @@
 //!
 //! A trailing `-warm` on any spec enables the κ warm-start schedule, which
 //! the trainer owns (`T_f = κ·T·k/n` full epochs first — §4 of the paper).
+//!
+//! # The parallel selection-round engine
+//!
+//! Per-class strategies (GRAD-MATCH per-class variants, CRAIG's per-class
+//! arm, GLISTER, FeatureFL) run as a two-stage round:
+//!
+//! 1. **Stage** — one padded runtime pass over the full ground set
+//!    ([`grads::stage_class_grads`]) scatters each sample's gradient
+//!    slice into its class's matrix and yields the per-class train-side
+//!    targets for free (`⌈|ground|/chunk⌉` dispatches, vs the old
+//!    `Σ_c ⌈n_c/chunk⌉` gradient passes *plus* `Σ_c ⌈n_c/chunk⌉` target
+//!    passes).  Validation targets (`is_valid`) keep the fused
+//!    `[P]`-readback means per populated val class (readback, not
+//!    dispatch count, dominates that term on device backends); GLISTER,
+//!    which only needs scalar Taylor gains, streams through
+//!    [`grads::score_grads`] without materializing the store at all.
+//! 2. **Fan out** — the per-class solves are independent pure-CPU
+//!    problems, so they run concurrently on [`crate::par::map_tasks`]
+//!    (class-level work stealing; inner kernels degrade to serial via the
+//!    depth guard) and merge deterministically in class order.  Fan-out
+//!    engages per [`crate::par::fanout_wins`]: with fewer live classes
+//!    than cores and solves big enough to thread internally, the serial
+//!    loop keeps kernel-level parallelism instead — class fan-out
+//!    replaces kernel threading, so it must only run where it wins.
+//!
+//! Cost model per round (C classes, n ground rows, k budget): staging is
+//! `⌈n/chunk⌉` fixed-shape dispatches + O(n·P) scatter; the solve stage
+//! is `Σ_c OMP(n_c, k_c)` spread across the machine, wall-clock
+//! ≈ `max_c OMP(n_c, k_c)` when C ≥ cores.  The pre-engine serial path is
+//! preserved on [`GradMatch`] (`parallel = false`) as the pinned
+//! equivalence baseline: same supports and weights within 1e-4,
+//! bit-identical merge order (see `tests/round_engine.rs` and the
+//! `micro_hotpath` selection-round bench).
+
+use std::cmp::Ordering;
 
 use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
-use crate::grads;
-use crate::omp::{omp_select, OmpOpts, XlaCorr};
+use crate::grads::{self, ClassStage, StageWidth};
+use crate::omp::{omp_select, omp_select_rust, OmpOpts, OmpResult, XlaCorr};
+use crate::par;
 use crate::rng::Rng;
 use crate::runtime::{ModelState, Runtime};
-use crate::submod::{lazy_greedy, sim_from_sqdist, FacilityLocation};
+use crate::submod::{lazy_greedy, FacilityLocation};
 use crate::tensor::Matrix;
 
 /// Everything a strategy may look at when selecting.
@@ -105,7 +141,7 @@ pub fn split_budget(k: usize, sizes: &[usize]) -> Vec<usize> {
         assigned += base;
         rems.push((exact - base as f64, c));
     }
-    rems.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    rems.sort_by(|a, b| b.0.total_cmp(&a.0));
     // Hand out the remainder in largest-remainder order until it is gone
     // or every class is saturated.  (A bounded `cycle().take(2·len)` pass
     // could strand budget when only a few classes still had spare
@@ -128,6 +164,152 @@ pub fn split_budget(k: usize, sizes: &[usize]) -> Vec<usize> {
         }
     }
     out
+}
+
+/// NaN-safe descending order on scores, matching [`crate::tensor::argmax`]
+/// semantics: higher scores first, and a NaN score never outranks a real
+/// one (NaNs order after every number, equal among themselves).
+fn rank_desc(a: f32, b: f32) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => b.partial_cmp(&a).expect("both scores are non-NaN"),
+    }
+}
+
+/// Indices of the `k` largest scores in descending rank order — NaN-safe
+/// (NaN never wins; ties keep the smaller index) and partial:
+/// `select_nth_unstable` partitions in O(n), then only the top-k slice is
+/// sorted (O(n + k log k) vs the old full O(n log n) sort, which also
+/// panicked on any NaN score).
+pub fn top_k_desc(scores: &[f32], k: usize) -> Vec<usize> {
+    let n = scores.len();
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    let cmp = |a: &usize, b: &usize| rank_desc(scores[*a], scores[*b]).then(a.cmp(b));
+    if k < n {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(cmp);
+    idx
+}
+
+/// Classes worth solving — positive size and budget — in class order
+/// (the deterministic merge order of the round engine).
+fn live_by_sizes(sizes: &[usize], budgets: &[usize]) -> Vec<usize> {
+    (0..sizes.len()).filter(|&cls| sizes[cls] > 0 && budgets[cls] > 0).collect()
+}
+
+/// [`live_by_sizes`] over staged gradients.
+fn live_classes(stages: &[ClassStage], budgets: &[usize]) -> Vec<usize> {
+    let sizes: Vec<usize> = stages.iter().map(|s| s.rows.len()).collect();
+    live_by_sizes(&sizes, budgets)
+}
+
+/// Run `solve` once per live class, fanning out across the machine when
+/// that beats kernel-level threading ([`par::fanout_wins`] over the
+/// largest task's dominant inner-kernel cost, `max_work`); results come
+/// back in class order either way.  The one fan-out scaffold every
+/// per-class strategy arm shares.
+fn solve_per_class<T: Send>(
+    live: &[usize],
+    max_work: usize,
+    parallel: bool,
+    solve: impl Fn(&usize) -> T + Sync,
+) -> Vec<T> {
+    if parallel && par::fanout_wins(live.len(), max_work) {
+        par::map_tasks(live, solve)
+    } else {
+        live.iter().map(solve).collect()
+    }
+}
+
+/// The one merge contract of the round engine: walk per-class OMP results
+/// **in class order**, calibrate weights to the class *sum* (×n_c — OMP
+/// fits the class *mean* gradient; the scaling keeps weights comparable
+/// with CRAIG's medoid counts and the paper's Err(w, X) accounting), and
+/// average the residual norms into `grad_error`.  Every solve arm (CPU
+/// serial, CPU fan-out, XLA) funnels through this.
+fn merge_class_omp(stages: &[ClassStage], picks: Vec<(usize, OmpResult)>) -> Selection {
+    let mut out = Selection::default();
+    let mut err_acc = 0.0f64;
+    let mut err_n = 0usize;
+    for (cls, res) in picks {
+        let scale = stages[cls].rows.len() as f32;
+        for (slot, &j) in res.selected.iter().enumerate() {
+            out.push(stages[cls].rows[j], res.weights[slot] * scale);
+        }
+        err_acc += res.residual_norm as f64;
+        err_n += 1;
+    }
+    if err_n > 0 {
+        out.grad_error = Some((err_acc / err_n as f64) as f32);
+    }
+    out
+}
+
+/// Solve every class's OMP problem over staged gradients and merge the
+/// per-class selections through [`merge_class_omp`] (bit-identical merge
+/// whether the solves ran serially or fanned out).  `targets[c]` must
+/// already be sliced to `stages[c].g`'s width.  Pure CPU — no runtime
+/// access — which is what makes the class fan-out safe and the engine
+/// testable without a device.  Fan-out engages only when it beats
+/// kernel-level threading ([`par::fanout_wins`]): with fewer live
+/// classes than cores *and* per-class solves big enough to thread
+/// internally, the serial loop keeps the inner GEMVs parallel instead.
+pub fn solve_classes_omp(
+    stages: &[ClassStage],
+    budgets: &[usize],
+    targets: &[Vec<f32>],
+    lambda: f32,
+    eps: f32,
+    parallel: bool,
+) -> Result<Selection> {
+    assert_eq!(stages.len(), budgets.len(), "one budget per class");
+    assert_eq!(stages.len(), targets.len(), "one target per class");
+    let live = live_classes(stages, budgets);
+    let solve = |cls: &usize| -> Result<OmpResult> {
+        let cls = *cls;
+        let opts = OmpOpts { k: budgets[cls], lambda, eps };
+        omp_select_rust(&stages[cls].g, &targets[cls], opts)
+    };
+    // dominant inner-kernel cost per task: the O(n_c·w) correlation GEMV
+    let max_work =
+        live.iter().map(|&cls| stages[cls].g.rows * stages[cls].g.cols).max().unwrap_or(0);
+    let results: Vec<Result<OmpResult>> = solve_per_class(&live, max_work, parallel, solve);
+    let mut picks = Vec::with_capacity(live.len());
+    for (&cls, res) in live.iter().zip(results) {
+        picks.push((cls, res?));
+    }
+    Ok(merge_class_omp(stages, picks))
+}
+
+/// [`solve_classes_omp`] twin for full-P solves routed through the XLA
+/// correlation kernel: identical staging, targets, and merge contract
+/// ([`merge_class_omp`]), but solves run serially against the (single)
+/// device.
+fn solve_classes_omp_xla(
+    ctx: &SelectCtx<'_>,
+    model: &str,
+    stages: &[ClassStage],
+    budgets: &[usize],
+    targets: &[Vec<f32>],
+) -> Result<Selection> {
+    let live = live_classes(stages, budgets);
+    let mut picks = Vec::with_capacity(live.len());
+    for &cls in &live {
+        let stage = &stages[cls];
+        let opts = OmpOpts { k: budgets[cls], lambda: ctx.lambda, eps: ctx.eps };
+        let mut backend = XlaCorr::new(ctx.rt, model, &stage.g)?;
+        let res = omp_select(&mut backend, &|j| stage.g.row(j).to_vec(), &targets[cls], opts)?;
+        picks.push((cls, res));
+    }
+    Ok(merge_class_omp(stages, picks))
 }
 
 /// Target (mean) gradient for a scope of training rows, or — when
@@ -170,14 +352,90 @@ pub struct GradMatch {
     pub batch: usize,
     /// route full-P correlations through the XLA/Pallas kernel
     pub use_xla: bool,
+    /// run per-class rounds through the staged + fan-out engine (default);
+    /// `false` pins the pre-engine serial path — one runtime pass per
+    /// class, serial solves — as the equivalence baseline
+    pub parallel: bool,
 }
 
 impl GradMatch {
     pub fn new(variant: GradMatchVariant, batch: usize, use_xla: bool) -> Self {
-        GradMatch { variant, batch, use_xla }
+        GradMatch { variant, batch, use_xla, parallel: true }
     }
 
+    /// Staged round: one gradient pass stages every class, then the
+    /// per-class OMP solves fan out (see the module docs).
     fn select_per_class(&self, ctx: &mut SelectCtx<'_>, per_gradient: bool) -> Result<Selection> {
+        if !self.parallel {
+            return self.select_per_class_serial(ctx, per_gradient);
+        }
+        let meta = ctx.state.meta.clone();
+        let width = if per_gradient { StageWidth::ClassSlice } else { StageWidth::Full };
+        let stages =
+            grads::stage_class_grads(ctx.rt, ctx.state, ctx.train, ctx.ground, width, true)?;
+        let sizes: Vec<usize> = stages.iter().map(|s| s.rows.len()).collect();
+        let budgets = split_budget(ctx.budget, &sizes);
+        // full-P per-class targets: free from the staged pass on the
+        // train side.  When matching L_V, the val-side class means use
+        // the fused `mean_grad_chunk` entry — one [P] readback per
+        // populated val class, exactly the serial reference's device
+        // traffic (the one-pass `grads::class_mean_gradients` twin would
+        // cut dispatches but read back [chunk, P] per dispatch — see its
+        // docs) — and only for classes that are live this round, so dead
+        // classes (absent from the ground set or zero budget) cost zero
+        // dispatches, like the serial reference.  Classes missing from
+        // val fall back to the staged train target.
+        let val_means: Option<Vec<Option<Vec<f32>>>> = if ctx.is_valid {
+            let mut is_live = vec![false; meta.c];
+            for &cls in &live_classes(&stages, &budgets) {
+                is_live[cls] = true;
+            }
+            let val_per_class = ground_per_class(ctx.val, &(0..ctx.val.len()).collect::<Vec<_>>());
+            let mut means = Vec::with_capacity(meta.c);
+            for cls in 0..meta.c {
+                let rows = val_per_class.get(cls).map(Vec::as_slice).unwrap_or(&[]);
+                if !is_live[cls] || rows.is_empty() {
+                    means.push(None);
+                } else {
+                    means.push(Some(grads::mean_gradient(ctx.rt, ctx.state, ctx.val, rows)?));
+                }
+            }
+            Some(means)
+        } else {
+            None
+        };
+        let mut targets: Vec<Vec<f32>> = Vec::with_capacity(stages.len());
+        for (cls, stage) in stages.iter().enumerate() {
+            let full: &[f32] = match val_means.as_ref().and_then(|v| v[cls].as_deref()) {
+                Some(vm) => vm,
+                None => &stage.target_full,
+            };
+            if per_gradient {
+                let cols = grads::class_columns(meta.h, meta.c, cls);
+                targets.push(cols.iter().map(|&j| full[j]).collect());
+            } else {
+                targets.push(full.to_vec());
+            }
+        }
+        if !per_gradient && self.use_xla {
+            // full-P solves through the device kernel: the staged pass
+            // still replaces the C gradient + C target passes, but the
+            // solves stay serial — the device is one resource, and
+            // fanning out would only queue on it
+            return solve_classes_omp_xla(ctx, &meta.name, &stages, &budgets, &targets);
+        }
+        solve_classes_omp(&stages, &budgets, &targets, ctx.lambda, ctx.eps, true)
+    }
+
+    /// Pre-engine reference: one padded gradient pass **per class**, a
+    /// second target pass per class, serial solves.  Pinned by the
+    /// round-engine property tests and benchmarked as the serial-classes
+    /// baseline — do not fold into the staged path.
+    pub fn select_per_class_serial(
+        &self,
+        ctx: &mut SelectCtx<'_>,
+        per_gradient: bool,
+    ) -> Result<Selection> {
         let meta = &ctx.state.meta;
         let per_class = ground_per_class(ctx.train, ctx.ground);
         let sizes: Vec<usize> = per_class.iter().map(Vec::len).collect();
@@ -203,7 +461,7 @@ impl GradMatch {
                 let mut backend = XlaCorr::new(ctx.rt, &meta.name, &g)?;
                 omp_select(&mut backend, &|j| g.row(j).to_vec(), &target, omp_opts)?
             } else {
-                crate::omp::omp_select_rust(&g, &target, omp_opts)?
+                omp_select_rust(&g, &target, omp_opts)?
             };
             // OMP fits the class *mean* gradient; calibrate to the class
             // *sum* (×n_c) so weights are comparable with CRAIG's medoid
@@ -282,6 +540,9 @@ pub struct Craig {
     pub batch: usize,
     /// route full-P pairwise distances through the XLA/Pallas kernel
     pub use_xla: bool,
+    /// fan the per-class facility-location solves out across classes
+    /// (default); `false` runs the identical staged problems serially
+    pub parallel: bool,
 }
 
 impl Craig {
@@ -305,10 +566,12 @@ impl Craig {
             for (ba, lo_a, hi_a) in &blocks {
                 for (bb, lo_b, hi_b) in &blocks {
                     let d = ctx.rt.sqdist_chunk(&ctx.state.meta.name, ba, bb)?;
+                    // contiguous row-slice copies (live columns of each
+                    // result row land in one memcpy, not n² element sets)
+                    let live_b = hi_b - lo_b;
                     for (ia, ra) in (*lo_a..*hi_a).enumerate() {
-                        for (ib, rb) in (*lo_b..*hi_b).enumerate() {
-                            dist.set(ra, rb, d.at(ia, ib));
-                        }
+                        dist.row_mut(ra)[*lo_b..*lo_b + live_b]
+                            .copy_from_slice(&d.row(ia)[..live_b]);
                     }
                 }
             }
@@ -327,8 +590,7 @@ impl Craig {
         k: usize,
     ) -> Result<(Vec<usize>, Vec<f32>)> {
         let dist = self.sqdist_matrix(ctx, g)?;
-        let sim = sim_from_sqdist(&dist);
-        let mut fl = FacilityLocation::new(&sim);
+        let mut fl = FacilityLocation::from_sqdist(&dist);
         let res = lazy_greedy(&mut fl, k);
         let w = fl.medoid_weights(&res.selected);
         Ok((res.selected, w))
@@ -341,7 +603,6 @@ impl Strategy for Craig {
     }
 
     fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
-        let meta = ctx.state.meta.clone();
         let mut out = Selection::default();
         if self.per_batch {
             let mut order = ctx.ground.to_vec();
@@ -357,20 +618,44 @@ impl Strategy for Craig {
             }
         } else {
             // per-class + per-gradient slices (keeps the n_c² distance
-            // matrices cheap — same approximation CRAIG itself adopts)
-            let per_class = ground_per_class(ctx.train, ctx.ground);
-            let sizes: Vec<usize> = per_class.iter().map(Vec::len).collect();
+            // matrices cheap — same approximation CRAIG itself adopts):
+            // one staged pass over the ground set, then the per-class
+            // facility-location solves fan out (pure CPU; the pairwise
+            // distances, coverage commits, and medoid votes inside each
+            // task degrade to serial via the par depth guard)
+            // no matching target in CRAIG — stage without the O(n·P)
+            // target accumulation
+            let stages = grads::stage_class_grads(
+                ctx.rt,
+                ctx.state,
+                ctx.train,
+                ctx.ground,
+                StageWidth::ClassSlice,
+                false,
+            )?;
+            let sizes: Vec<usize> = stages.iter().map(|s| s.rows.len()).collect();
             let budgets = split_budget(ctx.budget, &sizes);
-            for (cls, rows) in per_class.iter().enumerate() {
-                if rows.is_empty() || budgets[cls] == 0 {
-                    continue;
-                }
-                let store = grads::per_sample_grads(ctx.rt, ctx.state, ctx.train, rows)?;
-                let cols = grads::class_columns(meta.h, meta.c, cls);
-                let g = store.g.gather_cols(&cols);
-                let (sel, w) = self.select_ground(ctx, &g, budgets[cls])?;
-                for (slot, &j) in sel.iter().enumerate() {
-                    out.push(rows[j], w[slot]);
+            let live = live_by_sizes(&sizes, &budgets);
+            let solve = |cls: &usize| -> Vec<(usize, f32)> {
+                let stage = &stages[*cls];
+                let dist = crate::par::pairwise_sqdist(&stage.g);
+                let mut fl = FacilityLocation::from_sqdist(&dist);
+                let res = lazy_greedy(&mut fl, budgets[*cls]);
+                let w = fl.medoid_weights(&res.selected);
+                res.selected.iter().zip(w).map(|(&j, wi)| (stage.rows[j], wi)).collect()
+            };
+            // dominant inner kernel: the O(n_c²·w/2) pairwise build
+            let max_work = live
+                .iter()
+                .map(|&cls| sizes[cls] * sizes[cls] / 2 * stages[cls].g.cols)
+                .max()
+                .unwrap_or(0);
+            let picked: Vec<Vec<(usize, f32)>> =
+                solve_per_class(&live, max_work, self.parallel, solve);
+            // deterministic merge in class order
+            for class_picks in picked {
+                for (row, w) in class_picks {
+                    out.push(row, w);
                 }
             }
         }
@@ -396,24 +681,39 @@ impl Strategy for Glister {
         // validation mean gradient (GLISTER always uses the val set)
         let val_rows: Vec<usize> = (0..ctx.val.len()).collect();
         let v = grads::mean_gradient(ctx.rt, ctx.state, ctx.val, &val_rows)?;
+        // One padded pass streams every ground sample's Taylor gain
+        // `g_i · ∇L_V` (⌈|ground|/chunk⌉ dispatches, O(chunk·P) transient
+        // memory — the [n, P] store is never materialized).
+        let ground = ctx.ground;
+        let scores = grads::score_grads(ctx.rt, ctx.state, ctx.train, ground, &v)?;
         // per-class proportional budgets (CORDS-style) — plain global top-k
         // of the Taylor gains collapses onto whichever class currently has
-        // the largest aligned gradients
-        let per_class = ground_per_class(ctx.train, ctx.ground);
+        // the largest aligned gradients.
+        let mut per_class: Vec<Vec<usize>> = vec![Vec::new(); ctx.train.classes];
+        for (pos, &i) in ground.iter().enumerate() {
+            per_class[ctx.train.y[i] as usize].push(pos);
+        }
         let sizes: Vec<usize> = per_class.iter().map(Vec::len).collect();
         let budgets = split_budget(ctx.budget, &sizes);
+        let live = live_by_sizes(&sizes, &budgets);
+        let pick = |cls: &usize| -> Vec<usize> {
+            let positions = &per_class[*cls];
+            let class_scores: Vec<f32> = positions.iter().map(|&p| scores[p]).collect();
+            top_k_desc(&class_scores, budgets[*cls])
+                .into_iter()
+                .map(|j| ground[positions[j]])
+                .collect()
+        };
+        // the per-class top-ks have no inner kernels (so fan-out never
+        // trades kernel threading away — max_work 0) but cost only
+        // O(n_c); fan out only once the biggest class is large enough to
+        // amortize a thread spawn, else run the serial loop
+        let max_class = live.iter().map(|&cls| sizes[cls]).max().unwrap_or(0);
+        let picked: Vec<Vec<usize>> = solve_per_class(&live, 0, max_class >= (1 << 14), pick);
         let mut out = Selection::default();
-        for (cls, rows) in per_class.iter().enumerate() {
-            if rows.is_empty() || budgets[cls] == 0 {
-                continue;
-            }
-            let store = grads::per_sample_grads(ctx.rt, ctx.state, ctx.train, rows)?;
-            let mut scores = vec![0.0f32; store.g.rows];
-            crate::par::gemv(&store.g, &v, &mut scores);
-            let mut order: Vec<usize> = (0..scores.len()).collect();
-            order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
-            for &j in order.iter().take(budgets[cls]) {
-                out.push(store.rows[j], 1.0);
+        for class_picks in picked {
+            for row in class_picks {
+                out.push(row, 1.0);
             }
         }
         Ok(out)
@@ -478,17 +778,20 @@ impl Strategy for Entropy {
     }
 
     fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
-        let mut ent = Vec::with_capacity(ctx.ground.len());
+        let mut scores = Vec::with_capacity(ctx.ground.len());
+        let mut rows = Vec::with_capacity(ctx.ground.len());
         for chunk in crate::data::padded_chunks(ctx.train, ctx.ground, ctx.state.meta.chunk) {
             let (_, _, _, e) = ctx.rt.eval_chunk(ctx.state, &chunk.x, &chunk.y, &chunk.mask)?;
             for slot in 0..chunk.live {
-                ent.push((e[slot], chunk.indices[slot]));
+                scores.push(e[slot]);
+                rows.push(chunk.indices[slot]);
             }
         }
-        ent.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        // NaN-safe partial top-k: a degenerate (NaN) entropy never wins
+        // and never panics the round
         let mut out = Selection::default();
-        for &(_, idx) in ent.iter().take(ctx.budget) {
-            out.push(idx, 1.0);
+        for j in top_k_desc(&scores, ctx.budget) {
+            out.push(rows[j], 1.0);
         }
         Ok(out)
     }
@@ -538,16 +841,17 @@ impl Strategy for Forgetting {
             }
         }
         // rank by forgetting count; break ties by a stable jitter so early
-        // rounds (all-zero counts) still pick a spread-out subset
-        let mut scored: Vec<(f32, usize)> = ctx
+        // rounds (all-zero counts) still pick a spread-out subset.
+        // NaN-safe partial top-k (counts are finite by construction, but
+        // the ranking shares the baseline-wide no-panic contract).
+        let scores: Vec<f32> = ctx
             .ground
             .iter()
-            .map(|&i| (self.counts[i] + 1e-6 * ((i * 2654435761) % 1000) as f32, i))
+            .map(|&i| self.counts[i] + 1e-6 * ((i * 2654435761) % 1000) as f32)
             .collect();
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
         let mut out = Selection::default();
-        for &(_, idx) in scored.iter().take(ctx.budget) {
-            out.push(idx, 1.0);
+        for j in top_k_desc(&scores, ctx.budget) {
+            out.push(ctx.ground[j], 1.0);
         }
         Ok(out)
     }
@@ -566,22 +870,33 @@ impl Strategy for FeatureFL {
     }
 
     fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
+        // no gradients involved — the per-class facility-location solves
+        // fan out directly over the raw feature rows
         let per_class = ground_per_class(ctx.train, ctx.ground);
         let sizes: Vec<usize> = per_class.iter().map(Vec::len).collect();
         let budgets = split_budget(ctx.budget, &sizes);
-        let mut out = Selection::default();
-        for (cls, rows) in per_class.iter().enumerate() {
-            if rows.is_empty() || budgets[cls] == 0 {
-                continue;
-            }
-            let x = ctx.train.x.gather_rows(rows);
+        let train = &*ctx.train;
+        let live = live_by_sizes(&sizes, &budgets);
+        let solve = |cls: &usize| -> Vec<(usize, f32)> {
+            let rows = &per_class[*cls];
+            let x = train.x.gather_rows(rows);
             let dist = crate::par::pairwise_sqdist(&x);
-            let sim = sim_from_sqdist(&dist);
-            let mut fl = FacilityLocation::new(&sim);
-            let res = lazy_greedy(&mut fl, budgets[cls]);
+            let mut fl = FacilityLocation::from_sqdist(&dist);
+            let res = lazy_greedy(&mut fl, budgets[*cls]);
             let w = fl.medoid_weights(&res.selected);
-            for (slot, &j) in res.selected.iter().enumerate() {
-                out.push(rows[j], w[slot]);
+            res.selected.iter().zip(w).map(|(&j, wi)| (rows[j], wi)).collect()
+        };
+        // dominant inner kernel: the O(n_c²·d/2) pairwise build
+        let max_work = live
+            .iter()
+            .map(|&cls| sizes[cls] * sizes[cls] / 2 * train.x.cols)
+            .max()
+            .unwrap_or(0);
+        let picked: Vec<Vec<(usize, f32)>> = solve_per_class(&live, max_work, true, solve);
+        let mut out = Selection::default();
+        for class_picks in picked {
+            for (row, w) in class_picks {
+                out.push(row, w);
             }
         }
         Ok(out)
@@ -606,8 +921,8 @@ pub fn parse_strategy(spec: &str, batch: usize) -> Result<(Box<dyn Strategy>, bo
         "gradmatch-pb" => Box::new(GradMatch::new(GradMatchVariant::PerBatch, batch, true)),
         "gradmatch-rust" => Box::new(GradMatch::new(GradMatchVariant::PerClassPerGradient, batch, false)),
         "gradmatch-pb-rust" => Box::new(GradMatch::new(GradMatchVariant::PerBatch, batch, false)),
-        "craig" => Box::new(Craig { per_batch: false, batch, use_xla: false }),
-        "craig-pb" => Box::new(Craig { per_batch: true, batch, use_xla: true }),
+        "craig" => Box::new(Craig { per_batch: false, batch, use_xla: false, parallel: true }),
+        "craig-pb" => Box::new(Craig { per_batch: true, batch, use_xla: true, parallel: true }),
         "glister" => Box::new(Glister),
         "random" => Box::new(Random),
         "full" | "full-earlystop" => Box::new(Full),
@@ -680,6 +995,86 @@ mod tests {
         assert_eq!(b.iter().sum::<usize>(), 6);
         assert_eq!(b[0], 0);
         assert_eq!(b[2], 0);
+    }
+
+    #[test]
+    fn top_k_desc_ranks_and_survives_nan() {
+        // plain ranking, ties keep the smaller index
+        assert_eq!(top_k_desc(&[1.0, 5.0, 3.0, 5.0], 3), vec![1, 3, 2]);
+        // NaN never wins and never panics (the old sort_by(partial_cmp
+        // .unwrap()) ranking aborted the whole selection round here)
+        assert_eq!(top_k_desc(&[f32::NAN, 2.0, 1.0, f32::NAN, 3.0], 3), vec![4, 1, 2]);
+        // NaNs only fill slots once every real score is taken
+        assert_eq!(top_k_desc(&[f32::NAN, 1.0], 2), vec![1, 0]);
+        // degenerate shapes
+        assert!(top_k_desc(&[], 3).is_empty());
+        assert!(top_k_desc(&[1.0, 2.0], 0).is_empty());
+        assert_eq!(top_k_desc(&[f32::NAN, f32::NAN], 1).len(), 1);
+        // k ≥ n returns a full ranking
+        assert_eq!(top_k_desc(&[2.0, 9.0, 4.0], 99), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn top_k_desc_matches_full_sort_on_finite_scores() {
+        use crate::testutil::forall;
+        forall(30, |g| {
+            let n = g.int(1, 120);
+            let scores = g.gauss_vec(n);
+            let k = g.int(0, n);
+            let got = top_k_desc(&scores, k);
+            let mut want: Vec<usize> = (0..n).collect();
+            want.sort_by(|&a, &b| {
+                scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+            });
+            want.truncate(k);
+            assert_eq!(got, want, "n={n} k={k}");
+        });
+    }
+
+    fn synth_stages(g: &mut crate::testutil::Gen, classes: usize, width: usize) -> Vec<ClassStage> {
+        let mut next_row = 0usize;
+        (0..classes)
+            .map(|_| {
+                let n_c = g.int(0, 40);
+                let rows: Vec<usize> = (next_row..next_row + n_c).collect();
+                next_row += n_c;
+                ClassStage {
+                    g: g.matrix(n_c, width),
+                    rows,
+                    target_full: g.gauss_vec(width),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn class_fanout_is_pinned_to_the_serial_merge() {
+        use crate::testutil::forall;
+        // the engine's core contract: fan-out == serial, bit-identical
+        // merge order, across class counts, widths, and imbalanced
+        // budget shapes
+        forall(20, |g| {
+            let classes = g.int(1, 12);
+            let width = g.int(2, 10);
+            let stages = synth_stages(g, classes, width);
+            let sizes: Vec<usize> = stages.iter().map(|s| s.rows.len()).collect();
+            let budget = g.int(1, sizes.iter().sum::<usize>().max(1));
+            let budgets = split_budget(budget, &sizes);
+            let targets: Vec<Vec<f32>> =
+                stages.iter().map(|s| s.target_full.clone()).collect();
+            let serial =
+                solve_classes_omp(&stages, &budgets, &targets, 0.5, 1e-12, false).unwrap();
+            let fanout =
+                solve_classes_omp(&stages, &budgets, &targets, 0.5, 1e-12, true).unwrap();
+            assert_eq!(serial.indices, fanout.indices, "classes={classes}");
+            for (a, b) in serial.weights.iter().zip(&fanout.weights) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+            assert_eq!(serial.grad_error.is_some(), fanout.grad_error.is_some());
+            if let (Some(a), Some(b)) = (serial.grad_error, fanout.grad_error) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()));
+            }
+        });
     }
 
     #[test]

@@ -7,54 +7,146 @@
 //! upper bounds sit in a max-heap and are only refreshed when popped
 //! (Minoux's accelerated greedy), which in practice evaluates a small
 //! fraction of the O(n·k) gains the naive greedy needs.
+//!
+//! [`FacilityLocation`] reads similarities from either a precomputed
+//! similarity matrix ([`FacilityLocation::new`]) or directly from a
+//! squared-distance matrix ([`FacilityLocation::from_sqdist`], the CRAIG
+//! kernelization `sim = d_max − dist` applied per access) — the latter
+//! skips the n² similarity copy that [`sim_from_sqdist`] materializes.
+//! Coverage commits and medoid-weight votes run on the parallel blocked
+//! layer ([`crate::par`]) and degrade to serial inside the selection
+//! round's class-level fan-out.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use crate::tensor::Matrix;
 
-/// Facility-location objective over a precomputed similarity matrix:
-/// `F(S) = Σ_i max_{j∈S} sim[i][j]` (sims must be ≥ 0).
+/// Where similarities come from (borrowed; both variants are O(1) per
+/// access).
+enum SimSource<'a> {
+    /// precomputed `[n, n]` similarity matrix (entries must be ≥ 0)
+    Sim(&'a Matrix),
+    /// `[n, n]` squared distances (entries ≥ 0 up to numerical noise —
+    /// tiny device-computed negatives are tolerated); similarity is
+    /// `d_max − dist[i][j]`, computed on the fly
+    Dist { dist: &'a Matrix, d_max: f32 },
+}
+
+impl SimSource<'_> {
+    #[inline]
+    fn at(&self, i: usize, j: usize) -> f32 {
+        match *self {
+            SimSource::Sim(m) => m.data[i * m.cols + j],
+            SimSource::Dist { dist, d_max } => d_max - dist.data[i * dist.cols + j],
+        }
+    }
+
+    fn n(&self) -> usize {
+        match *self {
+            SimSource::Sim(m) => m.rows,
+            SimSource::Dist { dist, .. } => dist.rows,
+        }
+    }
+}
+
+/// Facility-location objective `F(S) = Σ_i max_{j∈S} sim[i][j]` (sims
+/// must be ≥ 0 — guaranteed by construction on the distance-backed path).
 pub struct FacilityLocation<'a> {
-    /// `[n, n]` pairwise similarities (ground set × ground set)
-    pub sim: &'a Matrix,
+    src: SimSource<'a>,
     /// best coverage per element under the current selection
     cover: Vec<f32>,
 }
 
 impl<'a> FacilityLocation<'a> {
+    /// Over a precomputed similarity matrix.
     pub fn new(sim: &'a Matrix) -> Self {
         assert_eq!(sim.rows, sim.cols, "facility location needs square sims");
-        FacilityLocation { sim, cover: vec![0.0; sim.rows] }
+        FacilityLocation { src: SimSource::Sim(sim), cover: vec![0.0; sim.rows] }
+    }
+
+    /// Directly over a squared-distance matrix (entries ≥ 0 up to
+    /// numerical noise): similarities are `d_max − dist[i][j]`, computed
+    /// per access — no n² copy.
+    pub fn from_sqdist(dist: &'a Matrix) -> Self {
+        assert_eq!(dist.rows, dist.cols, "facility location needs square dists");
+        let d_max = dist.data.iter().cloned().fold(0.0f32, f32::max);
+        FacilityLocation { src: SimSource::Dist { dist, d_max }, cover: vec![0.0; dist.rows] }
     }
 
     /// Number of ground-set elements.
     pub fn n(&self) -> usize {
-        self.sim.rows
+        self.src.n()
+    }
+
+    /// Similarity of elements `i`, `j`.
+    #[inline]
+    pub fn sim(&self, i: usize, j: usize) -> f32 {
+        self.src.at(i, j)
     }
 
     /// Marginal gain of adding `j` to the current selection.
     pub fn gain(&self, j: usize) -> f64 {
+        let n = self.n();
         let mut g = 0.0f64;
-        let col_stride = self.sim.cols;
-        for i in 0..self.sim.rows {
-            let s = self.sim.data[i * col_stride + j];
-            let c = self.cover[i];
-            if s > c {
-                g += (s - c) as f64;
+        match self.src {
+            SimSource::Sim(m) => {
+                for i in 0..n {
+                    let s = m.data[i * n + j];
+                    let c = self.cover[i];
+                    if s > c {
+                        g += (s - c) as f64;
+                    }
+                }
+            }
+            SimSource::Dist { dist, d_max } => {
+                for i in 0..n {
+                    let s = d_max - dist.data[i * n + j];
+                    let c = self.cover[i];
+                    if s > c {
+                        g += (s - c) as f64;
+                    }
+                }
             }
         }
         g
     }
 
-    /// Commit element `j` (update coverage).
-    pub fn commit(&mut self, j: usize) {
-        for i in 0..self.sim.rows {
-            let s = self.sim.at(i, j);
-            if s > self.cover[i] {
-                self.cover[i] = s;
+    /// Gains of every element under the empty selection — the clamped
+    /// column sums of the similarity source, all n at once on the
+    /// parallel blocked layer (the heap-seeding pass of [`lazy_greedy`]).
+    pub fn initial_gains(&self) -> Vec<f64> {
+        match self.src {
+            SimSource::Sim(m) => crate::par::colsum_pos(m),
+            SimSource::Dist { dist, d_max } => {
+                // sims are d_max − dist ≥ 0 by construction, so the
+                // empty-cover gain of j is n·d_max − Σ_i dist[i][j].  The
+                // sum must be *unclamped*: device-computed squared
+                // distances can come back as tiny negatives, and clamping
+                // them would understate the heap seed — lazy greedy
+                // requires these keys to be upper bounds of gain(j).
+                let n = dist.rows as f64;
+                crate::par::colsum(dist)
+                    .into_iter()
+                    .map(|s| n * d_max as f64 - s)
+                    .collect()
             }
         }
+    }
+
+    /// Commit element `j` (update coverage) — parallel over coverage
+    /// blocks when n is large enough to pay for it.
+    pub fn commit(&mut self, j: usize) {
+        let src = &self.src;
+        let work = self.cover.len();
+        crate::par::for_chunks(&mut self.cover, work, |lo, chunk| {
+            for (off, c) in chunk.iter_mut().enumerate() {
+                let s = src.at(lo + off, j);
+                if s > *c {
+                    *c = s;
+                }
+            }
+        });
     }
 
     /// Current objective value.
@@ -64,23 +156,51 @@ impl<'a> FacilityLocation<'a> {
 
     /// Medoid-count weights for a selection: `w_j = |{i : j = argmax_{s∈S}
     /// sim[i][s]}|` — CRAIG's weights (Lemma 2).  Every element votes for
-    /// its best-covering selected medoid.
+    /// its best-covering selected medoid.  Policy-parallel over voter
+    /// blocks; see [`Self::medoid_weights_threads`].
     pub fn medoid_weights(&self, selected: &[usize]) -> Vec<f32> {
+        let threads = crate::par::policy_threads(self.n() * selected.len().max(1));
+        self.medoid_weights_threads(selected, threads)
+    }
+
+    /// [`Self::medoid_weights`] with an explicit worker count.  Each
+    /// worker tallies a disjoint block of voters into a local count
+    /// vector; partials are summed in block order (counts are small
+    /// integers in f32, so the reduction is exact and order-independent).
+    pub fn medoid_weights_threads(&self, selected: &[usize], threads: usize) -> Vec<f32> {
+        let n = self.n();
         let mut w = vec![0.0f32; selected.len()];
-        if selected.is_empty() {
+        if selected.is_empty() || n == 0 {
             return w;
         }
-        for i in 0..self.sim.rows {
-            let mut best = 0usize;
-            let mut best_s = f32::NEG_INFINITY;
-            for (slot, &j) in selected.iter().enumerate() {
-                let s = self.sim.at(i, j);
-                if s > best_s {
-                    best_s = s;
-                    best = slot;
+        let vote_block = |lo: usize, hi: usize| -> Vec<f32> {
+            let mut local = vec![0.0f32; selected.len()];
+            for i in lo..hi {
+                let mut best = 0usize;
+                let mut best_s = f32::NEG_INFINITY;
+                for (slot, &j) in selected.iter().enumerate() {
+                    let s = self.src.at(i, j);
+                    if s > best_s {
+                        best_s = s;
+                        best = slot;
+                    }
                 }
+                local[best] += 1.0;
             }
-            w[best] += 1.0;
+            local
+        };
+        let threads = threads.clamp(1, n);
+        if threads == 1 {
+            return vote_block(0, n);
+        }
+        let per = n.div_ceil(threads);
+        let blocks: Vec<(usize, usize)> =
+            (0..threads).map(|b| (b * per, ((b + 1) * per).min(n))).collect();
+        let partials = crate::par::map_tasks_threads(&blocks, threads, |&(lo, hi)| vote_block(lo, hi));
+        for local in partials {
+            for (acc, v) in w.iter_mut().zip(local) {
+                *acc += v;
+            }
         }
         w
     }
@@ -131,7 +251,7 @@ pub fn lazy_greedy(fl: &mut FacilityLocation<'_>, k: usize) -> GreedyResult {
     // gain is the clamped column sum Σ_i max(sim[i][j], 0) — computed for
     // all n columns at once on the parallel blocked layer (the O(n²)
     // heap-seeding pass that used to dominate small-k builds).
-    for (j, g) in crate::par::colsum_pos(fl.sim).into_iter().enumerate() {
+    for (j, g) in fl.initial_gains().into_iter().enumerate() {
         evals += 1;
         heap.push(HeapItem { gain: g, item: j, round: 0 });
     }
@@ -230,7 +350,10 @@ pub fn greedy_cover(fl: &mut FacilityLocation<'_>, target_value: f64) -> GreedyR
 /// Build a similarity matrix from squared distances:
 /// `sim[i][j] = d_max − dist[i][j]` (the CRAIG kernelization — constant
 /// shift makes similarities non-negative without changing the argmax
-/// structure).
+/// structure).  This *materializes* the n² similarity copy; the selection
+/// hot paths use [`FacilityLocation::from_sqdist`] instead, which applies
+/// the same kernelization per access.  Kept as the reference the
+/// equivalence tests and micro benches compare against.
 pub fn sim_from_sqdist(dist: &Matrix) -> Matrix {
     let d_max = dist.data.iter().cloned().fold(0.0f32, f32::max);
     let mut sim = Matrix::zeros(dist.rows, dist.cols);
@@ -356,5 +479,95 @@ mod tests {
             .unwrap();
         let _ = &mut fl2;
         assert_eq!(res.selected[0], best);
+    }
+
+    fn random_sqdist(n: usize, rng: &mut Rng) -> Matrix {
+        // symmetric nonneg squared distances with zero diagonal
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..i {
+                let v = rng.f32() * 3.0;
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn distance_backed_fl_matches_sim_copy_path() {
+        // from_sqdist must reproduce the sim_from_sqdist + new() pipeline:
+        // same gains, same greedy selection, same medoid weights
+        forall(15, |g| {
+            let n = g.int(2, 30);
+            let mut rng = Rng::new(g.case as u64 + 500);
+            let dist = random_sqdist(n, &mut rng);
+            let sim = sim_from_sqdist(&dist);
+            let k = g.int(1, n);
+
+            let fl_d = FacilityLocation::from_sqdist(&dist);
+            let fl_s = FacilityLocation::new(&sim);
+            for j in 0..n {
+                let (gd, gs) = (fl_d.gain(j), fl_s.gain(j));
+                assert!((gd - gs).abs() <= 1e-4 * (1.0 + gs.abs()), "gain {j}: {gd} vs {gs}");
+            }
+            let ig_d = fl_d.initial_gains();
+            let ig_s = fl_s.initial_gains();
+            for j in 0..n {
+                assert!(
+                    (ig_d[j] - ig_s[j]).abs() <= 1e-4 * (1.0 + ig_s[j].abs()),
+                    "initial gain {j}: {} vs {}",
+                    ig_d[j],
+                    ig_s[j]
+                );
+            }
+
+            let mut fl_d = FacilityLocation::from_sqdist(&dist);
+            let mut fl_s = FacilityLocation::new(&sim);
+            let rd = lazy_greedy(&mut fl_d, k);
+            let rs = lazy_greedy(&mut fl_s, k);
+            assert_eq!(rd.selected, rs.selected, "n={n} k={k}");
+            let wd = fl_d.medoid_weights(&rd.selected);
+            let ws = fl_s.medoid_weights(&rs.selected);
+            assert_eq!(wd, ws);
+        });
+    }
+
+    #[test]
+    fn parallel_medoid_weights_match_serial() {
+        forall(10, |g| {
+            let n = g.int(3, 40);
+            let mut rng = Rng::new(g.case as u64 + 900);
+            let sim = random_sim(n, &mut rng);
+            let mut fl = FacilityLocation::new(&sim);
+            let k = g.int(1, n.min(6));
+            let res = lazy_greedy(&mut fl, k);
+            let want = fl.medoid_weights_threads(&res.selected, 1);
+            for threads in [2usize, 4, 7] {
+                let got = fl.medoid_weights_threads(&res.selected, threads);
+                assert_eq!(got, want, "threads={threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_commit_matches_serial_coverage() {
+        // commit through the policy path (serial at this size) vs a
+        // hand-rolled serial update
+        let mut rng = Rng::new(12);
+        let sim = random_sim(25, &mut rng);
+        let mut fl = FacilityLocation::new(&sim);
+        let mut cover = vec![0.0f32; 25];
+        for &j in &[3usize, 11, 19] {
+            fl.commit(j);
+            for (i, c) in cover.iter_mut().enumerate() {
+                let s = sim.at(i, j);
+                if s > *c {
+                    *c = s;
+                }
+            }
+        }
+        let want: f64 = cover.iter().map(|&v| v as f64).sum();
+        assert!((fl.value() - want).abs() < 1e-9);
     }
 }

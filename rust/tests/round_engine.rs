@@ -1,0 +1,304 @@
+//! Contracts of the parallel selection-round engine, pinned host-side on
+//! the synthetic gradient oracle (no PJRT / HLO artifacts needed — these
+//! run everywhere `cargo test` runs):
+//!
+//! - the staged single-pass gradient stage reproduces the serial
+//!   per-class acquisition exactly (rows, slices, targets);
+//! - the runtime dispatch count drops from
+//!   `Σ_c ⌈n_c/chunk⌉ (grads) + Σ_c ⌈n_c/chunk⌉ (mean)` to
+//!   `⌈|ground|/chunk⌉` on the train-target path (counting oracle);
+//! - the class-level fan-out merges bit-identically to the serial solve
+//!   order across variants, class counts, and imbalanced budget shapes;
+//! - the NaN-safe ranking used by the score baselines never panics and
+//!   never lets a NaN win.
+
+use gradmatch::data::Dataset;
+use gradmatch::grads::{
+    class_columns, class_mean_gradients_with, mean_gradient_with, per_sample_grads_with,
+    score_grads_with, stage_class_grads_with, ClassStage, StageWidth, SynthGrads,
+};
+use gradmatch::rng::Rng;
+use gradmatch::selection::{solve_classes_omp, split_budget, top_k_desc};
+use gradmatch::tensor::Matrix;
+use gradmatch::testutil::{forall, Gen};
+
+/// Random dataset with an explicitly imbalanced class histogram: a few
+/// heavy classes, a long tail, and (sometimes) empty classes.
+fn imbalanced_dataset(g: &mut Gen, classes: usize, d: usize) -> Dataset {
+    let mut y: Vec<i32> = Vec::new();
+    for cls in 0..classes {
+        let n_c = match cls % 4 {
+            0 => g.int(20, 60),     // heavy
+            1 => g.int(5, 15),      // mid
+            2 => g.int(1, 4),       // tail
+            _ => g.int(0, 2),       // sometimes empty
+        };
+        y.extend(std::iter::repeat(cls as i32).take(n_c));
+    }
+    // interleave classes like a real shuffled dataset
+    let mut rng = Rng::new(g.case as u64 + 7777);
+    rng.shuffle(&mut y);
+    let n = y.len();
+    let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian_f32()).collect());
+    Dataset { x, y, classes }
+}
+
+fn ground_rows_per_class(ds: &Dataset, ground: &[usize]) -> Vec<Vec<usize>> {
+    let mut per = vec![Vec::new(); ds.classes];
+    for &i in ground {
+        per[ds.y[i] as usize].push(i);
+    }
+    per
+}
+
+#[test]
+fn staged_pass_reproduces_serial_per_class_acquisition() {
+    forall(12, |g| {
+        let classes = g.int(2, 8);
+        let h = g.int(2, 6);
+        let p = h * classes + classes;
+        let d = g.int(3, 10);
+        let chunk = *g.choose(&[4usize, 16, 64]);
+        let ds = imbalanced_dataset(g, classes, d);
+        if ds.len() == 0 {
+            return;
+        }
+        // ground set: a subset of rows, in shuffled order
+        let take = g.int(1, ds.len());
+        let mut ground: Vec<usize> = (0..ds.len()).collect();
+        let mut rng = Rng::new(g.case as u64 + 31);
+        rng.shuffle(&mut ground);
+        ground.truncate(take);
+
+        for width in [StageWidth::ClassSlice, StageWidth::Full] {
+            let mut oracle = SynthGrads::new(chunk, p);
+            let stages =
+                stage_class_grads_with(&mut oracle, &ds, &ground, h, classes, width, true).unwrap();
+            assert_eq!(stages.len(), classes);
+            let per_class = ground_rows_per_class(&ds, &ground);
+            for (cls, stage) in stages.iter().enumerate() {
+                // rows land per class in ground order
+                assert_eq!(stage.rows, per_class[cls], "cls {cls}");
+                if stage.rows.is_empty() {
+                    assert_eq!(stage.g.rows, 0);
+                    continue;
+                }
+                // staged slice == serial per-class pass (+ gather_cols)
+                let mut serial = SynthGrads::new(chunk, p);
+                let store = per_sample_grads_with(&mut serial, &ds, &stage.rows).unwrap();
+                let want = match width {
+                    StageWidth::ClassSlice => store.g.gather_cols(&class_columns(h, classes, cls)),
+                    StageWidth::Full => store.g,
+                };
+                assert_eq!(stage.g.data, want.data, "cls {cls} {width:?}");
+                // staged target == serial per-class mean pass
+                let mut serial_mean = SynthGrads::new(chunk, p);
+                let want_t = mean_gradient_with(&mut serial_mean, &ds, &stage.rows).unwrap();
+                for (a, b) in stage.target_full.iter().zip(&want_t) {
+                    assert!(
+                        (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                        "cls {cls} target: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn dispatch_count_drops_to_one_ground_pass() {
+    // the acceptance contract: the staged train-target path costs exactly
+    // ⌈|ground|/chunk⌉ grads dispatches and ZERO mean dispatches, vs the
+    // serial path's Σ_c ⌈n_c/chunk⌉ (grads) + Σ_c ⌈n_c/chunk⌉ (mean)
+    forall(10, |g| {
+        let classes = g.int(2, 10);
+        let h = 3usize;
+        let p = h * classes + classes;
+        let chunk = *g.choose(&[8usize, 32]);
+        let ds = imbalanced_dataset(g, classes, 6);
+        if ds.len() == 0 {
+            return;
+        }
+        let ground: Vec<usize> = (0..ds.len()).collect();
+
+        let mut staged = SynthGrads::new(chunk, p);
+        let stages =
+            stage_class_grads_with(&mut staged, &ds, &ground, h, classes, StageWidth::ClassSlice, true)
+                .unwrap();
+        assert_eq!(staged.grad_calls, ds.len().div_ceil(chunk), "one padded ground pass");
+        assert_eq!(staged.mean_calls, 0, "train targets are free — no mean pass");
+
+        // the serial reference costs strictly more dispatches whenever
+        // more than one class is populated
+        let mut serial = SynthGrads::new(chunk, p);
+        let mut want_grads = 0usize;
+        let mut want_means = 0usize;
+        for stage in &stages {
+            if stage.rows.is_empty() {
+                continue;
+            }
+            per_sample_grads_with(&mut serial, &ds, &stage.rows).unwrap();
+            want_grads += stage.rows.len().div_ceil(chunk);
+            mean_gradient_with(&mut serial, &ds, &stage.rows).unwrap();
+            want_means += stage.rows.len().div_ceil(chunk);
+        }
+        assert_eq!(serial.grad_calls, want_grads);
+        assert_eq!(serial.mean_calls, want_means);
+        let populated = stages.iter().filter(|s| !s.rows.is_empty()).count();
+        if populated > 1 {
+            assert!(
+                staged.grad_calls < serial.grad_calls + serial.mean_calls,
+                "staged {} vs serial {}+{}",
+                staged.grad_calls,
+                serial.grad_calls,
+                serial.mean_calls
+            );
+        }
+    });
+}
+
+#[test]
+fn class_mean_gradients_is_a_single_correct_pass() {
+    // the one-pass per-class mean utility (host-side oracles; the live
+    // GRAD-MATCH val path keeps fused [P]-readback means — see its docs)
+    let classes = 5usize;
+    let h = 2usize;
+    let p = h * classes + classes;
+    let chunk = 8usize;
+    let mut g = Gen { rng: Rng::new(404), case: 0 };
+    let val = imbalanced_dataset(&mut g, classes, 4);
+    let rows: Vec<usize> = (0..val.len()).collect();
+    let mut oracle = SynthGrads::new(chunk, p);
+    let means = class_mean_gradients_with(&mut oracle, &val, &rows, classes).unwrap();
+    assert_eq!(oracle.grad_calls, val.len().div_ceil(chunk));
+    assert_eq!(oracle.mean_calls, 0);
+    // per-class means agree with filtered serial means
+    for cls in 0..classes {
+        let class_rows: Vec<usize> =
+            rows.iter().copied().filter(|&i| val.y[i] as usize == cls).collect();
+        match &means[cls] {
+            None => assert!(class_rows.is_empty()),
+            Some(got) => {
+                let mut serial = SynthGrads::new(chunk, p);
+                let want = mean_gradient_with(&mut serial, &val, &class_rows).unwrap();
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "cls {cls}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_scores_match_materialized_store() {
+    // GLISTER's streaming score pass: same values as scoring the full
+    // per-sample store, one padded pass, no [n, P] materialization
+    forall(10, |g| {
+        let classes = g.int(2, 6);
+        let h = g.int(2, 5);
+        let p = h * classes + classes;
+        let chunk = *g.choose(&[4usize, 16, 64]);
+        let ds = imbalanced_dataset(g, classes, 7);
+        if ds.len() == 0 {
+            return;
+        }
+        let ground: Vec<usize> = (0..ds.len()).collect();
+        let v = g.gauss_vec(p);
+        let mut stream_oracle = SynthGrads::new(chunk, p);
+        let got = score_grads_with(&mut stream_oracle, &ds, &ground, &v).unwrap();
+        assert_eq!(stream_oracle.grad_calls, ds.len().div_ceil(chunk), "one padded pass");
+        assert_eq!(stream_oracle.mean_calls, 0);
+        let mut store_oracle = SynthGrads::new(chunk, p);
+        let store = per_sample_grads_with(&mut store_oracle, &ds, &ground).unwrap();
+        assert_eq!(got.len(), ground.len());
+        for (i, &s) in got.iter().enumerate() {
+            let want = gradmatch::par::dot(store.g.row(i), &v);
+            assert!((s - want).abs() <= 1e-4 * (1.0 + want.abs()), "row {i}: {s} vs {want}");
+        }
+    });
+}
+
+#[test]
+fn fanout_solves_match_serial_solves_end_to_end() {
+    // full pipeline over the synthetic oracle: stage → budgets → targets
+    // → solve, serial vs fan-out, across imbalanced split_budget shapes
+    forall(10, |g| {
+        let classes = g.int(2, 9);
+        let h = g.int(2, 5);
+        let p = h * classes + classes;
+        let chunk = 16usize;
+        let ds = imbalanced_dataset(g, classes, 5);
+        if ds.len() == 0 {
+            return;
+        }
+        let ground: Vec<usize> = (0..ds.len()).collect();
+        let mut oracle = SynthGrads::new(chunk, p);
+        let stages =
+            stage_class_grads_with(&mut oracle, &ds, &ground, h, classes, StageWidth::ClassSlice, true)
+                .unwrap();
+        let sizes: Vec<usize> = stages.iter().map(|s| s.rows.len()).collect();
+        let budget = (ds.len() / 3).max(1);
+        let budgets = split_budget(budget, &sizes);
+        let targets: Vec<Vec<f32>> = stages
+            .iter()
+            .enumerate()
+            .map(|(cls, s)| {
+                class_columns(h, classes, cls).iter().map(|&j| s.target_full[j]).collect()
+            })
+            .collect();
+        let serial = solve_classes_omp(&stages, &budgets, &targets, 0.5, 1e-10, false).unwrap();
+        let fanout = solve_classes_omp(&stages, &budgets, &targets, 0.5, 1e-10, true).unwrap();
+        assert_eq!(serial.indices, fanout.indices, "merge order must be bit-identical");
+        for (a, b) in serial.weights.iter().zip(&fanout.weights) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        // selections stay inside the ground set, no duplicates
+        let mut seen = serial.indices.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), serial.indices.len());
+        assert!(serial.indices.iter().all(|&i| i < ds.len()));
+    });
+}
+
+#[test]
+fn fanout_merge_is_in_class_order() {
+    // stages with disjoint, class-contiguous row ranges: the merged
+    // selection's rows must be non-decreasing in class
+    let mut g = Gen { rng: Rng::new(777), case: 0 };
+    let width = 6usize;
+    let mut next = 0usize;
+    let stages: Vec<ClassStage> = (0..6)
+        .map(|_| {
+            let n_c = g.int(3, 20);
+            let rows: Vec<usize> = (next..next + n_c).collect();
+            next += n_c;
+            ClassStage { g: g.matrix(n_c, width), rows, target_full: g.gauss_vec(width) }
+        })
+        .collect();
+    let sizes: Vec<usize> = stages.iter().map(|s| s.rows.len()).collect();
+    let budgets = split_budget(next / 2, &sizes);
+    let targets: Vec<Vec<f32>> = stages.iter().map(|s| s.target_full.clone()).collect();
+    let sel = solve_classes_omp(&stages, &budgets, &targets, 0.5, 1e-12, true).unwrap();
+    assert!(!sel.indices.is_empty());
+    // row ranges are class-contiguous, so class order == range order
+    let class_of = |row: usize| stages.iter().position(|s| s.rows.contains(&row)).unwrap();
+    let classes_seen: Vec<usize> = sel.indices.iter().map(|&r| class_of(r)).collect();
+    for w in classes_seen.windows(2) {
+        assert!(w[0] <= w[1], "merge must walk classes in order: {classes_seen:?}");
+    }
+}
+
+#[test]
+fn nan_scores_never_panic_or_win_the_ranking() {
+    // regression for the Glister/Entropy/Forgetting footgun: the old
+    // sort_by(partial_cmp().unwrap()) ranking aborted on any NaN score
+    let scores = vec![0.5, f32::NAN, 2.0, -1.0, f32::NAN, 1.5];
+    let top = top_k_desc(&scores, 3);
+    assert_eq!(top, vec![2, 5, 0]);
+    assert!(top.iter().all(|&j| !scores[j].is_nan()));
+    // ranking degrades gracefully when NaNs outnumber the budget shortfall
+    let top_all = top_k_desc(&scores, scores.len());
+    assert_eq!(top_all.len(), scores.len());
+    assert_eq!(&top_all[..4], &[2, 5, 0, 3], "finite scores rank first");
+}
