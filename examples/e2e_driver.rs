@@ -74,6 +74,10 @@ fn main() -> Result<()> {
             r.select_secs,
             full.energy_kwh / r.energy_kwh.max(1e-12),
         );
+        println!(
+            "  selection rounds: {} ({} staging dispatches, stage {:.2}s / solve {:.2}s)",
+            r.selections, r.stage_dispatches, r.select_stage_secs, r.select_solve_secs
+        );
         all.push(r);
     }
 

@@ -45,10 +45,13 @@ fn main() -> Result<()> {
     // standard schedule
     let std_run = coord.run_one(&cfg, cfg.seed)?;
     println!(
-        "standard endpoint (*): acc {:.2}% in {:.1}s (speedup {:.2}x)",
+        "standard endpoint (*): acc {:.2}% in {:.1}s (speedup {:.2}x; {} selection rounds: stage {:.2}s / solve {:.2}s)",
         std_run.test_acc * 100.0,
         std_run.total_secs,
-        full.total_secs / std_run.total_secs.max(1e-9)
+        full.total_secs / std_run.total_secs.max(1e-9),
+        std_run.selections,
+        std_run.select_stage_secs,
+        std_run.select_solve_secs
     );
 
     // extend by up to ~80% more epochs, reporting the convergence tail

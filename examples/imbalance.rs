@@ -59,10 +59,12 @@ fn main() -> Result<()> {
         c.strategy = strat.into();
         let r = coord.run_one(&c, c.seed)?;
         println!(
-            "{strat:<22} acc {:>6.2}%  time {:>7.1}s  select {:>5.1}s  speedup {:>5.2}x",
+            "{strat:<22} acc {:>6.2}%  time {:>7.1}s  select {:>5.1}s (stage {:>4.1}s / solve {:>4.1}s)  speedup {:>5.2}x",
             r.test_acc * 100.0,
             r.total_secs,
             r.select_secs,
+            r.select_stage_secs,
+            r.select_solve_secs,
             full.total_secs / r.total_secs.max(1e-9)
         );
     }

@@ -46,10 +46,13 @@ fn main() -> Result<()> {
         c.strategy = strat.into();
         let r = coord.run_one(&c, c.seed)?;
         println!(
-            "{strat:<10}: acc {:>6.2}%  time {:>7.2}s (select {:>5.2}s)  speedup {:>5.2}x  rel-err {:>5.2}%",
+            "{strat:<10}: acc {:>6.2}%  time {:>7.2}s (select {:>5.2}s = stage {:.2}s + solve {:.2}s, {} dispatches)  speedup {:>5.2}x  rel-err {:>5.2}%",
             r.test_acc * 100.0,
             r.total_secs,
             r.select_secs,
+            r.select_stage_secs,
+            r.select_solve_secs,
+            r.stage_dispatches,
             full.total_secs / r.total_secs.max(1e-9),
             100.0 * (full.test_acc - r.test_acc) / full.test_acc
         );

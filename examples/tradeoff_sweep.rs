@@ -55,10 +55,13 @@ fn main() -> Result<()> {
     println!("\nFig.-1 efficiency summary (gradmatch-pb-warm):");
     for row in rows.iter().filter(|r| r.summary.strategy == "gradmatch-pb-warm") {
         println!(
-            "  {:>3.0}% subset -> {:>5.2}x speedup at {:>5.2}% accuracy drop",
+            "  {:>3.0}% subset -> {:>5.2}x speedup at {:>5.2}% accuracy drop (selection: stage {:.2}s / solve {:.2}s over {} rounds)",
             row.summary.budget_frac * 100.0,
             row.speedup,
-            row.rel_err_pct
+            row.rel_err_pct,
+            row.summary.select_stage_secs,
+            row.summary.select_solve_secs,
+            row.summary.selections
         );
     }
 

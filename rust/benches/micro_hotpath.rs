@@ -20,6 +20,7 @@
 
 use gradmatch::bench_harness as bh;
 use gradmatch::data::{Dataset, DatasetCard};
+use gradmatch::engine::{SelectionEngine, SelectionRequest};
 use gradmatch::grads::{
     class_columns, mean_gradient_with, per_sample_grads_with, stage_class_grads_with, StageWidth,
     SynthGrads,
@@ -356,6 +357,89 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // --- selection engine: shared staging across a multi-strategy round -----
+    // The engine API contract in miniature: three requests (gradmatch,
+    // gradmatch-warm, craig) against one model state share ONE staged
+    // pass — ⌈n/chunk⌉ dispatches total — where three solo engines pay
+    // one each.  (Pinned exactly by the counting-oracle test in
+    // tests/engine_api.rs.)
+    bh::section("micro — selection engine: 3-strategy round, shared staging");
+    {
+        let (c, h, d, chunk) = (10usize, 32usize, 64usize, 256usize);
+        let p = h * c + c;
+        let mut y: Vec<i32> = Vec::new();
+        for cls in 0..c {
+            let n_c = if cls < 2 { 512 } else { 96 };
+            y.extend(std::iter::repeat(cls as i32).take(n_c));
+        }
+        let mut eng_rng = Rng::new(777);
+        eng_rng.shuffle(&mut y);
+        let n = y.len();
+        let train = Dataset {
+            x: Matrix::from_vec(n, d, (0..n * d).map(|_| eng_rng.gaussian_f32()).collect()),
+            y,
+            classes: c,
+        };
+        let val = Dataset { x: Matrix::zeros(4, d), y: vec![0, 1, 2, 3], classes: c };
+        let base = SelectionRequest {
+            strategy: "gradmatch".into(),
+            budget: (n / 10).max(c),
+            lambda: 0.5,
+            eps: 1e-10,
+            is_valid: false,
+            seed: 42,
+            rng_tag: 1,
+            ground: (0..n).collect(),
+        };
+        let specs = ["gradmatch", "gradmatch-warm", "craig"];
+        let reqs: Vec<SelectionRequest> = specs
+            .iter()
+            .map(|spec| {
+                let mut r = base.clone();
+                r.strategy = spec.to_string();
+                r
+            })
+            .collect();
+        let mut shared_oracle = SynthGrads::new(chunk, p);
+        let (reports, secs) = {
+            let engine = SelectionEngine::with_oracle(&mut shared_oracle, &train, &val, h, c);
+            bh::timed(|| engine.select_batch(&reqs).unwrap())
+        };
+        println!("  3-strategy round (shared staging): {:.3}ms", secs * 1e3);
+        report.note("engine_round_secs", secs);
+        report.note("engine_shared_dispatches", shared_oracle.grad_calls as f64);
+        for (spec, rep) in specs.iter().zip(&reports) {
+            report.note_round(&format!("engine/{spec}"), &rep.stats);
+        }
+        // solo baseline: each strategy staging privately
+        let mut solo_calls = 0usize;
+        for spec in specs {
+            let mut oracle = SynthGrads::new(chunk, p);
+            let mut r = base.clone();
+            r.strategy = spec.to_string();
+            {
+                let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, c);
+                engine.select(&r).unwrap();
+            }
+            solo_calls += oracle.grad_calls;
+        }
+        report.note("engine_solo_dispatches", solo_calls as f64);
+        bh::shape_check(
+            &format!(
+                "engine: 3-strategy round shares one staged pass — {} dispatches (solo {})",
+                shared_oracle.grad_calls, solo_calls
+            ),
+            shared_oracle.grad_calls == n.div_ceil(chunk)
+                && solo_calls == 3 * n.div_ceil(chunk),
+        );
+        bh::shape_check(
+            "engine: later requests report stage_shared",
+            !reports[0].stats.stage_shared
+                && reports[1].stats.stage_shared
+                && reports[2].stats.stage_shared,
+        );
+    }
+
     // --- XLA/PJRT-backed sections (need HLO artifacts) -----------------------
     // A failure here must not discard the pure-Rust records above: note
     // it and still write the report.
@@ -482,6 +566,7 @@ fn xla_sections(rt: &Runtime, report: &mut bh::BenchReport) -> anyhow::Result<()
                 eps: 1e-10,
                 is_valid: false,
                 rng: &mut sel_rng,
+                round: None,
             })
             .unwrap()
         };
@@ -493,6 +578,29 @@ fn xla_sections(rt: &Runtime, report: &mut bh::BenchReport) -> anyhow::Result<()
             &format!("{model}/round_live_speedup"),
             live_serial / live_fanout.max(1e-12),
         );
+
+        // the same live round through the engine API — the report's
+        // staging/solve split and dispatch count land in the JSON notes
+        let req = SelectionRequest {
+            strategy: "gradmatch-rust".into(),
+            budget: (ground.len() / 10).max(1),
+            lambda: 0.5,
+            eps: 1e-10,
+            is_valid: false,
+            seed: 42,
+            rng_tag: 99,
+            ground: ground.clone(),
+        };
+        let engine = SelectionEngine::new(rt, &st, &splits.train, &splits.val);
+        let rep = engine.select(&req)?;
+        println!(
+            "  {model}/round via engine: stage {:.3}ms solve {:.3}ms ({} dispatches, fanout={})",
+            rep.stats.stage_secs * 1e3,
+            rep.stats.solve_secs * 1e3,
+            rep.stats.stage_dispatches,
+            rep.stats.fanout
+        );
+        report.note_round(&format!("{model}/round_engine"), &rep.stats);
     }
     Ok(())
 }

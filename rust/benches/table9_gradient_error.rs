@@ -59,6 +59,7 @@ fn main() -> anyhow::Result<()> {
                 eps: 1e-10,
                 is_valid: false,
                 rng: &mut rng,
+                round: None,
             })?;
             let store = grads::per_sample_grads(rt, &st, &splits.train, &sel.indices)?;
             let err = grads::gradient_error(&store.g, &sel.weights, &target);

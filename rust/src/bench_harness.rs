@@ -126,6 +126,22 @@ impl BenchReport {
         self.notes.push((key.into(), value));
     }
 
+    /// Fold one engine round's observability
+    /// ([`crate::engine::RoundStats`]) into the notes under `label/…` —
+    /// how `SelectionReport`s land in `BENCH_micro.json` so the perf
+    /// trajectory tracks the staging/solve split PR-over-PR.
+    #[cfg(feature = "xla")]
+    pub fn note_round(&mut self, label: &str, stats: &crate::engine::RoundStats) {
+        self.note(&format!("{label}/stage_secs"), stats.stage_secs);
+        self.note(&format!("{label}/solve_secs"), stats.solve_secs);
+        self.note(&format!("{label}/stage_dispatches"), stats.stage_dispatches as f64);
+        self.note(
+            &format!("{label}/stage_shared"),
+            if stats.stage_shared { 1.0 } else { 0.0 },
+        );
+        self.note(&format!("{label}/fanout"), if stats.fanout { 1.0 } else { 0.0 });
+    }
+
     /// Serialize to JSON text.
     pub fn to_json(&self) -> String {
         let mut s = String::new();

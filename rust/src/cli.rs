@@ -5,7 +5,10 @@
 //!                   [--budget 0.1] [--epochs N] [--model m] [--seed n] [--runs n]
 //! gradmatch sweep   [--config f.toml] [--datasets a,b] [--strategies x,y]
 //!                   [--budgets 0.05,0.1,...]
-//! gradmatch select  one-shot selection; dumps indices+weights JSON
+//! gradmatch select  one-shot engine round; [--strategies a,b,c] batches
+//!                   requests over one shared staging pass; dumps
+//!                   SelectionReport JSON (selection + observability)
+//! gradmatch list-strategies  print every spec with adaptivity/warm flags
 //! gradmatch inspect print the artifact manifest summary
 //! ```
 
@@ -144,12 +147,17 @@ USAGE:
                     [--imbalance true] [--set section.key=value]...
   gradmatch sweep   [--datasets synmnist,syncifar10] [--strategies random,gradmatch-pb]
                     [--budgets 0.05,0.1,0.3] [--epochs 60] ...
-  gradmatch select  one-shot subset selection; prints indices+weights JSON
+  gradmatch select  one-shot engine selection round; prints SelectionReport
+                    JSON (indices+weights plus staging/solve observability).
+                    --strategies a,b,c batches the round: one staged-gradient
+                    pass shared by every request (SelectionEngine cache)
+  gradmatch list-strategies  print every strategy spec + adaptive/warm flags
   gradmatch inspect print artifact manifest summary
 
 Strategies: random, full, full-earlystop, glister, craig[-pb], gradmatch,
             gradmatch-pb, gradmatch-perclass, entropy, forgetting, featurefl
-            — append -warm for the κ warm-start variants.
+            — append -warm for the κ warm-start variants
+            (`gradmatch list-strategies` prints the full table).
 Datasets:   synmnist, syncifar10, syncifar100, synsvhn, synimagenet
 "
 }

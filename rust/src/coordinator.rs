@@ -12,6 +12,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::ExperimentConfig;
 use crate::data::{imbalance_indices, DatasetCard, Splits};
+use crate::engine::{SelectionEngine, SelectionReport, SelectionRequest};
 use crate::jsonlite::{arr, num, obj, s, Json};
 use crate::metrics::Phase;
 use crate::rng::Rng;
@@ -36,6 +37,14 @@ pub struct RunSummary {
     pub selections: usize,
     pub steps: usize,
     pub mean_grad_error: Option<f64>,
+    /// engine observability: total seconds the applied rounds spent
+    /// staging gradients vs solving (SelectionReport aggregates)
+    pub select_stage_secs: f64,
+    pub select_solve_secs: f64,
+    /// padded runtime dispatches the staging passes issued across rounds
+    pub stage_dispatches: usize,
+    /// rounds whose staged gradients came from the engine's shared cache
+    pub stage_shared_rounds: usize,
     /// fraction of training rows never selected (Table 10)
     pub redundant_frac: f64,
     /// (epoch, cum_secs, test_acc) convergence points (Fig. 3j/k)
@@ -68,6 +77,10 @@ impl RunSummary {
             } else {
                 Some(o.grad_errors.iter().map(|&e| e as f64).sum::<f64>() / o.grad_errors.len() as f64)
             },
+            select_stage_secs: o.round_stats.iter().map(|r| r.stage_secs).sum(),
+            select_solve_secs: o.round_stats.iter().map(|r| r.solve_secs).sum(),
+            stage_dispatches: o.round_stats.iter().map(|r| r.stage_dispatches).sum(),
+            stage_shared_rounds: o.round_stats.iter().filter(|r| r.stage_shared).count(),
             redundant_frac: never as f64 / o.ever_selected.len().max(1) as f64,
             convergence: conv,
         }
@@ -93,6 +106,10 @@ impl RunSummary {
                 "mean_grad_error",
                 self.mean_grad_error.map(num).unwrap_or(Json::Null),
             ),
+            ("select_stage_secs", num(self.select_stage_secs)),
+            ("select_solve_secs", num(self.select_solve_secs)),
+            ("stage_dispatches", num(self.stage_dispatches as f64)),
+            ("stage_shared_rounds", num(self.stage_shared_rounds as f64)),
             (
                 "convergence",
                 arr(self
@@ -202,19 +219,22 @@ impl Coordinator {
             budget_frac: cfg.budget_frac,
         };
         let mut selector = if cfg.overlap && !is_early_stop {
-            let base_spec = cfg.strategy.trim_end_matches("-warm").to_string();
             let budget =
                 ((opts.budget_frac * ground.len() as f64).round() as usize).clamp(1, ground.len());
+            let request = SelectionRequest {
+                strategy: cfg.strategy.trim_end_matches("-warm").to_string(),
+                budget,
+                lambda: cfg.lambda as f32,
+                eps: cfg.eps as f32,
+                is_valid: cfg.is_valid,
+                seed,
+                rng_tag: 0,
+                ground: ground.clone(),
+            };
             Some(crate::overlap::AsyncSelector::spawn(
                 crate::overlap::SelectorConfig {
                     artifacts_dir: cfg.artifacts_dir.clone(),
-                    strategy_spec: base_spec,
-                    ground: ground.clone(),
-                    budget,
-                    lambda: cfg.lambda as f32,
-                    eps: cfg.eps as f32,
-                    is_valid: cfg.is_valid,
-                    seed,
+                    request,
                 },
                 splits.train.clone(),
                 splits.val.clone(),
@@ -232,6 +252,40 @@ impl Coordinator {
             selector.as_mut(),
         )?;
         Ok(RunSummary::from_outcome(&key, seed, &outcome))
+    }
+
+    /// One selection round, many strategies, one staged pass: initialize
+    /// a model state for `cfg`, build a round-scoped [`SelectionEngine`]
+    /// over it, and issue one batched request per spec — every strategy
+    /// that stages at the same `(width, ground)` key shares the single
+    /// staging pass (the reports' `stage_shared` flags show the reuse).
+    /// The front-end of `gradmatch select --strategies a,b,c` and the
+    /// engine benches.
+    pub fn selection_round(
+        &mut self,
+        cfg: &ExperimentConfig,
+        specs: &[&str],
+    ) -> Result<Vec<SelectionReport>> {
+        cfg.validate().map_err(|e| anyhow!("config: {e}"))?;
+        let splits = self.splits(&cfg.dataset, cfg.seed, cfg.n_train)?.clone();
+        let ground: Vec<usize> = if cfg.is_valid {
+            let mut rng = Rng::new(cfg.seed ^ 0x1337);
+            imbalance_indices(&splits.train, cfg.imbalance_frac, cfg.imbalance_keep, &mut rng)
+        } else {
+            (0..splits.train.len()).collect()
+        };
+        let st = self.rt.init(&cfg.model, cfg.seed as i32)?;
+        let base = SelectionRequest::from_config(cfg, ground);
+        let reqs: Vec<SelectionRequest> = specs
+            .iter()
+            .map(|spec| {
+                let mut r = base.clone();
+                r.strategy = spec.to_string();
+                r
+            })
+            .collect();
+        let engine = SelectionEngine::new(&self.rt, &st, &splits.train, &splits.val);
+        engine.select_batch(&reqs)
     }
 
     /// Run `cfg.runs` seeds; returns all summaries.
@@ -350,6 +404,10 @@ mod tests {
             selections: 3,
             steps: 480,
             mean_grad_error: Some(0.05),
+            select_stage_secs: 0.75,
+            select_solve_secs: 1.25,
+            stage_dispatches: 12,
+            stage_shared_rounds: 1,
             redundant_frac: 0.7,
             convergence: vec![(4, 1.0, 0.8), (9, 2.0, 0.9)],
         };
@@ -357,6 +415,8 @@ mod tests {
         let parsed = Json::parse(&j.dump()).unwrap();
         assert_eq!(parsed.get("strategy").unwrap().as_str(), Some("gradmatch-pb"));
         assert_eq!(parsed.get("selections").unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.get("stage_dispatches").unwrap().as_usize(), Some(12));
+        assert_eq!(parsed.get("select_stage_secs").unwrap().as_f64(), Some(0.75));
         assert_eq!(
             parsed.get("convergence").unwrap().as_arr().unwrap().len(),
             2

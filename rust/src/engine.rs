@@ -1,0 +1,773 @@
+//! The selection-engine API: a typed [`SelectionRequest`] in, a
+//! shared-staging [`SelectionEngine`] round, a structured
+//! [`SelectionReport`] out.
+//!
+//! Algorithm 1 of the paper is one round of gradient staging followed by
+//! an OMP solve.  Before this module, every caller (trainer, overlap
+//! worker, benches, examples) hand-assembled a mutable
+//! [`SelectCtx`](crate::selection::SelectCtx) and called
+//! [`Strategy::select`](crate::selection::Strategy::select), so each
+//! strategy re-staged its own gradients and the only output was a bare
+//! index/weight list.  The engine makes the round a *service* boundary:
+//!
+//! - [`SelectionRequest`] — a plain, serializable description of one
+//!   selection round (strategy spec, budget, λ/ε, ground set,
+//!   train-vs-val matching, seed), constructible from
+//!   [`ExperimentConfig`] and from CLI flags.
+//! - [`SelectionEngine`] — owns the round: a live `Runtime` + model
+//!   snapshot (or, for device-free tests and benches, an explicit
+//!   [`GradOracle`]) plus a **round-scoped staging cache**
+//!   ([`RoundShared`]), so N requests against the same model state — a
+//!   strategy sweep, GRAD-MATCH + CRAIG in one round, warm + cold
+//!   variants — share ONE [`grads::stage_class_grads`] pass instead of
+//!   N.  Strategies are stateless solvers over the staged views; the
+//!   old `parse_strategy` + `select` path still works and now rides the
+//!   same solvers (with `round: None`, i.e. private staging).
+//! - [`SelectionReport`] — the [`Selection`] plus per-round
+//!   observability: staging/solve wall-clock split, staging dispatch
+//!   count, per-class budgets from `split_budget`, residual
+//!   `grad_error`, and the fan-out-vs-serial decision.  Serialized via
+//!   [`crate::jsonlite`] into `RunSummary` and `BENCH_micro.json`.
+//!
+//! The engine is **round-scoped**: one engine per model state.  Build a
+//! fresh engine after every parameter update (or call
+//! [`SelectionEngine::reset_round`]) — staged gradients are only valid
+//! for the snapshot they were computed against.
+//!
+//! Dispatch contract (pinned by the counting-oracle test in
+//! `tests/engine_api.rs`): a multi-strategy round over the class-sliced
+//! stage costs exactly `⌈|ground|/chunk⌉` gradient dispatches however
+//! many requests consume it.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::Dataset;
+use crate::grads::{self, ClassStage, GradOracle, StageWidth};
+use crate::jsonlite::{arr, num, obj, s, Json};
+use crate::rng::Rng;
+use crate::runtime::{ModelState, Runtime};
+use crate::selection::{
+    glister_rank, live_flags, omp_fanout_wins, parse_strategy, solve_classes_fl,
+    solve_classes_omp, split_budget, staged_targets, SelectCtx, Selection, Strategy,
+};
+
+// ---------------------------------------------------------------------------
+// SelectionRequest
+// ---------------------------------------------------------------------------
+
+/// A plain description of one selection round — everything the engine
+/// needs to reproduce the round, and nothing tied to a live runtime, so
+/// requests serialize, cross threads, and batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SelectionRequest {
+    /// strategy spec, e.g. `gradmatch-pb-warm` (see
+    /// [`crate::selection::parse_strategy`]; the `-warm` suffix is the
+    /// trainer's concern and is ignored by the engine)
+    pub strategy: String,
+    /// subset size k (samples)
+    pub budget: usize,
+    /// OMP ridge λ
+    pub lambda: f32,
+    /// OMP tolerance ε
+    pub eps: f32,
+    /// match validation gradients instead of training gradients (L = L_V)
+    pub is_valid: bool,
+    /// master run seed — combined with `rng_tag` into the round RNG
+    pub seed: u64,
+    /// per-round tag decorrelating rounds (the trainer uses 1000 + epoch)
+    pub rng_tag: u64,
+    /// ground set: dataset rows eligible for selection
+    pub ground: Vec<usize>,
+}
+
+impl SelectionRequest {
+    /// Build a request from an experiment config and a ground set; the
+    /// budget is `budget_frac` of the ground size, clamped to `[1, n]`.
+    /// (CLI flags reach here through
+    /// [`crate::cli::Cli::experiment_config`].)
+    pub fn from_config(cfg: &ExperimentConfig, ground: Vec<usize>) -> SelectionRequest {
+        let n = ground.len();
+        let budget = ((cfg.budget_frac * n as f64).round() as usize).clamp(1, n.max(1));
+        SelectionRequest {
+            strategy: cfg.strategy.clone(),
+            budget,
+            lambda: cfg.lambda as f32,
+            eps: cfg.eps as f32,
+            is_valid: cfg.is_valid,
+            seed: cfg.seed,
+            rng_tag: 0,
+            ground,
+        }
+    }
+
+    /// The round's RNG stream.  One derivation for every driver — the
+    /// synchronous trainer, the overlap worker, and one-shot engine
+    /// calls — so a round is reproducible from `(seed, rng_tag)` alone.
+    pub fn round_rng(&self) -> Rng {
+        Rng::new(self.seed ^ 0xDA7A).split(self.rng_tag)
+    }
+
+    /// Serialize for result files / cross-process hand-off.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("strategy", s(&self.strategy)),
+            ("budget", num(self.budget as f64)),
+            ("lambda", num(self.lambda as f64)),
+            ("eps", num(self.eps as f64)),
+            ("is_valid", Json::Bool(self.is_valid)),
+            // u64 as decimal strings: f64 JSON numbers lose integers
+            // above 2^53, and the round RNG must survive hand-off exactly
+            ("seed", s(&self.seed.to_string())),
+            ("rng_tag", s(&self.rng_tag.to_string())),
+            (
+                "ground",
+                arr(self.ground.iter().map(|&i| num(i as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Inverse of [`SelectionRequest::to_json`].
+    pub fn from_json(j: &Json) -> Result<SelectionRequest> {
+        Ok(SelectionRequest {
+            strategy: jstr(j, "strategy")?,
+            budget: jusize(j, "budget")?,
+            lambda: jf64(j, "lambda")? as f32,
+            eps: jf64(j, "eps")? as f32,
+            is_valid: jbool(j, "is_valid")?,
+            seed: ju64(j, "seed")?,
+            rng_tag: ju64(j, "rng_tag")?,
+            ground: jusize_arr(j, "ground")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SelectionReport
+// ---------------------------------------------------------------------------
+
+/// Per-round observability — the staging/solve decomposition of one
+/// request.  Timings are wall-clock; `stage_*` covers the shared
+/// [`grads::stage_class_grads`] pass (target/score passes count as
+/// solve time).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RoundStats {
+    /// seconds spent staging gradients (0 when served from the cache)
+    pub stage_secs: f64,
+    /// seconds spent in everything after staging (targets, solves, merge)
+    pub solve_secs: f64,
+    /// padded runtime dispatches the staging pass issued for this request
+    /// (`⌈|ground|/chunk⌉` on a cache miss, 0 on a hit)
+    pub stage_dispatches: usize,
+    /// staged gradients were served from the round's shared cache
+    pub stage_shared: bool,
+    /// per-class budgets from `split_budget` (empty for strategies that
+    /// do not decompose per class)
+    pub class_budgets: Vec<usize>,
+    /// the per-class solves fanned out across the machine
+    /// ([`crate::par::fanout_wins`]) rather than running serially
+    pub fanout: bool,
+}
+
+/// The engine's answer to one [`SelectionRequest`]: the selection itself
+/// plus the round's observability.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SelectionReport {
+    /// the request's strategy spec, echoed
+    pub strategy: String,
+    /// the request's budget, echoed
+    pub budget: usize,
+    pub selection: Selection,
+    pub stats: RoundStats,
+}
+
+impl SelectionReport {
+    /// Serialize via [`crate::jsonlite`] (used by `RunSummary` and the
+    /// bench reports).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("strategy", s(&self.strategy)),
+            ("budget", num(self.budget as f64)),
+            (
+                "selection",
+                obj(vec![
+                    (
+                        "indices",
+                        arr(self.selection.indices.iter().map(|&i| num(i as f64)).collect()),
+                    ),
+                    (
+                        "weights",
+                        arr(self.selection.weights.iter().map(|&w| num(w as f64)).collect()),
+                    ),
+                    (
+                        "grad_error",
+                        self.selection.grad_error.map(|e| num(e as f64)).unwrap_or(Json::Null),
+                    ),
+                ]),
+            ),
+            (
+                "round",
+                obj(vec![
+                    ("stage_secs", num(self.stats.stage_secs)),
+                    ("solve_secs", num(self.stats.solve_secs)),
+                    ("stage_dispatches", num(self.stats.stage_dispatches as f64)),
+                    ("stage_shared", Json::Bool(self.stats.stage_shared)),
+                    (
+                        "class_budgets",
+                        arr(self.stats.class_budgets.iter().map(|&b| num(b as f64)).collect()),
+                    ),
+                    ("fanout", Json::Bool(self.stats.fanout)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Inverse of [`SelectionReport::to_json`].
+    pub fn from_json(j: &Json) -> Result<SelectionReport> {
+        let sel = j
+            .get("selection")
+            .ok_or_else(|| anyhow!("report json: missing 'selection'"))?;
+        let grad_error = match sel.get("grad_error") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64()
+                    .ok_or_else(|| anyhow!("report json: bad 'grad_error'"))? as f32,
+            ),
+        };
+        let weights = sel
+            .get("weights")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("report json: missing 'weights'"))?
+            .iter()
+            .map(|v| v.as_f64().map(|w| w as f32))
+            .collect::<Option<Vec<f32>>>()
+            .ok_or_else(|| anyhow!("report json: bad weight"))?;
+        let round = j
+            .get("round")
+            .ok_or_else(|| anyhow!("report json: missing 'round'"))?;
+        Ok(SelectionReport {
+            strategy: jstr(j, "strategy")?,
+            budget: jusize(j, "budget")?,
+            selection: Selection {
+                indices: jusize_arr(sel, "indices")?,
+                weights,
+                grad_error,
+            },
+            stats: RoundStats {
+                stage_secs: jf64(round, "stage_secs")?,
+                solve_secs: jf64(round, "solve_secs")?,
+                stage_dispatches: jusize(round, "stage_dispatches")?,
+                stage_shared: jbool(round, "stage_shared")?,
+                class_budgets: jusize_arr(round, "class_budgets")?,
+                fanout: jbool(round, "fanout")?,
+            },
+        })
+    }
+}
+
+// -- small jsonlite field readers -------------------------------------------
+
+fn jstr(j: &Json, k: &str) -> Result<String> {
+    j.get(k)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("json: missing string '{k}'"))
+}
+
+fn jf64(j: &Json, k: &str) -> Result<f64> {
+    j.get(k)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("json: missing number '{k}'"))
+}
+
+fn jusize(j: &Json, k: &str) -> Result<usize> {
+    j.get(k)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("json: missing integer '{k}'"))
+}
+
+fn jbool(j: &Json, k: &str) -> Result<bool> {
+    j.get(k)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| anyhow!("json: missing bool '{k}'"))
+}
+
+/// u64 field: decimal string (exact), with integral-number fallback for
+/// hand-written documents.
+fn ju64(j: &Json, k: &str) -> Result<u64> {
+    match j.get(k) {
+        Some(Json::Str(v)) => v
+            .parse::<u64>()
+            .map_err(|e| anyhow!("json: bad u64 '{k}': {e}")),
+        Some(Json::Num(v)) if *v >= 0.0 && v.fract() == 0.0 && *v <= 9_007_199_254_740_992.0 => {
+            Ok(*v as u64)
+        }
+        _ => Err(anyhow!("json: missing u64 '{k}'")),
+    }
+}
+
+fn jusize_arr(j: &Json, k: &str) -> Result<Vec<usize>> {
+    j.get(k)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("json: missing array '{k}'"))?
+        .iter()
+        .map(|v| v.as_usize())
+        .collect::<Option<Vec<usize>>>()
+        .ok_or_else(|| anyhow!("json: bad integer in '{k}'"))
+}
+
+// ---------------------------------------------------------------------------
+// RoundShared — the round-scoped staging cache + observability probe
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over the ground indices — the cache key component that lets two
+/// requests share a stage only when they select from the same ground set.
+fn ground_fingerprint(ground: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &i in ground {
+        h ^= i as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h ^ ground.len() as u64
+}
+
+/// Round-scoped engine state every request of the round borrows (through
+/// `SelectCtx::round`): the staged-gradient cache — keyed by
+/// `(StageWidth, ground fingerprint)` — and the per-request
+/// observability probe.  The first request at a given key pays the
+/// `⌈|ground|/chunk⌉`-dispatch staging pass; every later request reuses
+/// the store for free.  Stages are always built with targets (the
+/// accumulation costs host flops, not dispatches) so target-free
+/// consumers like CRAIG share the target-bearing store with GRAD-MATCH.
+#[derive(Default)]
+pub struct RoundShared {
+    stages: RefCell<HashMap<(StageWidth, u64), Arc<Vec<ClassStage>>>>,
+    /// validation class means keyed by the live-flags vector (an
+    /// `is_valid` sweep pays the per-class `[P]` readbacks once)
+    val_means: RefCell<HashMap<Vec<bool>, Arc<Vec<Option<Vec<f32>>>>>>,
+    probe: RefCell<RoundStats>,
+}
+
+impl RoundShared {
+    pub fn new() -> RoundShared {
+        RoundShared::default()
+    }
+
+    /// Fetch (or stage once) the per-class gradient matrices for `ground`
+    /// at `width`, recording the staging time and dispatch count into the
+    /// probe on a miss and the shared flag on a hit.
+    pub fn class_stages(
+        &self,
+        oracle: &mut dyn GradOracle,
+        ds: &Dataset,
+        ground: &[usize],
+        h: usize,
+        c: usize,
+        width: StageWidth,
+    ) -> Result<Arc<Vec<ClassStage>>> {
+        let key = (width, ground_fingerprint(ground));
+        if let Some(hit) = self.stages.borrow().get(&key) {
+            self.probe.borrow_mut().stage_shared = true;
+            return Ok(hit.clone());
+        }
+        let chunk = oracle.chunk_rows().max(1);
+        let t0 = Instant::now();
+        let staged = Arc::new(grads::stage_class_grads_with(
+            oracle, ds, ground, h, c, width, true,
+        )?);
+        {
+            let mut probe = self.probe.borrow_mut();
+            probe.stage_secs += t0.elapsed().as_secs_f64();
+            probe.stage_dispatches += ground.len().div_ceil(chunk);
+        }
+        self.stages.borrow_mut().insert(key, staged.clone());
+        Ok(staged)
+    }
+
+    /// Fetch (or compute once) the validation-side class means for a set
+    /// of live-class flags — the L_V matching targets.  Cached like the
+    /// stages: the readback-heavy fused per-class mean passes run once
+    /// per distinct flag set, however many requests consume them.
+    pub fn val_class_means(
+        &self,
+        oracle: &mut dyn GradOracle,
+        val: &Dataset,
+        c: usize,
+        flags: &[bool],
+    ) -> Result<Arc<Vec<Option<Vec<f32>>>>> {
+        if let Some(hit) = self.val_means.borrow().get(flags) {
+            return Ok(hit.clone());
+        }
+        let means = Arc::new(grads::live_val_class_means_with(oracle, val, c, flags)?);
+        self.val_means.borrow_mut().insert(flags.to_vec(), means.clone());
+        Ok(means)
+    }
+
+    /// Record the round's per-class budgets.
+    pub fn note_budgets(&self, budgets: &[usize]) {
+        self.probe.borrow_mut().class_budgets = budgets.to_vec();
+    }
+
+    /// Record the fan-out-vs-serial decision.
+    pub fn note_fanout(&self, fanout: bool) {
+        self.probe.borrow_mut().fanout = fanout;
+    }
+
+    /// Drain the probe for the request that just finished (the cache
+    /// itself persists for the rest of the round).
+    pub fn take_stats(&self) -> RoundStats {
+        std::mem::take(&mut *self.probe.borrow_mut())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SelectionEngine
+// ---------------------------------------------------------------------------
+
+/// Gradient source backing an engine: the live PJRT runtime + model
+/// snapshot, or an explicit oracle (tests/benches — covers the
+/// device-free subset of the strategy space).
+enum Backend<'a> {
+    Live {
+        rt: &'a Runtime,
+        state: &'a ModelState,
+    },
+    Oracle {
+        oracle: RefCell<&'a mut dyn GradOracle>,
+        h: usize,
+        c: usize,
+    },
+}
+
+/// One selection round as a service: owns the gradient source and the
+/// shared staging cache, answers [`SelectionRequest`]s with
+/// [`SelectionReport`]s.  See the module docs for the sharing contract.
+pub struct SelectionEngine<'a> {
+    backend: Backend<'a>,
+    train: &'a Dataset,
+    val: &'a Dataset,
+    shared: RoundShared,
+    /// mini-batch size handed to strategy constructors (PB ground sets)
+    batch: usize,
+}
+
+impl<'a> SelectionEngine<'a> {
+    /// Live engine over a runtime and one model snapshot.
+    pub fn new(
+        rt: &'a Runtime,
+        state: &'a ModelState,
+        train: &'a Dataset,
+        val: &'a Dataset,
+    ) -> SelectionEngine<'a> {
+        SelectionEngine {
+            batch: state.meta.batch,
+            backend: Backend::Live { rt, state },
+            train,
+            val,
+            shared: RoundShared::default(),
+        }
+    }
+
+    /// Device-free engine over an explicit [`GradOracle`] (`h`/`c` give
+    /// the class column layout; the oracle's P must equal `h*c + c`).
+    /// Serves the staged per-class strategies (GRAD-MATCH per-class
+    /// variants, CRAIG's per-class arm, GLISTER, RANDOM, FULL); specs
+    /// that need runtime entry points beyond gradients (PB variants,
+    /// ENTROPY, FORGETTING, XLA solve arms) return an error.
+    pub fn with_oracle(
+        oracle: &'a mut dyn GradOracle,
+        train: &'a Dataset,
+        val: &'a Dataset,
+        h: usize,
+        c: usize,
+    ) -> SelectionEngine<'a> {
+        SelectionEngine {
+            batch: 128,
+            backend: Backend::Oracle { oracle: RefCell::new(oracle), h, c },
+            train,
+            val,
+            shared: RoundShared::default(),
+        }
+    }
+
+    /// The round's shared staging cache (what `SelectCtx::round` borrows).
+    pub fn shared(&self) -> &RoundShared {
+        &self.shared
+    }
+
+    /// Drop the round-scoped staging cache.  Call between model updates
+    /// when reusing one engine value across rounds — staged gradients are
+    /// only valid for the snapshot they were computed against.
+    pub fn reset_round(&mut self) {
+        self.shared = RoundShared::default();
+    }
+
+    /// Answer one request, resolving the strategy spec fresh.  Stateful
+    /// baselines (FORGETTING) lose their cross-round memory on this path —
+    /// drive those through [`SelectionEngine::select_with`] with a
+    /// caller-held instance, as the trainer does.
+    pub fn select(&self, req: &SelectionRequest) -> Result<SelectionReport> {
+        match &self.backend {
+            Backend::Live { .. } => {
+                let (mut strategy, _warm) = parse_strategy(&req.strategy, self.batch)?;
+                self.select_with(strategy.as_mut(), req)
+            }
+            Backend::Oracle { oracle, h, c } => {
+                let t0 = Instant::now();
+                let selection = {
+                    let mut o = oracle.borrow_mut();
+                    self.select_oracle(&mut **o, *h, *c, req)
+                        .map_err(|e| self.drop_probe(e))?
+                };
+                Ok(self.report(req, selection, t0))
+            }
+        }
+    }
+
+    /// Answer one request with a caller-held strategy instance (stateful
+    /// baselines keep their memory; the trainer keeps one instance per
+    /// run).  Requires the live backend — strategies drive runtime entry
+    /// points the oracle seam does not cover.
+    pub fn select_with(
+        &self,
+        strategy: &mut dyn Strategy,
+        req: &SelectionRequest,
+    ) -> Result<SelectionReport> {
+        let (rt, state) = match &self.backend {
+            Backend::Live { rt, state } => (*rt, *state),
+            Backend::Oracle { .. } => {
+                return Err(anyhow!(
+                    "select_with drives a caller-held Strategy and needs a live-runtime engine"
+                ))
+            }
+        };
+        let t0 = Instant::now();
+        let mut rng = req.round_rng();
+        let selection = strategy
+            .select(&mut SelectCtx {
+                rt,
+                state,
+                train: self.train,
+                ground: &req.ground,
+                val: self.val,
+                budget: req.budget,
+                lambda: req.lambda,
+                eps: req.eps,
+                is_valid: req.is_valid,
+                rng: &mut rng,
+                round: Some(&self.shared),
+            })
+            .map_err(|e| self.drop_probe(e))?;
+        Ok(self.report(req, selection, t0))
+    }
+
+    /// Answer a batch of requests against this round's model state —
+    /// the sweep entry point: every request that stages at the same
+    /// `(width, ground)` key shares one staging pass.
+    pub fn select_batch(&self, reqs: &[SelectionRequest]) -> Result<Vec<SelectionReport>> {
+        reqs.iter().map(|r| self.select(r)).collect()
+    }
+
+    /// A failed request must not leak its probe (staging time/dispatches
+    /// it already paid) into the next request's report.
+    fn drop_probe(&self, e: anyhow::Error) -> anyhow::Error {
+        let _ = self.shared.take_stats();
+        e
+    }
+
+    fn report(&self, req: &SelectionRequest, selection: Selection, t0: Instant) -> SelectionReport {
+        let total = t0.elapsed().as_secs_f64();
+        let mut stats = self.shared.take_stats();
+        stats.solve_secs = (total - stats.stage_secs).max(0.0);
+        SelectionReport {
+            strategy: req.strategy.clone(),
+            budget: req.budget,
+            selection,
+            stats,
+        }
+    }
+
+    /// The oracle-backed solve path: the same stateless solvers the
+    /// `Strategy` impls consume, fed from the shared cache.
+    fn select_oracle(
+        &self,
+        oracle: &mut dyn GradOracle,
+        h: usize,
+        c: usize,
+        req: &SelectionRequest,
+    ) -> Result<Selection> {
+        let mut spec = req.strategy.trim().to_lowercase();
+        if spec.ends_with("-warm") {
+            spec.truncate(spec.len() - "-warm".len());
+        }
+        match spec.as_str() {
+            "gradmatch" | "gradmatch-rust" => self.oracle_gradmatch(oracle, h, c, req, true),
+            "gradmatch-perclass" => self.oracle_gradmatch(oracle, h, c, req, false),
+            "craig" => {
+                let stages = self.shared.class_stages(
+                    oracle,
+                    self.train,
+                    &req.ground,
+                    h,
+                    c,
+                    StageWidth::ClassSlice,
+                )?;
+                let sizes: Vec<usize> = stages.iter().map(|st| st.rows.len()).collect();
+                let budgets = split_budget(req.budget, &sizes);
+                let (sel, fan) = solve_classes_fl(&stages, &budgets, true);
+                self.shared.note_budgets(&budgets);
+                self.shared.note_fanout(fan);
+                Ok(sel)
+            }
+            "glister" => {
+                let val_rows: Vec<usize> = (0..self.val.len()).collect();
+                let v = grads::mean_gradient_with(oracle, self.val, &val_rows)?;
+                let scores = grads::score_grads_with(oracle, self.train, &req.ground, &v)?;
+                let (sel, budgets, fan) = glister_rank(self.train, &req.ground, &scores, req.budget);
+                self.shared.note_budgets(&budgets);
+                self.shared.note_fanout(fan);
+                Ok(sel)
+            }
+            "random" => {
+                let mut rng = req.round_rng();
+                let k = req.budget.min(req.ground.len());
+                let mut out = Selection::default();
+                for j in rng.sample_indices(req.ground.len(), k) {
+                    out.indices.push(req.ground[j]);
+                    out.weights.push(1.0);
+                }
+                Ok(out)
+            }
+            "full" | "full-earlystop" => {
+                let mut out = Selection::default();
+                for &i in &req.ground {
+                    out.indices.push(i);
+                    out.weights.push(1.0);
+                }
+                Ok(out)
+            }
+            other => Err(anyhow!(
+                "strategy '{other}' needs a live-runtime engine (the oracle backend covers \
+                 gradmatch[-perclass], craig, glister, random, full)"
+            )),
+        }
+    }
+
+    fn oracle_gradmatch(
+        &self,
+        oracle: &mut dyn GradOracle,
+        h: usize,
+        c: usize,
+        req: &SelectionRequest,
+        per_gradient: bool,
+    ) -> Result<Selection> {
+        let width = if per_gradient { StageWidth::ClassSlice } else { StageWidth::Full };
+        let stages =
+            self.shared.class_stages(oracle, self.train, &req.ground, h, c, width)?;
+        let sizes: Vec<usize> = stages.iter().map(|st| st.rows.len()).collect();
+        let budgets = split_budget(req.budget, &sizes);
+        let val_means = if req.is_valid {
+            let flags = live_flags(&stages, &budgets, c);
+            Some(self.shared.val_class_means(oracle, self.val, c, &flags)?)
+        } else {
+            None
+        };
+        let targets =
+            staged_targets(&stages, h, c, per_gradient, val_means.as_ref().map(|v| v.as_slice()));
+        self.shared.note_budgets(&budgets);
+        self.shared.note_fanout(omp_fanout_wins(&stages, &budgets));
+        solve_classes_omp(&stages, &budgets, &targets, req.lambda, req.eps, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_json_roundtrips() {
+        let req = SelectionRequest {
+            strategy: "gradmatch-pb-warm".into(),
+            budget: 37,
+            lambda: 0.5,
+            eps: 1e-10,
+            is_valid: true,
+            // above 2^53: must survive exactly (u64s travel as strings)
+            seed: u64::MAX - 7,
+            rng_tag: 1004,
+            ground: vec![3, 1, 4, 1, 5, 9],
+        };
+        let parsed = Json::parse(&req.to_json().dump()).unwrap();
+        let back = SelectionRequest::from_json(&parsed).unwrap();
+        assert_eq!(req, back);
+    }
+
+    #[test]
+    fn request_from_config_clamps_budget() {
+        let cfg = ExperimentConfig { budget_frac: 0.1, ..Default::default() };
+        let req = SelectionRequest::from_config(&cfg, (0..50).collect());
+        assert_eq!(req.budget, 5);
+        assert_eq!(req.strategy, cfg.strategy);
+        // degenerate ground sets still produce a sane request
+        let tiny = SelectionRequest::from_config(&cfg, vec![7]);
+        assert_eq!(tiny.budget, 1);
+        let empty = SelectionRequest::from_config(&cfg, Vec::new());
+        assert_eq!(empty.budget, 1);
+        assert!(empty.ground.is_empty());
+    }
+
+    #[test]
+    fn round_rng_is_reproducible_and_tag_sensitive() {
+        let mut req = SelectionRequest::from_config(&ExperimentConfig::default(), vec![0, 1, 2]);
+        req.rng_tag = 1003;
+        let (mut a, mut b) = (req.round_rng(), req.round_rng());
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut other = req.clone();
+        other.rng_tag = 1004;
+        assert_ne!(req.round_rng().next_u64(), other.round_rng().next_u64());
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let rep = SelectionReport {
+            strategy: "gradmatch".into(),
+            budget: 12,
+            selection: Selection {
+                indices: vec![5, 2, 9],
+                weights: vec![1.5, 0.25, 3.0],
+                grad_error: Some(0.125),
+            },
+            stats: RoundStats {
+                stage_secs: 0.5,
+                solve_secs: 1.25,
+                stage_dispatches: 4,
+                stage_shared: false,
+                class_budgets: vec![4, 0, 8],
+                fanout: true,
+            },
+        };
+        let parsed = Json::parse(&rep.to_json().dump()).unwrap();
+        let back = SelectionReport::from_json(&parsed).unwrap();
+        assert_eq!(rep, back);
+        // grad_error = None survives as JSON null
+        let mut no_err = rep.clone();
+        no_err.selection.grad_error = None;
+        let parsed = Json::parse(&no_err.to_json().dump()).unwrap();
+        assert_eq!(SelectionReport::from_json(&parsed).unwrap(), no_err);
+    }
+
+    #[test]
+    fn ground_fingerprint_separates_sets() {
+        let a = ground_fingerprint(&[1, 2, 3]);
+        let b = ground_fingerprint(&[3, 2, 1]);
+        let c = ground_fingerprint(&[1, 2]);
+        assert_eq!(a, ground_fingerprint(&[1, 2, 3]));
+        assert_ne!(a, b, "order matters — stages scatter in ground order");
+        assert_ne!(a, c);
+    }
+}

@@ -227,8 +227,10 @@ pub fn mean_gradient_with(
 // single-pass class-sliced staging (the parallel round engine's feed)
 // ---------------------------------------------------------------------------
 
-/// Which per-class matrix the staged pass scatters.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Which per-class matrix the staged pass scatters.  (`Hash`: the width
+/// is half of the engine's round-cache key — see
+/// [`crate::engine::RoundShared`].)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum StageWidth {
     /// the `(H+1)`-dim class column slice — the paper's per-gradient
     /// approximation (GRAD-MATCH default, CRAIG per-class)
@@ -336,6 +338,40 @@ pub fn stage_class_grads_with(
         out.push(ClassStage { g, rows: r, target_full });
     }
     Ok(out)
+}
+
+/// Validation-side full-P class mean gradients for the **live** classes
+/// of a selection round (`flags[c]` from
+/// [`crate::selection::live_flags`]): one fused `mean_grad_chunk` pass
+/// per live class with validation rows — the `[P]`-readback device
+/// traffic the GRAD-MATCH val path always paid (readback, not dispatch
+/// count, dominates that term on device backends).  Dead or val-absent
+/// classes yield `None` (callers fall back to the staged train target).
+/// Shared by the `Strategy` impls (over [`RtGrads`]) and the engine's
+/// oracle path, so both compute L_V targets identically.
+pub fn live_val_class_means_with(
+    oracle: &mut dyn GradOracle,
+    val: &Dataset,
+    c: usize,
+    flags: &[bool],
+) -> Result<Vec<Option<Vec<f32>>>> {
+    let mut per_class: Vec<Vec<usize>> = vec![Vec::new(); c];
+    for i in 0..val.len() {
+        let cls = val.y[i] as usize;
+        if cls < c {
+            per_class[cls].push(i);
+        }
+    }
+    let mut means = Vec::with_capacity(c);
+    for cls in 0..c {
+        let rows = &per_class[cls];
+        if !flags.get(cls).copied().unwrap_or(false) || rows.is_empty() {
+            means.push(None);
+        } else {
+            means.push(Some(mean_gradient_with(oracle, val, rows)?));
+        }
+    }
+    Ok(means)
 }
 
 /// Per-sample scores `g_i · v` for every row of `indices`, streamed

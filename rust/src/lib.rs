@@ -11,10 +11,33 @@
 //!   selection-support entry points in `python/compile/model.py`, lowered once
 //!   to HLO text under `artifacts/` by `python/compile/aot.py`.
 //! - **Layer 3 (this crate, run time)** — the adaptive data-selection
-//!   coordinator: dataset substrate, gradient cache, selection strategies
-//!   (GRAD-MATCH / GRAD-MATCH-PB / CRAIG / CRAIG-PB / GLISTER / RANDOM /
-//!   FULL-EARLYSTOP plus warm-start wrappers), the weighted-SGD training loop,
-//!   and the experiment harness. Python is never on the training path.
+//!   system.  Python is never on the training path.
+//!
+//! # Layer-3 module map (post engine redesign)
+//!
+//! Selection is a service: a typed [`engine::SelectionRequest`] goes into a
+//! round-scoped [`engine::SelectionEngine`] (which owns the staged-gradient
+//! cache, so N strategies against one model state share ONE staging pass)
+//! and a structured [`engine::SelectionReport`] comes out.
+//!
+//! | module | role |
+//! |---------------|--------------------------------------------------------|
+//! | `engine`      | SelectionRequest → SelectionEngine → SelectionReport   |
+//! | `selection`   | `Strategy` impls as stateless solvers over staged views|
+//! | `grads`       | gradient acquisition: `GradOracle` seam, single-pass   |
+//! |               | class-sliced staging, streamed scoring                 |
+//! | `omp`         | Batch-OMP (correlation recurrence, Rust + XLA backends)|
+//! | `submod`      | facility location + lazy greedy (CRAIG, FeatureFL)     |
+//! | `trainer`     | Algorithm 1: weighted-SGD loop driving engine rounds   |
+//! | `overlap`     | background selection worker (double-buffered subsets)  |
+//! | `coordinator` | config → dataset → engine/trainer; sweeps, baselines   |
+//! | `runtime`     | PJRT client + AOT'd HLO executables                    |
+//! | `par`         | blocked parallel kernels + class-level task fan-out    |
+//! | `data`        | synthetic dataset cards, padded chunking, imbalance    |
+//! | `config`/`cli`| TOML-subset experiment configs and the `gradmatch` CLI |
+//! | `jsonlite`    | dependency-free JSON for manifests/results/reports     |
+//! | `bench_harness`| timing substrate + `BENCH_*.json` perf trajectory     |
+//! | `metrics`/`stats`/`theory` | phase clocks, table stats, Thm. 1 bounds  |
 
 // Math/substrate core — always built (works with --no-default-features).
 pub mod bench_harness;
@@ -40,6 +63,8 @@ pub mod theory;
 pub mod checkpoint;
 #[cfg(feature = "xla")]
 pub mod coordinator;
+#[cfg(feature = "xla")]
+pub mod engine;
 #[cfg(feature = "xla")]
 pub mod grads;
 #[cfg(feature = "xla")]

@@ -5,9 +5,8 @@ use anyhow::{anyhow, Result};
 use gradmatch::cli::{usage, Cli};
 use gradmatch::coordinator::{write_results, Coordinator};
 use gradmatch::data::DatasetCard;
-use gradmatch::jsonlite::{arr, num, obj, Json};
-use gradmatch::rng::Rng;
-use gradmatch::selection::{parse_strategy, SelectCtx};
+use gradmatch::jsonlite::arr;
+use gradmatch::selection::{parse_strategy, strategy_specs};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -28,6 +27,7 @@ fn run(args: &[String]) -> Result<()> {
         "sweep" => cmd_sweep(&cli),
         "select" => cmd_select(&cli),
         "inspect" => cmd_inspect(&cli),
+        "list-strategies" => cmd_list_strategies(),
         other => Err(anyhow!("unknown command '{other}'\n\n{}", usage())),
     }
 }
@@ -107,46 +107,36 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// One-shot selection through the engine.  `--strategies a,b,c` issues a
+/// batched round: every request shares the engine's staged-gradient
+/// cache, so a multi-strategy round pays ONE staging pass.  Prints an
+/// array of `SelectionReport`s (selection + staging/solve observability).
 fn cmd_select(cli: &Cli) -> Result<()> {
     let cfg = cli.experiment_config()?;
+    let specs: Vec<String> = cli
+        .flag_list("strategies")
+        .unwrap_or_else(|| vec![cfg.strategy.clone()]);
+    let spec_refs: Vec<&str> = specs.iter().map(String::as_str).collect();
     let mut coord = Coordinator::new(&cfg.artifacts_dir)?;
-    let meta = coord.rt.model(&cfg.model)?.clone();
-    let splits = coord.splits(&cfg.dataset, cfg.seed, cfg.n_train)?.clone();
-    let ground: Vec<usize> = (0..splits.train.len()).collect();
-    let budget = ((cfg.budget_frac * ground.len() as f64).round() as usize).max(1);
-    let st = coord.rt.init(&cfg.model, cfg.seed as i32)?;
-    let (mut strategy, _) = parse_strategy(&cfg.strategy, meta.batch)?;
-    let mut rng = Rng::new(cfg.seed);
-    let sel = strategy.select(&mut SelectCtx {
-        rt: &coord.rt,
-        state: &st,
-        train: &splits.train,
-        ground: &ground,
-        val: &splits.val,
-        budget,
-        lambda: cfg.lambda as f32,
-        eps: cfg.eps as f32,
-        is_valid: cfg.is_valid,
-        rng: &mut rng,
-    })?;
-    let doc = obj(vec![
-        ("strategy", Json::Str(cfg.strategy.clone())),
-        ("budget", num(budget as f64)),
-        ("selected", num(sel.indices.len() as f64)),
-        (
-            "grad_error",
-            sel.grad_error.map(|e| num(e as f64)).unwrap_or(Json::Null),
-        ),
-        (
-            "indices",
-            arr(sel.indices.iter().map(|&i| num(i as f64)).collect()),
-        ),
-        (
-            "weights",
-            arr(sel.weights.iter().map(|&w| num(w as f64)).collect()),
-        ),
-    ]);
+    let reports = coord.selection_round(&cfg, &spec_refs)?;
+    let doc = arr(reports.iter().map(|r| r.to_json()).collect());
     println!("{}", doc.dump());
+    Ok(())
+}
+
+/// Print every strategy spec `parse_strategy` accepts, with its resolved
+/// name and adaptivity (whether re-selection every R epochs is useful).
+fn cmd_list_strategies() -> Result<()> {
+    println!("{:<18} {:<18} {:>9}   warm variant", "spec", "resolves to", "adaptive");
+    for spec in strategy_specs() {
+        let (s, _) = parse_strategy(spec, 128)?;
+        println!(
+            "{spec:<18} {:<18} {:>9}   {spec}-warm",
+            s.name(),
+            if s.is_adaptive() { "yes" } else { "no" },
+        );
+    }
+    println!("\n(-warm = κ warm-start schedule: T_f = κ·T·k/n full epochs first, §4)");
     Ok(())
 }
 

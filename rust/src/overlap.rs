@@ -8,10 +8,15 @@
 //! double-buffered subset).  On a multi-core box this hides the full
 //! selection latency; on one core it still bounds tail latency per epoch.
 //!
-//! The worker owns its **own** PJRT runtime (the xla client handles are not
-//! `Send`, and executables are compiled per thread) plus clones of the
-//! train/val splits; only parameter snapshots ([`ModelState`], plain
-//! host buffers) and [`Selection`]s cross the channel.
+//! The worker is a [`SelectionEngine`] client: it holds one
+//! [`SelectionRequest`] template (strategy spec, budget, λ/ε, ground set,
+//! seed), builds a round-scoped engine per parameter snapshot, and ships
+//! the full [`SelectionReport`] back — so overlapped rounds carry the
+//! same staging/solve observability as synchronous ones.  The worker owns
+//! its **own** PJRT runtime (the xla client handles are not `Send`, and
+//! executables are compiled per thread) plus clones of the train/val
+//! splits; only parameter snapshots ([`ModelState`], plain host buffers)
+//! and reports cross the channels.
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
@@ -19,13 +24,14 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
-use crate::rng::Rng;
+use crate::engine::{SelectionEngine, SelectionReport, SelectionRequest};
 use crate::runtime::{ModelState, Runtime};
-use crate::selection::{parse_strategy, SelectCtx, Selection};
+use crate::selection::parse_strategy;
 
-/// A selection request: parameter snapshot + a tag that seeds the
-/// per-round RNG (so overlapped and synchronous runs draw the same
-/// shuffles for a given epoch).
+/// A queued round: parameter snapshot + the tag that seeds the per-round
+/// RNG (so overlapped and synchronous runs draw the same shuffles for a
+/// given epoch — both derive through
+/// [`SelectionRequest::round_rng`]).
 pub struct SelectRequest {
     pub state: ModelState,
     pub rng_tag: u64,
@@ -34,30 +40,26 @@ pub struct SelectRequest {
 /// Background selection worker.
 pub struct AsyncSelector {
     req_tx: Option<Sender<SelectRequest>>,
-    res_rx: Receiver<Result<Selection>>,
+    res_rx: Receiver<Result<SelectionReport>>,
     handle: Option<JoinHandle<()>>,
     /// requests in flight (0 or 1 — the trainer never stacks requests)
     pub inflight: usize,
 }
 
-/// Static configuration the worker needs to rebuild the selection context.
+/// Static configuration the worker needs to serve rounds.
 #[derive(Clone)]
 pub struct SelectorConfig {
     pub artifacts_dir: String,
-    pub strategy_spec: String,
-    pub ground: Vec<usize>,
-    pub budget: usize,
-    pub lambda: f32,
-    pub eps: f32,
-    pub is_valid: bool,
-    pub seed: u64,
+    /// round-request template (strategy/budget/λ/ε/ground/seed); the
+    /// worker stamps `rng_tag` per submission
+    pub request: SelectionRequest,
 }
 
 impl AsyncSelector {
     /// Spawn the worker with its own runtime + dataset copies.
     pub fn spawn(cfg: SelectorConfig, train: Dataset, val: Dataset) -> Result<AsyncSelector> {
         let (req_tx, req_rx) = channel::<SelectRequest>();
-        let (res_tx, res_rx) = channel::<Result<Selection>>();
+        let (res_tx, res_rx) = channel::<Result<SelectionReport>>();
         let handle = std::thread::Builder::new()
             .name("gradmatch-selector".into())
             .spawn(move || {
@@ -76,28 +78,22 @@ impl AsyncSelector {
                     .next()
                     .map(|m| m.batch)
                     .unwrap_or(128);
-                let mut strategy = match parse_strategy(&cfg.strategy_spec, batch) {
+                // one strategy instance for the worker's lifetime, so
+                // stateful baselines keep their cross-round memory
+                let mut strategy = match parse_strategy(&cfg.request.strategy, batch) {
                     Ok((s, _)) => s,
                     Err(e) => {
                         let _ = res_tx.send(Err(e));
                         return;
                     }
                 };
-                let root = Rng::new(cfg.seed ^ 0xDA7A);
                 while let Ok(req) = req_rx.recv() {
-                    let mut rng = root.split(req.rng_tag);
-                    let out = strategy.select(&mut SelectCtx {
-                        rt: &rt,
-                        state: &req.state,
-                        train: &train,
-                        ground: &cfg.ground,
-                        val: &val,
-                        budget: cfg.budget,
-                        lambda: cfg.lambda,
-                        eps: cfg.eps,
-                        is_valid: cfg.is_valid,
-                        rng: &mut rng,
-                    });
+                    let mut round = cfg.request.clone();
+                    round.rng_tag = req.rng_tag;
+                    // round-scoped engine: one per parameter snapshot
+                    let engine =
+                        SelectionEngine::new(&rt, &req.state, &train, &val);
+                    let out = engine.select_with(strategy.as_mut(), &round);
                     if res_tx.send(out).is_err() {
                         break; // trainer gone
                     }
@@ -124,8 +120,8 @@ impl AsyncSelector {
         Ok(())
     }
 
-    /// Non-blocking poll for a finished selection.
-    pub fn try_recv(&mut self) -> Result<Option<Selection>> {
+    /// Non-blocking poll for a finished round.
+    pub fn try_recv(&mut self) -> Result<Option<SelectionReport>> {
         match self.res_rx.try_recv() {
             Ok(res) => {
                 self.inflight = self.inflight.saturating_sub(1);
@@ -136,8 +132,8 @@ impl AsyncSelector {
         }
     }
 
-    /// Blocking wait for a finished selection.
-    pub fn recv(&mut self) -> Result<Selection> {
+    /// Blocking wait for a finished round.
+    pub fn recv(&mut self) -> Result<SelectionReport> {
         let res = self
             .res_rx
             .recv()

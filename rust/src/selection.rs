@@ -18,6 +18,15 @@
 //! A trailing `-warm` on any spec enables the κ warm-start schedule, which
 //! the trainer owns (`T_f = κ·T·k/n` full epochs first — §4 of the paper).
 //!
+//! Since the engine redesign ([`crate::engine`]) strategies are thin
+//! stateful shells over **stateless solvers** ([`solve_classes_omp`],
+//! [`solve_classes_fl`], [`glister_rank`], [`staged_targets`]) that
+//! consume staged gradient views.  Rounds driven by a
+//! [`crate::engine::SelectionEngine`] stage through the engine's shared
+//! cache (`SelectCtx::round`), so N strategies against one model state
+//! pay ONE staging pass; the legacy `parse_strategy` + `select` path
+//! stages privately and behaves exactly as before.
+//!
 //! # The parallel selection-round engine
 //!
 //! Per-class strategies (GRAD-MATCH per-class variants, CRAIG's per-class
@@ -52,11 +61,13 @@
 //! `micro_hotpath` selection-round bench).
 
 use std::cmp::Ordering;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
-use crate::grads::{self, ClassStage, StageWidth};
+use crate::engine::RoundShared;
+use crate::grads::{self, ClassStage, RtGrads, StageWidth};
 use crate::omp::{omp_select, omp_select_rust, OmpOpts, OmpResult, XlaCorr};
 use crate::par;
 use crate::rng::Rng;
@@ -64,7 +75,11 @@ use crate::runtime::{ModelState, Runtime};
 use crate::submod::{lazy_greedy, FacilityLocation};
 use crate::tensor::Matrix;
 
-/// Everything a strategy may look at when selecting.
+/// Everything a strategy may look at when selecting.  Since the engine
+/// redesign this is a thin borrow of the round: the staged-gradient
+/// store lives in the engine's [`RoundShared`] cache (when the round is
+/// engine-driven) and strategies consume it through
+/// [`SelectCtx::class_stages`].
 pub struct SelectCtx<'a> {
     pub rt: &'a Runtime,
     pub state: &'a ModelState,
@@ -81,12 +96,73 @@ pub struct SelectCtx<'a> {
     /// match validation gradients instead of training gradients (L = L_V)
     pub is_valid: bool,
     pub rng: &'a mut Rng,
+    /// Round-scoped engine state: the staged-gradient cache every
+    /// request of the round shares, plus the observability probe.
+    /// `None` on the legacy [`parse_strategy`] + [`Strategy::select`]
+    /// path — strategies then stage privately, exactly the pre-engine
+    /// behavior.
+    pub round: Option<&'a RoundShared>,
+}
+
+impl SelectCtx<'_> {
+    /// Staged per-class gradients for this round — served from the
+    /// engine's shared cache when present (N requests, one
+    /// [`grads::stage_class_grads`] pass), else staged privately.  The
+    /// cache always carries targets; `want_targets` only trims the
+    /// private path's host-side accumulation.
+    pub fn class_stages(
+        &self,
+        width: StageWidth,
+        want_targets: bool,
+    ) -> Result<Arc<Vec<ClassStage>>> {
+        if let Some(shared) = self.round {
+            let meta = &self.state.meta;
+            let mut oracle = RtGrads { rt: self.rt, st: self.state };
+            return shared.class_stages(&mut oracle, self.train, self.ground, meta.h, meta.c, width);
+        }
+        Ok(Arc::new(grads::stage_class_grads(
+            self.rt,
+            self.state,
+            self.train,
+            self.ground,
+            width,
+            want_targets,
+        )?))
+    }
+
+    /// Validation-side class mean gradients for the round's live classes
+    /// — cached in the engine's [`RoundShared`] when present (an
+    /// `is_valid` sweep pays the per-class `[P]` readbacks once, not
+    /// once per request), else computed directly.
+    pub fn val_class_means(&self, flags: &[bool]) -> Result<Arc<Vec<Option<Vec<f32>>>>> {
+        let meta = &self.state.meta;
+        let mut oracle = RtGrads { rt: self.rt, st: self.state };
+        match self.round {
+            Some(shared) => shared.val_class_means(&mut oracle, self.val, meta.c, flags),
+            None => Ok(Arc::new(grads::live_val_class_means_with(
+                &mut oracle,
+                self.val,
+                meta.c,
+                flags,
+            )?)),
+        }
+    }
+
+    /// Record per-round observability (per-class budgets, the
+    /// fan-out-vs-serial decision) into the engine probe; no-op on the
+    /// legacy path.
+    pub fn note_round(&self, budgets: &[usize], fanout: bool) {
+        if let Some(shared) = self.round {
+            shared.note_budgets(budgets);
+            shared.note_fanout(fanout);
+        }
+    }
 }
 
 /// A selected weighted subset.  `indices` are dataset rows; `weights`
 /// align 1:1 (non-negative; the weighted loss normalizes, so scale is
 /// irrelevant).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Selection {
     pub indices: Vec<usize>,
     pub weights: Vec<f32>,
@@ -211,18 +287,42 @@ fn live_classes(stages: &[ClassStage], budgets: &[usize]) -> Vec<usize> {
     live_by_sizes(&sizes, budgets)
 }
 
-/// Run `solve` once per live class, fanning out across the machine when
-/// that beats kernel-level threading ([`par::fanout_wins`] over the
-/// largest task's dominant inner-kernel cost, `max_work`); results come
-/// back in class order either way.  The one fan-out scaffold every
-/// per-class strategy arm shares.
+/// Per-class liveness flags sized to `c` (the shape
+/// [`grads::live_val_class_means_with`] consumes).
+pub fn live_flags(stages: &[ClassStage], budgets: &[usize], c: usize) -> Vec<bool> {
+    let mut flags = vec![false; c];
+    for &cls in &live_classes(stages, budgets) {
+        flags[cls] = true;
+    }
+    flags
+}
+
+/// Dominant inner-kernel cost of the live OMP solves — the O(n_c·w)
+/// correlation GEMV of the largest class.
+fn omp_max_work(stages: &[ClassStage], live: &[usize]) -> usize {
+    live.iter().map(|&cls| stages[cls].g.rows * stages[cls].g.cols).max().unwrap_or(0)
+}
+
+/// The round's fan-out-vs-serial decision for a set of staged OMP
+/// problems — the exact predicate [`solve_classes_omp`] applies, exposed
+/// so the engine report and the execution cannot drift.
+pub fn omp_fanout_wins(stages: &[ClassStage], budgets: &[usize]) -> bool {
+    let live = live_classes(stages, budgets);
+    par::fanout_wins(live.len(), omp_max_work(stages, &live))
+}
+
+/// Run `solve` once per live class — fanned out across the machine
+/// ([`par::map_tasks`], class-level work stealing) when `fanout`, else a
+/// serial loop; results come back in class order either way.  Callers
+/// decide `fanout` via [`par::fanout_wins`] over the dominant
+/// inner-kernel cost of their solves.  The one scaffold every per-class
+/// strategy arm shares.
 fn solve_per_class<T: Send>(
     live: &[usize],
-    max_work: usize,
-    parallel: bool,
+    fanout: bool,
     solve: impl Fn(&usize) -> T + Sync,
 ) -> Vec<T> {
-    if parallel && par::fanout_wins(live.len(), max_work) {
+    if fanout {
         par::map_tasks(live, solve)
     } else {
         live.iter().map(solve).collect()
@@ -278,10 +378,8 @@ pub fn solve_classes_omp(
         let opts = OmpOpts { k: budgets[cls], lambda, eps };
         omp_select_rust(&stages[cls].g, &targets[cls], opts)
     };
-    // dominant inner-kernel cost per task: the O(n_c·w) correlation GEMV
-    let max_work =
-        live.iter().map(|&cls| stages[cls].g.rows * stages[cls].g.cols).max().unwrap_or(0);
-    let results: Vec<Result<OmpResult>> = solve_per_class(&live, max_work, parallel, solve);
+    let fan = parallel && par::fanout_wins(live.len(), omp_max_work(stages, &live));
+    let results: Vec<Result<OmpResult>> = solve_per_class(&live, fan, solve);
     let mut picks = Vec::with_capacity(live.len());
     for (&cls, res) in live.iter().zip(results) {
         picks.push((cls, res?));
@@ -310,6 +408,112 @@ fn solve_classes_omp_xla(
         picks.push((cls, res));
     }
     Ok(merge_class_omp(stages, picks))
+}
+
+/// Per-class matching targets over staged gradients: the staged
+/// train-side full-P means, optionally overridden per class by
+/// validation means (`L = L_V` rounds), sliced to the stage width.
+/// Stateless — the piece both the [`GradMatch`] strategy and the
+/// engine's oracle path consume, so their targets cannot drift.
+pub fn staged_targets(
+    stages: &[ClassStage],
+    h: usize,
+    c: usize,
+    per_gradient: bool,
+    val_means: Option<&[Option<Vec<f32>>]>,
+) -> Vec<Vec<f32>> {
+    let mut targets = Vec::with_capacity(stages.len());
+    for (cls, stage) in stages.iter().enumerate() {
+        let full: &[f32] = match val_means.and_then(|v| v[cls].as_deref()) {
+            Some(vm) => vm,
+            None => &stage.target_full,
+        };
+        if per_gradient {
+            let cols = grads::class_columns(h, c, cls);
+            targets.push(cols.iter().map(|&j| full[j]).collect());
+        } else {
+            targets.push(full.to_vec());
+        }
+    }
+    targets
+}
+
+/// Per-class facility-location solves over staged gradients (CRAIG's
+/// per-class arm): pure CPU — pairwise distances, coverage commits, and
+/// medoid votes inside each task degrade to serial via the par depth
+/// guard — fanned out when that beats kernel threading.  Returns the
+/// class-order-merged selection and the fan-out decision.
+pub fn solve_classes_fl(
+    stages: &[ClassStage],
+    budgets: &[usize],
+    parallel: bool,
+) -> (Selection, bool) {
+    let sizes: Vec<usize> = stages.iter().map(|s| s.rows.len()).collect();
+    let live = live_by_sizes(&sizes, budgets);
+    let solve = |cls: &usize| -> Vec<(usize, f32)> {
+        let stage = &stages[*cls];
+        let dist = crate::par::pairwise_sqdist(&stage.g);
+        let mut fl = FacilityLocation::from_sqdist(&dist);
+        let res = lazy_greedy(&mut fl, budgets[*cls]);
+        let w = fl.medoid_weights(&res.selected);
+        res.selected.iter().zip(w).map(|(&j, wi)| (stage.rows[j], wi)).collect()
+    };
+    // dominant inner kernel: the O(n_c²·w/2) pairwise build
+    let max_work = live
+        .iter()
+        .map(|&cls| sizes[cls] * sizes[cls] / 2 * stages[cls].g.cols)
+        .max()
+        .unwrap_or(0);
+    let fan = parallel && par::fanout_wins(live.len(), max_work);
+    let picked: Vec<Vec<(usize, f32)>> = solve_per_class(&live, fan, solve);
+    // deterministic merge in class order
+    let mut out = Selection::default();
+    for class_picks in picked {
+        for (row, w) in class_picks {
+            out.push(row, w);
+        }
+    }
+    (out, fan)
+}
+
+/// GLISTER's per-class proportional top-k over streamed Taylor gains
+/// (CORDS-style — plain global top-k collapses onto whichever class
+/// currently has the largest aligned gradients).  `scores` come in
+/// `ground` order.  Returns the selection, the per-class budgets, and
+/// the fan-out decision: the per-class top-ks have no inner kernels, so
+/// fan-out engages only once the biggest class is large enough to
+/// amortize a thread spawn.
+pub fn glister_rank(
+    train: &Dataset,
+    ground: &[usize],
+    scores: &[f32],
+    budget: usize,
+) -> (Selection, Vec<usize>, bool) {
+    let mut per_class: Vec<Vec<usize>> = vec![Vec::new(); train.classes];
+    for (pos, &i) in ground.iter().enumerate() {
+        per_class[train.y[i] as usize].push(pos);
+    }
+    let sizes: Vec<usize> = per_class.iter().map(Vec::len).collect();
+    let budgets = split_budget(budget, &sizes);
+    let live = live_by_sizes(&sizes, &budgets);
+    let pick = |cls: &usize| -> Vec<usize> {
+        let positions = &per_class[*cls];
+        let class_scores: Vec<f32> = positions.iter().map(|&p| scores[p]).collect();
+        top_k_desc(&class_scores, budgets[*cls])
+            .into_iter()
+            .map(|j| ground[positions[j]])
+            .collect()
+    };
+    let max_class = live.iter().map(|&cls| sizes[cls]).max().unwrap_or(0);
+    let fan = max_class >= (1 << 14) && live.len() > 1;
+    let picked: Vec<Vec<usize>> = solve_per_class(&live, fan, pick);
+    let mut out = Selection::default();
+    for class_picks in picked {
+        for row in class_picks {
+            out.push(row, 1.0);
+        }
+    }
+    (out, budgets, fan)
 }
 
 /// Target (mean) gradient for a scope of training rows, or — when
@@ -363,7 +567,8 @@ impl GradMatch {
         GradMatch { variant, batch, use_xla, parallel: true }
     }
 
-    /// Staged round: one gradient pass stages every class, then the
+    /// Staged round: one gradient pass stages every class (through the
+    /// engine's shared cache when the round is engine-driven), then the
     /// per-class OMP solves fan out (see the module docs).
     fn select_per_class(&self, ctx: &mut SelectCtx<'_>, per_gradient: bool) -> Result<Selection> {
         if !self.parallel {
@@ -371,8 +576,7 @@ impl GradMatch {
         }
         let meta = ctx.state.meta.clone();
         let width = if per_gradient { StageWidth::ClassSlice } else { StageWidth::Full };
-        let stages =
-            grads::stage_class_grads(ctx.rt, ctx.state, ctx.train, ctx.ground, width, true)?;
+        let stages = ctx.class_stages(width, true)?;
         let sizes: Vec<usize> = stages.iter().map(|s| s.rows.len()).collect();
         let budgets = split_budget(ctx.budget, &sizes);
         // full-P per-class targets: free from the staged pass on the
@@ -385,45 +589,28 @@ impl GradMatch {
         // classes (absent from the ground set or zero budget) cost zero
         // dispatches, like the serial reference.  Classes missing from
         // val fall back to the staged train target.
-        let val_means: Option<Vec<Option<Vec<f32>>>> = if ctx.is_valid {
-            let mut is_live = vec![false; meta.c];
-            for &cls in &live_classes(&stages, &budgets) {
-                is_live[cls] = true;
-            }
-            let val_per_class = ground_per_class(ctx.val, &(0..ctx.val.len()).collect::<Vec<_>>());
-            let mut means = Vec::with_capacity(meta.c);
-            for cls in 0..meta.c {
-                let rows = val_per_class.get(cls).map(Vec::as_slice).unwrap_or(&[]);
-                if !is_live[cls] || rows.is_empty() {
-                    means.push(None);
-                } else {
-                    means.push(Some(grads::mean_gradient(ctx.rt, ctx.state, ctx.val, rows)?));
-                }
-            }
-            Some(means)
+        let val_means = if ctx.is_valid {
+            let flags = live_flags(&stages, &budgets, meta.c);
+            Some(ctx.val_class_means(&flags)?)
         } else {
             None
         };
-        let mut targets: Vec<Vec<f32>> = Vec::with_capacity(stages.len());
-        for (cls, stage) in stages.iter().enumerate() {
-            let full: &[f32] = match val_means.as_ref().and_then(|v| v[cls].as_deref()) {
-                Some(vm) => vm,
-                None => &stage.target_full,
-            };
-            if per_gradient {
-                let cols = grads::class_columns(meta.h, meta.c, cls);
-                targets.push(cols.iter().map(|&j| full[j]).collect());
-            } else {
-                targets.push(full.to_vec());
-            }
-        }
+        let targets = staged_targets(
+            &stages,
+            meta.h,
+            meta.c,
+            per_gradient,
+            val_means.as_ref().map(|v| v.as_slice()),
+        );
         if !per_gradient && self.use_xla {
             // full-P solves through the device kernel: the staged pass
             // still replaces the C gradient + C target passes, but the
             // solves stay serial — the device is one resource, and
             // fanning out would only queue on it
+            ctx.note_round(&budgets, false);
             return solve_classes_omp_xla(ctx, &meta.name, &stages, &budgets, &targets);
         }
+        ctx.note_round(&budgets, omp_fanout_wins(&stages, &budgets));
         solve_classes_omp(&stages, &budgets, &targets, ctx.lambda, ctx.eps, true)
     }
 
@@ -619,45 +806,17 @@ impl Strategy for Craig {
         } else {
             // per-class + per-gradient slices (keeps the n_c² distance
             // matrices cheap — same approximation CRAIG itself adopts):
-            // one staged pass over the ground set, then the per-class
-            // facility-location solves fan out (pure CPU; the pairwise
-            // distances, coverage commits, and medoid votes inside each
-            // task degrade to serial via the par depth guard)
-            // no matching target in CRAIG — stage without the O(n·P)
-            // target accumulation
-            let stages = grads::stage_class_grads(
-                ctx.rt,
-                ctx.state,
-                ctx.train,
-                ctx.ground,
-                StageWidth::ClassSlice,
-                false,
-            )?;
+            // one staged pass over the ground set — shared with every
+            // other per-class strategy of the round when engine-driven
+            // (CRAIG never matches a target; the private path skips the
+            // O(n·P) target accumulation) — then the per-class
+            // facility-location solves fan out via [`solve_classes_fl`].
+            let stages = ctx.class_stages(StageWidth::ClassSlice, false)?;
             let sizes: Vec<usize> = stages.iter().map(|s| s.rows.len()).collect();
             let budgets = split_budget(ctx.budget, &sizes);
-            let live = live_by_sizes(&sizes, &budgets);
-            let solve = |cls: &usize| -> Vec<(usize, f32)> {
-                let stage = &stages[*cls];
-                let dist = crate::par::pairwise_sqdist(&stage.g);
-                let mut fl = FacilityLocation::from_sqdist(&dist);
-                let res = lazy_greedy(&mut fl, budgets[*cls]);
-                let w = fl.medoid_weights(&res.selected);
-                res.selected.iter().zip(w).map(|(&j, wi)| (stage.rows[j], wi)).collect()
-            };
-            // dominant inner kernel: the O(n_c²·w/2) pairwise build
-            let max_work = live
-                .iter()
-                .map(|&cls| sizes[cls] * sizes[cls] / 2 * stages[cls].g.cols)
-                .max()
-                .unwrap_or(0);
-            let picked: Vec<Vec<(usize, f32)>> =
-                solve_per_class(&live, max_work, self.parallel, solve);
-            // deterministic merge in class order
-            for class_picks in picked {
-                for (row, w) in class_picks {
-                    out.push(row, w);
-                }
-            }
+            let (sel, fan) = solve_classes_fl(&stages, &budgets, self.parallel);
+            ctx.note_round(&budgets, fan);
+            out = sel;
         }
         Ok(out)
     }
@@ -683,39 +842,11 @@ impl Strategy for Glister {
         let v = grads::mean_gradient(ctx.rt, ctx.state, ctx.val, &val_rows)?;
         // One padded pass streams every ground sample's Taylor gain
         // `g_i · ∇L_V` (⌈|ground|/chunk⌉ dispatches, O(chunk·P) transient
-        // memory — the [n, P] store is never materialized).
-        let ground = ctx.ground;
-        let scores = grads::score_grads(ctx.rt, ctx.state, ctx.train, ground, &v)?;
-        // per-class proportional budgets (CORDS-style) — plain global top-k
-        // of the Taylor gains collapses onto whichever class currently has
-        // the largest aligned gradients.
-        let mut per_class: Vec<Vec<usize>> = vec![Vec::new(); ctx.train.classes];
-        for (pos, &i) in ground.iter().enumerate() {
-            per_class[ctx.train.y[i] as usize].push(pos);
-        }
-        let sizes: Vec<usize> = per_class.iter().map(Vec::len).collect();
-        let budgets = split_budget(ctx.budget, &sizes);
-        let live = live_by_sizes(&sizes, &budgets);
-        let pick = |cls: &usize| -> Vec<usize> {
-            let positions = &per_class[*cls];
-            let class_scores: Vec<f32> = positions.iter().map(|&p| scores[p]).collect();
-            top_k_desc(&class_scores, budgets[*cls])
-                .into_iter()
-                .map(|j| ground[positions[j]])
-                .collect()
-        };
-        // the per-class top-ks have no inner kernels (so fan-out never
-        // trades kernel threading away — max_work 0) but cost only
-        // O(n_c); fan out only once the biggest class is large enough to
-        // amortize a thread spawn, else run the serial loop
-        let max_class = live.iter().map(|&cls| sizes[cls]).max().unwrap_or(0);
-        let picked: Vec<Vec<usize>> = solve_per_class(&live, 0, max_class >= (1 << 14), pick);
-        let mut out = Selection::default();
-        for class_picks in picked {
-            for row in class_picks {
-                out.push(row, 1.0);
-            }
-        }
+        // memory — the [n, P] store is never materialized); ranking is
+        // the stateless [`glister_rank`] the engine's oracle path shares.
+        let scores = grads::score_grads(ctx.rt, ctx.state, ctx.train, ctx.ground, &v)?;
+        let (out, budgets, fan) = glister_rank(ctx.train, ctx.ground, &scores, ctx.budget);
+        ctx.note_round(&budgets, fan);
         Ok(out)
     }
 }
@@ -892,7 +1023,9 @@ impl Strategy for FeatureFL {
             .map(|&cls| sizes[cls] * sizes[cls] / 2 * train.x.cols)
             .max()
             .unwrap_or(0);
-        let picked: Vec<Vec<(usize, f32)>> = solve_per_class(&live, max_work, true, solve);
+        let fan = par::fanout_wins(live.len(), max_work);
+        ctx.note_round(&budgets, fan);
+        let picked: Vec<Vec<(usize, f32)>> = solve_per_class(&live, fan, solve);
         let mut out = Selection::default();
         for class_picks in picked {
             for (row, w) in class_picks {
@@ -929,9 +1062,38 @@ pub fn parse_strategy(spec: &str, batch: usize) -> Result<(Box<dyn Strategy>, bo
         "entropy" => Box::new(Entropy),
         "forgetting" => Box::new(Forgetting::new()),
         "featurefl" => Box::new(FeatureFL),
-        other => return Err(anyhow!("unknown strategy '{other}' (from spec '{spec}')")),
+        other => {
+            return Err(anyhow!(
+                "unknown strategy '{other}' (from spec '{spec}'); valid specs: {} — append \
+                 -warm to any of them for the κ warm-start variants (paper Fig. 3 sweeps use: {})",
+                strategy_specs().join(", "),
+                paper_strategies().join(", ")
+            ))
+        }
     };
     Ok((b, warm))
+}
+
+/// Every base strategy spec [`parse_strategy`] accepts (the optional
+/// `-warm` suffix composes with each).  The `gradmatch list-strategies`
+/// CLI subcommand and the unknown-spec error render this list.
+pub fn strategy_specs() -> Vec<&'static str> {
+    vec![
+        "gradmatch",
+        "gradmatch-perclass",
+        "gradmatch-pb",
+        "gradmatch-rust",
+        "gradmatch-pb-rust",
+        "craig",
+        "craig-pb",
+        "glister",
+        "random",
+        "full",
+        "full-earlystop",
+        "entropy",
+        "forgetting",
+        "featurefl",
+    ]
 }
 
 /// All strategy specs the paper's Figure 3 sweeps compare.
@@ -1091,5 +1253,25 @@ mod tests {
         let (s, _) = parse_strategy("FULL-EARLYSTOP", 32).unwrap();
         assert_eq!(s.name(), "full");
         assert!(!s.is_adaptive());
+    }
+
+    #[test]
+    fn every_listed_spec_parses_plain_and_warm() {
+        for spec in strategy_specs() {
+            let (st, warm) = parse_strategy(spec, 64).unwrap();
+            assert!(!warm, "{spec}");
+            assert!(!st.name().is_empty(), "{spec}");
+            let (_, warm) = parse_strategy(&format!("{spec}-warm"), 64).unwrap();
+            assert!(warm, "{spec}-warm");
+        }
+    }
+
+    #[test]
+    fn unknown_spec_error_lists_valid_specs() {
+        let err = parse_strategy("bogus", 128).unwrap_err().to_string();
+        for spec in strategy_specs() {
+            assert!(err.contains(spec), "error should name '{spec}': {err}");
+        }
+        assert!(err.contains("-warm"), "error should mention the warm suffix: {err}");
     }
 }

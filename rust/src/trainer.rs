@@ -13,10 +13,11 @@
 use anyhow::Result;
 
 use crate::data::{padded_chunks, weighted_batches, Dataset, Splits};
+use crate::engine::{RoundStats, SelectionEngine, SelectionReport, SelectionRequest};
 use crate::metrics::{Phase, PhaseClock, PowerModel};
 use crate::rng::Rng;
 use crate::runtime::{ModelState, Runtime};
-use crate::selection::{SelectCtx, Selection, Strategy};
+use crate::selection::{Selection, Strategy};
 
 /// Training-loop options (a subset of `config::ExperimentConfig`).
 #[derive(Clone, Debug)]
@@ -87,6 +88,9 @@ pub struct TrainOutcome {
     pub ever_selected: Vec<bool>,
     /// strategy-reported gradient-matching residuals per selection round
     pub grad_errors: Vec<f32>,
+    /// per-round engine observability (staging/solve split, dispatch
+    /// counts, fan-out decisions) for every applied selection round
+    pub round_stats: Vec<RoundStats>,
     /// SGD steps executed
     pub steps: usize,
     /// subset size used (samples)
@@ -149,8 +153,23 @@ pub fn train_overlapped(
     let mut history = Vec::new();
     let mut ever_selected = vec![false; splits.train.len()];
     let mut grad_errors = Vec::new();
+    let mut round_stats: Vec<RoundStats> = Vec::new();
     let mut selections = 0usize;
     let mut steps = 0usize;
+
+    // the run's round-request template: the engine re-derives the round
+    // RNG from (seed, rng_tag), so only the tag changes per round — one
+    // derivation shared with the overlap worker
+    let mut sel_req = SelectionRequest {
+        strategy: strategy.name(),
+        budget,
+        lambda: opts.lambda,
+        eps: opts.eps,
+        is_valid: opts.is_valid,
+        seed: opts.seed,
+        rng_tag: 0,
+        ground: ground.to_vec(),
+    };
 
     // FULL-EARLYSTOP truncation
     let epochs = match opts.early_stop_frac {
@@ -198,8 +217,10 @@ pub fn train_overlapped(
         let due = in_subset_phase && (epoch - t_f) % opts.r_interval == 0;
         if let Some(sel_worker) = selector.as_deref_mut() {
             // overlapped mode: poll for a finished round, submit a new one
-            if let Some(sel) = sel_worker.try_recv()? {
+            if let Some(report) = sel_worker.try_recv()? {
+                let SelectionReport { selection: sel, stats, .. } = report;
                 if !sel.indices.is_empty() {
+                    round_stats.push(stats);
                     if let Some(e) = sel.grad_error {
                         grad_errors.push(e);
                     }
@@ -216,23 +237,16 @@ pub fn train_overlapped(
             }
         } else if due && (strategy.is_adaptive() || !selected_once) {
             let st_snap = fs.to_state()?;
-            let mut sel_rng = rng.split(1000 + epoch as u64);
-            let sel = clock.time(Phase::Select, || {
-                let mut ctx = SelectCtx {
-                    rt,
-                    state: &st_snap,
-                    train: &splits.train,
-                    ground,
-                    val: &splits.val,
-                    budget,
-                    lambda: opts.lambda,
-                    eps: opts.eps,
-                    is_valid: opts.is_valid,
-                    rng: &mut sel_rng,
-                };
-                strategy.select(&mut ctx)
+            sel_req.rng_tag = 1000 + epoch as u64;
+            // one round-scoped engine per snapshot: staged gradients are
+            // only valid for the parameters they were computed against
+            let report = clock.time(Phase::Select, || {
+                SelectionEngine::new(rt, &st_snap, &splits.train, &splits.val)
+                    .select_with(&mut *strategy, &sel_req)
             })?;
+            let SelectionReport { selection: sel, stats, .. } = report;
             if !sel.indices.is_empty() {
+                round_stats.push(stats);
                 if let Some(e) = sel.grad_error {
                     grad_errors.push(e);
                 }
@@ -317,6 +331,7 @@ pub fn train_overlapped(
             selections,
             ever_selected,
             grad_errors,
+            round_stats,
             steps,
             budget,
         },

@@ -1,0 +1,293 @@
+//! Contracts of the selection-engine API (SelectionRequest →
+//! SelectionEngine → SelectionReport):
+//!
+//! - **shared staging** — a multi-strategy round through one engine
+//!   performs exactly `⌈n/chunk⌉` staging dispatches (counting oracle,
+//!   device-free), where solo engines pay one pass each;
+//! - **equivalence** — engine-path selections are index/weight-identical
+//!   to the legacy `parse_strategy` + `Strategy::select` path for every
+//!   spec in `paper_strategies()` (live runtime; skips without
+//!   artifacts);
+//! - **serialization** — `SelectionReport` and `SelectionRequest`
+//!   round-trip through `jsonlite`.
+
+mod common;
+
+use gradmatch::data::Dataset;
+use gradmatch::engine::{RoundStats, SelectionEngine, SelectionReport, SelectionRequest};
+use gradmatch::grads::{stage_class_grads_with, StageWidth, SynthGrads};
+use gradmatch::jsonlite::Json;
+use gradmatch::rng::Rng;
+use gradmatch::selection::{
+    paper_strategies, parse_strategy, solve_classes_omp, split_budget, staged_targets, SelectCtx,
+    Selection,
+};
+use gradmatch::tensor::Matrix;
+
+/// Imbalanced synthetic dataset: heavy head, long tail.
+fn imbalanced(seed: u64, classes: usize, d: usize) -> Dataset {
+    let mut y: Vec<i32> = Vec::new();
+    for cls in 0..classes {
+        let n_c = match cls % 3 {
+            0 => 40,
+            1 => 12,
+            _ => 3,
+        };
+        y.extend(std::iter::repeat(cls as i32).take(n_c));
+    }
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut y);
+    let n = y.len();
+    let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian_f32()).collect());
+    Dataset { x, y, classes }
+}
+
+fn request(strategy: &str, ground: Vec<usize>, budget: usize) -> SelectionRequest {
+    SelectionRequest {
+        strategy: strategy.into(),
+        budget,
+        lambda: 0.5,
+        eps: 1e-10,
+        is_valid: false,
+        seed: 42,
+        rng_tag: 7,
+        ground,
+    }
+}
+
+#[test]
+fn three_strategy_round_shares_one_staging_pass() {
+    // the acceptance contract: a sweep round (gradmatch, gradmatch-warm,
+    // craig) against ONE model state costs exactly ⌈n/chunk⌉ gradient
+    // dispatches and zero mean dispatches — the engine's shared cache
+    // serves requests 2 and 3 for free
+    let (classes, h, d, chunk) = (6usize, 4usize, 5usize, 16usize);
+    let p = h * classes + classes;
+    let train = imbalanced(11, classes, d);
+    let val = imbalanced(12, classes, d);
+    let n = train.len();
+    let ground: Vec<usize> = (0..n).collect();
+    let specs = ["gradmatch", "gradmatch-warm", "craig"];
+
+    let mut oracle = SynthGrads::new(chunk, p);
+    let reports: Vec<SelectionReport> = {
+        let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+        let reqs: Vec<SelectionRequest> =
+            specs.iter().map(|s| request(s, ground.clone(), n / 4)).collect();
+        engine.select_batch(&reqs).unwrap()
+    };
+    assert_eq!(oracle.grad_calls, n.div_ceil(chunk), "one shared staged pass");
+    assert_eq!(oracle.mean_calls, 0, "train targets are free — no mean pass");
+
+    // the reports narrate the sharing: the first request pays the pass,
+    // the rest ride the cache
+    assert!(!reports[0].stats.stage_shared);
+    assert_eq!(reports[0].stats.stage_dispatches, n.div_ceil(chunk));
+    for rep in &reports[1..] {
+        assert!(rep.stats.stage_shared, "{}: should ride the cache", rep.strategy);
+        assert_eq!(rep.stats.stage_dispatches, 0, "{}", rep.strategy);
+    }
+    for rep in &reports {
+        assert!(!rep.selection.indices.is_empty(), "{}", rep.strategy);
+        assert_eq!(rep.selection.indices.len(), rep.selection.weights.len());
+        assert!(rep.selection.indices.iter().all(|&i| i < n), "{}", rep.strategy);
+        assert_eq!(
+            rep.stats.class_budgets.iter().sum::<usize>(),
+            n / 4,
+            "{}: per-class budgets account for the whole budget",
+            rep.strategy
+        );
+    }
+
+    // solo engines pay one pass each — the waste the shared cache removes
+    let mut solo_calls = 0usize;
+    for spec in specs {
+        let mut solo = SynthGrads::new(chunk, p);
+        {
+            let engine = SelectionEngine::with_oracle(&mut solo, &train, &val, h, classes);
+            engine.select(&request(spec, ground.clone(), n / 4)).unwrap();
+        }
+        solo_calls += solo.grad_calls;
+    }
+    assert_eq!(solo_calls, 3 * n.div_ceil(chunk));
+}
+
+#[test]
+fn oracle_engine_matches_the_stateless_pipeline() {
+    // engine-path gradmatch == hand-run stage → budgets → targets →
+    // solve over an identical oracle (the engine adds no numerics)
+    let (classes, h, d, chunk) = (5usize, 3usize, 4usize, 8usize);
+    let p = h * classes + classes;
+    let train = imbalanced(21, classes, d);
+    let val = imbalanced(22, classes, d);
+    let n = train.len();
+    let ground: Vec<usize> = (0..n).collect();
+    let budget = n / 3;
+
+    let mut oracle = SynthGrads::new(chunk, p);
+    let got = {
+        let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+        engine.select(&request("gradmatch", ground.clone(), budget)).unwrap()
+    };
+
+    let mut ref_oracle = SynthGrads::new(chunk, p);
+    let stages = stage_class_grads_with(
+        &mut ref_oracle,
+        &train,
+        &ground,
+        h,
+        classes,
+        StageWidth::ClassSlice,
+        true,
+    )
+    .unwrap();
+    let sizes: Vec<usize> = stages.iter().map(|s| s.rows.len()).collect();
+    let budgets = split_budget(budget, &sizes);
+    let targets = staged_targets(&stages, h, classes, true, None);
+    let want = solve_classes_omp(&stages, &budgets, &targets, 0.5, 1e-10, true).unwrap();
+
+    assert_eq!(got.selection.indices, want.indices);
+    for (a, b) in got.selection.weights.iter().zip(&want.weights) {
+        assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+    assert_eq!(got.stats.class_budgets, budgets);
+}
+
+#[test]
+fn engine_reuse_is_keyed_by_ground_set_and_width() {
+    // a different ground set (or stage width) must NOT be served from the
+    // cache — staged rows depend on both
+    let (classes, h, d, chunk) = (4usize, 3usize, 4usize, 8usize);
+    let p = h * classes + classes;
+    let train = imbalanced(31, classes, d);
+    let val = imbalanced(32, classes, d);
+    let n = train.len();
+    let full: Vec<usize> = (0..n).collect();
+    let half: Vec<usize> = (0..n / 2).collect();
+
+    let mut oracle = SynthGrads::new(chunk, p);
+    {
+        let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+        engine.select(&request("gradmatch", full.clone(), n / 4)).unwrap();
+        engine.select(&request("gradmatch", half.clone(), n / 8)).unwrap();
+        // distinct width: the PerClass variant stages full-P rows
+        engine.select(&request("gradmatch-perclass", full.clone(), n / 4)).unwrap();
+        // and back to the cached entries — no further passes
+        engine.select(&request("craig", full.clone(), n / 4)).unwrap();
+        engine.select(&request("craig", half.clone(), n / 8)).unwrap();
+    }
+    let want =
+        n.div_ceil(chunk) + (n / 2).div_ceil(chunk) + n.div_ceil(chunk);
+    assert_eq!(oracle.grad_calls, want, "three distinct (width, ground) keys");
+}
+
+#[test]
+fn report_and_request_roundtrip_through_jsonlite() {
+    let rep = SelectionReport {
+        strategy: "craig".into(),
+        budget: 9,
+        selection: Selection {
+            indices: vec![1, 4, 7],
+            weights: vec![2.0, 1.0, 6.5],
+            grad_error: None,
+        },
+        stats: RoundStats {
+            stage_secs: 0.001,
+            solve_secs: 0.125,
+            stage_dispatches: 3,
+            stage_shared: true,
+            class_budgets: vec![3, 3, 3],
+            fanout: false,
+        },
+    };
+    let back =
+        SelectionReport::from_json(&Json::parse(&rep.to_json().dump()).unwrap()).unwrap();
+    assert_eq!(rep, back);
+
+    let req = request("gradmatch-pb-warm", vec![0, 5, 3], 2);
+    let back =
+        SelectionRequest::from_json(&Json::parse(&req.to_json().dump()).unwrap()).unwrap();
+    assert_eq!(req, back);
+}
+
+// ---------------------------------------------------------------------------
+// live-runtime equivalence (skips without HLO artifacts)
+// ---------------------------------------------------------------------------
+
+const MODEL: &str = "lenet_narrow";
+
+#[test]
+fn engine_path_matches_legacy_strategy_select_for_all_paper_specs() {
+    if !common::runtime_available() {
+        return;
+    }
+    let rt = common::runtime();
+    let st = rt.init(MODEL, 5).unwrap();
+    let splits = common::tiny_mnist(600);
+    let ground: Vec<usize> = (0..splits.train.len()).collect();
+    let budget = 60usize;
+
+    for spec in paper_strategies() {
+        let req = request(spec, ground.clone(), budget);
+
+        // engine path: fresh round-scoped engine, spec resolved inside
+        let engine = SelectionEngine::new(&rt, &st, &splits.train, &splits.val);
+        let report = engine.select(&req).unwrap();
+
+        // legacy path: parse + select with an identically-derived RNG and
+        // private staging (round: None)
+        let (mut strategy, _warm) = parse_strategy(spec, st.meta.batch).unwrap();
+        let mut rng = req.round_rng();
+        let want = strategy
+            .select(&mut SelectCtx {
+                rt: &rt,
+                state: &st,
+                train: &splits.train,
+                ground: &ground,
+                val: &splits.val,
+                budget,
+                lambda: req.lambda,
+                eps: req.eps,
+                is_valid: req.is_valid,
+                rng: &mut rng,
+                round: None,
+            })
+            .unwrap();
+
+        assert_eq!(
+            report.selection.indices, want.indices,
+            "{spec}: engine selection must equal the legacy path"
+        );
+        assert_eq!(
+            report.selection.weights, want.weights,
+            "{spec}: engine weights must equal the legacy path"
+        );
+        assert_eq!(report.selection.grad_error, want.grad_error, "{spec}");
+        assert_eq!(report.strategy, spec);
+    }
+}
+
+#[test]
+fn live_multi_strategy_round_shares_staging() {
+    if !common::runtime_available() {
+        return;
+    }
+    // gradmatch + craig in one live round: request 2 must report the
+    // cache hit (dispatch accounting is pinned device-free above)
+    let rt = common::runtime();
+    let st = rt.init(MODEL, 6).unwrap();
+    let splits = common::tiny_mnist(400);
+    let ground: Vec<usize> = (0..splits.train.len()).collect();
+    let engine = SelectionEngine::new(&rt, &st, &splits.train, &splits.val);
+    let reports = engine
+        .select_batch(&[
+            request("gradmatch", ground.clone(), 40),
+            request("craig", ground.clone(), 40),
+        ])
+        .unwrap();
+    assert!(!reports[0].stats.stage_shared);
+    assert!(reports[0].stats.stage_dispatches > 0);
+    assert!(reports[1].stats.stage_shared, "craig must reuse gradmatch's staged pass");
+    assert_eq!(reports[1].stats.stage_dispatches, 0);
+    assert!(!reports[1].selection.indices.is_empty());
+}

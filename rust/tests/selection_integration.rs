@@ -32,6 +32,7 @@ fn select_with(spec: &str, budget_frac: f64, seed: u64) -> (Selection, usize) {
             eps: 1e-10,
             is_valid: false,
             rng: &mut rng,
+            round: None,
         })
         .unwrap();
     (sel, budget)
@@ -181,6 +182,7 @@ fn gradmatch_pb_error_decreases_with_budget() {
                 eps: 1e-12,
                 is_valid: false,
                 rng: &mut rng,
+                round: None,
             })
             .unwrap();
         errs.push(sel.grad_error.expect("pb reports residual"));
@@ -217,6 +219,7 @@ fn validation_matching_runs_under_imbalance() {
                 eps: 1e-10,
                 is_valid: true,
                 rng: &mut srng,
+                round: None,
             })
             .unwrap();
         assert!(!sel.indices.is_empty(), "{spec}");
@@ -268,6 +271,7 @@ fn xla_and_rust_gradmatch_agree_on_selection() {
                 eps: 1e-10,
                 is_valid: false,
                 rng: &mut rng,
+                round: None,
             },
         )
         .unwrap()
@@ -319,6 +323,7 @@ fn staged_fanout_round_matches_serial_reference() {
                         eps: 1e-10,
                         is_valid: false,
                         rng: &mut rng,
+                        round: None,
                     },
                 )
                 .unwrap()
@@ -399,6 +404,7 @@ fn forgetting_accumulates_across_rounds() {
                 eps: 1e-10,
                 is_valid: false,
                 rng: &mut rng,
+                round: None,
             },
         )
         .unwrap();

@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# CI gate for the workspace: build, tests, formatting, lints.
+#
+#   scripts/ci.sh          # everything
+#   scripts/ci.sh --fast   # build + tests only (skip fmt/clippy)
+#
+# Tier-1 (enforced): cargo build --release && cargo test -q.
+# fmt/clippy run when the components are installed; a missing component
+# is reported but does not fail the gate (offline toolchains may omit
+# them), while an installed component failing DOES fail.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fast=0
+[[ "${1:-}" == "--fast" ]] && fast=1
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "$fast" == "1" ]]; then
+    echo "ci: fast mode — skipped fmt/clippy"
+    exit 0
+fi
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "ci: rustfmt not installed — skipping format check"
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -- -D warnings =="
+    cargo clippy --workspace --all-targets -- -D warnings
+else
+    echo "ci: clippy not installed — skipping lints"
+fi
+
+echo "ci: OK"
