@@ -10,7 +10,7 @@ use gradmatch::bench_harness as bh;
 use gradmatch::coordinator::Coordinator;
 use gradmatch::grads;
 use gradmatch::rng::Rng;
-use gradmatch::selection::{parse_strategy, SelectCtx};
+use gradmatch::selection::{parse_strategy, GradSource, SelectCtx};
 
 fn main() -> anyhow::Result<()> {
     let coord = Coordinator::new(&bh::artifacts_dir())?;
@@ -49,8 +49,7 @@ fn main() -> anyhow::Result<()> {
             let (mut strategy, _) = parse_strategy(strat, st.meta.batch)?;
             let mut rng = Rng::new(7);
             let sel = strategy.select(&mut SelectCtx {
-                rt,
-                state: &st,
+                src: GradSource::Live { rt, state: &st },
                 train: &splits.train,
                 ground: &ground,
                 val: &splits.val,

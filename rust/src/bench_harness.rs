@@ -140,6 +140,11 @@ impl BenchReport {
             if stats.stage_shared { 1.0 } else { 0.0 },
         );
         self.note(&format!("{label}/fanout"), if stats.fanout { 1.0 } else { 0.0 });
+        self.note(&format!("{label}/engine_round"), stats.engine_round as f64);
+        self.note(
+            &format!("{label}/stage_reused_buffers"),
+            if stats.stage_reused_buffers { 1.0 } else { 0.0 },
+        );
     }
 
     /// Serialize to JSON text.

@@ -148,9 +148,13 @@ USAGE:
   gradmatch sweep   [--datasets synmnist,syncifar10] [--strategies random,gradmatch-pb]
                     [--budgets 0.05,0.1,0.3] [--epochs 60] ...
   gradmatch select  one-shot engine selection round; prints SelectionReport
-                    JSON (indices+weights plus staging/solve observability).
-                    --strategies a,b,c batches the round: one staged-gradient
-                    pass shared by every request (SelectionEngine cache)
+                    JSON (indices+weights plus staging/solve observability
+                    and the engine-reuse counters).  --strategies a,b,c
+                    batches the round: one staged-gradient pass shared by
+                    every request (SelectionEngine cache).  Every listed
+                    strategy — including the -pb variants, entropy and
+                    forgetting — also runs device-free through the engine's
+                    oracle backend (tests/benches)
   gradmatch list-strategies  print every strategy spec + adaptive/warm flags
   gradmatch inspect print artifact manifest summary
 

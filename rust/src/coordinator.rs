@@ -45,6 +45,13 @@ pub struct RunSummary {
     pub stage_dispatches: usize,
     /// rounds whose staged gradients came from the engine's shared cache
     pub stage_shared_rounds: usize,
+    /// rounds served by an already-used engine (`engine_round > 0`) — with
+    /// the one-engine-per-run contract this is at least `selections - 1`
+    /// (exactly, when every due round produced a non-empty selection;
+    /// empty rounds advance the engine without being recorded here)
+    pub engine_reused_rounds: usize,
+    /// rounds whose staging pass recycled a previous round's buffers
+    pub stage_buffer_reuses: usize,
     /// fraction of training rows never selected (Table 10)
     pub redundant_frac: f64,
     /// (epoch, cum_secs, test_acc) convergence points (Fig. 3j/k)
@@ -81,6 +88,8 @@ impl RunSummary {
             select_solve_secs: o.round_stats.iter().map(|r| r.solve_secs).sum(),
             stage_dispatches: o.round_stats.iter().map(|r| r.stage_dispatches).sum(),
             stage_shared_rounds: o.round_stats.iter().filter(|r| r.stage_shared).count(),
+            engine_reused_rounds: o.round_stats.iter().filter(|r| r.engine_round > 0).count(),
+            stage_buffer_reuses: o.round_stats.iter().filter(|r| r.stage_reused_buffers).count(),
             redundant_frac: never as f64 / o.ever_selected.len().max(1) as f64,
             convergence: conv,
         }
@@ -110,6 +119,8 @@ impl RunSummary {
             ("select_solve_secs", num(self.select_solve_secs)),
             ("stage_dispatches", num(self.stage_dispatches as f64)),
             ("stage_shared_rounds", num(self.stage_shared_rounds as f64)),
+            ("engine_reused_rounds", num(self.engine_reused_rounds as f64)),
+            ("stage_buffer_reuses", num(self.stage_buffer_reuses as f64)),
             (
                 "convergence",
                 arr(self
@@ -284,7 +295,7 @@ impl Coordinator {
                 r
             })
             .collect();
-        let engine = SelectionEngine::new(&self.rt, &st, &splits.train, &splits.val);
+        let engine = SelectionEngine::new(&self.rt, st, &splits.train, &splits.val);
         engine.select_batch(&reqs)
     }
 
@@ -408,6 +419,8 @@ mod tests {
             select_solve_secs: 1.25,
             stage_dispatches: 12,
             stage_shared_rounds: 1,
+            engine_reused_rounds: 2,
+            stage_buffer_reuses: 2,
             redundant_frac: 0.7,
             convergence: vec![(4, 1.0, 0.8), (9, 2.0, 0.9)],
         };
@@ -417,6 +430,8 @@ mod tests {
         assert_eq!(parsed.get("selections").unwrap().as_usize(), Some(3));
         assert_eq!(parsed.get("stage_dispatches").unwrap().as_usize(), Some(12));
         assert_eq!(parsed.get("select_stage_secs").unwrap().as_f64(), Some(0.75));
+        assert_eq!(parsed.get("engine_reused_rounds").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("stage_buffer_reuses").unwrap().as_usize(), Some(2));
         assert_eq!(
             parsed.get("convergence").unwrap().as_arr().unwrap().len(),
             2

@@ -14,32 +14,40 @@
 //!   selection round (strategy spec, budget, λ/ε, ground set,
 //!   train-vs-val matching, seed), constructible from
 //!   [`ExperimentConfig`] and from CLI flags.
-//! - [`SelectionEngine`] — owns the round: a live `Runtime` + model
-//!   snapshot (or, for device-free tests and benches, an explicit
+//! - [`SelectionEngine`] — owns the round: a live `Runtime` + owned
+//!   model snapshot (or, for device-free tests and benches, an explicit
 //!   [`GradOracle`]) plus a **round-scoped staging cache**
 //!   ([`RoundShared`]), so N requests against the same model state — a
 //!   strategy sweep, GRAD-MATCH + CRAIG in one round, warm + cold
 //!   variants — share ONE [`grads::stage_class_grads`] pass instead of
-//!   N.  Strategies are stateless solvers over the staged views; the
-//!   old `parse_strategy` + `select` path still works and now rides the
-//!   same solvers (with `round: None`, i.e. private staging).
+//!   N.  Strategies are stateless solvers over [`GradSource`] oracle
+//!   views, so **every** spec in
+//!   [`crate::selection::strategy_specs`] — including the PB variants,
+//!   ENTROPY, and FORGETTING — runs through either backend; the old
+//!   `parse_strategy` + `select` path still works and rides the same
+//!   solvers (with `round: None`, i.e. private staging).
 //! - [`SelectionReport`] — the [`Selection`] plus per-round
 //!   observability: staging/solve wall-clock split, staging dispatch
 //!   count, per-class budgets from `split_budget`, residual
-//!   `grad_error`, and the fan-out-vs-serial decision.  Serialized via
+//!   `grad_error`, the fan-out-vs-serial decision, and the engine-reuse
+//!   counters (`engine_round`, `stage_reused_buffers`).  Serialized via
 //!   [`crate::jsonlite`] into `RunSummary` and `BENCH_micro.json`.
 //!
-//! The engine is **round-scoped**: one engine per model state.  Build a
-//! fresh engine after every parameter update (or call
-//! [`SelectionEngine::reset_round`]) — staged gradients are only valid
-//! for the snapshot they were computed against.
+//! The engine is **run-scoped, round-reusable**: build ONE engine per
+//! run and call [`SelectionEngine::reset_round`] at every parameter
+//! update — staged gradients are only valid for the snapshot they were
+//! computed against, so the reset invalidates the cache, but the staging
+//! buffers pool across rounds (the next pass scatters into last round's
+//! matrices) and the probe keeps counting engine rounds.
 //!
-//! Dispatch contract (pinned by the counting-oracle test in
-//! `tests/engine_api.rs`): a multi-strategy round over the class-sliced
-//! stage costs exactly `⌈|ground|/chunk⌉` gradient dispatches however
-//! many requests consume it.
+//! Dispatch contract (pinned by the counting-oracle tests in
+//! `tests/engine_api.rs` and `tests/strategy_conformance.rs`): a
+//! multi-strategy round over the class-sliced stage costs exactly
+//! `⌈|ground|/chunk⌉` gradient dispatches however many requests consume
+//! it; PB rounds cost `⌈|ground|/chunk⌉` group-sum dispatches; ENTROPY /
+//! FORGETTING cost one eval-entry pass.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -52,10 +60,7 @@ use crate::grads::{self, ClassStage, GradOracle, StageWidth};
 use crate::jsonlite::{arr, num, obj, s, Json};
 use crate::rng::Rng;
 use crate::runtime::{ModelState, Runtime};
-use crate::selection::{
-    glister_rank, live_flags, omp_fanout_wins, parse_strategy, solve_classes_fl,
-    solve_classes_omp, split_budget, staged_targets, SelectCtx, Selection, Strategy,
-};
+use crate::selection::{parse_strategy, GradSource, SelectCtx, Selection, Strategy};
 
 // ---------------------------------------------------------------------------
 // SelectionRequest
@@ -172,6 +177,14 @@ pub struct RoundStats {
     /// the per-class solves fanned out across the machine
     /// ([`crate::par::fanout_wins`]) rather than running serially
     pub fanout: bool,
+    /// which engine round served this request: the number of
+    /// [`SelectionEngine::reset_round`] calls before it ran.  `> 0` means
+    /// the request rode a *reused* engine — the per-run counter
+    /// `RunSummary::engine_reused_rounds` aggregates this.
+    pub engine_round: usize,
+    /// the staging pass scattered into buffers recycled from a previous
+    /// engine round (no fresh `[|ground|, w]` allocation)
+    pub stage_reused_buffers: bool,
 }
 
 /// The engine's answer to one [`SelectionRequest`]: the selection itself
@@ -222,6 +235,11 @@ impl SelectionReport {
                         arr(self.stats.class_budgets.iter().map(|&b| num(b as f64)).collect()),
                     ),
                     ("fanout", Json::Bool(self.stats.fanout)),
+                    ("engine_round", num(self.stats.engine_round as f64)),
+                    (
+                        "stage_reused_buffers",
+                        Json::Bool(self.stats.stage_reused_buffers),
+                    ),
                 ]),
             ),
         ])
@@ -265,6 +283,8 @@ impl SelectionReport {
                 stage_shared: jbool(round, "stage_shared")?,
                 class_budgets: jusize_arr(round, "class_budgets")?,
                 fanout: jbool(round, "fanout")?,
+                engine_round: jusize(round, "engine_round")?,
+                stage_reused_buffers: jbool(round, "stage_reused_buffers")?,
             },
         })
     }
@@ -350,6 +370,14 @@ pub struct RoundShared {
     /// validation class means keyed by the live-flags vector (an
     /// `is_valid` sweep pays the per-class `[P]` readbacks once)
     val_means: RefCell<HashMap<Vec<bool>, Arc<Vec<Option<Vec<f32>>>>>>,
+    /// staged buffers recycled across [`RoundShared::reset`] calls, keyed
+    /// like `stages`: the trainer re-stages the same ground set every
+    /// round, so the next round's scatter reuses last round's matrices
+    /// instead of reallocating `[|ground|, w]`
+    pool: RefCell<HashMap<(StageWidth, u64), Vec<ClassStage>>>,
+    /// completed `reset` calls — the engine-round index stamped into
+    /// every report's `RoundStats::engine_round`
+    rounds: Cell<usize>,
     probe: RefCell<RoundStats>,
 }
 
@@ -358,9 +386,39 @@ impl RoundShared {
         RoundShared::default()
     }
 
+    /// The engine-round index: how many [`RoundShared::reset`] calls have
+    /// completed (0 for a fresh engine).
+    pub fn round_index(&self) -> usize {
+        self.rounds.get()
+    }
+
+    /// Invalidate the round: staged gradients and validation means are
+    /// only valid for the snapshot they were computed against, so drop
+    /// the caches — but park uniquely-owned staged buffers in the reuse
+    /// pool (allocations survive the reset) and advance the engine-round
+    /// index.  The pool is rebuilt from scratch each reset (only the
+    /// immediately-previous round's buffers are retained), so an engine
+    /// whose ground sets vary across rounds cannot accumulate stale
+    /// staged matrices for the life of the run.  The probe restarts
+    /// clean.
+    pub fn reset(&self) {
+        let mut pool = self.pool.borrow_mut();
+        pool.clear();
+        for (key, staged) in self.stages.borrow_mut().drain() {
+            if let Ok(bufs) = Arc::try_unwrap(staged) {
+                pool.insert(key, bufs);
+            }
+        }
+        self.val_means.borrow_mut().clear();
+        *self.probe.borrow_mut() = RoundStats::default();
+        self.rounds.set(self.rounds.get() + 1);
+    }
+
     /// Fetch (or stage once) the per-class gradient matrices for `ground`
     /// at `width`, recording the staging time and dispatch count into the
-    /// probe on a miss and the shared flag on a hit.
+    /// probe on a miss and the shared flag on a hit.  A miss first checks
+    /// the cross-round reuse pool so re-staging the same ground set
+    /// recycles the previous round's buffers.
     pub fn class_stages(
         &self,
         oracle: &mut dyn GradOracle,
@@ -376,14 +434,16 @@ impl RoundShared {
             return Ok(hit.clone());
         }
         let chunk = oracle.chunk_rows().max(1);
+        let prev = self.pool.borrow_mut().remove(&key).unwrap_or_default();
         let t0 = Instant::now();
-        let staged = Arc::new(grads::stage_class_grads_with(
-            oracle, ds, ground, h, c, width, true,
-        )?);
+        let (staged, reused) =
+            grads::stage_class_grads_reusing(oracle, ds, ground, h, c, width, true, prev)?;
+        let staged = Arc::new(staged);
         {
             let mut probe = self.probe.borrow_mut();
             probe.stage_secs += t0.elapsed().as_secs_f64();
             probe.stage_dispatches += ground.len().div_ceil(chunk);
+            probe.stage_reused_buffers |= reused;
         }
         self.stages.borrow_mut().insert(key, staged.clone());
         Ok(staged)
@@ -429,13 +489,15 @@ impl RoundShared {
 // SelectionEngine
 // ---------------------------------------------------------------------------
 
-/// Gradient source backing an engine: the live PJRT runtime + model
-/// snapshot, or an explicit oracle (tests/benches — covers the
-/// device-free subset of the strategy space).
+/// Gradient source backing an engine: the live PJRT runtime + an owned
+/// model snapshot (owned so [`SelectionEngine::reset_round`] can install
+/// each round's fresh parameters into one long-lived engine), or an
+/// explicit oracle (tests/benches — covers the whole strategy catalog
+/// device-free; XLA solve arms fall back to the Rust solvers).
 enum Backend<'a> {
     Live {
         rt: &'a Runtime,
-        state: &'a ModelState,
+        state: ModelState,
     },
     Oracle {
         oracle: RefCell<&'a mut dyn GradOracle>,
@@ -457,10 +519,12 @@ pub struct SelectionEngine<'a> {
 }
 
 impl<'a> SelectionEngine<'a> {
-    /// Live engine over a runtime and one model snapshot.
+    /// Live engine over a runtime and one model snapshot.  Build ONE
+    /// engine per run and call [`SelectionEngine::reset_round`] with each
+    /// later snapshot instead of rebuilding.
     pub fn new(
         rt: &'a Runtime,
-        state: &'a ModelState,
+        state: ModelState,
         train: &'a Dataset,
         val: &'a Dataset,
     ) -> SelectionEngine<'a> {
@@ -475,10 +539,11 @@ impl<'a> SelectionEngine<'a> {
 
     /// Device-free engine over an explicit [`GradOracle`] (`h`/`c` give
     /// the class column layout; the oracle's P must equal `h*c + c`).
-    /// Serves the staged per-class strategies (GRAD-MATCH per-class
-    /// variants, CRAIG's per-class arm, GLISTER, RANDOM, FULL); specs
-    /// that need runtime entry points beyond gradients (PB variants,
-    /// ENTROPY, FORGETTING, XLA solve arms) return an error.
+    /// Serves EVERY spec in [`crate::selection::strategy_specs`]: the
+    /// oracle seam covers per-sample/fused gradients, the PB group sums,
+    /// and the eval-entry streams, and the XLA solve arms fall back to
+    /// the Rust solvers.  PB grouping follows the oracle's
+    /// [`GradOracle::batch_rows`].
     pub fn with_oracle(
         oracle: &'a mut dyn GradOracle,
         train: &'a Dataset,
@@ -486,8 +551,9 @@ impl<'a> SelectionEngine<'a> {
         h: usize,
         c: usize,
     ) -> SelectionEngine<'a> {
+        let batch = oracle.batch_rows();
         SelectionEngine {
-            batch: 128,
+            batch,
             backend: Backend::Oracle { oracle: RefCell::new(oracle), h, c },
             train,
             val,
@@ -500,58 +566,47 @@ impl<'a> SelectionEngine<'a> {
         &self.shared
     }
 
-    /// Drop the round-scoped staging cache.  Call between model updates
-    /// when reusing one engine value across rounds — staged gradients are
-    /// only valid for the snapshot they were computed against.
-    pub fn reset_round(&mut self) {
-        self.shared = RoundShared::default();
-    }
-
-    /// Answer one request, resolving the strategy spec fresh.  Stateful
-    /// baselines (FORGETTING) lose their cross-round memory on this path —
-    /// drive those through [`SelectionEngine::select_with`] with a
-    /// caller-held instance, as the trainer does.
-    pub fn select(&self, req: &SelectionRequest) -> Result<SelectionReport> {
-        match &self.backend {
-            Backend::Live { .. } => {
-                let (mut strategy, _warm) = parse_strategy(&req.strategy, self.batch)?;
-                self.select_with(strategy.as_mut(), req)
-            }
-            Backend::Oracle { oracle, h, c } => {
-                let t0 = Instant::now();
-                let selection = {
-                    let mut o = oracle.borrow_mut();
-                    self.select_oracle(&mut **o, *h, *c, req)
-                        .map_err(|e| self.drop_probe(e))?
-                };
-                Ok(self.report(req, selection, t0))
+    /// Start the next selection round on this engine: invalidate the
+    /// round-scoped caches (staged gradients are only valid for the
+    /// snapshot they were computed against) while keeping the staging
+    /// buffers poolable for the next pass, and install the fresh
+    /// parameter snapshot on live engines.  Oracle engines pass `None` —
+    /// the caller mutates its oracle (e.g. a salt bump) to model the
+    /// update.
+    pub fn reset_round(&mut self, state: Option<ModelState>) {
+        self.shared.reset();
+        if let Some(snap) = state {
+            if let Backend::Live { state: current, .. } = &mut self.backend {
+                *current = snap;
             }
         }
     }
 
+    /// Answer one request, resolving the strategy spec fresh (unknown
+    /// specs fail with the full [`crate::selection::strategy_specs`]
+    /// catalog, like the legacy parser).  Stateful baselines (FORGETTING)
+    /// lose their cross-round memory on this path — drive those through
+    /// [`SelectionEngine::select_with`] with a caller-held instance, as
+    /// the trainer does.
+    pub fn select(&self, req: &SelectionRequest) -> Result<SelectionReport> {
+        let (mut strategy, _warm) = parse_strategy(&req.strategy, self.batch)?;
+        self.select_with(strategy.as_mut(), req)
+    }
+
     /// Answer one request with a caller-held strategy instance (stateful
     /// baselines keep their memory; the trainer keeps one instance per
-    /// run).  Requires the live backend — strategies drive runtime entry
-    /// points the oracle seam does not cover.
+    /// run).  Works on both backends — the strategy sees the engine's
+    /// gradient source through the [`GradSource`] seam.
     pub fn select_with(
         &self,
         strategy: &mut dyn Strategy,
         req: &SelectionRequest,
     ) -> Result<SelectionReport> {
-        let (rt, state) = match &self.backend {
-            Backend::Live { rt, state } => (*rt, *state),
-            Backend::Oracle { .. } => {
-                return Err(anyhow!(
-                    "select_with drives a caller-held Strategy and needs a live-runtime engine"
-                ))
-            }
-        };
         let t0 = Instant::now();
         let mut rng = req.round_rng();
-        let selection = strategy
-            .select(&mut SelectCtx {
-                rt,
-                state,
+        let selection = match &self.backend {
+            Backend::Live { rt, state } => strategy.select(&mut SelectCtx {
+                src: GradSource::Live { rt: *rt, state },
                 train: self.train,
                 ground: &req.ground,
                 val: self.val,
@@ -561,8 +616,24 @@ impl<'a> SelectionEngine<'a> {
                 is_valid: req.is_valid,
                 rng: &mut rng,
                 round: Some(&self.shared),
-            })
-            .map_err(|e| self.drop_probe(e))?;
+            }),
+            Backend::Oracle { oracle, h, c } => {
+                let mut guard = oracle.borrow_mut();
+                strategy.select(&mut SelectCtx {
+                    src: GradSource::Oracle { oracle: &mut **guard, h: *h, c: *c },
+                    train: self.train,
+                    ground: &req.ground,
+                    val: self.val,
+                    budget: req.budget,
+                    lambda: req.lambda,
+                    eps: req.eps,
+                    is_valid: req.is_valid,
+                    rng: &mut rng,
+                    round: Some(&self.shared),
+                })
+            }
+        }
+        .map_err(|e| self.drop_probe(e))?;
         Ok(self.report(req, selection, t0))
     }
 
@@ -584,104 +655,13 @@ impl<'a> SelectionEngine<'a> {
         let total = t0.elapsed().as_secs_f64();
         let mut stats = self.shared.take_stats();
         stats.solve_secs = (total - stats.stage_secs).max(0.0);
+        stats.engine_round = self.shared.round_index();
         SelectionReport {
             strategy: req.strategy.clone(),
             budget: req.budget,
             selection,
             stats,
         }
-    }
-
-    /// The oracle-backed solve path: the same stateless solvers the
-    /// `Strategy` impls consume, fed from the shared cache.
-    fn select_oracle(
-        &self,
-        oracle: &mut dyn GradOracle,
-        h: usize,
-        c: usize,
-        req: &SelectionRequest,
-    ) -> Result<Selection> {
-        let mut spec = req.strategy.trim().to_lowercase();
-        if spec.ends_with("-warm") {
-            spec.truncate(spec.len() - "-warm".len());
-        }
-        match spec.as_str() {
-            "gradmatch" | "gradmatch-rust" => self.oracle_gradmatch(oracle, h, c, req, true),
-            "gradmatch-perclass" => self.oracle_gradmatch(oracle, h, c, req, false),
-            "craig" => {
-                let stages = self.shared.class_stages(
-                    oracle,
-                    self.train,
-                    &req.ground,
-                    h,
-                    c,
-                    StageWidth::ClassSlice,
-                )?;
-                let sizes: Vec<usize> = stages.iter().map(|st| st.rows.len()).collect();
-                let budgets = split_budget(req.budget, &sizes);
-                let (sel, fan) = solve_classes_fl(&stages, &budgets, true);
-                self.shared.note_budgets(&budgets);
-                self.shared.note_fanout(fan);
-                Ok(sel)
-            }
-            "glister" => {
-                let val_rows: Vec<usize> = (0..self.val.len()).collect();
-                let v = grads::mean_gradient_with(oracle, self.val, &val_rows)?;
-                let scores = grads::score_grads_with(oracle, self.train, &req.ground, &v)?;
-                let (sel, budgets, fan) = glister_rank(self.train, &req.ground, &scores, req.budget);
-                self.shared.note_budgets(&budgets);
-                self.shared.note_fanout(fan);
-                Ok(sel)
-            }
-            "random" => {
-                let mut rng = req.round_rng();
-                let k = req.budget.min(req.ground.len());
-                let mut out = Selection::default();
-                for j in rng.sample_indices(req.ground.len(), k) {
-                    out.indices.push(req.ground[j]);
-                    out.weights.push(1.0);
-                }
-                Ok(out)
-            }
-            "full" | "full-earlystop" => {
-                let mut out = Selection::default();
-                for &i in &req.ground {
-                    out.indices.push(i);
-                    out.weights.push(1.0);
-                }
-                Ok(out)
-            }
-            other => Err(anyhow!(
-                "strategy '{other}' needs a live-runtime engine (the oracle backend covers \
-                 gradmatch[-perclass], craig, glister, random, full)"
-            )),
-        }
-    }
-
-    fn oracle_gradmatch(
-        &self,
-        oracle: &mut dyn GradOracle,
-        h: usize,
-        c: usize,
-        req: &SelectionRequest,
-        per_gradient: bool,
-    ) -> Result<Selection> {
-        let width = if per_gradient { StageWidth::ClassSlice } else { StageWidth::Full };
-        let stages =
-            self.shared.class_stages(oracle, self.train, &req.ground, h, c, width)?;
-        let sizes: Vec<usize> = stages.iter().map(|st| st.rows.len()).collect();
-        let budgets = split_budget(req.budget, &sizes);
-        let val_means = if req.is_valid {
-            let flags = live_flags(&stages, &budgets, c);
-            Some(self.shared.val_class_means(oracle, self.val, c, &flags)?)
-        } else {
-            None
-        };
-        let targets =
-            staged_targets(&stages, h, c, per_gradient, val_means.as_ref().map(|v| v.as_slice()));
-        self.shared.note_budgets(&budgets);
-        self.shared.note_fanout(omp_fanout_wins(&stages, &budgets));
-        solve_classes_omp(&stages, &budgets, &targets, req.lambda, req.eps, true)
     }
 }
 
@@ -749,6 +729,8 @@ mod tests {
                 stage_shared: false,
                 class_budgets: vec![4, 0, 8],
                 fanout: true,
+                engine_round: 3,
+                stage_reused_buffers: true,
             },
         };
         let parsed = Json::parse(&rep.to_json().dump()).unwrap();

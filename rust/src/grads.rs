@@ -36,19 +36,46 @@ use crate::par::{dot, norm2};
 use crate::runtime::{ModelState, Runtime};
 use crate::tensor::{axpy, Matrix};
 
+/// Per-sample evaluation streams of one padded chunk — the entries the
+/// scoring baselines consume: ENTROPY ranks `entropy`, FORGETTING tracks
+/// `correct` flips.  Padded slots carry zeros.
+#[derive(Clone, Debug, Default)]
+pub struct EvalEntries {
+    /// 1.0 where the model classifies the slot correctly, else 0.0
+    pub correct: Vec<f32>,
+    /// predictive entropy per slot
+    pub entropy: Vec<f32>,
+}
+
 /// Chunk-level gradient oracle: the runtime entry points an acquisition
 /// pass may dispatch, behind a seam so tests and benches can substitute
 /// synthetic ([`SynthGrads`]) or counting implementations.  Production
 /// code goes through [`RtGrads`] (the AOT'd executables).
+///
+/// The seam covers the full acquisition surface of the strategy catalog:
+/// per-sample gradients and fused means (per-class strategies, GLISTER),
+/// per-mini-batch group sums (the PB ground sets), and per-sample eval
+/// entries (ENTROPY, FORGETTING) — which is what lets every spec in
+/// [`crate::selection::strategy_specs`] run device-free through a
+/// [`crate::engine::SelectionEngine`] oracle backend.
 pub trait GradOracle {
     /// fixed rows of every padded dispatch (the executables' static shape)
     fn chunk_rows(&self) -> usize;
     /// last-layer gradient dimension P
     fn p(&self) -> usize;
+    /// mini-batch group rows B of [`GradOracle::batch_gradsum_chunk`]
+    /// (divides `chunk_rows`; the PB ground-set granularity)
+    fn batch_rows(&self) -> usize;
     /// per-sample last-layer gradients of one padded chunk → `[chunk, P]`
     fn grads_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix>;
     /// masked gradient *sum* of one padded chunk → `[P]` (fused fast path)
     fn mean_grad_chunk(&mut self, chunk: &PaddedChunk) -> Result<Vec<f32>>;
+    /// masked per-group gradient *sums* of one padded chunk →
+    /// `[chunk/B, P]` (device-side group reduction; the PB fast path)
+    fn batch_gradsum_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix>;
+    /// per-sample eval entries of one padded chunk (correctness flags +
+    /// predictive entropies; padded slots zero)
+    fn eval_chunk(&mut self, chunk: &PaddedChunk) -> Result<EvalEntries>;
 }
 
 /// The production oracle: a model snapshot driven through the runtime.
@@ -66,12 +93,26 @@ impl GradOracle for RtGrads<'_> {
         self.st.meta.p
     }
 
+    fn batch_rows(&self) -> usize {
+        self.st.meta.batch
+    }
+
     fn grads_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
         self.rt.grads_chunk(self.st, &chunk.x, &chunk.y, &chunk.mask)
     }
 
     fn mean_grad_chunk(&mut self, chunk: &PaddedChunk) -> Result<Vec<f32>> {
         self.rt.mean_grad_chunk(self.st, &chunk.x, &chunk.y, &chunk.mask)
+    }
+
+    fn batch_gradsum_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
+        self.rt.batch_gradsum_chunk(self.st, &chunk.x, &chunk.y, &chunk.mask)
+    }
+
+    fn eval_chunk(&mut self, chunk: &PaddedChunk) -> Result<EvalEntries> {
+        let (_, _, correct, entropy) =
+            self.rt.eval_chunk(self.st, &chunk.x, &chunk.y, &chunk.mask)?;
+        Ok(EvalEntries { correct, entropy })
     }
 }
 
@@ -84,15 +125,58 @@ impl GradOracle for RtGrads<'_> {
 pub struct SynthGrads {
     pub chunk: usize,
     pub p: usize,
+    /// mini-batch group rows B of `batch_gradsum_chunk` ([`SynthGrads::new`]
+    /// sets B = chunk — one group per dispatch; [`SynthGrads::with_batch`]
+    /// picks a finer PB granularity)
+    pub batch: usize,
+    /// eval-stream salt, mixed into the synthetic correctness/entropy hash
+    /// only: tests bump it between rounds to emulate model updates without
+    /// perturbing the (state-free) pseudo-gradients
+    pub salt: u64,
     /// `grads_chunk` dispatches issued
     pub grad_calls: usize,
     /// `mean_grad_chunk` dispatches issued
     pub mean_calls: usize,
+    /// `batch_gradsum_chunk` dispatches issued
+    pub gradsum_calls: usize,
+    /// `eval_chunk` dispatches issued
+    pub eval_calls: usize,
 }
 
 impl SynthGrads {
     pub fn new(chunk: usize, p: usize) -> Self {
-        SynthGrads { chunk, p, grad_calls: 0, mean_calls: 0 }
+        Self::with_batch(chunk, p, chunk)
+    }
+
+    /// [`SynthGrads::new`] with an explicit PB group size (must divide
+    /// `chunk`, like the fixed-shape executables' B | E layout).
+    pub fn with_batch(chunk: usize, p: usize, batch: usize) -> Self {
+        assert!(batch > 0 && chunk % batch == 0, "PB group size must divide the chunk");
+        SynthGrads {
+            chunk,
+            p,
+            batch,
+            salt: 0,
+            grad_calls: 0,
+            mean_calls: 0,
+            gradsum_calls: 0,
+            eval_calls: 0,
+        }
+    }
+
+    /// The deterministic per-row feature fold every synthetic entry point
+    /// derives from — a row's outputs depend only on its `(x, y)` values,
+    /// so results are chunking-invariant.
+    fn fold_features(x: &[f32]) -> (f32, f32) {
+        let (mut a0, mut a1) = (0.0f32, 0.0f32);
+        for (j, &v) in x.iter().enumerate() {
+            if j % 2 == 0 {
+                a0 += v;
+            } else {
+                a1 -= v;
+            }
+        }
+        (a0, a1)
     }
 
     fn compute(&self, chunk: &PaddedChunk) -> Matrix {
@@ -105,14 +189,7 @@ impl SynthGrads {
         // single-pass engine eliminates)
         for slot in 0..self.chunk {
             let x = &chunk.x[slot * d..(slot + 1) * d];
-            let (mut a0, mut a1) = (0.0f32, 0.0f32);
-            for (j, &v) in x.iter().enumerate() {
-                if j % 2 == 0 {
-                    a0 += v;
-                } else {
-                    a1 -= v;
-                }
-            }
+            let (a0, a1) = Self::fold_features(x);
             // cheap deterministic basis (integer hash, no transcendentals
             // — the bench runs millions of these entries)
             let label = chunk.y[slot] as usize;
@@ -136,6 +213,10 @@ impl GradOracle for SynthGrads {
         self.p
     }
 
+    fn batch_rows(&self) -> usize {
+        self.batch
+    }
+
     fn grads_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
         self.grad_calls += 1;
         Ok(self.compute(chunk))
@@ -149,6 +230,44 @@ impl GradOracle for SynthGrads {
             axpy(1.0, gm.row(slot), &mut sum);
         }
         Ok(sum)
+    }
+
+    fn batch_gradsum_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
+        self.gradsum_calls += 1;
+        let gm = self.compute(chunk);
+        let mut out = Matrix::zeros(self.chunk / self.batch, self.p);
+        // masked group sums: padded slots contribute zero, like the
+        // device-side reduction
+        for slot in 0..chunk.live {
+            axpy(1.0, gm.row(slot), out.row_mut(slot / self.batch));
+        }
+        Ok(out)
+    }
+
+    fn eval_chunk(&mut self, chunk: &PaddedChunk) -> Result<EvalEntries> {
+        self.eval_calls += 1;
+        let d = chunk.x.len() / self.chunk;
+        let mut correct = vec![0.0f32; self.chunk];
+        let mut entropy = vec![0.0f32; self.chunk];
+        for slot in 0..self.chunk {
+            if chunk.mask[slot] <= 0.0 {
+                continue; // padded slots stay zero
+            }
+            let x = &chunk.x[slot * d..(slot + 1) * d];
+            let (a0, a1) = Self::fold_features(x);
+            // quantize the fold so the hash is exactly reproducible across
+            // chunkings, then mix in the label and the round salt
+            let q0 = (a0 * 512.0).round() as i64;
+            let q1 = (a1 * 512.0).round() as i64;
+            let h = q0
+                .wrapping_mul(0x9E37_79B9)
+                .wrapping_add(q1.wrapping_mul(0x85EB_CA6B))
+                .wrapping_add((chunk.y[slot] as i64).wrapping_mul(131))
+                .wrapping_add(self.salt as i64);
+            correct[slot] = if h.rem_euclid(3) == 0 { 1.0 } else { 0.0 };
+            entropy[slot] = h.rem_euclid(1009) as f32 / 1009.0;
+        }
+        Ok(EvalEntries { correct, entropy })
     }
 }
 
@@ -283,6 +402,28 @@ pub fn stage_class_grads_with(
     width: StageWidth,
     want_targets: bool,
 ) -> Result<Vec<ClassStage>> {
+    Ok(stage_class_grads_reusing(oracle, ds, ground, h, c, width, want_targets, Vec::new())?.0)
+}
+
+/// [`stage_class_grads_with`] that recycles a previous round's staged
+/// buffers: when `prev` has the exact per-class shapes this stage needs
+/// (same class count, per-class sizes, and width — true whenever the
+/// same ground set is re-staged, e.g. every trainer round), the scatter
+/// writes into the old matrices instead of allocating `[|ground|, w]`
+/// afresh.  Returns the stages and whether the buffers were reused — the
+/// engine's round-reuse path ([`crate::engine::RoundShared`]) feeds the
+/// flag into `RoundStats::stage_reused_buffers`.
+#[allow(clippy::too_many_arguments)]
+pub fn stage_class_grads_reusing(
+    oracle: &mut dyn GradOracle,
+    ds: &Dataset,
+    ground: &[usize],
+    h: usize,
+    c: usize,
+    width: StageWidth,
+    want_targets: bool,
+    prev: Vec<ClassStage>,
+) -> Result<(Vec<ClassStage>, bool)> {
     let (chunk_rows, p) = (oracle.chunk_rows(), oracle.p());
     // exact per-class allocations up front (ground order == scatter order)
     let mut sizes = vec![0usize; c];
@@ -297,8 +438,27 @@ pub fn stage_class_grads_with(
         StageWidth::ClassSlice => (0..c).map(|cls| class_columns(h, c, cls)).collect(),
         StageWidth::Full => Vec::new(),
     };
-    let mut gs: Vec<Matrix> = sizes.iter().map(|&n| Matrix::zeros(n, w)).collect();
-    let mut rows: Vec<Vec<usize>> = sizes.iter().map(|&n| Vec::with_capacity(n)).collect();
+    // recycle the previous round's buffers when every shape lines up; the
+    // scatter below overwrites every cell of every live row, so no
+    // zeroing pass is needed
+    let reuse = prev.len() == c
+        && prev.iter().zip(&sizes).all(|(st, &n)| st.g.rows == n && st.g.cols == w);
+    let (mut gs, mut rows): (Vec<Matrix>, Vec<Vec<usize>>) = if reuse {
+        let mut gs = Vec::with_capacity(c);
+        let mut rows = Vec::with_capacity(c);
+        for stage in prev {
+            gs.push(stage.g);
+            let mut r = stage.rows;
+            r.clear();
+            rows.push(r);
+        }
+        (gs, rows)
+    } else {
+        (
+            sizes.iter().map(|&n| Matrix::zeros(n, w)).collect(),
+            sizes.iter().map(|&n| Vec::with_capacity(n)).collect(),
+        )
+    };
     let mut acc: Vec<Vec<f64>> =
         if want_targets { (0..c).map(|_| vec![0.0f64; p]).collect() } else { Vec::new() };
     let mut cursor = vec![0usize; c];
@@ -337,7 +497,7 @@ pub fn stage_class_grads_with(
         };
         out.push(ClassStage { g, rows: r, target_full });
     }
-    Ok(out)
+    Ok((out, reuse))
 }
 
 /// Validation-side full-P class mean gradients for the **live** classes
@@ -471,15 +631,28 @@ pub fn per_batch_grads_fused(
     ds: &Dataset,
     order: &[usize],
 ) -> Result<(Matrix, Vec<Vec<usize>>)> {
-    let meta = &st.meta;
-    let b = meta.batch;
+    per_batch_grads_fused_with(&mut RtGrads { rt, st }, ds, order)
+}
+
+/// [`per_batch_grads_fused`] over an explicit oracle: groups are
+/// consecutive [`GradOracle::batch_rows`]-row blocks of `order`, summed
+/// by the oracle's group reduction (`⌈n/chunk⌉` dispatches, no `[n, P]`
+/// per-sample store).  Returns the batch-gradient matrix and the member
+/// rows of each batch.
+pub fn per_batch_grads_fused_with(
+    oracle: &mut dyn GradOracle,
+    ds: &Dataset,
+    order: &[usize],
+) -> Result<(Matrix, Vec<Vec<usize>>)> {
+    let (chunk_rows, p, b) = (oracle.chunk_rows(), oracle.p(), oracle.batch_rows());
+    assert!(b > 0 && chunk_rows % b == 0, "PB group size must divide the chunk");
     let nb_total = order.len().div_ceil(b);
-    let mut bg = Matrix::zeros(nb_total, meta.p);
+    let mut bg = Matrix::zeros(nb_total, p);
     let mut members: Vec<Vec<usize>> = Vec::with_capacity(nb_total);
     let mut batch_cursor = 0usize;
-    for chunk in padded_chunks(ds, order, meta.chunk) {
-        let sums = rt.batch_gradsum_chunk(st, &chunk.x, &chunk.y, &chunk.mask)?;
-        let groups_in_chunk = meta.chunk / b;
+    for chunk in padded_chunks(ds, order, chunk_rows) {
+        let sums = oracle.batch_gradsum_chunk(&chunk)?;
+        let groups_in_chunk = chunk_rows / b;
         for gi in 0..groups_in_chunk {
             let lo = gi * b;
             if lo >= chunk.live {
@@ -498,6 +671,26 @@ pub fn per_batch_grads_fused(
     }
     debug_assert_eq!(batch_cursor, nb_total);
     Ok((bg, members))
+}
+
+/// Per-sample eval entries (correctness flags + predictive entropies) for
+/// every row of `indices`, streamed from one padded pass of the oracle's
+/// eval entry (`⌈n/chunk⌉` dispatches).  Entries come back in `indices`
+/// order — the acquisition pass behind ENTROPY and FORGETTING.
+pub fn eval_entries_with(
+    oracle: &mut dyn GradOracle,
+    ds: &Dataset,
+    indices: &[usize],
+) -> Result<EvalEntries> {
+    let chunk_rows = oracle.chunk_rows();
+    let mut correct = Vec::with_capacity(indices.len());
+    let mut entropy = Vec::with_capacity(indices.len());
+    for chunk in padded_chunks(ds, indices, chunk_rows) {
+        let ev = oracle.eval_chunk(&chunk)?;
+        correct.extend_from_slice(&ev.correct[..chunk.live]);
+        entropy.extend_from_slice(&ev.entropy[..chunk.live]);
+    }
+    Ok(EvalEntries { correct, entropy })
 }
 
 /// Per-mini-batch aggregation (the PB variants): group gradient rows into
@@ -695,6 +888,85 @@ mod tests {
         let mut all: Vec<usize> = (0..c).flat_map(|cls| class_columns(h, c, cls)).collect();
         all.sort_unstable();
         assert_eq!(all, (0..h * c + c).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fused_pb_oracle_pass_matches_per_sample_grouping() {
+        // the oracle group reduction must reproduce grouping the
+        // per-sample store host-side — one gradsum dispatch per chunk,
+        // zero per-sample dispatches
+        let (h, c) = (3usize, 2usize);
+        let p = h * c + c;
+        let ds = toy_dataset(5, vec![0, 1, 1, 0, 1, 0, 0, 1, 0, 1, 0], 2, 21);
+        let order: Vec<usize> = vec![4, 0, 9, 2, 7, 1, 10, 5, 3];
+        let mut fused = SynthGrads::with_batch(8, p, 2);
+        let (bg, members) = per_batch_grads_fused_with(&mut fused, &ds, &order).unwrap();
+        assert_eq!(fused.gradsum_calls, order.len().div_ceil(8));
+        assert_eq!(fused.grad_calls, 0);
+        let mut serial = SynthGrads::new(8, p);
+        let store = per_sample_grads_with(&mut serial, &ds, &order).unwrap();
+        let (want_bg, want_members) = per_batch_grads(&store, 2);
+        assert_eq!(members, want_members);
+        assert_eq!(bg.rows, want_bg.rows);
+        for (a, b) in bg.data.iter().zip(&want_bg.data) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn eval_entries_are_chunking_invariant_and_salt_sensitive() {
+        let (h, c) = (2usize, 3usize);
+        let p = h * c + c;
+        let ds = toy_dataset(6, vec![0, 2, 1, 0, 2, 1, 0, 1], 3, 23);
+        let idx: Vec<usize> = (0..8).collect();
+        let mut small = SynthGrads::new(2, p);
+        let mut big = SynthGrads::new(16, p);
+        let a = eval_entries_with(&mut small, &ds, &idx).unwrap();
+        let b = eval_entries_with(&mut big, &ds, &idx).unwrap();
+        assert_eq!(a.correct, b.correct, "same row → same flag whatever the chunking");
+        assert_eq!(a.entropy, b.entropy);
+        assert_eq!(small.eval_calls, 4); // ⌈8/2⌉
+        assert_eq!(big.eval_calls, 1);
+        assert_eq!(small.grad_calls, 0, "eval entries never dispatch gradients");
+        assert!(a.entropy.iter().all(|&e| (0.0..1.0).contains(&e)));
+        assert!(a.correct.iter().all(|&f| f == 0.0 || f == 1.0));
+        // a salted oracle (emulating a model update) changes the streams
+        let mut salted = SynthGrads::new(16, p);
+        salted.salt = 7;
+        let s = eval_entries_with(&mut salted, &ds, &idx).unwrap();
+        assert_ne!(a.entropy, s.entropy, "salt must perturb the eval stream");
+    }
+
+    #[test]
+    fn restaging_reuses_matching_buffers_and_rejects_mismatches() {
+        let (h, c) = (2usize, 3usize);
+        let p = h * c + c;
+        let ds = toy_dataset(4, vec![2, 0, 1, 2, 0, 1, 2, 0], 3, 25);
+        let ground: Vec<usize> = (0..8).collect();
+        let mut oracle = SynthGrads::new(4, p);
+        let first = stage_class_grads_with(
+            &mut oracle, &ds, &ground, h, c, StageWidth::ClassSlice, true,
+        )
+        .unwrap();
+        let fresh = first.clone();
+        // same ground, same width: buffers recycle and contents match a
+        // fresh stage exactly
+        let (again, reused) = stage_class_grads_reusing(
+            &mut oracle, &ds, &ground, h, c, StageWidth::ClassSlice, true, first,
+        )
+        .unwrap();
+        assert!(reused, "identical shapes must recycle");
+        for (a, b) in again.iter().zip(&fresh) {
+            assert_eq!(a.g.data, b.g.data);
+            assert_eq!(a.rows, b.rows);
+            assert_eq!(a.target_full, b.target_full);
+        }
+        // a different width cannot reuse class-slice buffers
+        let (_, reused) = stage_class_grads_reusing(
+            &mut oracle, &ds, &ground, h, c, StageWidth::Full, true, again,
+        )
+        .unwrap();
+        assert!(!reused, "width change must fall back to fresh allocation");
     }
 
     #[test]

@@ -48,13 +48,15 @@ fn cmd_train(cli: &Cli) -> Result<()> {
     let runs = coord.run_multi(&cfg)?;
     for r in &runs {
         println!(
-            "  seed {:>3}: test-acc {:>6.2}%  train {:>7.2}s  select {:>6.2}s  energy(sim) {:.5} kWh  selections {}",
+            "  seed {:>3}: test-acc {:>6.2}%  train {:>7.2}s  select {:>6.2}s  energy(sim) {:.5} kWh  selections {} (engine reused {}, buffers recycled {})",
             r.seed,
             r.test_acc * 100.0,
             r.train_secs,
             r.select_secs,
             r.energy_kwh,
-            r.selections
+            r.selections,
+            r.engine_reused_rounds,
+            r.stage_buffer_reuses
         );
     }
     let name = format!(

@@ -10,9 +10,12 @@
 //!
 //! The worker is a [`SelectionEngine`] client: it holds one
 //! [`SelectionRequest`] template (strategy spec, budget, λ/ε, ground set,
-//! seed), builds a round-scoped engine per parameter snapshot, and ships
-//! the full [`SelectionReport`] back — so overlapped rounds carry the
-//! same staging/solve observability as synchronous ones.  The worker owns
+//! seed) and ONE engine for its lifetime — each submission
+//! `reset_round`s the engine with the parameter snapshot it carries
+//! (staging buffers recycle across rounds) — and ships the full
+//! [`SelectionReport`] back, so overlapped rounds carry the same
+//! staging/solve observability and engine-reuse counters as synchronous
+//! ones.  The worker owns
 //! its **own** PJRT runtime (the xla client handles are not `Send`, and
 //! executables are compiled per thread) plus clones of the train/val
 //! splits; only parameter snapshots ([`ModelState`], plain host buffers)
@@ -87,13 +90,19 @@ impl AsyncSelector {
                         return;
                     }
                 };
+                // ONE engine for the worker's lifetime: each submission
+                // resets the round (recycling staging buffers) and
+                // installs the snapshot it carries
+                let mut engine: Option<SelectionEngine<'_>> = None;
                 while let Ok(req) = req_rx.recv() {
                     let mut round = cfg.request.clone();
                     round.rng_tag = req.rng_tag;
-                    // round-scoped engine: one per parameter snapshot
-                    let engine =
-                        SelectionEngine::new(&rt, &req.state, &train, &val);
-                    let out = engine.select_with(strategy.as_mut(), &round);
+                    if engine.is_none() {
+                        engine = Some(SelectionEngine::new(&rt, req.state, &train, &val));
+                    } else {
+                        engine.as_mut().unwrap().reset_round(Some(req.state));
+                    }
+                    let out = engine.as_ref().unwrap().select_with(strategy.as_mut(), &round);
                     if res_tx.send(out).is_err() {
                         break; // trainer gone
                     }

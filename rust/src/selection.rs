@@ -67,7 +67,7 @@ use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
 use crate::engine::RoundShared;
-use crate::grads::{self, ClassStage, RtGrads, StageWidth};
+use crate::grads::{self, ClassStage, EvalEntries, GradOracle, GradientStore, RtGrads, StageWidth};
 use crate::omp::{omp_select, omp_select_rust, OmpOpts, OmpResult, XlaCorr};
 use crate::par;
 use crate::rng::Rng;
@@ -75,14 +75,41 @@ use crate::runtime::{ModelState, Runtime};
 use crate::submod::{lazy_greedy, FacilityLocation};
 use crate::tensor::Matrix;
 
+/// The gradient source behind a selection round: the live PJRT runtime +
+/// model snapshot, or an explicit [`GradOracle`] (device-free — every
+/// spec in [`strategy_specs`] runs over either, with the XLA solve arms
+/// falling back to the Rust solvers when no runtime is present).
+pub enum GradSource<'a> {
+    Live {
+        rt: &'a Runtime,
+        state: &'a ModelState,
+    },
+    Oracle {
+        oracle: &'a mut dyn GradOracle,
+        /// hidden width H of the class column layout (`P = H*C + C`)
+        h: usize,
+        /// class count C
+        c: usize,
+    },
+}
+
+/// Run `f` against the source's oracle view — [`RtGrads`] constructed on
+/// the fly for live rounds, the caller's oracle otherwise.  Every
+/// acquisition pass a strategy issues funnels through here.
+fn with_oracle<R>(src: &mut GradSource<'_>, f: impl FnOnce(&mut dyn GradOracle) -> R) -> R {
+    match src {
+        GradSource::Live { rt, state } => f(&mut RtGrads { rt: *rt, st: *state }),
+        GradSource::Oracle { oracle, .. } => f(&mut **oracle),
+    }
+}
+
 /// Everything a strategy may look at when selecting.  Since the engine
-/// redesign this is a thin borrow of the round: the staged-gradient
+/// redesign this is a thin borrow of the round: gradients and eval
+/// streams come through the [`GradSource`] oracle seam, and the staged
 /// store lives in the engine's [`RoundShared`] cache (when the round is
-/// engine-driven) and strategies consume it through
-/// [`SelectCtx::class_stages`].
+/// engine-driven), consumed through [`SelectCtx::class_stages`].
 pub struct SelectCtx<'a> {
-    pub rt: &'a Runtime,
-    pub state: &'a ModelState,
+    pub src: GradSource<'a>,
     pub train: &'a Dataset,
     /// ground set: dataset rows eligible for selection (handles imbalance)
     pub ground: &'a [usize],
@@ -104,48 +131,98 @@ pub struct SelectCtx<'a> {
     pub round: Option<&'a RoundShared>,
 }
 
-impl SelectCtx<'_> {
+impl<'a> SelectCtx<'a> {
+    /// The live runtime + snapshot when this round has one — the gate the
+    /// XLA solve arms check before touching device kernels (oracle-backed
+    /// rounds fall back to the Rust solvers).
+    pub fn live(&self) -> Option<(&'a Runtime, &'a ModelState)> {
+        match &self.src {
+            GradSource::Live { rt, state } => Some((*rt, *state)),
+            GradSource::Oracle { .. } => None,
+        }
+    }
+
+    /// `(H, C)` of the class column layout (`P = H*C + C`).
+    pub fn class_layout(&self) -> (usize, usize) {
+        match &self.src {
+            GradSource::Live { state, .. } => (state.meta.h, state.meta.c),
+            GradSource::Oracle { h, c, .. } => (*h, *c),
+        }
+    }
+
     /// Staged per-class gradients for this round — served from the
     /// engine's shared cache when present (N requests, one
     /// [`grads::stage_class_grads`] pass), else staged privately.  The
     /// cache always carries targets; `want_targets` only trims the
     /// private path's host-side accumulation.
     pub fn class_stages(
-        &self,
+        &mut self,
         width: StageWidth,
         want_targets: bool,
     ) -> Result<Arc<Vec<ClassStage>>> {
-        if let Some(shared) = self.round {
-            let meta = &self.state.meta;
-            let mut oracle = RtGrads { rt: self.rt, st: self.state };
-            return shared.class_stages(&mut oracle, self.train, self.ground, meta.h, meta.c, width);
-        }
-        Ok(Arc::new(grads::stage_class_grads(
-            self.rt,
-            self.state,
-            self.train,
-            self.ground,
-            width,
-            want_targets,
-        )?))
+        let (h, c) = self.class_layout();
+        let (round, train, ground) = (self.round, self.train, self.ground);
+        with_oracle(&mut self.src, |oracle| match round {
+            Some(shared) => shared.class_stages(oracle, train, ground, h, c, width),
+            None => Ok(Arc::new(grads::stage_class_grads_with(
+                oracle,
+                train,
+                ground,
+                h,
+                c,
+                width,
+                want_targets,
+            )?)),
+        })
     }
 
     /// Validation-side class mean gradients for the round's live classes
     /// — cached in the engine's [`RoundShared`] when present (an
     /// `is_valid` sweep pays the per-class `[P]` readbacks once, not
     /// once per request), else computed directly.
-    pub fn val_class_means(&self, flags: &[bool]) -> Result<Arc<Vec<Option<Vec<f32>>>>> {
-        let meta = &self.state.meta;
-        let mut oracle = RtGrads { rt: self.rt, st: self.state };
-        match self.round {
-            Some(shared) => shared.val_class_means(&mut oracle, self.val, meta.c, flags),
-            None => Ok(Arc::new(grads::live_val_class_means_with(
-                &mut oracle,
-                self.val,
-                meta.c,
-                flags,
-            )?)),
-        }
+    pub fn val_class_means(&mut self, flags: &[bool]) -> Result<Arc<Vec<Option<Vec<f32>>>>> {
+        let (_, c) = self.class_layout();
+        let (round, val) = (self.round, self.val);
+        with_oracle(&mut self.src, |oracle| match round {
+            Some(shared) => shared.val_class_means(oracle, val, c, flags),
+            None => Ok(Arc::new(grads::live_val_class_means_with(oracle, val, c, flags)?)),
+        })
+    }
+
+    /// Mean gradient over `rows` of the train (or, when `on_val`, the
+    /// validation) split — the matching target ∇L(θ).
+    pub fn mean_gradient(&mut self, on_val: bool, rows: &[usize]) -> Result<Vec<f32>> {
+        let ds = if on_val { self.val } else { self.train };
+        with_oracle(&mut self.src, |oracle| grads::mean_gradient_with(oracle, ds, rows))
+    }
+
+    /// Per-sample gradients for `rows` of the train split (the serial
+    /// reference path; staged rounds go through [`SelectCtx::class_stages`]).
+    pub fn per_sample_grads(&mut self, rows: &[usize]) -> Result<GradientStore> {
+        let train = self.train;
+        with_oracle(&mut self.src, |oracle| grads::per_sample_grads_with(oracle, train, rows))
+    }
+
+    /// Streamed Taylor gains `g_i · v` over the ground set (GLISTER).
+    pub fn score_grads(&mut self, v: &[f32]) -> Result<Vec<f32>> {
+        let (train, ground) = (self.train, self.ground);
+        with_oracle(&mut self.src, |oracle| grads::score_grads_with(oracle, train, ground, v))
+    }
+
+    /// Per-mini-batch mean gradients over `order` via the source's fused
+    /// group reduction (the PB ground sets).
+    pub fn per_batch_grads(&mut self, order: &[usize]) -> Result<(Matrix, Vec<Vec<usize>>)> {
+        let train = self.train;
+        with_oracle(&mut self.src, |oracle| {
+            grads::per_batch_grads_fused_with(oracle, train, order)
+        })
+    }
+
+    /// Per-sample eval entries over `indices` of the train split, one
+    /// padded pass (ENTROPY, FORGETTING).
+    pub fn eval_entries(&mut self, indices: &[usize]) -> Result<EvalEntries> {
+        let train = self.train;
+        with_oracle(&mut self.src, |oracle| grads::eval_entries_with(oracle, train, indices))
     }
 
     /// Record per-round observability (per-class budgets, the
@@ -391,9 +468,12 @@ pub fn solve_classes_omp(
 /// correlation kernel: identical staging, targets, and merge contract
 /// ([`merge_class_omp`]), but solves run serially against the (single)
 /// device.
+#[allow(clippy::too_many_arguments)]
 fn solve_classes_omp_xla(
-    ctx: &SelectCtx<'_>,
+    rt: &Runtime,
     model: &str,
+    lambda: f32,
+    eps: f32,
     stages: &[ClassStage],
     budgets: &[usize],
     targets: &[Vec<f32>],
@@ -402,8 +482,8 @@ fn solve_classes_omp_xla(
     let mut picks = Vec::with_capacity(live.len());
     for &cls in &live {
         let stage = &stages[cls];
-        let opts = OmpOpts { k: budgets[cls], lambda: ctx.lambda, eps: ctx.eps };
-        let mut backend = XlaCorr::new(ctx.rt, model, &stage.g)?;
+        let opts = OmpOpts { k: budgets[cls], lambda, eps };
+        let mut backend = XlaCorr::new(rt, model, &stage.g)?;
         let res = omp_select(&mut backend, &|j| stage.g.row(j).to_vec(), &targets[cls], opts)?;
         picks.push((cls, res));
     }
@@ -516,9 +596,83 @@ pub fn glister_rank(
     (out, budgets, fan)
 }
 
+/// Expand a per-mini-batch OMP result back onto sample rows: every member
+/// of a selected batch gets the batch weight, sum-calibrated by `scale`
+/// (the PB ground size — OMP fits the mean) and split across the batch's
+/// members.  The one merge contract of both PB solve arms (Rust and XLA).
+pub fn expand_pb(members: &[Vec<usize>], res: &OmpResult, scale: f32) -> Selection {
+    let mut out = Selection::default();
+    for (slot, &b) in res.selected.iter().enumerate() {
+        let w = res.weights[slot] * scale / members[b].len().max(1) as f32;
+        for &row in &members[b] {
+            out.push(row, w);
+        }
+    }
+    out.grad_error = Some(res.residual_norm);
+    out
+}
+
+/// The PB variants' stateless Rust solve: OMP over the batch-gradient
+/// matrix, expanded through [`expand_pb`].  Pure CPU over oracle views —
+/// what makes `gradmatch-pb` testable device-free.
+pub fn solve_pb_omp(
+    bg: &Matrix,
+    members: &[Vec<usize>],
+    target: &[f32],
+    scale: f32,
+    b_k: usize,
+    lambda: f32,
+    eps: f32,
+) -> Result<Selection> {
+    let res = omp_select_rust(bg, target, OmpOpts { k: b_k, lambda, eps })?;
+    Ok(expand_pb(members, &res, scale))
+}
+
+/// Unweighted top-k selection over scored rows (ENTROPY, FORGETTING):
+/// `rows[j]` enters the subset for each of the `budget` best `scores[j]`,
+/// ranked by the NaN-safe [`top_k_desc`].
+pub fn rank_top_k(rows: &[usize], scores: &[f32], budget: usize) -> Selection {
+    let mut out = Selection::default();
+    for j in top_k_desc(scores, budget) {
+        out.push(rows[j], 1.0);
+    }
+    out
+}
+
+/// FORGETTING's cross-round state transition (Toneva et al. 2019): bump
+/// `counts[idx]` on every correct→incorrect flip, then remember the new
+/// correctness flags.  `correct[pos]` aligns with `rows[pos]`.
+pub fn forgetting_update(
+    prev_correct: &mut [f32],
+    counts: &mut [f32],
+    rows: &[usize],
+    correct: &[f32],
+) {
+    for (pos, &idx) in rows.iter().enumerate() {
+        if prev_correct[idx] > 0.5 && correct[pos] < 0.5 {
+            counts[idx] += 1.0;
+        }
+        prev_correct[idx] = correct[pos];
+    }
+}
+
+/// FORGETTING's ranking scores over the ground set: the forgetting count
+/// plus a stable jitter so early rounds (all-zero counts) still pick a
+/// spread-out subset.
+pub fn forgetting_scores(counts: &[f32], ground: &[usize]) -> Vec<f32> {
+    ground
+        .iter()
+        .map(|&i| counts[i] + 1e-6 * ((i * 2654435761) % 1000) as f32)
+        .collect()
+}
+
 /// Target (mean) gradient for a scope of training rows, or — when
 /// `is_valid` — for the matching validation rows of the same classes.
-fn target_gradient(ctx: &SelectCtx<'_>, train_rows: &[usize], class: Option<usize>) -> Result<Vec<f32>> {
+fn target_gradient(
+    ctx: &mut SelectCtx<'_>,
+    train_rows: &[usize],
+    class: Option<usize>,
+) -> Result<Vec<f32>> {
     if ctx.is_valid {
         let rows: Vec<usize> = match class {
             Some(c) => (0..ctx.val.len()).filter(|&i| ctx.val.y[i] as usize == c).collect(),
@@ -526,11 +680,11 @@ fn target_gradient(ctx: &SelectCtx<'_>, train_rows: &[usize], class: Option<usiz
         };
         if rows.is_empty() {
             // no validation rows for this class — fall back to train target
-            return grads::mean_gradient(ctx.rt, ctx.state, ctx.train, train_rows);
+            return ctx.mean_gradient(false, train_rows);
         }
-        grads::mean_gradient(ctx.rt, ctx.state, ctx.val, &rows)
+        ctx.mean_gradient(true, &rows)
     } else {
-        grads::mean_gradient(ctx.rt, ctx.state, ctx.train, train_rows)
+        ctx.mean_gradient(false, train_rows)
     }
 }
 
@@ -574,7 +728,7 @@ impl GradMatch {
         if !self.parallel {
             return self.select_per_class_serial(ctx, per_gradient);
         }
-        let meta = ctx.state.meta.clone();
+        let (h, c) = ctx.class_layout();
         let width = if per_gradient { StageWidth::ClassSlice } else { StageWidth::Full };
         let stages = ctx.class_stages(width, true)?;
         let sizes: Vec<usize> = stages.iter().map(|s| s.rows.len()).collect();
@@ -590,25 +744,36 @@ impl GradMatch {
         // dispatches, like the serial reference.  Classes missing from
         // val fall back to the staged train target.
         let val_means = if ctx.is_valid {
-            let flags = live_flags(&stages, &budgets, meta.c);
+            let flags = live_flags(&stages, &budgets, c);
             Some(ctx.val_class_means(&flags)?)
         } else {
             None
         };
         let targets = staged_targets(
             &stages,
-            meta.h,
-            meta.c,
+            h,
+            c,
             per_gradient,
             val_means.as_ref().map(|v| v.as_slice()),
         );
         if !per_gradient && self.use_xla {
-            // full-P solves through the device kernel: the staged pass
-            // still replaces the C gradient + C target passes, but the
-            // solves stay serial — the device is one resource, and
-            // fanning out would only queue on it
-            ctx.note_round(&budgets, false);
-            return solve_classes_omp_xla(ctx, &meta.name, &stages, &budgets, &targets);
+            if let Some((rt, state)) = ctx.live() {
+                // full-P solves through the device kernel: the staged pass
+                // still replaces the C gradient + C target passes, but the
+                // solves stay serial — the device is one resource, and
+                // fanning out would only queue on it.  Oracle-backed rounds
+                // fall through to the Rust solver below.
+                ctx.note_round(&budgets, false);
+                return solve_classes_omp_xla(
+                    rt,
+                    &state.meta.name,
+                    ctx.lambda,
+                    ctx.eps,
+                    &stages,
+                    &budgets,
+                    &targets,
+                );
+            }
         }
         ctx.note_round(&budgets, omp_fanout_wins(&stages, &budgets));
         solve_classes_omp(&stages, &budgets, &targets, ctx.lambda, ctx.eps, true)
@@ -623,7 +788,7 @@ impl GradMatch {
         ctx: &mut SelectCtx<'_>,
         per_gradient: bool,
     ) -> Result<Selection> {
-        let meta = &ctx.state.meta;
+        let (h, c) = ctx.class_layout();
         let per_class = ground_per_class(ctx.train, ctx.ground);
         let sizes: Vec<usize> = per_class.iter().map(Vec::len).collect();
         let budgets = split_budget(ctx.budget, &sizes);
@@ -635,20 +800,22 @@ impl GradMatch {
             if rows.is_empty() || k_c == 0 {
                 continue;
             }
-            let store = grads::per_sample_grads(ctx.rt, ctx.state, ctx.train, rows)?;
+            let store = ctx.per_sample_grads(rows)?;
             let target_full = target_gradient(ctx, rows, Some(cls))?;
             let (g, target): (Matrix, Vec<f32>) = if per_gradient {
-                let cols = grads::class_columns(meta.h, meta.c, cls);
+                let cols = grads::class_columns(h, c, cls);
                 (store.g.gather_cols(&cols), cols.iter().map(|&j| target_full[j]).collect())
             } else {
                 (store.g.clone(), target_full)
             };
             let omp_opts = OmpOpts { k: k_c, lambda: ctx.lambda, eps: ctx.eps };
-            let res = if !per_gradient && self.use_xla {
-                let mut backend = XlaCorr::new(ctx.rt, &meta.name, &g)?;
-                omp_select(&mut backend, &|j| g.row(j).to_vec(), &target, omp_opts)?
-            } else {
-                omp_select_rust(&g, &target, omp_opts)?
+            let xla_arm = if !per_gradient && self.use_xla { ctx.live() } else { None };
+            let res = match xla_arm {
+                Some((rt, state)) => {
+                    let mut backend = XlaCorr::new(rt, &state.meta.name, &g)?;
+                    omp_select(&mut backend, &|j| g.row(j).to_vec(), &target, omp_opts)?
+                }
+                None => omp_select_rust(&g, &target, omp_opts)?,
             };
             // OMP fits the class *mean* gradient; calibrate to the class
             // *sum* (×n_c) so weights are comparable with CRAIG's medoid
@@ -668,33 +835,24 @@ impl GradMatch {
     }
 
     fn select_per_batch(&self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
-        let meta = &ctx.state.meta;
         // deterministic-per-round shuffle defines the mini-batch ground set
         let mut order = ctx.ground.to_vec();
         ctx.rng.shuffle(&mut order);
-        // device-side group reduction — never materializes per-sample grads
-        let (bg, members) =
-            grads::per_batch_grads_fused(ctx.rt, ctx.state, ctx.train, &order)?;
+        // fused group reduction — never materializes per-sample grads
+        let (bg, members) = ctx.per_batch_grads(&order)?;
         let target = target_gradient(ctx, &order, None)?;
         let b_k = (ctx.budget / self.batch).max(1).min(bg.rows);
-        let omp_opts = OmpOpts { k: b_k, lambda: ctx.lambda, eps: ctx.eps };
-        let res = if self.use_xla {
-            let mut backend = XlaCorr::new(ctx.rt, &meta.name, &bg)?;
-            omp_select(&mut backend, &|j| bg.row(j).to_vec(), &target, omp_opts)?
-        } else {
-            crate::omp::omp_select_rust(&bg, &target, omp_opts)?
-        };
-        let mut out = Selection::default();
         // same sum-calibration as the per-class path (×n over the mean fit)
         let scale = order.len() as f32;
-        for (slot, &b) in res.selected.iter().enumerate() {
-            let w = res.weights[slot] * scale / members[b].len().max(1) as f32;
-            for &row in &members[b] {
-                out.push(row, w);
+        if self.use_xla {
+            if let Some((rt, state)) = ctx.live() {
+                let omp_opts = OmpOpts { k: b_k, lambda: ctx.lambda, eps: ctx.eps };
+                let mut backend = XlaCorr::new(rt, &state.meta.name, &bg)?;
+                let res = omp_select(&mut backend, &|j| bg.row(j).to_vec(), &target, omp_opts)?;
+                return Ok(expand_pb(&members, &res, scale));
             }
         }
-        out.grad_error = Some(res.residual_norm);
-        Ok(out)
+        solve_pb_omp(&bg, &members, &target, scale, b_k, ctx.lambda, ctx.eps)
     }
 }
 
@@ -734,40 +892,44 @@ pub struct Craig {
 
 impl Craig {
     fn sqdist_matrix(&self, ctx: &SelectCtx<'_>, g: &Matrix) -> Result<Matrix> {
-        if self.use_xla && g.cols == ctx.state.meta.p {
-            let meta = &ctx.state.meta;
-            let rows = meta.chunk;
-            let nblocks = g.rows.div_ceil(rows);
-            // pad row blocks once
-            let mut blocks = Vec::with_capacity(nblocks);
-            for bi in 0..nblocks {
-                let lo = bi * rows;
-                let hi = ((bi + 1) * rows).min(g.rows);
-                let mut m = Matrix::zeros(rows, g.cols);
-                for (slot, r) in (lo..hi).enumerate() {
-                    m.row_mut(slot).copy_from_slice(g.row(r));
-                }
-                blocks.push((m, lo, hi));
-            }
-            let mut dist = Matrix::zeros(g.rows, g.rows);
-            for (ba, lo_a, hi_a) in &blocks {
-                for (bb, lo_b, hi_b) in &blocks {
-                    let d = ctx.rt.sqdist_chunk(&ctx.state.meta.name, ba, bb)?;
-                    // contiguous row-slice copies (live columns of each
-                    // result row land in one memcpy, not n² element sets)
-                    let live_b = hi_b - lo_b;
-                    for (ia, ra) in (*lo_a..*hi_a).enumerate() {
-                        dist.row_mut(ra)[*lo_b..*lo_b + live_b]
-                            .copy_from_slice(&d.row(ia)[..live_b]);
+        if self.use_xla {
+            if let Some((rt, state)) = ctx.live() {
+                let meta = &state.meta;
+                if g.cols == meta.p {
+                    let rows = meta.chunk;
+                    let nblocks = g.rows.div_ceil(rows);
+                    // pad row blocks once
+                    let mut blocks = Vec::with_capacity(nblocks);
+                    for bi in 0..nblocks {
+                        let lo = bi * rows;
+                        let hi = ((bi + 1) * rows).min(g.rows);
+                        let mut m = Matrix::zeros(rows, g.cols);
+                        for (slot, r) in (lo..hi).enumerate() {
+                            m.row_mut(slot).copy_from_slice(g.row(r));
+                        }
+                        blocks.push((m, lo, hi));
                     }
+                    let mut dist = Matrix::zeros(g.rows, g.rows);
+                    for (ba, lo_a, hi_a) in &blocks {
+                        for (bb, lo_b, hi_b) in &blocks {
+                            let d = rt.sqdist_chunk(&meta.name, ba, bb)?;
+                            // contiguous row-slice copies (live columns of
+                            // each result row land in one memcpy, not n²
+                            // element sets)
+                            let live_b = hi_b - lo_b;
+                            for (ia, ra) in (*lo_a..*hi_a).enumerate() {
+                                dist.row_mut(ra)[*lo_b..*lo_b + live_b]
+                                    .copy_from_slice(&d.row(ia)[..live_b]);
+                            }
+                        }
+                    }
+                    return Ok(dist);
                 }
             }
-            Ok(dist)
-        } else {
-            // Rust fallback (per-gradient slices / tests) — parallel
-            // blocked pairwise distances
-            Ok(crate::par::pairwise_sqdist(g))
         }
+        // Rust fallback (per-gradient slices / oracle-backed rounds) —
+        // parallel blocked pairwise distances
+        Ok(crate::par::pairwise_sqdist(g))
     }
 
     fn select_ground(
@@ -794,8 +956,7 @@ impl Strategy for Craig {
         if self.per_batch {
             let mut order = ctx.ground.to_vec();
             ctx.rng.shuffle(&mut order);
-            let (bg, members) =
-                grads::per_batch_grads_fused(ctx.rt, ctx.state, ctx.train, &order)?;
+            let (bg, members) = ctx.per_batch_grads(&order)?;
             let b_k = (ctx.budget / self.batch).max(1).min(bg.rows);
             let (sel, w) = self.select_ground(ctx, &bg, b_k)?;
             for (slot, &b) in sel.iter().enumerate() {
@@ -839,12 +1000,12 @@ impl Strategy for Glister {
     fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
         // validation mean gradient (GLISTER always uses the val set)
         let val_rows: Vec<usize> = (0..ctx.val.len()).collect();
-        let v = grads::mean_gradient(ctx.rt, ctx.state, ctx.val, &val_rows)?;
+        let v = ctx.mean_gradient(true, &val_rows)?;
         // One padded pass streams every ground sample's Taylor gain
         // `g_i · ∇L_V` (⌈|ground|/chunk⌉ dispatches, O(chunk·P) transient
         // memory — the [n, P] store is never materialized); ranking is
-        // the stateless [`glister_rank`] the engine's oracle path shares.
-        let scores = grads::score_grads(ctx.rt, ctx.state, ctx.train, ctx.ground, &v)?;
+        // the stateless [`glister_rank`].
+        let scores = ctx.score_grads(&v)?;
         let (out, budgets, fan) = glister_rank(ctx.train, ctx.ground, &scores, ctx.budget);
         ctx.note_round(&budgets, fan);
         Ok(out)
@@ -909,22 +1070,12 @@ impl Strategy for Entropy {
     }
 
     fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Selection> {
-        let mut scores = Vec::with_capacity(ctx.ground.len());
-        let mut rows = Vec::with_capacity(ctx.ground.len());
-        for chunk in crate::data::padded_chunks(ctx.train, ctx.ground, ctx.state.meta.chunk) {
-            let (_, _, _, e) = ctx.rt.eval_chunk(ctx.state, &chunk.x, &chunk.y, &chunk.mask)?;
-            for slot in 0..chunk.live {
-                scores.push(e[slot]);
-                rows.push(chunk.indices[slot]);
-            }
-        }
-        // NaN-safe partial top-k: a degenerate (NaN) entropy never wins
-        // and never panics the round
-        let mut out = Selection::default();
-        for j in top_k_desc(&scores, ctx.budget) {
-            out.push(rows[j], 1.0);
-        }
-        Ok(out)
+        // one streamed eval pass over the ground set (entries come back
+        // in ground order), then the NaN-safe partial top-k: a degenerate
+        // (NaN) entropy never wins and never panics the round
+        let ground = ctx.ground;
+        let ev = ctx.eval_entries(ground)?;
+        Ok(rank_top_k(ground, &ev.entropy, ctx.budget))
     }
 }
 
@@ -960,31 +1111,14 @@ impl Strategy for Forgetting {
             self.counts = vec![0.0; n_total];
             self.n = n_total;
         }
-        for chunk in crate::data::padded_chunks(ctx.train, ctx.ground, ctx.state.meta.chunk) {
-            let (_, _, correct, _) =
-                ctx.rt.eval_chunk(ctx.state, &chunk.x, &chunk.y, &chunk.mask)?;
-            for slot in 0..chunk.live {
-                let idx = chunk.indices[slot];
-                if self.prev_correct[idx] > 0.5 && correct[slot] < 0.5 {
-                    self.counts[idx] += 1.0;
-                }
-                self.prev_correct[idx] = correct[slot];
-            }
-        }
-        // rank by forgetting count; break ties by a stable jitter so early
-        // rounds (all-zero counts) still pick a spread-out subset.
-        // NaN-safe partial top-k (counts are finite by construction, but
-        // the ranking shares the baseline-wide no-panic contract).
-        let scores: Vec<f32> = ctx
-            .ground
-            .iter()
-            .map(|&i| self.counts[i] + 1e-6 * ((i * 2654435761) % 1000) as f32)
-            .collect();
-        let mut out = Selection::default();
-        for j in top_k_desc(&scores, ctx.budget) {
-            out.push(ctx.ground[j], 1.0);
-        }
-        Ok(out)
+        // one streamed eval pass, then the stateless count transition and
+        // jitter-ranked NaN-safe top-k (counts are finite by construction,
+        // but the ranking shares the baseline-wide no-panic contract)
+        let ground = ctx.ground;
+        let ev = ctx.eval_entries(ground)?;
+        forgetting_update(&mut self.prev_correct, &mut self.counts, ground, &ev.correct);
+        let scores = forgetting_scores(&self.counts, ground);
+        Ok(rank_top_k(ground, &scores, ctx.budget))
     }
 }
 

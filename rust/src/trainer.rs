@@ -206,6 +206,12 @@ pub fn train_overlapped(
     };
     let mut selected_once = false;
 
+    // ONE engine per run: the first due round builds it, every later
+    // round resets the round-scoped cache (recycling the staging
+    // buffers) and installs the fresh snapshot — staged gradients are
+    // only valid for the parameters they were computed against
+    let mut engine: Option<SelectionEngine<'_>> = None;
+
     // the hot loop threads one packed-state literal through consecutive
     // fused train steps; host-side snapshots are taken only at selection
     // and evaluation boundaries (§Perf)
@@ -238,11 +244,13 @@ pub fn train_overlapped(
         } else if due && (strategy.is_adaptive() || !selected_once) {
             let st_snap = fs.to_state()?;
             sel_req.rng_tag = 1000 + epoch as u64;
-            // one round-scoped engine per snapshot: staged gradients are
-            // only valid for the parameters they were computed against
             let report = clock.time(Phase::Select, || {
-                SelectionEngine::new(rt, &st_snap, &splits.train, &splits.val)
-                    .select_with(&mut *strategy, &sel_req)
+                if engine.is_none() {
+                    engine = Some(SelectionEngine::new(rt, st_snap, &splits.train, &splits.val));
+                } else {
+                    engine.as_mut().unwrap().reset_round(Some(st_snap));
+                }
+                engine.as_ref().unwrap().select_with(&mut *strategy, &sel_req)
             })?;
             let SelectionReport { selection: sel, stats, .. } = report;
             if !sel.indices.is_empty() {

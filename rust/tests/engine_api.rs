@@ -19,8 +19,8 @@ use gradmatch::grads::{stage_class_grads_with, StageWidth, SynthGrads};
 use gradmatch::jsonlite::Json;
 use gradmatch::rng::Rng;
 use gradmatch::selection::{
-    paper_strategies, parse_strategy, solve_classes_omp, split_budget, staged_targets, SelectCtx,
-    Selection,
+    paper_strategies, parse_strategy, solve_classes_omp, split_budget, staged_targets, GradSource,
+    SelectCtx, Selection,
 };
 use gradmatch::tensor::Matrix;
 
@@ -198,6 +198,8 @@ fn report_and_request_roundtrip_through_jsonlite() {
             stage_shared: true,
             class_budgets: vec![3, 3, 3],
             fanout: false,
+            engine_round: 1,
+            stage_reused_buffers: true,
         },
     };
     let back =
@@ -231,7 +233,7 @@ fn engine_path_matches_legacy_strategy_select_for_all_paper_specs() {
         let req = request(spec, ground.clone(), budget);
 
         // engine path: fresh round-scoped engine, spec resolved inside
-        let engine = SelectionEngine::new(&rt, &st, &splits.train, &splits.val);
+        let engine = SelectionEngine::new(&rt, st.clone(), &splits.train, &splits.val);
         let report = engine.select(&req).unwrap();
 
         // legacy path: parse + select with an identically-derived RNG and
@@ -240,8 +242,7 @@ fn engine_path_matches_legacy_strategy_select_for_all_paper_specs() {
         let mut rng = req.round_rng();
         let want = strategy
             .select(&mut SelectCtx {
-                rt: &rt,
-                state: &st,
+                src: GradSource::Live { rt: &rt, state: &st },
                 train: &splits.train,
                 ground: &ground,
                 val: &splits.val,
@@ -278,7 +279,7 @@ fn live_multi_strategy_round_shares_staging() {
     let st = rt.init(MODEL, 6).unwrap();
     let splits = common::tiny_mnist(400);
     let ground: Vec<usize> = (0..splits.train.len()).collect();
-    let engine = SelectionEngine::new(&rt, &st, &splits.train, &splits.val);
+    let engine = SelectionEngine::new(&rt, st, &splits.train, &splits.val);
     let reports = engine
         .select_batch(&[
             request("gradmatch", ground.clone(), 40),

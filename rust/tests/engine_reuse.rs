@@ -1,0 +1,162 @@
+//! Round-reuse contracts of the selection engine, pinned device-free on
+//! the counting oracle: one `SelectionEngine` serves N trainer-style
+//! rounds through `reset_round` —
+//!
+//! - every round re-stages (the reset truly invalidates the per-snapshot
+//!   cache: N × ⌈n/chunk⌉ dispatches over N rounds, never a stale hit);
+//! - the staging buffers are recycled, not reallocated: from round 2 on
+//!   the scatter reuses the pooled matrices (`stage_reused_buffers`),
+//!   and the engine-round index counts up (`engine_round == i`);
+//! - per-round selections are identical to N fresh engines — reuse is a
+//!   pure optimization;
+//! - within a round the shared-staging cache still works after a reset
+//!   (request 2 of each round reports `stage_shared`).
+
+use gradmatch::data::Dataset;
+use gradmatch::engine::{SelectionEngine, SelectionReport, SelectionRequest};
+use gradmatch::grads::SynthGrads;
+use gradmatch::rng::Rng;
+use gradmatch::tensor::Matrix;
+
+const CHUNK: usize = 8;
+const ROUNDS: usize = 4;
+
+fn dataset(seed: u64, classes: usize, d: usize) -> Dataset {
+    let mut y: Vec<i32> = Vec::new();
+    for cls in 0..classes {
+        let n_c = if cls == 0 { 30 } else { 9 };
+        y.extend(std::iter::repeat(cls as i32).take(n_c));
+    }
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut y);
+    let n = y.len();
+    let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian_f32()).collect());
+    Dataset { x, y, classes }
+}
+
+fn request(strategy: &str, ground: Vec<usize>, budget: usize, tag: u64) -> SelectionRequest {
+    SelectionRequest {
+        strategy: strategy.into(),
+        budget,
+        lambda: 0.5,
+        eps: 1e-10,
+        is_valid: false,
+        seed: 42,
+        rng_tag: tag,
+        ground,
+    }
+}
+
+#[test]
+fn one_engine_over_n_rounds_matches_n_fresh_engines() {
+    let (classes, h, d) = (4usize, 3usize, 5usize);
+    let p = h * classes + classes;
+    let train = dataset(51, classes, d);
+    let val = dataset(52, classes, d);
+    let n = train.len();
+    let ground: Vec<usize> = (0..n).collect();
+    let budget = n / 4;
+    let passes = n.div_ceil(CHUNK);
+
+    // trainer-style: ONE engine, reset_round between rounds; two
+    // requests per round exercise the within-round shared cache too
+    let mut reused_reports: Vec<(SelectionReport, SelectionReport)> = Vec::new();
+    let mut reused_oracle = SynthGrads::new(CHUNK, p);
+    {
+        let mut engine = SelectionEngine::with_oracle(&mut reused_oracle, &train, &val, h, classes);
+        for round in 0..ROUNDS {
+            if round > 0 {
+                engine.reset_round(None);
+            }
+            let tag = 1000 + round as u64;
+            let a = engine.select(&request("gradmatch", ground.clone(), budget, tag)).unwrap();
+            let b = engine.select(&request("craig", ground.clone(), budget, tag)).unwrap();
+            reused_reports.push((a, b));
+        }
+    }
+
+    // reference: a fresh engine (and fresh counting oracle) per round
+    let mut fresh_calls = 0usize;
+    for (round, (a, b)) in reused_reports.iter().enumerate() {
+        let tag = 1000 + round as u64;
+        let mut oracle = SynthGrads::new(CHUNK, p);
+        let (want_a, want_b) = {
+            let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+            (
+                engine.select(&request("gradmatch", ground.clone(), budget, tag)).unwrap(),
+                engine.select(&request("craig", ground.clone(), budget, tag)).unwrap(),
+            )
+        };
+        fresh_calls += oracle.grad_calls;
+        assert_eq!(a.selection, want_a.selection, "round {round}: gradmatch drifted");
+        assert_eq!(b.selection, want_b.selection, "round {round}: craig drifted");
+    }
+
+    // the reset invalidates the cache — every round re-stages exactly once
+    assert_eq!(reused_oracle.grad_calls, ROUNDS * passes, "one staged pass per round");
+    assert_eq!(reused_oracle.grad_calls, fresh_calls, "reuse must not add or skip passes");
+    assert_eq!(reused_oracle.mean_calls, 0);
+
+    for (round, (a, b)) in reused_reports.iter().enumerate() {
+        // the engine-round index counts resets; both requests of a round
+        // share it
+        assert_eq!(a.stats.engine_round, round, "gradmatch round index");
+        assert_eq!(b.stats.engine_round, round, "craig round index");
+        // request 1 stages, request 2 rides the round's cache — also
+        // after resets
+        assert!(!a.stats.stage_shared, "round {round}: first request must stage");
+        assert_eq!(a.stats.stage_dispatches, passes, "round {round}");
+        assert!(b.stats.stage_shared, "round {round}: second request must share");
+        assert_eq!(b.stats.stage_dispatches, 0, "round {round}");
+        // from round 2 on the staging scatter recycles the pooled
+        // buffers — the no-per-round-reallocation path
+        if round == 0 {
+            assert!(!a.stats.stage_reused_buffers, "round 0 has nothing to recycle");
+        } else {
+            assert!(
+                a.stats.stage_reused_buffers,
+                "round {round}: staging must recycle the previous round's buffers"
+            );
+        }
+    }
+}
+
+#[test]
+fn reset_round_pools_per_key_and_rejects_shape_changes() {
+    // two stage widths live in the round; after a reset each re-stage
+    // finds its own pooled buffers — and a changed ground set (different
+    // per-class sizes) must NOT reuse them
+    let (classes, h, d) = (3usize, 2usize, 4usize);
+    let p = h * classes + classes;
+    let train = dataset(61, classes, d);
+    let val = dataset(62, classes, d);
+    let n = train.len();
+    let full: Vec<usize> = (0..n).collect();
+    let half: Vec<usize> = (0..n / 2).collect();
+
+    let mut oracle = SynthGrads::new(CHUNK, p);
+    {
+        let mut engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+        // round 0: both widths staged
+        engine.select(&request("gradmatch", full.clone(), n / 4, 1)).unwrap();
+        engine.select(&request("gradmatch-perclass", full.clone(), n / 4, 1)).unwrap();
+        engine.reset_round(None);
+        // round 1: same keys — both recycle
+        let a = engine.select(&request("gradmatch", full.clone(), n / 4, 2)).unwrap();
+        let b = engine.select(&request("gradmatch-perclass", full.clone(), n / 4, 2)).unwrap();
+        assert!(a.stats.stage_reused_buffers, "class-slice stage must recycle");
+        assert!(b.stats.stage_reused_buffers, "full-P stage must recycle");
+        engine.reset_round(None);
+        // round 2: a different ground set misses the pool (different key)
+        let c = engine.select(&request("gradmatch", half.clone(), n / 8, 3)).unwrap();
+        assert!(
+            !c.stats.stage_reused_buffers,
+            "a different ground set must stage into fresh buffers"
+        );
+        assert_eq!(c.stats.engine_round, 2);
+    }
+    // dispatch ledger: rounds 0 and 1 stage both widths over the full
+    // set, round 2 stages the half set once
+    let want = 4 * n.div_ceil(CHUNK) + (n / 2).div_ceil(CHUNK);
+    assert_eq!(oracle.grad_calls, want);
+}

@@ -7,7 +7,7 @@ mod common;
 use common::{runtime, tiny_mnist};
 use gradmatch::grads;
 use gradmatch::rng::Rng;
-use gradmatch::selection::{parse_strategy, SelectCtx, Selection};
+use gradmatch::selection::{parse_strategy, GradSource, SelectCtx, Selection};
 use gradmatch::tensor::Matrix;
 
 const MODEL: &str = "lenet_narrow";
@@ -22,8 +22,7 @@ fn select_with(spec: &str, budget_frac: f64, seed: u64) -> (Selection, usize) {
     let mut rng = Rng::new(seed);
     let sel = strategy
         .select(&mut SelectCtx {
-            rt: &rt,
-            state: &st,
+            src: GradSource::Live { rt: &rt, state: &st },
             train: &splits.train,
             ground: &ground,
             val: &splits.val,
@@ -172,8 +171,7 @@ fn gradmatch_pb_error_decreases_with_budget() {
         let mut rng = Rng::new(77); // same shuffle each time
         let sel = strategy
             .select(&mut SelectCtx {
-                rt: &rt,
-                state: &st,
+                src: GradSource::Live { rt: &rt, state: &st },
                 train: &splits.train,
                 ground: &ground,
                 val: &splits.val,
@@ -209,8 +207,7 @@ fn validation_matching_runs_under_imbalance() {
         let mut srng = Rng::new(12);
         let sel = strategy
             .select(&mut SelectCtx {
-                rt: &rt,
-                state: &st,
+                src: GradSource::Live { rt: &rt, state: &st },
                 train: &splits.train,
                 ground: &ground,
                 val: &splits.val,
@@ -261,8 +258,7 @@ fn xla_and_rust_gradmatch_agree_on_selection() {
         gradmatch::selection::Strategy::select(
             &mut s,
             &mut SelectCtx {
-                rt: &rt,
-                state: &st,
+                src: GradSource::Live { rt: &rt, state: &st },
                 train: &splits.train,
                 ground: &ground,
                 val: &splits.val,
@@ -313,8 +309,7 @@ fn staged_fanout_round_matches_serial_reference() {
                 gradmatch::selection::Strategy::select(
                     &mut s,
                     &mut SelectCtx {
-                        rt: &rt,
-                        state: &st,
+                        src: GradSource::Live { rt: &rt, state: &st },
                         train: &splits.train,
                         ground,
                         val: &splits.val,
@@ -394,8 +389,7 @@ fn forgetting_accumulates_across_rounds() {
         let sel = gradmatch::selection::Strategy::select(
             &mut strategy,
             &mut SelectCtx {
-                rt: &rt,
-                state: &st,
+                src: GradSource::Live { rt: &rt, state: &st },
                 train: &splits.train,
                 ground: &ground,
                 val: &splits.val,

@@ -1,0 +1,337 @@
+//! Full-catalog conformance for the selection engine, pinned device-free
+//! on the synthetic gradient oracle (no PJRT / HLO artifacts needed):
+//!
+//! - **coverage + equivalence** — EVERY spec in `strategy_specs()` runs
+//!   under the engine's oracle backend, and its selection is
+//!   index/weight-identical to the legacy `parse_strategy` +
+//!   `Strategy::select` path over an identical oracle;
+//! - **dispatch bounds** — the counting oracle pins each family's
+//!   acquisition cost: one staged gradient pass for the per-class
+//!   strategies, one group-sum pass for the PB ground sets, one
+//!   eval-entry pass for ENTROPY/FORGETTING, zero dispatches for the
+//!   model-free baselines;
+//! - **stateful baselines** — FORGETTING keeps its cross-round memory
+//!   through `SelectionEngine::select_with` on the oracle backend;
+//! - **property tests** — `split_budget` invariants (sum, per-class
+//!   caps) and `top_k_desc` edge cases (k=0, k=n, all-NaN, tie order).
+
+use gradmatch::data::Dataset;
+use gradmatch::engine::{SelectionEngine, SelectionRequest};
+use gradmatch::grads::SynthGrads;
+use gradmatch::rng::Rng;
+use gradmatch::selection::{
+    parse_strategy, split_budget, strategy_specs, top_k_desc, GradSource, SelectCtx, Selection,
+};
+use gradmatch::tensor::Matrix;
+use gradmatch::testutil::forall;
+
+const CHUNK: usize = 16;
+const BATCH: usize = 4;
+
+/// Imbalanced synthetic dataset: heavy head, long tail, every class
+/// populated (so per-class and scoring strategies all have work).
+fn imbalanced(seed: u64, classes: usize, d: usize) -> Dataset {
+    let mut y: Vec<i32> = Vec::new();
+    for cls in 0..classes {
+        let n_c = match cls % 3 {
+            0 => 37,
+            1 => 11,
+            _ => 4,
+        };
+        y.extend(std::iter::repeat(cls as i32).take(n_c));
+    }
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut y);
+    let n = y.len();
+    let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian_f32()).collect());
+    Dataset { x, y, classes }
+}
+
+fn request(strategy: &str, ground: Vec<usize>, budget: usize) -> SelectionRequest {
+    SelectionRequest {
+        strategy: strategy.into(),
+        budget,
+        lambda: 0.5,
+        eps: 1e-10,
+        is_valid: false,
+        seed: 42,
+        rng_tag: 7,
+        ground,
+    }
+}
+
+/// Run `spec` through the legacy path (`parse_strategy` +
+/// `Strategy::select`, private staging) over an explicit oracle with the
+/// engine's RNG derivation.
+fn legacy_select(
+    spec: &str,
+    oracle: &mut SynthGrads,
+    train: &Dataset,
+    val: &Dataset,
+    h: usize,
+    c: usize,
+    req: &SelectionRequest,
+) -> Selection {
+    let (mut strategy, _warm) = parse_strategy(spec, BATCH).unwrap();
+    let mut rng = req.round_rng();
+    strategy
+        .select(&mut SelectCtx {
+            src: GradSource::Oracle { oracle, h, c },
+            train,
+            ground: &req.ground,
+            val,
+            budget: req.budget,
+            lambda: req.lambda,
+            eps: req.eps,
+            is_valid: req.is_valid,
+            rng: &mut rng,
+            round: None,
+        })
+        .unwrap()
+}
+
+#[test]
+fn every_spec_runs_on_the_oracle_engine_and_matches_the_legacy_path() {
+    let (classes, h, d) = (5usize, 3usize, 6usize);
+    let p = h * classes + classes;
+    let train = imbalanced(11, classes, d);
+    let val = imbalanced(12, classes, d);
+    let n = train.len();
+    let ground: Vec<usize> = (0..n).collect();
+    let budget = n / 4;
+
+    for spec in strategy_specs() {
+        let req = request(spec, ground.clone(), budget);
+
+        let mut engine_oracle = SynthGrads::with_batch(CHUNK, p, BATCH);
+        let report = {
+            let engine =
+                SelectionEngine::with_oracle(&mut engine_oracle, &train, &val, h, classes);
+            engine
+                .select(&req)
+                .unwrap_or_else(|e| panic!("{spec}: oracle engine must serve it: {e:#}"))
+        };
+
+        let mut legacy_oracle = SynthGrads::with_batch(CHUNK, p, BATCH);
+        let want = legacy_select(spec, &mut legacy_oracle, &train, &val, h, classes, &req);
+
+        assert_eq!(
+            report.selection.indices, want.indices,
+            "{spec}: engine selection must equal the legacy path"
+        );
+        assert_eq!(report.selection.indices.len(), report.selection.weights.len(), "{spec}");
+        for (a, b) in report.selection.weights.iter().zip(&want.weights) {
+            assert!((a - b).abs() <= 1e-6 * (1.0 + b.abs()), "{spec}: weight {a} vs {b}");
+        }
+        match (report.selection.grad_error, want.grad_error) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert!((a - b).abs() <= 1e-6 * (1.0 + b.abs()), "{spec}: err {a} vs {b}")
+            }
+            (a, b) => panic!("{spec}: grad_error {a:?} vs {b:?}"),
+        }
+        assert!(!report.selection.indices.is_empty(), "{spec}: empty selection");
+        assert!(report.selection.indices.iter().all(|&i| i < n), "{spec}: oob row");
+
+        // identical acquisition on both paths: same dispatch counts per
+        // entry point (the engine adds caching, not extra passes)
+        assert_eq!(engine_oracle.grad_calls, legacy_oracle.grad_calls, "{spec}: grads");
+        assert_eq!(engine_oracle.mean_calls, legacy_oracle.mean_calls, "{spec}: means");
+        assert_eq!(engine_oracle.gradsum_calls, legacy_oracle.gradsum_calls, "{spec}: gradsums");
+        assert_eq!(engine_oracle.eval_calls, legacy_oracle.eval_calls, "{spec}: evals");
+    }
+}
+
+#[test]
+fn dispatch_bounds_hold_per_strategy_family() {
+    let (classes, h, d) = (4usize, 3usize, 5usize);
+    let p = h * classes + classes;
+    let train = imbalanced(21, classes, d);
+    let val = imbalanced(22, classes, d);
+    let n = train.len();
+    let n_val = val.len();
+    let ground: Vec<usize> = (0..n).collect();
+    let budget = n / 4;
+    let passes = n.div_ceil(CHUNK);
+
+    for spec in strategy_specs() {
+        let mut oracle = SynthGrads::with_batch(CHUNK, p, BATCH);
+        {
+            let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+            engine.select(&request(spec, ground.clone(), budget)).unwrap();
+        }
+        // (grads, means, gradsums, evals) the spec is allowed to cost
+        let want = match spec {
+            // per-class strategies: ONE staged gradient pass (train
+            // targets fall out of it for free)
+            "gradmatch" | "gradmatch-rust" | "gradmatch-perclass" | "craig" => (passes, 0, 0, 0),
+            // PB ground sets: ONE fused group-sum pass; GRAD-MATCH also
+            // pays the train-target mean pass, CRAIG matches no target
+            "gradmatch-pb" | "gradmatch-pb-rust" => (0, passes, passes, 0),
+            "craig-pb" => (0, 0, passes, 0),
+            // GLISTER: one streamed score pass + the val-target means
+            "glister" => (passes, n_val.div_ceil(CHUNK), 0, 0),
+            // scoring baselines: ONE eval-entry pass, nothing else
+            "entropy" | "forgetting" => (0, 0, 0, passes),
+            // model-free baselines: zero runtime dispatches
+            "random" | "full" | "full-earlystop" | "featurefl" => (0, 0, 0, 0),
+            other => panic!("new spec '{other}' needs a dispatch bound here"),
+        };
+        assert_eq!(
+            (oracle.grad_calls, oracle.mean_calls, oracle.gradsum_calls, oracle.eval_calls),
+            want,
+            "{spec}: dispatch counts"
+        );
+    }
+}
+
+#[test]
+fn forgetting_keeps_state_across_engine_rounds() {
+    // a caller-held FORGETTING instance driven through select_with on the
+    // oracle backend accumulates flips across rounds exactly like the
+    // legacy twin (salt bumps emulate the model update between rounds)
+    let (classes, h, d) = (3usize, 2usize, 4usize);
+    let p = h * classes + classes;
+    let train = imbalanced(31, classes, d);
+    let val = imbalanced(32, classes, d);
+    let n = train.len();
+    let ground: Vec<usize> = (0..n).collect();
+    let req = request("forgetting", ground.clone(), n / 5);
+
+    let mut engine_sel: Vec<Selection> = Vec::new();
+    {
+        let mut oracle = SynthGrads::new(CHUNK, p);
+        let (mut strategy, _) = parse_strategy("forgetting", BATCH).unwrap();
+        for round in 0..3u64 {
+            oracle.salt = round;
+            let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+            engine_sel.push(engine.select_with(strategy.as_mut(), &req).unwrap().selection);
+        }
+    }
+
+    let mut legacy_sel: Vec<Selection> = Vec::new();
+    {
+        let mut oracle = SynthGrads::new(CHUNK, p);
+        let (mut strategy, _) = parse_strategy("forgetting", BATCH).unwrap();
+        for round in 0..3u64 {
+            oracle.salt = round;
+            let mut rng = req.round_rng();
+            legacy_sel.push(
+                strategy
+                    .select(&mut SelectCtx {
+                        src: GradSource::Oracle { oracle: &mut oracle, h, c: classes },
+                        train: &train,
+                        ground: &ground,
+                        val: &val,
+                        budget: req.budget,
+                        lambda: req.lambda,
+                        eps: req.eps,
+                        is_valid: req.is_valid,
+                        rng: &mut rng,
+                        round: None,
+                    })
+                    .unwrap(),
+            );
+        }
+    }
+    assert_eq!(engine_sel, legacy_sel, "stateful rounds must track the legacy path");
+    // the changing eval stream must actually move the ranking at least
+    // once across rounds — otherwise this test pins nothing
+    assert!(
+        engine_sel[0].indices != engine_sel[2].indices
+            || engine_sel[1].indices != engine_sel[2].indices,
+        "flips never changed the selection — weak fixture"
+    );
+}
+
+#[test]
+fn unknown_spec_error_from_the_engine_lists_the_catalog() {
+    let (classes, h, d) = (3usize, 2usize, 4usize);
+    let p = h * classes + classes;
+    let train = imbalanced(41, classes, d);
+    let val = imbalanced(42, classes, d);
+    let ground: Vec<usize> = (0..train.len()).collect();
+    let mut oracle = SynthGrads::new(CHUNK, p);
+    let err = {
+        let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+        engine.select(&request("bogus-spec", ground, 5)).unwrap_err().to_string()
+    };
+    for spec in strategy_specs() {
+        assert!(err.contains(spec), "engine error should name '{spec}': {err}");
+    }
+    assert!(err.contains("-warm"), "engine error should mention the warm suffix: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// property tests: split_budget / top_k_desc
+// ---------------------------------------------------------------------------
+
+#[test]
+fn split_budget_invariants_hold_across_shapes() {
+    // k=0, k>n, single-class, heavily imbalanced: Σ budgets ==
+    // min(k, Σ sizes) and no class ever exceeds its population
+    forall(60, |g| {
+        let classes = g.int(1, 12);
+        let sizes: Vec<usize> = (0..classes)
+            .map(|cls| match cls % 4 {
+                0 => g.int(0, 3),       // sometimes empty
+                1 => g.int(1, 8),       // tail
+                2 => g.int(20, 120),    // heavy head
+                _ => g.int(0, 40),
+            })
+            .collect();
+        let total: usize = sizes.iter().sum();
+        // sweep k through the degenerate shapes: 0, 1, around total, and beyond
+        for k in [0, 1, total / 2, total, total + 1, total + 17] {
+            let out = split_budget(k, &sizes);
+            assert_eq!(out.len(), sizes.len(), "sizes={sizes:?}");
+            assert_eq!(
+                out.iter().sum::<usize>(),
+                k.min(total),
+                "k={k} sizes={sizes:?} out={out:?}"
+            );
+            for (o, s) in out.iter().zip(&sizes) {
+                assert!(o <= s, "k={k}: budget {o} over population {s} (sizes={sizes:?})");
+            }
+        }
+    });
+    // single class takes everything it can
+    assert_eq!(split_budget(7, &[50]), vec![7]);
+    assert_eq!(split_budget(70, &[50]), vec![50]);
+    // extreme imbalance: the head class absorbs what the tail cannot hold
+    let b = split_budget(30, &[1, 1, 1000]);
+    assert_eq!(b.iter().sum::<usize>(), 30);
+    assert!(b[2] >= 28, "{b:?}");
+}
+
+#[test]
+fn top_k_desc_edges_and_tie_order() {
+    forall(40, |g| {
+        let n = g.int(1, 80);
+        // duplicate-heavy scores force ties
+        let scores: Vec<f32> = (0..n).map(|_| g.int(0, 5) as f32).collect();
+        // k=0 and k=n edges
+        assert!(top_k_desc(&scores, 0).is_empty());
+        let full = top_k_desc(&scores, n);
+        assert_eq!(full.len(), n);
+        // ties keep deterministic (ascending-index) order within a score
+        for w in full.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            assert!(
+                scores[a] > scores[b] || (scores[a] == scores[b] && a < b),
+                "rank order broke at {a},{b}: {scores:?}"
+            );
+        }
+        // any k is a prefix of the full ranking — partial selection must
+        // not reorder
+        let k = g.int(0, n);
+        assert_eq!(top_k_desc(&scores, k), full[..k].to_vec(), "k={k}");
+    });
+    // all-NaN: fills k slots without panicking, deterministically
+    let nans = vec![f32::NAN; 6];
+    let picked = top_k_desc(&nans, 4);
+    assert_eq!(picked.len(), 4);
+    assert_eq!(picked, top_k_desc(&nans, 4));
+    assert_eq!(top_k_desc(&nans, 0), Vec::<usize>::new());
+    assert_eq!(top_k_desc(&nans, 6).len(), 6);
+}

@@ -174,6 +174,16 @@ fn coordinator_summary_fields_are_coherent() {
     assert!(r.total_secs >= r.train_secs);
     assert!(r.select_secs > 0.0, "gradmatch-pb must spend selection time");
     assert!(r.selections >= 1);
+    // ONE engine per run: every applied round after the first must have
+    // ridden the reused engine (reset_round, not a rebuild).  Stated as
+    // bounds — an empty (unapplied) round advances the engine without
+    // being recorded, so `== selections - 1` is not an invariant.
+    assert!(
+        r.engine_reused_rounds + 1 >= r.selections && r.engine_reused_rounds <= r.selections,
+        "selections {} vs engine_reused_rounds {}",
+        r.selections,
+        r.engine_reused_rounds
+    );
     assert!(r.redundant_frac > 0.0 && r.redundant_frac < 1.0, "{}", r.redundant_frac);
     assert!(r.mean_grad_error.is_some());
     assert!(r.energy_kwh > 0.0);
@@ -224,6 +234,21 @@ fn imbalanced_run_uses_reduced_ground_set() {
     // must reflect that many rows are not even eligible
     assert!(r.redundant_frac > 0.2, "{}", r.redundant_frac);
     assert!(r.test_acc > 0.2);
+    // the staged per-class rounds re-stage the same ground set every
+    // round, so the reused engine recycles the staging buffers (bounds,
+    // not equality — empty rounds advance the engine unrecorded)
+    assert!(
+        r.engine_reused_rounds + 1 >= r.selections && r.engine_reused_rounds <= r.selections,
+        "selections {} vs engine_reused_rounds {}",
+        r.selections,
+        r.engine_reused_rounds
+    );
+    assert!(
+        r.selections < 2 || r.stage_buffer_reuses >= r.selections - 1,
+        "selections {} but only {} buffer reuses",
+        r.selections,
+        r.stage_buffer_reuses
+    );
 }
 
 #[test]

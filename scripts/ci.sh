@@ -1,13 +1,18 @@
 #!/usr/bin/env bash
-# CI gate for the workspace: build, tests, formatting, lints.
+# CI gate for the workspace: build, tests (default AND no-default
+# features), formatting, lints.
 #
 #   scripts/ci.sh          # everything
 #   scripts/ci.sh --fast   # build + tests only (skip fmt/clippy)
 #
 # Tier-1 (enforced): cargo build --release && cargo test -q.
-# fmt/clippy run when the components are installed; a missing component
-# is reported but does not fail the gate (offline toolchains may omit
-# them), while an installed component failing DOES fail.
+# The suite also runs with --no-default-features (the pure-host math
+# core, no `xla` stub at all) so the feature seam cannot rot, and the
+# two engine-coverage suites (strategy_conformance, engine_reuse) are
+# gated warning-free.  fmt/clippy run when the components are installed;
+# a missing component is reported but does not fail the gate (offline
+# toolchains may omit them), while an installed component failing DOES
+# fail.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -20,6 +25,21 @@ cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== cargo test -q --no-default-features (pure-host math core) =="
+cargo test -q --no-default-features
+
+echo "== warnings gate: strategy_conformance + engine_reuse =="
+# cargo replays cached warnings, so a --no-run rebuild of just the two
+# suites surfaces any warning attributed to their files; fail on match.
+conf_warn=$(cargo test --test strategy_conformance --test engine_reuse --no-run 2>&1 \
+    | grep -E "^warning" -A 3 \
+    | grep -E "tests/(strategy_conformance|engine_reuse)\.rs" || true)
+if [[ -n "$conf_warn" ]]; then
+    echo "$conf_warn"
+    echo "ci: FAIL — warnings in the engine-coverage suites"
+    exit 1
+fi
 
 if [[ "$fast" == "1" ]]; then
     echo "ci: fast mode — skipped fmt/clippy"
