@@ -20,7 +20,8 @@
 
 use gradmatch::bench_harness as bh;
 use gradmatch::data::{Dataset, DatasetCard};
-use gradmatch::engine::{SelectionEngine, SelectionRequest};
+use gradmatch::engine::{Degradation, SelectionEngine, SelectionRequest};
+use gradmatch::fault::{FaultPlan, FaultyOracle};
 use gradmatch::grads::{
     class_columns, mean_gradient_with, per_sample_grads_with, stage_class_grads_with, StageWidth,
     SynthGrads,
@@ -458,6 +459,91 @@ fn main() -> anyhow::Result<()> {
                 && round2[0].stats.stage_dispatches == n.div_ceil(chunk)
                 && round2[1].stats.stage_shared,
         );
+    }
+
+    // --- fault tolerance: wrapper overhead + degradation ladder --------------
+    // The zero-fault FaultyOracle must be free (no RNG draws, no sleeps)
+    // so the fault-injection suites measure the *tolerance* layer, not
+    // the wrapper; and a degraded round must cost no more than a normal
+    // one (it reuses the last subset after the retry budget drains).
+    bh::section("micro — fault tolerance: zero-fault wrapper overhead, degraded round");
+    {
+        let (c, h, d, chunk) = (10usize, 32usize, 64usize, 256usize);
+        let p = h * c + c;
+        let mut y: Vec<i32> = Vec::new();
+        for cls in 0..c {
+            y.extend(std::iter::repeat(cls as i32).take(128));
+        }
+        let mut f_rng = Rng::new(1313);
+        f_rng.shuffle(&mut y);
+        let n = y.len();
+        let train = Dataset {
+            x: Matrix::from_vec(n, d, (0..n * d).map(|_| f_rng.gaussian_f32()).collect()),
+            y,
+            classes: c,
+        };
+        let val = Dataset { x: Matrix::zeros(4, d), y: vec![0, 1, 2, 3], classes: c };
+        let req = SelectionRequest {
+            strategy: "gradmatch".into(),
+            budget: (n / 10).max(c),
+            lambda: 0.5,
+            eps: 1e-10,
+            is_valid: false,
+            seed: 42,
+            rng_tag: 7,
+            ground: (0..n).collect(),
+        };
+        let bare_round = || {
+            let mut oracle = SynthGrads::new(chunk, p);
+            let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, c);
+            engine.select(&req).unwrap()
+        };
+        let wrapped_round = || {
+            let mut inner = SynthGrads::new(chunk, p);
+            let mut faulty = FaultyOracle::new(&mut inner, FaultPlan::none(42));
+            let engine = SelectionEngine::with_oracle(&mut faulty, &train, &val, h, c);
+            engine.select(&req).unwrap()
+        };
+        let (t_bare, _) = report.rec(&format!("round c10 n={n} (bare oracle)"), 3, bare_round);
+        let (t_wrapped, _) =
+            report.rec(&format!("round c10 n={n} (zero-fault FaultyOracle)"), 3, wrapped_round);
+        report.note("fault_wrapper_overhead", t_wrapped / t_bare.max(1e-12));
+        let a = bare_round();
+        let b = wrapped_round();
+        bh::shape_check(
+            "zero-fault wrapper: selection bit-identical to bare oracle",
+            a.selection == b.selection
+                && b.stats.retries == 0
+                && b.stats.quarantined == 0
+                && b.stats.degradation == Degradation::None,
+        );
+        report.note_round("round_faultfree", &b.stats);
+
+        // degraded round: clean round one, dead oracle from round two on —
+        // the ladder serves round one's subset instead of erroring out
+        let attempts_per_round = {
+            let mut inner = SynthGrads::new(chunk, p);
+            let mut probe = FaultyOracle::new(&mut inner, FaultPlan::none(42));
+            {
+                let engine = SelectionEngine::with_oracle(&mut probe, &train, &val, h, c);
+                engine.select(&req).unwrap();
+            }
+            probe.attempts
+        };
+        let mut inner = SynthGrads::new(chunk, p);
+        let mut plan = FaultPlan::none(42);
+        plan.fail_from = attempts_per_round + 1;
+        let mut faulty = FaultyOracle::new(&mut inner, plan);
+        let mut engine = SelectionEngine::with_oracle(&mut faulty, &train, &val, h, c);
+        let clean = engine.select(&req).unwrap();
+        engine.reset_round(None);
+        let degraded = engine.select(&req).unwrap();
+        bh::shape_check(
+            "degraded round reuses the last subset (never a panic)",
+            degraded.stats.degradation == Degradation::ReusedLastRound
+                && degraded.selection.indices == clean.selection.indices,
+        );
+        report.note_round("round_degraded", &degraded.stats);
     }
 
     // --- XLA/PJRT-backed sections (need HLO artifacts) -----------------------

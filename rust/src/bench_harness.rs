@@ -145,6 +145,16 @@ impl BenchReport {
             &format!("{label}/stage_reused_buffers"),
             if stats.stage_reused_buffers { 1.0 } else { 0.0 },
         );
+        self.note(&format!("{label}/retries"), stats.retries as f64);
+        self.note(&format!("{label}/quarantined"), stats.quarantined as f64);
+        self.note(
+            &format!("{label}/degradation"),
+            match stats.degradation {
+                crate::engine::Degradation::None => 0.0,
+                crate::engine::Degradation::ReusedLastRound => 1.0,
+                crate::engine::Degradation::RandomFallback => 2.0,
+            },
+        );
     }
 
     /// Serialize to JSON text.

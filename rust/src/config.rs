@@ -108,7 +108,12 @@ impl Table {
     }
 
     pub fn from_file(path: &Path) -> Result<Table, ConfigError> {
-        Ok(Table::parse(&std::fs::read_to_string(path)?)?)
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            // name the file: a bare "No such file or directory" from a
+            // CLI-supplied --config path is undiagnosable
+            ConfigError::Io(std::io::Error::new(e.kind(), format!("{}: {e}", path.display())))
+        })?;
+        Table::parse(&text)
     }
 
     /// Apply a `section.key=value` override.
@@ -369,6 +374,13 @@ artifacts = "artifacts"
             ConfigError::Parse(2, _) => {}
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn from_file_errors_name_the_path() {
+        let e = Table::from_file(Path::new("definitely/not/here.toml")).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("definitely/not/here.toml"), "{msg}");
     }
 
     #[test]

@@ -12,7 +12,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::ExperimentConfig;
 use crate::data::{imbalance_indices, DatasetCard, Splits};
-use crate::engine::{SelectionEngine, SelectionReport, SelectionRequest};
+use crate::engine::{Degradation, SelectionEngine, SelectionReport, SelectionRequest};
 use crate::jsonlite::{arr, num, obj, s, Json};
 use crate::metrics::Phase;
 use crate::rng::Rng;
@@ -52,6 +52,19 @@ pub struct RunSummary {
     pub engine_reused_rounds: usize,
     /// rounds whose staging pass recycled a previous round's buffers
     pub stage_buffer_reuses: usize,
+    /// chunk dispatches retried under the round retry policy across all
+    /// applied rounds (0 on a fault-free run)
+    pub select_retries: usize,
+    /// non-finite gradient rows quarantined by staging across all rounds
+    pub quarantined_rows: usize,
+    /// rounds answered through the degradation ladder (reused subset or
+    /// random fallback) instead of a completed solve
+    pub degraded_rounds: usize,
+    /// rounds an overlapped run executed synchronously (worker death or
+    /// staleness rejection)
+    pub sync_fallback_rounds: usize,
+    /// overlapped subsets rejected by the staleness probe
+    pub stale_rejections: usize,
     /// fraction of training rows never selected (Table 10)
     pub redundant_frac: f64,
     /// (epoch, cum_secs, test_acc) convergence points (Fig. 3j/k)
@@ -90,6 +103,15 @@ impl RunSummary {
             stage_shared_rounds: o.round_stats.iter().filter(|r| r.stage_shared).count(),
             engine_reused_rounds: o.round_stats.iter().filter(|r| r.engine_round > 0).count(),
             stage_buffer_reuses: o.round_stats.iter().filter(|r| r.stage_reused_buffers).count(),
+            select_retries: o.round_stats.iter().map(|r| r.retries).sum(),
+            quarantined_rows: o.round_stats.iter().map(|r| r.quarantined).sum(),
+            degraded_rounds: o
+                .round_stats
+                .iter()
+                .filter(|r| r.degradation != Degradation::None)
+                .count(),
+            sync_fallback_rounds: o.sync_fallback_rounds,
+            stale_rejections: o.stale_rejections,
             redundant_frac: never as f64 / o.ever_selected.len().max(1) as f64,
             convergence: conv,
         }
@@ -121,6 +143,11 @@ impl RunSummary {
             ("stage_shared_rounds", num(self.stage_shared_rounds as f64)),
             ("engine_reused_rounds", num(self.engine_reused_rounds as f64)),
             ("stage_buffer_reuses", num(self.stage_buffer_reuses as f64)),
+            ("select_retries", num(self.select_retries as f64)),
+            ("quarantined_rows", num(self.quarantined_rows as f64)),
+            ("degraded_rounds", num(self.degraded_rounds as f64)),
+            ("sync_fallback_rounds", num(self.sync_fallback_rounds as f64)),
+            ("stale_rejections", num(self.stale_rejections as f64)),
             (
                 "convergence",
                 arr(self
@@ -221,6 +248,7 @@ impl Coordinator {
             seed,
             early_stop_frac: if is_early_stop { Some(cfg.budget_frac) } else { None },
             overlap: cfg.overlap,
+            stale_tol: 2.0,
         };
         let st = self.rt.init(&cfg.model, seed as i32)?;
         let key = RunKey {
@@ -421,6 +449,11 @@ mod tests {
             stage_shared_rounds: 1,
             engine_reused_rounds: 2,
             stage_buffer_reuses: 2,
+            select_retries: 4,
+            quarantined_rows: 7,
+            degraded_rounds: 1,
+            sync_fallback_rounds: 2,
+            stale_rejections: 1,
             redundant_frac: 0.7,
             convergence: vec![(4, 1.0, 0.8), (9, 2.0, 0.9)],
         };
@@ -432,6 +465,11 @@ mod tests {
         assert_eq!(parsed.get("select_stage_secs").unwrap().as_f64(), Some(0.75));
         assert_eq!(parsed.get("engine_reused_rounds").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.get("stage_buffer_reuses").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("select_retries").unwrap().as_usize(), Some(4));
+        assert_eq!(parsed.get("quarantined_rows").unwrap().as_usize(), Some(7));
+        assert_eq!(parsed.get("degraded_rounds").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("sync_fallback_rounds").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("stale_rejections").unwrap().as_usize(), Some(1));
         assert_eq!(
             parsed.get("convergence").unwrap().as_arr().unwrap().len(),
             2

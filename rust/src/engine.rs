@@ -56,7 +56,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
-use crate::grads::{self, ClassStage, GradOracle, StageWidth};
+use crate::grads::{self, ClassStage, GradOracle, RetryPolicy, StageWidth};
 use crate::jsonlite::{arr, num, obj, s, Json};
 use crate::rng::Rng;
 use crate::runtime::{ModelState, Runtime};
@@ -156,6 +156,47 @@ impl SelectionRequest {
 // SelectionReport
 // ---------------------------------------------------------------------------
 
+/// How a round's answer was produced when the strategy solve could not
+/// run to completion — the engine's degradation ladder, recorded
+/// per-request in [`RoundStats::degradation`].  A selection round never
+/// panics: a failed solve (exhausted dispatch retries, a poisoned
+/// stage, a solver error) first reuses the engine's last successful
+/// subset (Balles et al.'s observation that a slightly stale subset
+/// still tracks the loss), and only with no prior subset at all falls
+/// back to a seeded random subset (the model-agnostic floor MILO
+/// motivates).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Degradation {
+    /// the strategy solve completed normally
+    #[default]
+    None,
+    /// solve failed; the last round's subset was served again
+    ReusedLastRound,
+    /// solve failed with no previous subset; a seeded random subset was
+    /// served (deterministic in the request's `(seed, rng_tag)`)
+    RandomFallback,
+}
+
+impl Degradation {
+    /// Stable wire name (see [`SelectionReport::to_json`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Degradation::None => "none",
+            Degradation::ReusedLastRound => "reused-last-round",
+            Degradation::RandomFallback => "random-fallback",
+        }
+    }
+
+    fn from_str(v: &str) -> Result<Degradation> {
+        match v {
+            "none" => Ok(Degradation::None),
+            "reused-last-round" => Ok(Degradation::ReusedLastRound),
+            "random-fallback" => Ok(Degradation::RandomFallback),
+            other => Err(anyhow!("json: unknown degradation '{other}'")),
+        }
+    }
+}
+
 /// Per-round observability — the staging/solve decomposition of one
 /// request.  Timings are wall-clock; `stage_*` covers the shared
 /// [`grads::stage_class_grads`] pass (target/score passes count as
@@ -185,6 +226,16 @@ pub struct RoundStats {
     /// the staging pass scattered into buffers recycled from a previous
     /// engine round (no fresh `[|ground|, w]` allocation)
     pub stage_reused_buffers: bool,
+    /// chunk dispatches retried under the round's
+    /// [`grads::RetryPolicy`] (attempts beyond each dispatch's first);
+    /// 0 on a fault-free round
+    pub retries: usize,
+    /// non-finite gradient rows quarantined by the staging pass (never
+    /// staged, never selectable)
+    pub quarantined: usize,
+    /// how the answer was produced when the solve failed (see
+    /// [`Degradation`]); `None` on a normal round
+    pub degradation: Degradation,
 }
 
 /// The engine's answer to one [`SelectionRequest`]: the selection itself
@@ -240,6 +291,9 @@ impl SelectionReport {
                         "stage_reused_buffers",
                         Json::Bool(self.stats.stage_reused_buffers),
                     ),
+                    ("retries", num(self.stats.retries as f64)),
+                    ("quarantined", num(self.stats.quarantined as f64)),
+                    ("degradation", s(self.stats.degradation.as_str())),
                 ]),
             ),
         ])
@@ -285,6 +339,15 @@ impl SelectionReport {
                 fanout: jbool(round, "fanout")?,
                 engine_round: jusize(round, "engine_round")?,
                 stage_reused_buffers: jbool(round, "stage_reused_buffers")?,
+                // fault-tolerance fields are lenient: reports written
+                // before the retry/quarantine/ladder counters existed
+                // parse to the fault-free defaults
+                retries: jusize(round, "retries").unwrap_or(0),
+                quarantined: jusize(round, "quarantined").unwrap_or(0),
+                degradation: match round.get("degradation").and_then(Json::as_str) {
+                    Some(v) => Degradation::from_str(v)?,
+                    None => Degradation::None,
+                },
             },
         })
     }
@@ -379,6 +442,9 @@ pub struct RoundShared {
     /// every report's `RoundStats::engine_round`
     rounds: Cell<usize>,
     probe: RefCell<RoundStats>,
+    /// retry policy applied at the chunk-dispatch seam for every
+    /// acquisition pass of the round (run-scoped: survives `reset`)
+    retry: Cell<RetryPolicy>,
 }
 
 impl RoundShared {
@@ -436,7 +502,7 @@ impl RoundShared {
         let chunk = oracle.chunk_rows().max(1);
         let prev = self.pool.borrow_mut().remove(&key).unwrap_or_default();
         let t0 = Instant::now();
-        let (staged, reused) =
+        let (staged, reused, quarantined) =
             grads::stage_class_grads_reusing(oracle, ds, ground, h, c, width, true, prev)?;
         let staged = Arc::new(staged);
         {
@@ -444,6 +510,7 @@ impl RoundShared {
             probe.stage_secs += t0.elapsed().as_secs_f64();
             probe.stage_dispatches += ground.len().div_ceil(chunk);
             probe.stage_reused_buffers |= reused;
+            probe.quarantined += quarantined;
         }
         self.stages.borrow_mut().insert(key, staged.clone());
         Ok(staged)
@@ -476,6 +543,30 @@ impl RoundShared {
     /// Record the fan-out-vs-serial decision.
     pub fn note_fanout(&self, fanout: bool) {
         self.probe.borrow_mut().fanout = fanout;
+    }
+
+    /// The retry policy acquisition passes of this round dispatch under.
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.retry.get()
+    }
+
+    /// Install a retry policy for the rest of the run (run-scoped:
+    /// survives [`RoundShared::reset`]).
+    pub fn set_retry_policy(&self, policy: RetryPolicy) {
+        self.retry.set(policy);
+    }
+
+    /// Fold one acquisition pass's retried dispatches into the probe.
+    pub fn note_retries(&self, n: usize) {
+        if n > 0 {
+            self.probe.borrow_mut().retries += n;
+        }
+    }
+
+    /// Record how the request's answer was produced when the solve
+    /// failed (the degradation ladder's rung).
+    pub fn note_degradation(&self, rung: Degradation) {
+        self.probe.borrow_mut().degradation = rung;
     }
 
     /// Drain the probe for the request that just finished (the cache
@@ -516,6 +607,9 @@ pub struct SelectionEngine<'a> {
     shared: RoundShared,
     /// mini-batch size handed to strategy constructors (PB ground sets)
     batch: usize,
+    /// the most recent subset this engine served (solved or degraded) —
+    /// the degradation ladder's first rung
+    last_good: RefCell<Option<Selection>>,
 }
 
 impl<'a> SelectionEngine<'a> {
@@ -534,6 +628,7 @@ impl<'a> SelectionEngine<'a> {
             train,
             val,
             shared: RoundShared::default(),
+            last_good: RefCell::new(None),
         }
     }
 
@@ -558,12 +653,19 @@ impl<'a> SelectionEngine<'a> {
             train,
             val,
             shared: RoundShared::default(),
+            last_good: RefCell::new(None),
         }
     }
 
     /// The round's shared staging cache (what `SelectCtx::round` borrows).
     pub fn shared(&self) -> &RoundShared {
         &self.shared
+    }
+
+    /// Install the retry policy applied at the chunk-dispatch seam for
+    /// the rest of the run (default: [`RetryPolicy::default`]).
+    pub fn set_retry_policy(&self, policy: RetryPolicy) {
+        self.shared.set_retry_policy(policy);
     }
 
     /// Start the next selection round on this engine: invalidate the
@@ -604,7 +706,7 @@ impl<'a> SelectionEngine<'a> {
     ) -> Result<SelectionReport> {
         let t0 = Instant::now();
         let mut rng = req.round_rng();
-        let selection = match &self.backend {
+        let solved = match &self.backend {
             Backend::Live { rt, state } => strategy.select(&mut SelectCtx {
                 src: GradSource::Live { rt: *rt, state },
                 train: self.train,
@@ -632,9 +734,46 @@ impl<'a> SelectionEngine<'a> {
                     round: Some(&self.shared),
                 })
             }
-        }
-        .map_err(|e| self.drop_probe(e))?;
+        };
+        // the degradation ladder: a failed solve is downgraded, never
+        // surfaced — every request gets *an* answer, with the rung
+        // recorded in the report (the probe keeps whatever staging cost
+        // the failed attempt already paid)
+        let selection = match solved {
+            Ok(sel) => sel,
+            Err(e) => {
+                let (sel, rung) = self.degrade(req, &e);
+                self.shared.note_degradation(rung);
+                sel
+            }
+        };
+        *self.last_good.borrow_mut() = Some(selection.clone());
         Ok(self.report(req, selection, t0))
+    }
+
+    /// Strategy solve failed: serve the last subset this engine produced
+    /// when one exists, else a seeded random subset — deterministic in
+    /// the request's `(seed, rng_tag)`, so a degraded round is as
+    /// reproducible as a normal one.
+    fn degrade(&self, req: &SelectionRequest, err: &anyhow::Error) -> (Selection, Degradation) {
+        if let Some(prev) = self.last_good.borrow().as_ref() {
+            eprintln!(
+                "engine: solve failed ({err:#}); reusing last round's subset ({} rows)",
+                prev.indices.len()
+            );
+            return (prev.clone(), Degradation::ReusedLastRound);
+        }
+        let n = req.ground.len();
+        let k = req.budget.min(n);
+        eprintln!("engine: solve failed ({err:#}); no previous subset — random fallback ({k} rows)");
+        let mut rng = req.round_rng().split(0xFA11);
+        let picks = rng.sample_indices(n, k);
+        let selection = Selection {
+            indices: picks.into_iter().map(|i| req.ground[i]).collect(),
+            weights: vec![1.0; k],
+            grad_error: None,
+        };
+        (selection, Degradation::RandomFallback)
     }
 
     /// Answer a batch of requests against this round's model state —
@@ -642,13 +781,6 @@ impl<'a> SelectionEngine<'a> {
     /// `(width, ground)` key shares one staging pass.
     pub fn select_batch(&self, reqs: &[SelectionRequest]) -> Result<Vec<SelectionReport>> {
         reqs.iter().map(|r| self.select(r)).collect()
-    }
-
-    /// A failed request must not leak its probe (staging time/dispatches
-    /// it already paid) into the next request's report.
-    fn drop_probe(&self, e: anyhow::Error) -> anyhow::Error {
-        let _ = self.shared.take_stats();
-        e
     }
 
     fn report(&self, req: &SelectionRequest, selection: Selection, t0: Instant) -> SelectionReport {
@@ -731,6 +863,9 @@ mod tests {
                 fanout: true,
                 engine_round: 3,
                 stage_reused_buffers: true,
+                retries: 2,
+                quarantined: 5,
+                degradation: Degradation::ReusedLastRound,
             },
         };
         let parsed = Json::parse(&rep.to_json().dump()).unwrap();
@@ -741,6 +876,37 @@ mod tests {
         no_err.selection.grad_error = None;
         let parsed = Json::parse(&no_err.to_json().dump()).unwrap();
         assert_eq!(SelectionReport::from_json(&parsed).unwrap(), no_err);
+    }
+
+    #[test]
+    fn report_json_without_fault_fields_parses_to_defaults() {
+        // reports written before the fault-tolerance counters existed
+        // must keep parsing (fault-free defaults)
+        let text = r#"{
+            "strategy": "gradmatch", "budget": 2,
+            "selection": {"indices": [1, 2], "weights": [1.0, 1.0], "grad_error": null},
+            "round": {
+                "stage_secs": 0.1, "solve_secs": 0.2, "stage_dispatches": 3,
+                "stage_shared": false, "class_budgets": [], "fanout": false,
+                "engine_round": 0, "stage_reused_buffers": false
+            }
+        }"#;
+        let rep = SelectionReport::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(rep.stats.retries, 0);
+        assert_eq!(rep.stats.quarantined, 0);
+        assert_eq!(rep.stats.degradation, Degradation::None);
+    }
+
+    #[test]
+    fn degradation_wire_names_roundtrip() {
+        for rung in [
+            Degradation::None,
+            Degradation::ReusedLastRound,
+            Degradation::RandomFallback,
+        ] {
+            assert_eq!(Degradation::from_str(rung.as_str()).unwrap(), rung);
+        }
+        assert!(Degradation::from_str("panic").is_err());
     }
 
     #[test]

@@ -1,0 +1,286 @@
+//! Fault injection for the gradient-oracle seam: a deterministic,
+//! seeded [`FaultyOracle`] wrapper over any [`GradOracle`] that injects
+//! transient dispatch errors, non-finite gradient rows, and latency
+//! spikes on a configurable schedule.
+//!
+//! This is the test substrate for the fault-tolerance layer: the retry
+//! policy at the chunk-dispatch seam ([`crate::grads::Retrying`]), the
+//! staging quarantine of non-finite rows
+//! ([`crate::grads::stage_class_grads_reusing`]), and the engine's
+//! degradation ladder ([`crate::engine::Degradation`]).  Everything is
+//! driven by the plan's seed and per-attempt counters, so a given
+//! `(plan, workload)` pair replays the exact same fault sequence on
+//! every run — tests can pin subset identity across clean and faulty
+//! runs instead of asserting statistics.
+//!
+//! With [`FaultPlan::none`] the wrapper is bit-for-bit transparent: no
+//! RNG draws, no sleeps, and every call forwarded unchanged (pinned by
+//! `tests/fault_injection.rs` and the conformance suite).  Injected
+//! dispatch failures fire *before* the inner oracle runs, so a
+//! retry-then-success sequence leaves the inner oracle's dispatch
+//! counters identical to a fault-free run.
+
+use anyhow::{anyhow, Result};
+
+use crate::data::PaddedChunk;
+use crate::grads::{EvalEntries, GradOracle};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Schedule of injected faults.  All channels are independent and off by
+/// default (`FaultPlan::none`); rates are per dispatch attempt.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// seeds the per-attempt fault draws (failure and corruption streams
+    /// are split independently, so toggling one never shifts the other)
+    pub seed: u64,
+    /// probabilistic transient-failure rate in `[0, 1]` per attempt
+    pub dispatch_fail: f64,
+    /// deterministic schedule: fail every k-th attempt (0 = off) —
+    /// guarantees a retried attempt succeeds, which is how the "10%
+    /// dispatch failures, zero degradation" contract stays flake-free
+    pub fail_every: usize,
+    /// deterministic hard outage: fail every attempt numbered
+    /// `>= fail_from` (0 = off) — models an accelerator that dies
+    /// mid-run, which is what forces the degradation ladder past the
+    /// retry policy
+    pub fail_from: u64,
+    /// probabilistic rate in `[0, 1]` of corrupting one live row of a
+    /// `grads_chunk` result with NaN/Inf
+    pub nan_rate: f64,
+    /// latency spike every k-th attempt (0 = off)
+    pub spike_every: usize,
+    /// spike duration in milliseconds
+    pub spike_ms: u64,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing — the transparent baseline.
+    pub fn none(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            dispatch_fail: 0.0,
+            fail_every: 0,
+            fail_from: 0,
+            nan_rate: 0.0,
+            spike_every: 0,
+            spike_ms: 0,
+        }
+    }
+}
+
+/// A [`GradOracle`] decorator that injects the faults of a [`FaultPlan`].
+///
+/// `plan` is public so a test can re-arm the schedule between rounds
+/// (e.g. clean round one, then `plan.dispatch_fail = 1.0` to force the
+/// degradation ladder).  The `injected_*` counters and [`poisoned_rows`]
+/// ledger let assertions tie observed behavior (retries, quarantined
+/// counts, never-selected indices) back to exactly what was injected.
+///
+/// [`poisoned_rows`]: FaultyOracle::poisoned_rows
+pub struct FaultyOracle<'a> {
+    inner: &'a mut dyn GradOracle,
+    pub plan: FaultPlan,
+    /// dispatch attempts observed (drives the deterministic schedules)
+    pub attempts: u64,
+    /// transient failures returned instead of dispatching
+    pub injected_failures: usize,
+    /// `grads_chunk` rows corrupted with non-finite values
+    pub injected_nan_rows: usize,
+    /// latency spikes slept through
+    pub injected_spikes: usize,
+    /// dataset row index of every corrupted gradient row, in injection
+    /// order — the quarantine tests' ground truth
+    pub poisoned_rows: Vec<usize>,
+}
+
+impl<'a> FaultyOracle<'a> {
+    pub fn new(inner: &'a mut dyn GradOracle, plan: FaultPlan) -> Self {
+        FaultyOracle {
+            inner,
+            plan,
+            attempts: 0,
+            injected_failures: 0,
+            injected_nan_rows: 0,
+            injected_spikes: 0,
+            poisoned_rows: Vec::new(),
+        }
+    }
+
+    /// Per-attempt gate: spike, then maybe fail *before* the inner
+    /// dispatch (so inner counters only ever count successes).
+    fn gate(&mut self, what: &str) -> Result<()> {
+        self.attempts += 1;
+        if self.plan.spike_every > 0 && self.attempts % self.plan.spike_every as u64 == 0 {
+            self.injected_spikes += 1;
+            std::thread::sleep(std::time::Duration::from_millis(self.plan.spike_ms));
+        }
+        let scheduled =
+            self.plan.fail_every > 0 && self.attempts % self.plan.fail_every as u64 == 0;
+        let outage = self.plan.fail_from > 0 && self.attempts >= self.plan.fail_from;
+        let drawn = self.plan.dispatch_fail > 0.0
+            && Rng::new(self.plan.seed ^ 0xD15F).split(self.attempts).f64()
+                < self.plan.dispatch_fail;
+        if scheduled || outage || drawn {
+            self.injected_failures += 1;
+            return Err(anyhow!(
+                "injected transient fault: {what} attempt {}",
+                self.attempts
+            ));
+        }
+        Ok(())
+    }
+
+    /// Corrupt one live row of a successful `grads_chunk` result with
+    /// NaN/Inf, recording which dataset row was poisoned.
+    fn maybe_poison(&mut self, chunk: &PaddedChunk, gm: &mut Matrix) {
+        if self.plan.nan_rate <= 0.0 || chunk.live == 0 {
+            return;
+        }
+        let mut rng = Rng::new(self.plan.seed ^ 0x4EAF).split(self.attempts);
+        if rng.f64() >= self.plan.nan_rate {
+            return;
+        }
+        let slot = rng.usize(chunk.live);
+        let row = gm.row_mut(slot);
+        row[0] = f32::NAN;
+        let last = row.len() - 1;
+        row[last] = f32::INFINITY;
+        self.injected_nan_rows += 1;
+        self.poisoned_rows.push(chunk.indices[slot]);
+    }
+}
+
+impl GradOracle for FaultyOracle<'_> {
+    fn chunk_rows(&self) -> usize {
+        self.inner.chunk_rows()
+    }
+
+    fn p(&self) -> usize {
+        self.inner.p()
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.inner.batch_rows()
+    }
+
+    fn grads_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
+        self.gate("grads_chunk")?;
+        let mut gm = self.inner.grads_chunk(chunk)?;
+        self.maybe_poison(chunk, &mut gm);
+        Ok(gm)
+    }
+
+    fn mean_grad_chunk(&mut self, chunk: &PaddedChunk) -> Result<Vec<f32>> {
+        self.gate("mean_grad_chunk")?;
+        self.inner.mean_grad_chunk(chunk)
+    }
+
+    fn batch_gradsum_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
+        self.gate("batch_gradsum_chunk")?;
+        self.inner.batch_gradsum_chunk(chunk)
+    }
+
+    fn eval_chunk(&mut self, chunk: &PaddedChunk) -> Result<EvalEntries> {
+        self.gate("eval_chunk")?;
+        self.inner.eval_chunk(chunk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{padded_chunks, Dataset};
+    use crate::grads::SynthGrads;
+
+    /// Tiny synthetic dataset with the given class labels.
+    fn toy_dataset(d: usize, y: Vec<i32>, classes: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let n = y.len();
+        let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian_f32()).collect());
+        Dataset { x, y, classes }
+    }
+
+    fn chunks(ds: &crate::data::Dataset, rows: usize) -> Vec<PaddedChunk> {
+        let idx: Vec<usize> = (0..ds.y.len()).collect();
+        padded_chunks(ds, &idx, rows).collect()
+    }
+
+    #[test]
+    fn no_fault_plan_is_transparent() {
+        let p = 9;
+        let ds = toy_dataset(4, vec![0, 1, 2, 0, 1, 2, 0, 1], 3, 31);
+        let mut clean = SynthGrads::new(4, p);
+        let mut inner = SynthGrads::new(4, p);
+        let mut faulty = FaultyOracle::new(&mut inner, FaultPlan::none(5));
+        for chunk in chunks(&ds, 4) {
+            let a = clean.grads_chunk(&chunk).unwrap();
+            let b = faulty.grads_chunk(&chunk).unwrap();
+            assert_eq!(a.data, b.data, "zero-fault wrapper must be bit-for-bit");
+            assert_eq!(clean.mean_grad_chunk(&chunk).unwrap(), faulty.mean_grad_chunk(&chunk).unwrap());
+        }
+        assert_eq!(faulty.injected_failures, 0);
+        assert_eq!(faulty.injected_nan_rows, 0);
+        assert_eq!(inner.grad_calls, clean.grad_calls);
+    }
+
+    #[test]
+    fn scheduled_failures_fire_before_the_inner_dispatch() {
+        let p = 9;
+        let ds = toy_dataset(4, vec![0, 1, 2, 0], 3, 32);
+        let mut inner = SynthGrads::new(4, p);
+        let mut plan = FaultPlan::none(5);
+        plan.fail_every = 2; // attempts 2, 4, … fail
+        let mut faulty = FaultyOracle::new(&mut inner, plan);
+        let chunk = &chunks(&ds, 4)[0];
+        assert!(faulty.grads_chunk(chunk).is_ok());
+        assert!(faulty.grads_chunk(chunk).is_err());
+        assert!(faulty.grads_chunk(chunk).is_ok());
+        assert_eq!(faulty.injected_failures, 1);
+        assert_eq!(inner.grad_calls, 2, "failed attempts never reach the inner oracle");
+    }
+
+    #[test]
+    fn hard_outage_fails_every_attempt_from_the_cutoff() {
+        let p = 9;
+        let ds = toy_dataset(4, vec![0, 1, 2, 0], 3, 34);
+        let mut inner = SynthGrads::new(4, p);
+        let mut plan = FaultPlan::none(5);
+        plan.fail_from = 3; // attempts 3, 4, … all fail — the dead accelerator
+        let mut faulty = FaultyOracle::new(&mut inner, plan);
+        let chunk = &chunks(&ds, 4)[0];
+        assert!(faulty.grads_chunk(chunk).is_ok());
+        assert!(faulty.grads_chunk(chunk).is_ok());
+        assert!(faulty.grads_chunk(chunk).is_err());
+        assert!(faulty.grads_chunk(chunk).is_err());
+        assert_eq!(inner.grad_calls, 2, "the outage never reaches the inner oracle");
+    }
+
+    #[test]
+    fn nan_injection_is_recorded_and_deterministic() {
+        let p = 9;
+        let ds = toy_dataset(4, vec![0, 1, 2, 0, 1, 2, 0, 1], 3, 33);
+        let mut run = |seed: u64| {
+            let mut inner = SynthGrads::new(4, p);
+            let mut plan = FaultPlan::none(seed);
+            plan.nan_rate = 1.0;
+            let mut faulty = FaultyOracle::new(&mut inner, plan);
+            let mut poisoned_values = Vec::new();
+            for chunk in chunks(&ds, 4) {
+                let gm = faulty.grads_chunk(&chunk).unwrap();
+                for slot in 0..chunk.live {
+                    if !gm.row(slot).iter().all(|v| v.is_finite()) {
+                        poisoned_values.push(chunk.indices[slot]);
+                    }
+                }
+            }
+            (poisoned_values, faulty.poisoned_rows.clone(), faulty.injected_nan_rows)
+        };
+        let (observed, ledger, count) = run(5);
+        assert_eq!(observed, ledger, "ledger must name exactly the corrupted rows");
+        assert_eq!(count, 2, "nan_rate=1.0 corrupts one row per dispatch");
+        let (again, ledger2, _) = run(5);
+        assert_eq!(observed, again, "same seed → same fault sequence");
+        assert_eq!(ledger, ledger2);
+    }
+}

@@ -116,6 +116,98 @@ impl GradOracle for RtGrads<'_> {
     }
 }
 
+/// Bounded retry with deterministic backoff for transient chunk-dispatch
+/// failures.  `max_attempts` counts the first try (1 = no retry); the
+/// sleep before attempt `k+1` is `backoff_ms << (k-1)` milliseconds —
+/// deterministic, so a replayed fault schedule replays the same timing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// total attempts per dispatch (the first try included; min 1)
+    pub max_attempts: usize,
+    /// base backoff in milliseconds, doubled per extra attempt (0 = none)
+    pub backoff_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, backoff_ms: 0 }
+    }
+}
+
+/// A [`GradOracle`] decorator that retries each chunk dispatch under a
+/// [`RetryPolicy`] — the fault-tolerance seam the selection context
+/// wraps around both backends, so a transient `grads_chunk` /
+/// `batch_gradsum_chunk` / `eval_chunk` failure costs one retry instead
+/// of the whole round.  `retries` counts attempts beyond each dispatch's
+/// first; the engine folds it into `RoundStats::retries`.
+pub struct Retrying<'a> {
+    inner: &'a mut dyn GradOracle,
+    policy: RetryPolicy,
+    /// dispatch attempts beyond the first, across all entry points
+    pub retries: usize,
+}
+
+impl<'a> Retrying<'a> {
+    pub fn new(inner: &'a mut dyn GradOracle, policy: RetryPolicy) -> Self {
+        Retrying { inner, policy, retries: 0 }
+    }
+
+    fn run<T>(
+        &mut self,
+        what: &str,
+        mut f: impl FnMut(&mut dyn GradOracle) -> Result<T>,
+    ) -> Result<T> {
+        let attempts = self.policy.max_attempts.max(1);
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 1..=attempts {
+            if attempt > 1 {
+                self.retries += 1;
+                if self.policy.backoff_ms > 0 {
+                    let delay = self.policy.backoff_ms << (attempt as u64 - 2).min(16);
+                    std::thread::sleep(std::time::Duration::from_millis(delay));
+                }
+            }
+            match f(self.inner) {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last
+            .expect("max_attempts >= 1 ran at least once")
+            .context(format!("{what}: failed after {attempts} attempts")))
+    }
+}
+
+impl GradOracle for Retrying<'_> {
+    fn chunk_rows(&self) -> usize {
+        self.inner.chunk_rows()
+    }
+
+    fn p(&self) -> usize {
+        self.inner.p()
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.inner.batch_rows()
+    }
+
+    fn grads_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
+        self.run("grads_chunk", |o| o.grads_chunk(chunk))
+    }
+
+    fn mean_grad_chunk(&mut self, chunk: &PaddedChunk) -> Result<Vec<f32>> {
+        self.run("mean_grad_chunk", |o| o.mean_grad_chunk(chunk))
+    }
+
+    fn batch_gradsum_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
+        self.run("batch_gradsum_chunk", |o| o.batch_gradsum_chunk(chunk))
+    }
+
+    fn eval_chunk(&mut self, chunk: &PaddedChunk) -> Result<EvalEntries> {
+        self.run("eval_chunk", |o| o.eval_chunk(chunk))
+    }
+}
+
 /// Deterministic synthetic oracle for tests and benches: pseudo-gradients
 /// computed host-side from the chunk contents, with dispatch-shaped cost
 /// (every call runs over the full *padded* shape, like the fixed-shape
@@ -410,9 +502,21 @@ pub fn stage_class_grads_with(
 /// (same class count, per-class sizes, and width — true whenever the
 /// same ground set is re-staged, e.g. every trainer round), the scatter
 /// writes into the old matrices instead of allocating `[|ground|, w]`
-/// afresh.  Returns the stages and whether the buffers were reused — the
+/// afresh.  Returns the stages, whether the buffers were reused (the
 /// engine's round-reuse path ([`crate::engine::RoundShared`]) feeds the
-/// flag into `RoundStats::stage_reused_buffers`.
+/// flag into `RoundStats::stage_reused_buffers`), and how many rows were
+/// quarantined.
+///
+/// # Gradient hygiene
+///
+/// Any dispatched row containing a non-finite value (NaN/Inf — a device
+/// fault, an overflowed loss) is **quarantined**: skipped from its
+/// class's staged matrix, row list, and target accumulation, so it can
+/// never reach OMP or be selected.  Class matrices shrink to their
+/// finite row count; a class emptied by quarantine simply presents zero
+/// rows, and [`crate::selection::split_budget`] redistributes its budget
+/// to the surviving classes.  The fault-free path pays only the
+/// `is_finite` scan — staged bytes are bit-identical.
 #[allow(clippy::too_many_arguments)]
 pub fn stage_class_grads_reusing(
     oracle: &mut dyn GradOracle,
@@ -423,7 +527,7 @@ pub fn stage_class_grads_reusing(
     width: StageWidth,
     want_targets: bool,
     prev: Vec<ClassStage>,
-) -> Result<(Vec<ClassStage>, bool)> {
+) -> Result<(Vec<ClassStage>, bool, usize)> {
     let (chunk_rows, p) = (oracle.chunk_rows(), oracle.p());
     // exact per-class allocations up front (ground order == scatter order)
     let mut sizes = vec![0usize; c];
@@ -462,12 +566,19 @@ pub fn stage_class_grads_reusing(
     let mut acc: Vec<Vec<f64>> =
         if want_targets { (0..c).map(|_| vec![0.0f64; p]).collect() } else { Vec::new() };
     let mut cursor = vec![0usize; c];
+    let mut quarantined = vec![0usize; c];
+    let mut total_quarantined = 0usize;
     for chunk in padded_chunks(ds, ground, chunk_rows) {
         let gm = oracle.grads_chunk(&chunk)?;
         for slot in 0..chunk.live {
             let idx = chunk.indices[slot];
             let cls = ds.y[idx] as usize;
             let src = gm.row(slot);
+            if !src.iter().all(|v| v.is_finite()) {
+                quarantined[cls] += 1;
+                total_quarantined += 1;
+                continue;
+            }
             let dst = gs[cls].row_mut(cursor[cls]);
             match width {
                 StageWidth::Full => dst.copy_from_slice(src),
@@ -486,7 +597,18 @@ pub fn stage_class_grads_reusing(
             cursor[cls] += 1;
         }
     }
-    debug_assert_eq!(cursor, sizes);
+    if total_quarantined > 0 {
+        // shrink each class matrix to its finite row count (allocated at
+        // the pre-quarantine size; the tail rows were never written)
+        for cls in 0..c {
+            gs[cls].data.truncate(cursor[cls] * w);
+            gs[cls].rows = cursor[cls];
+        }
+    }
+    debug_assert!(
+        (0..c).all(|cls| cursor[cls] + quarantined[cls] == sizes[cls]),
+        "staged + quarantined rows must account for every ground row"
+    );
     let mut out = Vec::with_capacity(c);
     for (cls, (g, r)) in gs.into_iter().zip(rows).enumerate() {
         let target_full: Vec<f32> = if want_targets {
@@ -497,7 +619,7 @@ pub fn stage_class_grads_reusing(
         };
         out.push(ClassStage { g, rows: r, target_full });
     }
-    Ok((out, reuse))
+    Ok((out, reuse, total_quarantined))
 }
 
 /// Validation-side full-P class mean gradients for the **live** classes
@@ -951,22 +1073,114 @@ mod tests {
         let fresh = first.clone();
         // same ground, same width: buffers recycle and contents match a
         // fresh stage exactly
-        let (again, reused) = stage_class_grads_reusing(
+        let (again, reused, quarantined) = stage_class_grads_reusing(
             &mut oracle, &ds, &ground, h, c, StageWidth::ClassSlice, true, first,
         )
         .unwrap();
         assert!(reused, "identical shapes must recycle");
+        assert_eq!(quarantined, 0);
         for (a, b) in again.iter().zip(&fresh) {
             assert_eq!(a.g.data, b.g.data);
             assert_eq!(a.rows, b.rows);
             assert_eq!(a.target_full, b.target_full);
         }
         // a different width cannot reuse class-slice buffers
-        let (_, reused) = stage_class_grads_reusing(
+        let (_, reused, _) = stage_class_grads_reusing(
             &mut oracle, &ds, &ground, h, c, StageWidth::Full, true, again,
         )
         .unwrap();
         assert!(!reused, "width change must fall back to fresh allocation");
+    }
+
+    #[test]
+    fn retrying_oracle_recovers_transient_failures_bit_for_bit() {
+        let (h, c) = (2usize, 3usize);
+        let p = h * c + c;
+        let ds = toy_dataset(4, vec![2, 0, 1, 2, 0, 1, 2, 0], 3, 27);
+        let idx: Vec<usize> = (0..8).collect();
+        let mut clean_oracle = SynthGrads::new(2, p);
+        let clean = per_sample_grads_with(&mut clean_oracle, &ds, &idx).unwrap();
+        // fail every 2nd attempt: each failed dispatch's immediate retry
+        // always lands on an odd attempt and succeeds
+        let mut inner = SynthGrads::new(2, p);
+        let mut plan = crate::fault::FaultPlan::none(3);
+        plan.fail_every = 2;
+        let mut faulty = crate::fault::FaultyOracle::new(&mut inner, plan);
+        let mut retrying = Retrying::new(&mut faulty, RetryPolicy::default());
+        let recovered = per_sample_grads_with(&mut retrying, &ds, &idx).unwrap();
+        assert_eq!(recovered.g.data, clean.g.data, "retried rounds must be bit-identical");
+        assert_eq!(recovered.rows, clean.rows);
+        assert!(retrying.retries > 0, "the schedule must have forced retries");
+        assert_eq!(
+            inner.grad_calls, clean_oracle.grad_calls,
+            "failed attempts never reach the inner oracle"
+        );
+    }
+
+    #[test]
+    fn retrying_oracle_gives_up_after_max_attempts() {
+        let p = 9;
+        let ds = toy_dataset(4, vec![0, 1, 2, 0], 3, 28);
+        let idx: Vec<usize> = (0..4).collect();
+        let mut inner = SynthGrads::new(4, p);
+        let mut plan = crate::fault::FaultPlan::none(3);
+        plan.dispatch_fail = 1.0;
+        let mut faulty = crate::fault::FaultyOracle::new(&mut inner, plan);
+        let policy = RetryPolicy { max_attempts: 2, backoff_ms: 0 };
+        let mut retrying = Retrying::new(&mut faulty, policy);
+        let err = per_sample_grads_with(&mut retrying, &ds, &idx).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("failed after 2 attempts"),
+            "exhaustion must name the attempt budget: {err:#}"
+        );
+        assert_eq!(retrying.retries, 1);
+        assert_eq!(inner.grad_calls, 0);
+    }
+
+    #[test]
+    fn staging_quarantines_non_finite_rows() {
+        let (h, c) = (2usize, 3usize);
+        let p = h * c + c;
+        let ds = toy_dataset(4, vec![2, 0, 1, 2, 0, 1, 2, 0], 3, 29);
+        let ground: Vec<usize> = (0..8).collect();
+        let mut clean_oracle = SynthGrads::new(4, p);
+        let clean =
+            stage_class_grads_with(&mut clean_oracle, &ds, &ground, h, c, StageWidth::ClassSlice, true)
+                .unwrap();
+        let mut inner = SynthGrads::new(4, p);
+        let mut plan = crate::fault::FaultPlan::none(3);
+        plan.nan_rate = 1.0; // one poisoned row per dispatch
+        let mut faulty = crate::fault::FaultyOracle::new(&mut inner, plan);
+        let (staged, _, quarantined) = stage_class_grads_reusing(
+            &mut faulty, &ds, &ground, h, c, StageWidth::ClassSlice, true, Vec::new(),
+        )
+        .unwrap();
+        assert_eq!(quarantined, 2, "⌈8/4⌉ dispatches, one poisoned row each");
+        assert_eq!(faulty.poisoned_rows.len(), 2);
+        let staged_rows: usize = staged.iter().map(|s| s.rows.len()).sum();
+        assert_eq!(staged_rows, ground.len() - quarantined);
+        for stage in &staged {
+            assert_eq!(stage.g.rows, stage.rows.len(), "matrices shrink to finite rows");
+            assert!(stage.g.data.iter().all(|v| v.is_finite()));
+            assert!(stage.target_full.iter().all(|v| v.is_finite()));
+            for idx in &stage.rows {
+                assert!(
+                    !faulty.poisoned_rows.contains(idx),
+                    "poisoned row {idx} must never be staged"
+                );
+            }
+        }
+        // surviving rows keep their clean gradients, in ground order
+        for (cs, fs) in clean.iter().zip(&staged) {
+            for (slot, idx) in fs.rows.iter().enumerate() {
+                let clean_slot = cs
+                    .rows
+                    .iter()
+                    .position(|r| r == idx)
+                    .expect("surviving row present in the clean stage");
+                assert_eq!(fs.g.row(slot), cs.g.row(clean_slot));
+            }
+        }
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! | `submod`      | facility location + lazy greedy (CRAIG, FeatureFL)     |
 //! | `trainer`     | Algorithm 1: weighted-SGD loop driving engine rounds   |
 //! | `overlap`     | background selection worker (double-buffered subsets)  |
+//! | `fault`       | seeded fault injection over the `GradOracle` seam      |
 //! | `coordinator` | config → dataset → engine/trainer; sweeps, baselines   |
 //! | `runtime`     | PJRT client + AOT'd HLO executables                    |
 //! | `par`         | blocked parallel kernels + class-level task fan-out    |
@@ -65,6 +66,8 @@ pub mod checkpoint;
 pub mod coordinator;
 #[cfg(feature = "xla")]
 pub mod engine;
+#[cfg(feature = "xla")]
+pub mod fault;
 #[cfg(feature = "xla")]
 pub mod grads;
 #[cfg(feature = "xla")]

@@ -58,6 +58,21 @@ fn cmd_train(cli: &Cli) -> Result<()> {
             r.engine_reused_rounds,
             r.stage_buffer_reuses
         );
+        if r.select_retries > 0
+            || r.quarantined_rows > 0
+            || r.degraded_rounds > 0
+            || r.sync_fallback_rounds > 0
+            || r.stale_rejections > 0
+        {
+            println!(
+                "            faults: retries {}  quarantined rows {}  degraded rounds {}  sync-fallback rounds {}  stale rejections {}",
+                r.select_retries,
+                r.quarantined_rows,
+                r.degraded_rounds,
+                r.sync_fallback_rounds,
+                r.stale_rejections
+            );
+        }
     }
     let name = format!(
         "train_{}_{}_{}_{}",

@@ -118,11 +118,13 @@ impl AsyncSelector {
     }
 
     /// Submit a snapshot for selection (non-blocking). At most one request
-    /// should be in flight; the trainer checks `inflight` first.
+    /// should be in flight; the trainer checks `inflight` first.  A shut
+    /// down or dead worker is an `Err`, never a panic — the trainer
+    /// logs it and falls back to synchronous rounds.
     pub fn request(&mut self, state: ModelState, rng_tag: u64) -> Result<()> {
         self.req_tx
             .as_ref()
-            .expect("selector shut down")
+            .ok_or_else(|| anyhow!("selector shut down"))?
             .send(SelectRequest { state, rng_tag })
             .map_err(|_| anyhow!("selector thread died"))?;
         self.inflight += 1;

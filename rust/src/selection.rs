@@ -95,11 +95,39 @@ pub enum GradSource<'a> {
 
 /// Run `f` against the source's oracle view — [`RtGrads`] constructed on
 /// the fly for live rounds, the caller's oracle otherwise.  Every
-/// acquisition pass a strategy issues funnels through here.
-fn with_oracle<R>(src: &mut GradSource<'_>, f: impl FnOnce(&mut dyn GradOracle) -> R) -> R {
+/// acquisition pass a strategy issues funnels through here, which is
+/// where engine-driven rounds pick up their fault tolerance: the oracle
+/// is wrapped in the round's [`grads::RetryPolicy`] so transient chunk
+/// dispatch failures are retried instead of aborting the round, with
+/// observed retries folded into the round probe
+/// (`RoundStats::retries`).  Legacy rounds (`round = None`) dispatch
+/// bare — bit-identical pre-engine behavior.
+fn with_oracle<R>(
+    src: &mut GradSource<'_>,
+    round: Option<&RoundShared>,
+    f: impl FnOnce(&mut dyn GradOracle) -> R,
+) -> R {
     match src {
-        GradSource::Live { rt, state } => f(&mut RtGrads { rt: *rt, st: *state }),
-        GradSource::Oracle { oracle, .. } => f(&mut **oracle),
+        GradSource::Live { rt, state } => {
+            retrying_in(&mut RtGrads { rt: *rt, st: *state }, round, f)
+        }
+        GradSource::Oracle { oracle, .. } => retrying_in(&mut **oracle, round, f),
+    }
+}
+
+fn retrying_in<R>(
+    oracle: &mut dyn GradOracle,
+    round: Option<&RoundShared>,
+    f: impl FnOnce(&mut dyn GradOracle) -> R,
+) -> R {
+    match round {
+        Some(shared) => {
+            let mut retrying = grads::Retrying::new(oracle, shared.retry_policy());
+            let out = f(&mut retrying);
+            shared.note_retries(retrying.retries);
+            out
+        }
+        None => f(oracle),
     }
 }
 
@@ -162,7 +190,7 @@ impl<'a> SelectCtx<'a> {
     ) -> Result<Arc<Vec<ClassStage>>> {
         let (h, c) = self.class_layout();
         let (round, train, ground) = (self.round, self.train, self.ground);
-        with_oracle(&mut self.src, |oracle| match round {
+        with_oracle(&mut self.src, round, |oracle| match round {
             Some(shared) => shared.class_stages(oracle, train, ground, h, c, width),
             None => Ok(Arc::new(grads::stage_class_grads_with(
                 oracle,
@@ -183,7 +211,7 @@ impl<'a> SelectCtx<'a> {
     pub fn val_class_means(&mut self, flags: &[bool]) -> Result<Arc<Vec<Option<Vec<f32>>>>> {
         let (_, c) = self.class_layout();
         let (round, val) = (self.round, self.val);
-        with_oracle(&mut self.src, |oracle| match round {
+        with_oracle(&mut self.src, round, |oracle| match round {
             Some(shared) => shared.val_class_means(oracle, val, c, flags),
             None => Ok(Arc::new(grads::live_val_class_means_with(oracle, val, c, flags)?)),
         })
@@ -193,27 +221,31 @@ impl<'a> SelectCtx<'a> {
     /// validation) split — the matching target ∇L(θ).
     pub fn mean_gradient(&mut self, on_val: bool, rows: &[usize]) -> Result<Vec<f32>> {
         let ds = if on_val { self.val } else { self.train };
-        with_oracle(&mut self.src, |oracle| grads::mean_gradient_with(oracle, ds, rows))
+        with_oracle(&mut self.src, self.round, |oracle| grads::mean_gradient_with(oracle, ds, rows))
     }
 
     /// Per-sample gradients for `rows` of the train split (the serial
     /// reference path; staged rounds go through [`SelectCtx::class_stages`]).
     pub fn per_sample_grads(&mut self, rows: &[usize]) -> Result<GradientStore> {
         let train = self.train;
-        with_oracle(&mut self.src, |oracle| grads::per_sample_grads_with(oracle, train, rows))
+        with_oracle(&mut self.src, self.round, |oracle| {
+            grads::per_sample_grads_with(oracle, train, rows)
+        })
     }
 
     /// Streamed Taylor gains `g_i · v` over the ground set (GLISTER).
     pub fn score_grads(&mut self, v: &[f32]) -> Result<Vec<f32>> {
         let (train, ground) = (self.train, self.ground);
-        with_oracle(&mut self.src, |oracle| grads::score_grads_with(oracle, train, ground, v))
+        with_oracle(&mut self.src, self.round, |oracle| {
+            grads::score_grads_with(oracle, train, ground, v)
+        })
     }
 
     /// Per-mini-batch mean gradients over `order` via the source's fused
     /// group reduction (the PB ground sets).
     pub fn per_batch_grads(&mut self, order: &[usize]) -> Result<(Matrix, Vec<Vec<usize>>)> {
         let train = self.train;
-        with_oracle(&mut self.src, |oracle| {
+        with_oracle(&mut self.src, self.round, |oracle| {
             grads::per_batch_grads_fused_with(oracle, train, order)
         })
     }
@@ -222,7 +254,9 @@ impl<'a> SelectCtx<'a> {
     /// padded pass (ENTROPY, FORGETTING).
     pub fn eval_entries(&mut self, indices: &[usize]) -> Result<EvalEntries> {
         let train = self.train;
-        with_oracle(&mut self.src, |oracle| grads::eval_entries_with(oracle, train, indices))
+        with_oracle(&mut self.src, self.round, |oracle| {
+            grads::eval_entries_with(oracle, train, indices)
+        })
     }
 
     /// Record per-round observability (per-class budgets, the

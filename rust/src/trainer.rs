@@ -42,6 +42,12 @@ pub struct TrainOpts {
     /// [`crate::overlap::AsyncSelector`] passed to [`train_overlapped`] and
     /// training never stalls on a selection round
     pub overlap: bool,
+    /// staleness guardrail for overlapped rounds: a landed subset (solved
+    /// against a stale snapshot) is cheap-probed against the *current*
+    /// parameters, and rejected — falling back to a synchronous round —
+    /// when its matched-gradient error exceeds `stale_tol` × the target
+    /// gradient norm.  `<= 0` (or non-finite) disables the probe.
+    pub stale_tol: f32,
 }
 
 impl Default for TrainOpts {
@@ -60,6 +66,7 @@ impl Default for TrainOpts {
             seed: 42,
             early_stop_frac: None,
             overlap: false,
+            stale_tol: 2.0,
         }
     }
 }
@@ -95,6 +102,12 @@ pub struct TrainOutcome {
     pub steps: usize,
     /// subset size used (samples)
     pub budget: usize,
+    /// selection rounds an overlapped run had to execute synchronously
+    /// (worker death, or a subset rejected by the staleness guardrail);
+    /// always 0 for synchronous runs
+    pub sync_fallback_rounds: usize,
+    /// overlapped subsets rejected by the staleness probe
+    pub stale_rejections: usize,
 }
 
 /// Masked accuracy over a dataset via the eval executable.
@@ -112,6 +125,48 @@ pub fn evaluate(rt: &Runtime, st: &ModelState, ds: &Dataset) -> Result<f32> {
 pub fn cosine_lr(lr0: f32, epoch: usize, total: usize) -> f32 {
     let t = epoch as f32 / total.max(1) as f32;
     lr0 * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+}
+
+/// Staleness probe for overlapped rounds (the ROADMAP guardrail, after
+/// Balles et al.): an overlap worker solves against a snapshot several
+/// epochs old, so before swapping its subset in, measure how well the
+/// subset's weighted gradient combination still matches the *current*
+/// model's mean gradient.  Two padded dispatches: per-sample gradients
+/// of the `chunk`-capped heaviest-weighted subset rows, and the mean
+/// gradient of a strided ground-set probe.  Returns whether the relative
+/// matched-gradient error `‖Σ wᵢ∇ᵢ − ∇L‖ / ‖∇L‖` exceeds `tol`
+/// (`tol <= 0` or non-finite disables the probe).
+fn staleness_exceeded(
+    rt: &Runtime,
+    st: &ModelState,
+    train: &Dataset,
+    ground: &[usize],
+    sel: &Selection,
+    tol: f32,
+) -> Result<bool> {
+    if !(tol > 0.0) || !tol.is_finite() || sel.indices.is_empty() || ground.is_empty() {
+        return Ok(false);
+    }
+    let cap = st.meta.chunk.max(1);
+    let take = cap.min(sel.indices.len());
+    let picks = crate::selection::top_k_desc(&sel.weights, take);
+    let rows: Vec<usize> = picks.iter().map(|&i| sel.indices[i]).collect();
+    let mut w: Vec<f32> = picks.iter().map(|&i| sel.weights[i]).collect();
+    let wsum: f32 = w.iter().sum();
+    if wsum <= 1e-12 {
+        w = vec![1.0 / take as f32; take];
+    } else {
+        for v in &mut w {
+            *v /= wsum;
+        }
+    }
+    let stride = (ground.len() / cap).max(1);
+    let probe: Vec<usize> = ground.iter().copied().step_by(stride).take(cap).collect();
+    let store = crate::grads::per_sample_grads(rt, st, train, &rows)?;
+    let target = crate::grads::mean_gradient(rt, st, train, &probe)?;
+    let err = crate::grads::gradient_error(&store.g, &w, &target);
+    let scale = crate::par::norm2(&target).max(1e-12);
+    Ok(err / scale > tol)
 }
 
 /// Train a model with an adaptive selection strategy.
@@ -156,6 +211,9 @@ pub fn train_overlapped(
     let mut round_stats: Vec<RoundStats> = Vec::new();
     let mut selections = 0usize;
     let mut steps = 0usize;
+    let overlap_requested = selector.is_some();
+    let mut sync_fallback_rounds = 0usize;
+    let mut stale_rejections = 0usize;
 
     // the run's round-request template: the engine re-derives the round
     // RNG from (seed, rng_tag), so only the tag changes per round — one
@@ -221,27 +279,79 @@ pub fn train_overlapped(
         // --- selection (Algorithm 1 lines 2-8) -----------------------------
         let in_subset_phase = epoch >= t_f;
         let due = in_subset_phase && (epoch - t_f) % opts.r_interval == 0;
+        let mut need_sync_round = false;
+        let mut worker_lost = false;
         if let Some(sel_worker) = selector.as_deref_mut() {
-            // overlapped mode: poll for a finished round, submit a new one
-            if let Some(report) = sel_worker.try_recv()? {
-                let SelectionReport { selection: sel, stats, .. } = report;
-                if !sel.indices.is_empty() {
-                    round_stats.push(stats);
-                    if let Some(e) = sel.grad_error {
-                        grad_errors.push(e);
+            // overlapped mode: poll for a finished round, submit a new one.
+            // A dead worker (panicked thread, failed runtime load) is
+            // never fatal — the run downgrades to synchronous selection.
+            match sel_worker.try_recv() {
+                Ok(Some(report)) => {
+                    let SelectionReport { selection: sel, stats, .. } = report;
+                    if !sel.indices.is_empty() {
+                        // staleness guardrail: the subset was solved
+                        // against a snapshot several epochs old — reject
+                        // it (and select synchronously) when it no longer
+                        // matches the current model's gradient
+                        let st_now = fs.to_state()?;
+                        let stale = clock.time(Phase::Select, || {
+                            staleness_exceeded(
+                                rt,
+                                &st_now,
+                                &splits.train,
+                                ground,
+                                &sel,
+                                opts.stale_tol,
+                            )
+                        })?;
+                        if stale {
+                            stale_rejections += 1;
+                            eprintln!(
+                                "overlap: epoch {epoch}: stale subset rejected \
+                                 (matched-gradient error above tol {}); selecting synchronously",
+                                opts.stale_tol
+                            );
+                            need_sync_round = true;
+                        } else {
+                            round_stats.push(stats);
+                            if let Some(e) = sel.grad_error {
+                                grad_errors.push(e);
+                            }
+                            for &i in &sel.indices {
+                                ever_selected[i] = true;
+                            }
+                            current = sel;
+                            selected_once = true;
+                            selections += 1;
+                        }
                     }
-                    for &i in &sel.indices {
-                        ever_selected[i] = true;
-                    }
-                    current = sel;
-                    selected_once = true;
-                    selections += 1;
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    eprintln!(
+                        "overlap: epoch {epoch}: selector worker lost ({e:#}); \
+                         falling back to synchronous selection"
+                    );
+                    worker_lost = true;
                 }
             }
-            if due && sel_worker.inflight == 0 {
-                sel_worker.request(fs.to_state()?, 1000 + epoch as u64)?;
+            if !worker_lost && !need_sync_round && due && sel_worker.inflight == 0 {
+                if let Err(e) = sel_worker.request(fs.to_state()?, 1000 + epoch as u64) {
+                    eprintln!(
+                        "overlap: epoch {epoch}: selection submit failed ({e:#}); \
+                         falling back to synchronous selection"
+                    );
+                    worker_lost = true;
+                }
             }
-        } else if due && (strategy.is_adaptive() || !selected_once) {
+        }
+        if worker_lost {
+            selector = None;
+            need_sync_round = due && (strategy.is_adaptive() || !selected_once);
+        }
+        if (selector.is_none() && due && (strategy.is_adaptive() || !selected_once))
+            || need_sync_round
+        {
             let st_snap = fs.to_state()?;
             sel_req.rng_tag = 1000 + epoch as u64;
             let report = clock.time(Phase::Select, || {
@@ -264,6 +374,9 @@ pub fn train_overlapped(
                 current = sel;
                 selected_once = true;
                 selections += 1;
+            }
+            if overlap_requested {
+                sync_fallback_rounds += 1;
             }
         }
 
@@ -342,6 +455,8 @@ pub fn train_overlapped(
             round_stats,
             steps,
             budget,
+            sync_fallback_rounds,
+            stale_rejections,
         },
     ))
 }
@@ -374,5 +489,6 @@ mod tests {
         assert_eq!(o.r_interval, 20);
         assert!((o.lambda - 0.5).abs() < 1e-6);
         assert!((o.kappa - 0.5).abs() < 1e-6);
+        assert!((o.stale_tol - 2.0).abs() < 1e-6, "staleness guardrail on by default");
     }
 }

@@ -14,7 +14,7 @@
 mod common;
 
 use gradmatch::data::Dataset;
-use gradmatch::engine::{RoundStats, SelectionEngine, SelectionReport, SelectionRequest};
+use gradmatch::engine::{Degradation, RoundStats, SelectionEngine, SelectionReport, SelectionRequest};
 use gradmatch::grads::{stage_class_grads_with, StageWidth, SynthGrads};
 use gradmatch::jsonlite::Json;
 use gradmatch::rng::Rng;
@@ -200,6 +200,9 @@ fn report_and_request_roundtrip_through_jsonlite() {
             fanout: false,
             engine_round: 1,
             stage_reused_buffers: true,
+            retries: 2,
+            quarantined: 1,
+            degradation: Degradation::RandomFallback,
         },
     };
     let back =

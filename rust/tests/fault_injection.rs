@@ -1,0 +1,297 @@
+//! Fault-injection contracts for the fault-tolerance layer, pinned
+//! device-free on the synthetic gradient oracle wrapped in
+//! [`FaultyOracle`]:
+//!
+//! - **transparency** — a zero-fault plan is bit-for-bit invisible:
+//!   identical selections, identical inner dispatch counts, fault-free
+//!   round stats;
+//! - **retry** — a deterministic transient-failure schedule under the
+//!   default [`RetryPolicy`] yields the *identical* subset to a clean
+//!   run for EVERY `strategy_specs()` spec: retries absorb the faults,
+//!   the degradation ladder never engages;
+//! - **quarantine** — non-finite gradient rows injected into the staged
+//!   pass are never selected, and the round reports exactly how many
+//!   rows it quarantined;
+//! - **degradation ladder** — when the retry budget drains (hard
+//!   outage), the engine serves the last round's subset; with no prior
+//!   subset it serves a deterministic seeded random one.  Never a panic.
+
+use gradmatch::data::Dataset;
+use gradmatch::engine::{Degradation, SelectionEngine, SelectionRequest};
+use gradmatch::fault::{FaultPlan, FaultyOracle};
+use gradmatch::grads::SynthGrads;
+use gradmatch::rng::Rng;
+use gradmatch::selection::strategy_specs;
+use gradmatch::tensor::Matrix;
+
+const CHUNK: usize = 8;
+const BATCH: usize = 4;
+
+/// Imbalanced synthetic dataset: heavy head, long tail, every class
+/// populated.
+fn imbalanced(seed: u64, classes: usize, d: usize) -> Dataset {
+    let mut y: Vec<i32> = Vec::new();
+    for cls in 0..classes {
+        let n_c = match cls % 3 {
+            0 => 37,
+            1 => 11,
+            _ => 4,
+        };
+        y.extend(std::iter::repeat(cls as i32).take(n_c));
+    }
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut y);
+    let n = y.len();
+    let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian_f32()).collect());
+    Dataset { x, y, classes }
+}
+
+fn request(strategy: &str, ground: Vec<usize>, budget: usize) -> SelectionRequest {
+    SelectionRequest {
+        strategy: strategy.into(),
+        budget,
+        lambda: 0.5,
+        eps: 1e-10,
+        is_valid: false,
+        seed: 42,
+        rng_tag: 7,
+        ground,
+    }
+}
+
+#[test]
+fn zero_fault_plan_is_invisible_to_an_engine_round() {
+    let (classes, h, d) = (5usize, 3usize, 6usize);
+    let p = h * classes + classes;
+    let train = imbalanced(61, classes, d);
+    let val = imbalanced(62, classes, d);
+    let n = train.len();
+    let req = request("gradmatch", (0..n).collect(), n / 4);
+
+    let mut bare = SynthGrads::with_batch(CHUNK, p, BATCH);
+    let want = {
+        let engine = SelectionEngine::with_oracle(&mut bare, &train, &val, h, classes);
+        engine.select(&req).unwrap()
+    };
+
+    let mut inner = SynthGrads::with_batch(CHUNK, p, BATCH);
+    let mut faulty = FaultyOracle::new(&mut inner, FaultPlan::none(9));
+    let got = {
+        let engine = SelectionEngine::with_oracle(&mut faulty, &train, &val, h, classes);
+        engine.select(&req).unwrap()
+    };
+    assert_eq!(faulty.injected_failures, 0);
+    assert_eq!(faulty.injected_nan_rows, 0);
+    assert!(faulty.poisoned_rows.is_empty());
+
+    assert_eq!(got.selection, want.selection, "zero-fault wrapper must be bit-for-bit");
+    assert_eq!(got.stats.retries, 0);
+    assert_eq!(got.stats.quarantined, 0);
+    assert_eq!(got.stats.degradation, Degradation::None);
+    assert_eq!(inner.grad_calls, bare.grad_calls);
+    assert_eq!(inner.mean_calls, bare.mean_calls);
+}
+
+#[test]
+fn transient_failures_retry_to_the_identical_subset_for_every_spec() {
+    // fail every 5th dispatch attempt: the default retry policy's second
+    // attempt can never land on the schedule again, so every dispatch
+    // eventually succeeds and the round must equal a clean run exactly —
+    // the acceptance contract "dispatch failures complete via retry with
+    // no degradation"
+    let (classes, h, d) = (5usize, 3usize, 6usize);
+    let p = h * classes + classes;
+    let train = imbalanced(71, classes, d);
+    let val = imbalanced(72, classes, d);
+    let n = train.len();
+    let ground: Vec<usize> = (0..n).collect();
+    let budget = n / 4;
+
+    let mut total_retries = 0usize;
+    let mut total_injected = 0usize;
+    for spec in strategy_specs() {
+        let req = request(spec, ground.clone(), budget);
+
+        let mut clean = SynthGrads::with_batch(CHUNK, p, BATCH);
+        let want = {
+            let engine = SelectionEngine::with_oracle(&mut clean, &train, &val, h, classes);
+            engine.select(&req).unwrap()
+        };
+
+        let mut inner = SynthGrads::with_batch(CHUNK, p, BATCH);
+        let mut plan = FaultPlan::none(13);
+        plan.fail_every = 5;
+        let mut faulty = FaultyOracle::new(&mut inner, plan);
+        let got = {
+            let engine = SelectionEngine::with_oracle(&mut faulty, &train, &val, h, classes);
+            engine.select(&req).unwrap()
+        };
+        total_injected += faulty.injected_failures;
+
+        assert_eq!(
+            got.selection, want.selection,
+            "{spec}: retried round must equal the clean run"
+        );
+        assert_eq!(got.stats.degradation, Degradation::None, "{spec}: retries absorb the faults");
+        assert_eq!(
+            got.stats.retries, faulty.injected_failures,
+            "{spec}: every injected failure costs exactly one retry"
+        );
+        // failed attempts never reach the inner oracle, so retry-then-
+        // success leaves its counters identical to the clean run
+        assert_eq!(
+            (inner.grad_calls, inner.mean_calls, inner.gradsum_calls, inner.eval_calls),
+            (clean.grad_calls, clean.mean_calls, clean.gradsum_calls, clean.eval_calls),
+            "{spec}: inner dispatch counts"
+        );
+        total_retries += got.stats.retries;
+    }
+    assert!(total_retries > 0, "the schedule must actually fire somewhere");
+    assert_eq!(total_retries, total_injected);
+}
+
+#[test]
+fn poisoned_gradient_rows_are_quarantined_and_never_selected() {
+    let (classes, h, d) = (5usize, 3usize, 6usize);
+    let p = h * classes + classes;
+    let train = imbalanced(81, classes, d);
+    let val = imbalanced(82, classes, d);
+    let n = train.len();
+    let req = request("gradmatch", (0..n).collect(), n / 4);
+
+    let mut inner = SynthGrads::with_batch(CHUNK, p, BATCH);
+    let mut plan = FaultPlan::none(17);
+    plan.nan_rate = 1.0; // one corrupted row per staged chunk
+    let mut faulty = FaultyOracle::new(&mut inner, plan);
+    let got = {
+        let engine = SelectionEngine::with_oracle(&mut faulty, &train, &val, h, classes);
+        engine.select(&req).unwrap()
+    };
+
+    assert_eq!(
+        faulty.injected_nan_rows,
+        n.div_ceil(CHUNK),
+        "nan_rate=1.0 corrupts one live row per gradient chunk"
+    );
+    assert_eq!(
+        got.stats.quarantined, faulty.injected_nan_rows,
+        "the round reports exactly the injected corruption"
+    );
+    for idx in &got.selection.indices {
+        assert!(
+            !faulty.poisoned_rows.contains(idx),
+            "poisoned row {idx} must never be selected"
+        );
+    }
+    assert!(!got.selection.indices.is_empty(), "surviving rows still fill the budget");
+    assert_eq!(got.stats.degradation, Degradation::None, "quarantine is not a degradation");
+
+    // same plan, same workload → same quarantine ledger (determinism)
+    let mut inner2 = SynthGrads::with_batch(CHUNK, p, BATCH);
+    let mut faulty2 = FaultyOracle::new(&mut inner2, plan);
+    let again = {
+        let engine = SelectionEngine::with_oracle(&mut faulty2, &train, &val, h, classes);
+        engine.select(&req).unwrap()
+    };
+    assert_eq!(faulty.poisoned_rows, faulty2.poisoned_rows);
+    assert_eq!(got.selection, again.selection);
+}
+
+#[test]
+fn exhausted_retries_reuse_the_last_rounds_subset() {
+    // round one is clean; from round two on the oracle is a dead
+    // accelerator (every attempt fails, retries included) — the ladder
+    // serves round one's subset and records the rung, never panicking
+    let (classes, h, d) = (5usize, 3usize, 6usize);
+    let p = h * classes + classes;
+    let train = imbalanced(91, classes, d);
+    let val = imbalanced(92, classes, d);
+    let n = train.len();
+    let req = request("gradmatch", (0..n).collect(), n / 4);
+
+    // deterministic workload → a clean probe run measures exactly how
+    // many dispatch attempts one round costs
+    let attempts_per_round = {
+        let mut inner = SynthGrads::with_batch(CHUNK, p, BATCH);
+        let mut probe = FaultyOracle::new(&mut inner, FaultPlan::none(19));
+        {
+            let engine = SelectionEngine::with_oracle(&mut probe, &train, &val, h, classes);
+            engine.select(&req).unwrap();
+        }
+        probe.attempts
+    };
+
+    let mut inner = SynthGrads::with_batch(CHUNK, p, BATCH);
+    let mut plan = FaultPlan::none(19);
+    plan.fail_from = attempts_per_round + 1;
+    let mut faulty = FaultyOracle::new(&mut inner, plan);
+    let mut engine = SelectionEngine::with_oracle(&mut faulty, &train, &val, h, classes);
+
+    let clean = engine.select(&req).unwrap();
+    assert_eq!(clean.stats.degradation, Degradation::None);
+
+    engine.reset_round(None);
+    let degraded = engine.select(&req).unwrap();
+    assert_eq!(degraded.stats.degradation, Degradation::ReusedLastRound);
+    assert_eq!(
+        degraded.selection.indices, clean.selection.indices,
+        "the ladder's first rung serves the previous subset"
+    );
+    assert_eq!(degraded.selection.weights, clean.selection.weights);
+
+    // the outage persists: round three degrades the same way
+    engine.reset_round(None);
+    let again = engine.select(&req).unwrap();
+    assert_eq!(again.stats.degradation, Degradation::ReusedLastRound);
+    assert_eq!(again.selection.indices, clean.selection.indices);
+}
+
+#[test]
+fn total_outage_with_no_history_falls_back_to_a_seeded_random_subset() {
+    let (classes, h, d) = (5usize, 3usize, 6usize);
+    let p = h * classes + classes;
+    let train = imbalanced(101, classes, d);
+    let val = imbalanced(102, classes, d);
+    let n = train.len();
+    let budget = n / 4;
+    let req = request("gradmatch", (0..n).collect(), budget);
+
+    let run = || {
+        let mut inner = SynthGrads::with_batch(CHUNK, p, BATCH);
+        let mut plan = FaultPlan::none(23);
+        plan.dispatch_fail = 1.0; // every attempt fails, retries included
+        let mut faulty = FaultyOracle::new(&mut inner, plan);
+        let engine = SelectionEngine::with_oracle(&mut faulty, &train, &val, h, classes);
+        engine.select(&req).unwrap()
+    };
+
+    let got = run();
+    assert_eq!(got.stats.degradation, Degradation::RandomFallback);
+    assert_eq!(got.selection.indices.len(), budget, "the floor still fills the budget");
+    assert!(got.selection.indices.iter().all(|&i| i < n), "picks stay inside the ground set");
+    let mut sorted = got.selection.indices.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), budget, "picks are distinct");
+    assert!(got.selection.weights.iter().all(|&w| w == 1.0), "uniform fallback weights");
+    assert_eq!(got.selection.grad_error, None);
+
+    // deterministic in (seed, rng_tag): a second identical run picks the
+    // same subset — a degraded round is as reproducible as a normal one
+    let again = run();
+    assert_eq!(got.selection, again.selection);
+
+    // and a different round tag draws a different subset
+    let mut other_req = req.clone();
+    other_req.rng_tag = 8;
+    let mut inner = SynthGrads::with_batch(CHUNK, p, BATCH);
+    let mut plan = FaultPlan::none(23);
+    plan.dispatch_fail = 1.0;
+    let mut faulty = FaultyOracle::new(&mut inner, plan);
+    let other = {
+        let engine = SelectionEngine::with_oracle(&mut faulty, &train, &val, h, classes);
+        engine.select(&other_req).unwrap()
+    };
+    assert_eq!(other.stats.degradation, Degradation::RandomFallback);
+    assert_ne!(other.selection.indices, got.selection.indices);
+}

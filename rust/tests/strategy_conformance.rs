@@ -16,7 +16,8 @@
 //!   caps) and `top_k_desc` edge cases (k=0, k=n, all-NaN, tie order).
 
 use gradmatch::data::Dataset;
-use gradmatch::engine::{SelectionEngine, SelectionRequest};
+use gradmatch::engine::{Degradation, SelectionEngine, SelectionRequest};
+use gradmatch::fault::{FaultPlan, FaultyOracle};
 use gradmatch::grads::SynthGrads;
 use gradmatch::rng::Rng;
 use gradmatch::selection::{
@@ -181,6 +182,50 @@ fn dispatch_bounds_hold_per_strategy_family() {
             (oracle.grad_calls, oracle.mean_calls, oracle.gradsum_calls, oracle.eval_calls),
             want,
             "{spec}: dispatch counts"
+        );
+    }
+}
+
+#[test]
+fn zero_fault_wrapper_is_transparent_for_every_spec() {
+    // the fault-injection substrate must cost nothing when armed with
+    // FaultPlan::none: byte-identical selections, identical inner
+    // dispatch counts, fault-free round stats — for EVERY catalog spec
+    let (classes, h, d) = (5usize, 3usize, 6usize);
+    let p = h * classes + classes;
+    let train = imbalanced(51, classes, d);
+    let val = imbalanced(52, classes, d);
+    let n = train.len();
+    let ground: Vec<usize> = (0..n).collect();
+    let budget = n / 4;
+
+    for spec in strategy_specs() {
+        let req = request(spec, ground.clone(), budget);
+
+        let mut bare = SynthGrads::with_batch(CHUNK, p, BATCH);
+        let want = {
+            let engine = SelectionEngine::with_oracle(&mut bare, &train, &val, h, classes);
+            engine.select(&req).unwrap()
+        };
+
+        let mut inner = SynthGrads::with_batch(CHUNK, p, BATCH);
+        let mut faulty = FaultyOracle::new(&mut inner, FaultPlan::none(42));
+        let got = {
+            let engine = SelectionEngine::with_oracle(&mut faulty, &train, &val, h, classes);
+            engine.select(&req).unwrap()
+        };
+        let injected =
+            faulty.injected_failures + faulty.injected_nan_rows + faulty.injected_spikes;
+
+        assert_eq!(got.selection, want.selection, "{spec}: zero-fault wrapper must be transparent");
+        assert_eq!(injected, 0, "{spec}: nothing may be injected");
+        assert_eq!(got.stats.retries, 0, "{spec}");
+        assert_eq!(got.stats.quarantined, 0, "{spec}");
+        assert_eq!(got.stats.degradation, Degradation::None, "{spec}");
+        assert_eq!(
+            (inner.grad_calls, inner.mean_calls, inner.gradsum_calls, inner.eval_calls),
+            (bare.grad_calls, bare.mean_calls, bare.gradsum_calls, bare.eval_calls),
+            "{spec}: wrapped dispatch counts must match the bare oracle"
         );
     }
 }

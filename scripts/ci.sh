@@ -1,24 +1,39 @@
 #!/usr/bin/env bash
 # CI gate for the workspace: build, tests (default AND no-default
-# features), formatting, lints.
+# features), formatting, lints, and (opt-in) the micro-bench perf diff.
 #
-#   scripts/ci.sh          # everything
-#   scripts/ci.sh --fast   # build + tests only (skip fmt/clippy)
+#   scripts/ci.sh           # everything except benches
+#   scripts/ci.sh --fast    # build + tests only (skip fmt/clippy)
+#   scripts/ci.sh --bench   # also run micro_hotpath and diff the
+#                           # round_* notes against the committed
+#                           # rust/BENCH_micro.json snapshot
 #
 # Tier-1 (enforced): cargo build --release && cargo test -q.
 # The suite also runs with --no-default-features (the pure-host math
-# core, no `xla` stub at all) so the feature seam cannot rot, and the
-# two engine-coverage suites (strategy_conformance, engine_reuse) are
-# gated warning-free.  fmt/clippy run when the components are installed;
-# a missing component is reported but does not fail the gate (offline
-# toolchains may omit them), while an installed component failing DOES
-# fail.
+# core, no `xla` stub at all) so the feature seam cannot rot; the
+# fault-injection suite runs explicitly so a filtered default run can
+# never silently drop it; and the two engine-coverage suites
+# (strategy_conformance, engine_reuse) are gated warning-free.
+# fmt/clippy run when the components are installed; a missing component
+# is reported but does not fail the gate (offline toolchains may omit
+# them), while an installed component failing DOES fail.
+#
+# Bench gate (--bench): speedup notes may not drop below 0.75x the
+# committed value; dispatch-count notes may not grow past 1.25x.  Raw
+# timing notes are machine-dependent and are NOT gated.  A snapshot
+# carrying the `snapshot_bootstrap` marker (hand-seeded before the first
+# bench run on a real machine) downgrades failures to warnings — commit
+# a freshly generated rust/BENCH_micro.json to arm the gate.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 fast=0
-[[ "${1:-}" == "--fast" ]] && fast=1
+bench=0
+for arg in "$@"; do
+    [[ "$arg" == "--fast" ]] && fast=1
+    [[ "$arg" == "--bench" ]] && bench=1
+done
 
 echo "== cargo build --release =="
 cargo build --release
@@ -28,6 +43,9 @@ cargo test -q
 
 echo "== cargo test -q --no-default-features (pure-host math core) =="
 cargo test -q --no-default-features
+
+echo "== cargo test -q --test fault_injection (fault-tolerance suite) =="
+cargo test -q --test fault_injection
 
 echo "== warnings gate: strategy_conformance + engine_reuse =="
 # cargo replays cached warnings, so a --no-run rebuild of just the two
@@ -39,6 +57,48 @@ if [[ -n "$conf_warn" ]]; then
     echo "$conf_warn"
     echo "ci: FAIL — warnings in the engine-coverage suites"
     exit 1
+fi
+
+if [[ "$bench" == "1" ]]; then
+    echo "== bench gate: micro_hotpath vs committed rust/BENCH_micro.json =="
+    # stash the committed snapshot BEFORE the bench overwrites the file
+    old=$(git show HEAD:rust/BENCH_micro.json 2>/dev/null || true)
+    cargo bench --bench micro_hotpath
+    # extract "key value" pairs from the notes object of a BenchReport
+    notes() { awk '/"notes": \{/{f=1;next} f&&/^  \}/{f=0} f{gsub(/[":,]/,""); if (NF>=2) print $1, $2}'; }
+    if [[ -z "$old" ]]; then
+        echo "ci: no committed BENCH_micro.json at HEAD — skipping perf diff"
+    else
+        bootstrap=0
+        grep -q '"snapshot_bootstrap"' <<<"$old" && bootstrap=1
+        fail=0
+        while read -r key new; do
+            oldv=$(notes <<<"$old" | awk -v k="$key" '$1==k{print $2; exit}')
+            [[ -z "$oldv" || "$oldv" == "null" || "$new" == "null" ]] && continue
+            case "$key" in
+                *speedup*)
+                    bad=$(awk -v n="$new" -v o="$oldv" 'BEGIN{print (n < 0.75*o) ? 1 : 0}')
+                    kind="speedup regressed (new $new < 0.75 x old $oldv)" ;;
+                round_dispatches_*)
+                    bad=$(awk -v n="$new" -v o="$oldv" 'BEGIN{print (n > 1.25*o) ? 1 : 0}')
+                    kind="dispatch count grew (new $new > 1.25 x old $oldv)" ;;
+                *) continue ;;   # raw timings etc. are machine-dependent
+            esac
+            if [[ "$bad" == "1" ]]; then
+                if [[ "$bootstrap" == "1" ]]; then
+                    echo "ci: WARN (bootstrap snapshot) — $key: $kind"
+                else
+                    echo "ci: FAIL — $key: $kind"
+                    fail=1
+                fi
+            fi
+        done < <(notes < rust/BENCH_micro.json)
+        if [[ "$fail" == "1" ]]; then
+            echo "ci: FAIL — bench regression vs committed BENCH_micro.json"
+            exit 1
+        fi
+        echo "ci: bench notes within tolerance"
+    fi
 fi
 
 if [[ "$fast" == "1" ]]; then
