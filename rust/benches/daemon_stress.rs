@@ -1,0 +1,319 @@
+//! Daemon stress bench — many concurrent clients against the
+//! selection-as-a-service daemon (`gradmatch serve`), including the
+//! adversarial ones, reporting throughput and tail latency into the perf
+//! trajectory (`BENCH_daemon.json`):
+//!
+//! - **throughput**: 6 tenants with mixed strategies hammering rounds
+//!   back-to-back — rounds/sec, p50/p99 round latency
+//! - **adversarial**: well-formed tenants racing hostile-corpus clients,
+//!   oversized requests, mid-round disconnectors and a stalled writer
+//!   against a deliberately small queue — shed rate, success rate, and
+//!   the p99 the well-formed clients still see
+//! - **fault plan**: scheduled dispatch failures + NaN corruption under
+//!   every engine — rounds must still serve (retry/quarantine/ladder),
+//!   with the fault counters surfaced end-to-end
+//!
+//! All daemons bind ephemeral unix sockets; nothing here needs artifacts
+//! or a device.
+
+use std::time::{Duration, Instant};
+
+use gradmatch::bench_harness as bh;
+use gradmatch::engine::SelectionRequest;
+use gradmatch::fault::FaultPlan;
+use gradmatch::jsonlite::{hostile_corpus, Json};
+use gradmatch::server::{
+    ephemeral_socket_path, serve, Bind, DaemonClient, DaemonStats, SelectSpec, ServeOpts,
+};
+
+fn spec(run_id: &str, strategy: &str, rng_tag: u64) -> SelectSpec {
+    let mut s = SelectSpec::new(
+        run_id,
+        SelectionRequest {
+            strategy: strategy.to_string(),
+            budget: 16,
+            lambda: 0.5,
+            eps: 1e-10,
+            is_valid: false,
+            seed: 42,
+            rng_tag,
+            ground: (0..128).collect(),
+        },
+    );
+    s.n_train = 128;
+    s.chunk = 32;
+    s.h = 4;
+    s
+}
+
+fn start(
+    tag: &str,
+    mut f: impl FnMut(&mut ServeOpts),
+) -> (std::thread::JoinHandle<anyhow::Result<DaemonStats>>, Bind) {
+    let bind = Bind::Unix(ephemeral_socket_path(tag));
+    let mut opts = ServeOpts::new(bind.clone());
+    f(&mut opts);
+    let handle = std::thread::spawn(move || serve(opts));
+    (handle, bind)
+}
+
+fn connect(bind: &Bind) -> DaemonClient {
+    DaemonClient::connect_retry(bind, Duration::from_secs(10)).expect("daemon up")
+}
+
+fn rtype(j: &Json) -> &str {
+    j.get("type").and_then(Json::as_str).unwrap_or("<none>")
+}
+
+const STRATEGIES: [&str; 4] = ["gradmatch", "gradmatch-pb", "craig", "random"];
+
+fn main() {
+    let mut rep = bh::BenchReport::new("daemon_stress");
+    let mut all_ok = true;
+
+    // -- phase 1: clean throughput -----------------------------------------
+    bh::section("daemon stress — throughput (6 tenants, mixed strategies)");
+    let (daemon, bind) = start("stress-throughput", |o| {
+        o.engine_cap = 4; // < tenants: the LRU eviction path runs hot
+    });
+    connect(&bind).ping().unwrap();
+    const TENANTS: usize = 6;
+    const ROUNDS: usize = 8;
+    let wall = Instant::now();
+    let mut clients = Vec::new();
+    for t in 0..TENANTS {
+        let bind = bind.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut client = connect(&bind);
+            let run = format!("tenant-{t}");
+            let strategy = STRATEGIES[t % STRATEGIES.len()];
+            let mut lat = Vec::with_capacity(ROUNDS);
+            for r in 0..ROUNDS {
+                let t0 = Instant::now();
+                let resp = client.select(&spec(&run, strategy, 1000 + r as u64)).unwrap();
+                lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                assert_eq!(rtype(&resp), "report", "{}", resp.dump());
+            }
+            lat
+        }));
+    }
+    let mut lat_ms: Vec<f64> = Vec::new();
+    for c in clients {
+        lat_ms.extend(c.join().unwrap());
+    }
+    let wall_s = wall.elapsed().as_secs_f64();
+    let total = (TENANTS * ROUNDS) as f64;
+    let rps = total / wall_s;
+    let p50 = bh::percentile(&lat_ms, 0.50);
+    let p99 = bh::percentile(&lat_ms, 0.99);
+    println!(
+        "  {total:.0} rounds in {wall_s:.2}s — {rps:.1} rounds/sec, p50 {p50:.2}ms, p99 {p99:.2}ms"
+    );
+    connect(&bind).shutdown().unwrap();
+    let snap = daemon.join().unwrap().unwrap();
+    all_ok &= bh::shape_check(
+        "throughput: every round served, none shed",
+        snap.rounds_served == TENANTS as u64 * ROUNDS as u64 && snap.shed_overloaded == 0,
+    );
+    all_ok &= bh::shape_check(
+        "throughput: engine pool evicted under cap pressure",
+        snap.engines_evicted > 0 && snap.engines_pooled <= 4,
+    );
+    rep.note("daemon/rounds_per_sec", rps);
+    rep.note("daemon/p50_ms", p50);
+    rep.note("daemon/p99_ms", p99);
+    rep.note("daemon/engines_built", snap.engines_built as f64);
+    rep.note("daemon/engines_evicted", snap.engines_evicted as f64);
+
+    // -- phase 2: adversarial mix ------------------------------------------
+    bh::section("daemon stress — adversarial mix (small queue, hostile clients)");
+    let (daemon, bind) = start("stress-adversarial", |o| {
+        let mut plan = FaultPlan::none(3);
+        plan.spike_every = 1;
+        plan.spike_ms = 30; // slow the rounds so the tiny queue overflows
+        o.fault_plan = Some(plan);
+        o.queue_cap = 4;
+        o.max_request_bytes = 2048;
+        o.read_timeout_ms = 500; // shed stalled writers fast
+    });
+    connect(&bind).ping().unwrap();
+    let wall = Instant::now();
+    let mut adversaries = Vec::new();
+    // hostile-corpus clients: every line must come back a typed error
+    for _ in 0..2 {
+        let bind = bind.clone();
+        adversaries.push(std::thread::spawn(move || {
+            let mut client = connect(&bind);
+            for line in hostile_corpus() {
+                // blanks get no reply; lines past this daemon's 2048-byte
+                // cap would (correctly) close the connection — the
+                // dedicated oversized clients cover that path
+                if line.trim().is_empty() || line.len() > 1024 {
+                    continue;
+                }
+                client.send_raw(&line).unwrap();
+                let resp = client.recv().unwrap();
+                assert_eq!(rtype(&resp), "error", "{line:?} → {}", resp.dump());
+            }
+        }));
+    }
+    // oversized clients: one fat line, typed reject, connection dropped
+    for _ in 0..2 {
+        let bind = bind.clone();
+        adversaries.push(std::thread::spawn(move || {
+            let mut client = connect(&bind);
+            let fat = format!("{{\"pad\":\"{}\"}}", "x".repeat(4096));
+            client.send_raw(&fat).unwrap();
+            let resp = client.recv().unwrap();
+            assert_eq!(rtype(&resp), "error");
+        }));
+    }
+    // mid-round disconnectors: submit a real round, vanish
+    for i in 0..2 {
+        let bind = bind.clone();
+        adversaries.push(std::thread::spawn(move || {
+            let mut client = connect(&bind);
+            client.send(&spec("vanisher", "gradmatch", i).to_json()).unwrap();
+        }));
+    }
+    // a stalled writer: half a request, then silence — the read timeout
+    // must shed it instead of pinning a handler forever
+    {
+        let bind = bind.clone();
+        adversaries.push(std::thread::spawn(move || {
+            let mut client = connect(&bind);
+            client.send_raw("{\"type\":\"sel").ok(); // no newline follows
+            std::thread::sleep(Duration::from_millis(900));
+        }));
+    }
+    // the well-formed tenants, racing all of the above
+    const GOOD: usize = 6;
+    const GOOD_ROUNDS: usize = 6;
+    let mut good = Vec::new();
+    for t in 0..GOOD {
+        let bind = bind.clone();
+        good.push(std::thread::spawn(move || {
+            let mut client = connect(&bind);
+            let run = format!("good-{t}");
+            let strategy = STRATEGIES[t % STRATEGIES.len()];
+            let mut served: Vec<f64> = Vec::new();
+            let mut shed = 0usize;
+            for r in 0..GOOD_ROUNDS {
+                let t0 = Instant::now();
+                let resp = client.select(&spec(&run, strategy, 500 + r as u64)).unwrap();
+                match rtype(&resp) {
+                    "report" => served.push(t0.elapsed().as_secs_f64() * 1e3),
+                    "error" => {
+                        assert_eq!(
+                            resp.get("code").and_then(Json::as_str),
+                            Some("overloaded"),
+                            "only backpressure may reject a well-formed round: {}",
+                            resp.dump()
+                        );
+                        shed += 1;
+                        std::thread::sleep(Duration::from_millis(25)); // back off
+                    }
+                    other => panic!("unexpected '{other}': {}", resp.dump()),
+                }
+            }
+            (served, shed)
+        }));
+    }
+    let mut served_ms: Vec<f64> = Vec::new();
+    let mut shed_total = 0usize;
+    for g in good {
+        let (served, shed) = g.join().unwrap();
+        served_ms.extend(served);
+        shed_total += shed;
+    }
+    for a in adversaries {
+        a.join().unwrap();
+    }
+    let wall_s = wall.elapsed().as_secs_f64();
+    let attempts = (GOOD * GOOD_ROUNDS) as f64;
+    let shed_rate = shed_total as f64 / attempts;
+    let p99_adv = bh::percentile(&served_ms, 0.99);
+    println!(
+        "  {attempts:.0} well-formed rounds in {wall_s:.2}s under abuse — {} served, {} shed ({:.0}% shed rate), p99 {p99_adv:.2}ms",
+        served_ms.len(),
+        shed_total,
+        shed_rate * 100.0
+    );
+    // the daemon must still be healthy after the storm
+    let mut survivor = connect(&bind);
+    all_ok &= bh::shape_check("adversarial: daemon answers after the storm", {
+        let resp = survivor.select(&spec("survivor", "gradmatch", 9)).unwrap();
+        rtype(&resp) == "report"
+    });
+    survivor.shutdown().unwrap();
+    let snap = daemon.join().unwrap().unwrap();
+    all_ok &= bh::shape_check(
+        "adversarial: every well-formed attempt got a typed answer",
+        served_ms.len() + shed_total == attempts as usize,
+    );
+    all_ok &= bh::shape_check(
+        "adversarial: hostile lines were rejected, not served",
+        snap.bad_requests > 40 && snap.oversized >= 2,
+    );
+    all_ok &= bh::shape_check(
+        "adversarial: the stalled writer was shed by the read timeout",
+        snap.read_timeouts >= 1,
+    );
+    rep.note("daemon/shed_rate", shed_rate);
+    rep.note("daemon/adversarial_p99_ms", p99_adv);
+    rep.note("daemon/adversarial_served", served_ms.len() as f64);
+    rep.note("daemon/adversarial_bad_requests", snap.bad_requests as f64);
+    rep.note("daemon/adversarial_oversized", snap.oversized as f64);
+    rep.note("daemon/adversarial_read_timeouts", snap.read_timeouts as f64);
+
+    // -- phase 3: fault plan under every engine ----------------------------
+    bh::section("daemon stress — fault plan (scheduled failures + NaN rows)");
+    let (daemon, bind) = start("stress-faults", |o| {
+        let mut plan = FaultPlan::none(9);
+        plan.fail_every = 3; // every 3rd dispatch fails (retry succeeds)
+        plan.nan_rate = 0.2; // corrupted rows must be quarantined
+        o.fault_plan = Some(plan);
+    });
+    let mut client = connect(&bind);
+    let mut retries = 0u64;
+    let mut quarantined = 0u64;
+    for run in ["faulty-a", "faulty-b"] {
+        for r in 0..4u64 {
+            let resp = client.select(&spec(run, "gradmatch", 700 + r)).unwrap();
+            assert_eq!(rtype(&resp), "report", "{}", resp.dump());
+            retries += resp
+                .path(&["report", "round", "retries"])
+                .and_then(Json::as_usize)
+                .unwrap_or(0) as u64;
+            quarantined += resp
+                .path(&["report", "round", "quarantined"])
+                .and_then(Json::as_usize)
+                .unwrap_or(0) as u64;
+        }
+    }
+    client.shutdown().unwrap();
+    let snap = daemon.join().unwrap().unwrap();
+    println!(
+        "  8 rounds under faults — {retries} retried dispatches, {quarantined} quarantined rows, degradation [none {} / reused {} / random {}]",
+        snap.degradation[0], snap.degradation[1], snap.degradation[2]
+    );
+    all_ok &= bh::shape_check("faults: all rounds served", snap.rounds_served == 8);
+    all_ok &= bh::shape_check("faults: the retry path actually ran", retries > 0);
+    all_ok &= bh::shape_check(
+        "faults: daemon counters mirror the reports",
+        snap.retries == retries && snap.quarantined == quarantined,
+    );
+    rep.note("daemon/fault_retries", retries as f64);
+    rep.note("daemon/fault_quarantined", quarantined as f64);
+    rep.note(
+        "daemon/fault_degraded_rounds",
+        (snap.degradation[1] + snap.degradation[2]) as f64,
+    );
+    rep.note("daemon/all_shape_checks", if all_ok { 1.0 } else { 0.0 });
+
+    rep.write("BENCH_daemon.json").unwrap();
+    if !all_ok {
+        eprintln!("daemon_stress: shape checks FAILED");
+        std::process::exit(1);
+    }
+}

@@ -72,6 +72,22 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// The `q`-th percentile (0.0..=1.0) of `samples` by nearest-rank on a
+/// sorted copy — tail-latency reporting for the daemon stress bench
+/// (`percentile(&lat, 0.99)` = p99).  NaN samples are dropped; an empty
+/// slice reports 0.0 so a bench with a failed phase still writes its
+/// report instead of panicking.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    let mut v: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = q.clamp(0.0, 1.0);
+    let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+    v[rank - 1]
+}
+
 // ---------------------------------------------------------------------------
 // machine-readable bench reports (the perf trajectory)
 // ---------------------------------------------------------------------------
@@ -252,6 +268,19 @@ mod tests {
         });
         assert_eq!(count, 5);
         assert!(best <= mean);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 0.5), 50.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.0), 1.0, "q=0 clamps to the minimum");
+        assert_eq!(percentile(&[], 0.5), 0.0, "empty input must not panic");
+        assert_eq!(percentile(&[f64::NAN, 3.0], 0.99), 3.0, "NaNs dropped");
+        // unsorted input is handled
+        assert_eq!(percentile(&[5.0, 1.0, 3.0], 0.5), 3.0);
     }
 
     #[test]

@@ -31,25 +31,60 @@ fn fnv1a(bytes: &[u8]) -> u32 {
 }
 
 /// Save a model state (+ the epoch it was taken at).
+///
+/// Crash-safe: the bytes are written to a temp file in the *same directory*
+/// and atomically renamed over `path`, so a crash mid-write can never leave a
+/// truncated checkpoint under the final name — readers see either the old
+/// complete file or the new complete file.
 pub fn save(path: &Path, st: &ModelState, epoch: u64) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let mut f = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
-    f.write_all(MAGIC)?;
-    let name = st.meta.name.as_bytes();
-    f.write_all(&(name.len() as u32).to_le_bytes())?;
-    f.write_all(name)?;
-    f.write_all(&epoch.to_le_bytes())?;
-    for v in [st.meta.d as u32, st.meta.h as u32, st.meta.c as u32] {
-        f.write_all(&v.to_le_bytes())?;
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow!("checkpoint path {} has no file name", path.display()))?
+        .to_string_lossy()
+        .into_owned();
+    // Same directory as the target: rename(2) is only atomic within a
+    // filesystem, and temp_dir() may be a different mount.
+    let tmp = path.with_file_name(format!(".{}.tmp.{}", file_name, std::process::id()));
+    let write = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(MAGIC)?;
+        let name = st.meta.name.as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&epoch.to_le_bytes())?;
+        for v in [st.meta.d as u32, st.meta.h as u32, st.meta.c as u32] {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        let flat = st.pack();
+        let bytes: Vec<u8> = flat.iter().flat_map(|v| v.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+        f.write_all(&fnv1a(&bytes).to_le_bytes())?;
+        // flush to stable storage before the rename publishes the file
+        f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+        Ok(())
+    })();
+    if let Err(e) = write {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
     }
-    let flat = st.pack();
-    let bytes: Vec<u8> = flat.iter().flat_map(|v| v.to_le_bytes()).collect();
-    f.write_all(&bytes)?;
-    f.write_all(&fnv1a(&bytes).to_le_bytes())?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow!("renaming {} -> {}: {e}", tmp.display(), path.display())
+    })?;
     Ok(())
+}
+
+/// `read_exact` with a descriptive error naming the field and the file, so a
+/// truncated checkpoint reports *what* was missing instead of a bare
+/// "failed to fill whole buffer".
+fn read_field(f: &mut std::fs::File, buf: &mut [u8], what: &str, path: &Path) -> Result<()> {
+    f.read_exact(buf).with_context(|| {
+        format!("{}: checkpoint truncated or corrupt while reading {what}", path.display())
+    })
 }
 
 /// Load a model state; validates magic, model identity, dims, and checksum.
@@ -57,28 +92,28 @@ pub fn load(path: &Path, meta: &ModelMeta) -> Result<(ModelState, u64)> {
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
     let mut magic = [0u8; 6];
-    f.read_exact(&mut magic)?;
+    read_field(&mut f, &mut magic, "magic", path)?;
     if &magic != MAGIC {
         bail!("{}: not a gradmatch checkpoint", path.display());
     }
     let mut u32buf = [0u8; 4];
-    f.read_exact(&mut u32buf)?;
+    read_field(&mut f, &mut u32buf, "model name length", path)?;
     let name_len = u32::from_le_bytes(u32buf) as usize;
     if name_len > 256 {
         bail!("checkpoint name too long");
     }
     let mut name = vec![0u8; name_len];
-    f.read_exact(&mut name)?;
+    read_field(&mut f, &mut name, "model name", path)?;
     let name = String::from_utf8(name).map_err(|_| anyhow!("bad checkpoint name"))?;
     if name != meta.name {
         bail!("checkpoint is for model '{name}', expected '{}'", meta.name);
     }
     let mut u64buf = [0u8; 8];
-    f.read_exact(&mut u64buf)?;
+    read_field(&mut f, &mut u64buf, "epoch", path)?;
     let epoch = u64::from_le_bytes(u64buf);
     let mut dims = [0u32; 3];
     for d in dims.iter_mut() {
-        f.read_exact(&mut u32buf)?;
+        read_field(&mut f, &mut u32buf, "dims", path)?;
         *d = u32::from_le_bytes(u32buf);
     }
     if dims != [meta.d as u32, meta.h as u32, meta.c as u32] {
@@ -86,8 +121,8 @@ pub fn load(path: &Path, meta: &ModelMeta) -> Result<(ModelState, u64)> {
     }
     let n_state = 2 * (meta.d * meta.h + meta.h + meta.h * meta.c + meta.c);
     let mut bytes = vec![0u8; n_state * 4];
-    f.read_exact(&mut bytes)?;
-    f.read_exact(&mut u32buf)?;
+    read_field(&mut f, &mut bytes, "state tensor", path)?;
+    read_field(&mut f, &mut u32buf, "checksum", path)?;
     let want_crc = u32::from_le_bytes(u32buf);
     if fnv1a(&bytes) != want_crc {
         bail!("{}: checksum mismatch (corrupt checkpoint)", path.display());
@@ -162,6 +197,49 @@ mod tests {
         bytes[mid] ^= 0xFF;
         std::fs::write(&path, &bytes).unwrap();
         assert!(load(&path, &meta).is_err());
+    }
+
+    #[test]
+    fn truncated_checkpoint_is_descriptive_err_never_panic() {
+        let meta = meta();
+        let st = sample_state(&meta);
+        let path = std::env::temp_dir().join("gm_ckpt_test/trunc.ckpt");
+        save(&path, &st, 9).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // every possible truncation point must produce Err, never a panic
+        for cut in [0, 3, 6, 8, full.len() / 4, full.len() / 2, full.len() - 5, full.len() - 1] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let err = load(&path, &meta).expect_err(&format!("cut at {cut} must fail"));
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("trunc.ckpt"),
+                "error should name the file (cut {cut}): {msg}"
+            );
+        }
+        // a mid-file truncation should say what field was being read
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let msg = format!("{:#}", load(&path, &meta).unwrap_err());
+        assert!(msg.contains("truncated"), "expected 'truncated' in: {msg}");
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_temp_file() {
+        let meta = meta();
+        let st = sample_state(&meta);
+        let dir = std::env::temp_dir().join("gm_ckpt_atomic_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("e.ckpt");
+        save(&path, &st, 1).unwrap();
+        // overwrite in place: the final file is always a complete checkpoint
+        save(&path, &st, 2).unwrap();
+        let (_, epoch) = load(&path, &meta).unwrap();
+        assert_eq!(epoch, 2);
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
     }
 
     #[test]

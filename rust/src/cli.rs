@@ -8,6 +8,8 @@
 //! gradmatch select  one-shot engine round; [--strategies a,b,c] batches
 //!                   requests over one shared staging pass; dumps
 //!                   SelectionReport JSON (selection + observability)
+//! gradmatch serve   selection-as-a-service daemon over a unix/tcp socket
+//!                   (line-delimited JSON; bounded queue + deadlines)
 //! gradmatch list-strategies  print every spec with adaptivity/warm flags
 //! gradmatch inspect print the artifact manifest summary
 //! ```
@@ -30,7 +32,7 @@ impl Cli {
     /// Parse `args` (excluding argv[0]).
     pub fn parse(args: &[String]) -> Result<Cli> {
         if args.is_empty() {
-            bail!("usage: gradmatch <train|sweep|select|inspect> [flags]");
+            bail!("usage: gradmatch <train|sweep|select|serve|inspect> [flags]");
         }
         let command = args[0].clone();
         let mut flags = Vec::new();
@@ -155,6 +157,17 @@ USAGE:
                     strategy — including the -pb variants, entropy and
                     forgetting — also runs device-free through the engine's
                     oracle backend (tests/benches)
+  gradmatch serve   selection-as-a-service daemon.  Line-delimited JSON over
+                    --socket /path.sock (unix) or --tcp host:port; per-run
+                    engine pool (--engines N, LRU), bounded admission
+                    (--queue-cap N → typed `overloaded` when full),
+                    per-request deadlines (--deadline-ms D default, typed
+                    `deadline_exceeded`), slow/oversized client shedding
+                    (--read-timeout-ms, --max-request-bytes), optional fault
+                    injection under every engine (--fault-plan \"spec\"),
+                    graceful drain on SIGTERM/SIGINT or a shutdown request.
+                    --smoke=true runs a self-contained daemon+client
+                    round-trip on an ephemeral socket and exits (CI hook)
   gradmatch list-strategies  print every strategy spec + adaptive/warm flags
   gradmatch inspect print artifact manifest summary
 

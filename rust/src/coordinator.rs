@@ -249,6 +249,7 @@ impl Coordinator {
             early_stop_frac: if is_early_stop { Some(cfg.budget_frac) } else { None },
             overlap: cfg.overlap,
             stale_tol: 2.0,
+            overlap_wait_ms: 2_000,
         };
         let st = self.rt.init(&cfg.model, seed as i32)?;
         let key = RunKey {

@@ -756,24 +756,7 @@ impl<'a> SelectionEngine<'a> {
     /// the request's `(seed, rng_tag)`, so a degraded round is as
     /// reproducible as a normal one.
     fn degrade(&self, req: &SelectionRequest, err: &anyhow::Error) -> (Selection, Degradation) {
-        if let Some(prev) = self.last_good.borrow().as_ref() {
-            eprintln!(
-                "engine: solve failed ({err:#}); reusing last round's subset ({} rows)",
-                prev.indices.len()
-            );
-            return (prev.clone(), Degradation::ReusedLastRound);
-        }
-        let n = req.ground.len();
-        let k = req.budget.min(n);
-        eprintln!("engine: solve failed ({err:#}); no previous subset — random fallback ({k} rows)");
-        let mut rng = req.round_rng().split(0xFA11);
-        let picks = rng.sample_indices(n, k);
-        let selection = Selection {
-            indices: picks.into_iter().map(|i| req.ground[i]).collect(),
-            weights: vec![1.0; k],
-            grad_error: None,
-        };
-        (selection, Degradation::RandomFallback)
+        degrade_selection(self.last_good.borrow().as_ref(), req, err)
     }
 
     /// Answer a batch of requests against this round's model state —
@@ -784,16 +767,173 @@ impl<'a> SelectionEngine<'a> {
     }
 
     fn report(&self, req: &SelectionRequest, selection: Selection, t0: Instant) -> SelectionReport {
-        let total = t0.elapsed().as_secs_f64();
-        let mut stats = self.shared.take_stats();
-        stats.solve_secs = (total - stats.stage_secs).max(0.0);
-        stats.engine_round = self.shared.round_index();
-        SelectionReport {
-            strategy: req.strategy.clone(),
-            budget: req.budget,
-            selection,
-            stats,
+        finish_report(&self.shared, req, selection, t0)
+    }
+}
+
+/// The degradation ladder, shared by both engine flavors: reuse the last
+/// good subset when one exists, else a seeded random subset — deterministic
+/// in the request's `(seed, rng_tag)`.
+fn degrade_selection(
+    last_good: Option<&Selection>,
+    req: &SelectionRequest,
+    err: &anyhow::Error,
+) -> (Selection, Degradation) {
+    if let Some(prev) = last_good {
+        eprintln!(
+            "engine: solve failed ({err:#}); reusing last round's subset ({} rows)",
+            prev.indices.len()
+        );
+        return (prev.clone(), Degradation::ReusedLastRound);
+    }
+    let n = req.ground.len();
+    let k = req.budget.min(n);
+    eprintln!("engine: solve failed ({err:#}); no previous subset — random fallback ({k} rows)");
+    let mut rng = req.round_rng().split(0xFA11);
+    let picks = rng.sample_indices(n, k);
+    let selection = Selection {
+        indices: picks.into_iter().map(|i| req.ground[i]).collect(),
+        weights: vec![1.0; k],
+        grad_error: None,
+    };
+    (selection, Degradation::RandomFallback)
+}
+
+/// Drain the round probe into a finished report (both engine flavors).
+fn finish_report(
+    shared: &RoundShared,
+    req: &SelectionRequest,
+    selection: Selection,
+    t0: Instant,
+) -> SelectionReport {
+    let total = t0.elapsed().as_secs_f64();
+    let mut stats = shared.take_stats();
+    stats.solve_secs = (total - stats.stage_secs).max(0.0);
+    stats.engine_round = shared.round_index();
+    SelectionReport {
+        strategy: req.strategy.clone(),
+        budget: req.budget,
+        selection,
+        stats,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PooledEngine — the owned, Send engine the selection daemon pools per run
+// ---------------------------------------------------------------------------
+
+/// An owned oracle-backed engine: the daemon's per-run pool slot.
+///
+/// [`SelectionEngine`] borrows its gradient source and datasets, which is
+/// right for a single run driving its own rounds but cannot live in a
+/// long-lived multi-tenant pool.  `PooledEngine` owns everything — a boxed
+/// [`GradOracle`] stack (e.g. `FaultyOracle<SynthGrads>` under a fault
+/// plan), `Arc` datasets — and is `Send`, so `par::map_tasks` can carry one
+/// run's engine onto whichever worker thread picks that run up while the
+/// round-ordering guarantee holds (the pool checks a run's slot *out*, so
+/// two rounds of one run can never race).
+///
+/// Semantics match the oracle arm of [`SelectionEngine`] exactly: same
+/// shared staging cache, same degradation ladder, same report shape —
+/// pinned by `pooled_engine_matches_selection_engine` below.
+pub struct PooledEngine {
+    oracle: Box<dyn GradOracle + Send>,
+    h: usize,
+    c: usize,
+    /// mini-batch size handed to strategy constructors (PB ground sets)
+    batch: usize,
+    train: Arc<Dataset>,
+    val: Arc<Dataset>,
+    shared: RoundShared,
+    last_good: Option<Selection>,
+}
+
+impl PooledEngine {
+    /// Build an engine owning its oracle and datasets.  `h`/`c` give the
+    /// class column layout; the oracle's P must equal `h*c + c` (the
+    /// sliced-stage contract), which is validated here so a misconfigured
+    /// tenant fails its *first* request with a typed error instead of a
+    /// staging panic mid-round.
+    pub fn new(
+        oracle: Box<dyn GradOracle + Send>,
+        train: Arc<Dataset>,
+        val: Arc<Dataset>,
+        h: usize,
+        c: usize,
+    ) -> Result<PooledEngine> {
+        if oracle.p() != h * c + c {
+            return Err(anyhow!(
+                "oracle P={} does not match class layout h*c+c={} (h={h}, c={c})",
+                oracle.p(),
+                h * c + c
+            ));
         }
+        let batch = oracle.batch_rows();
+        Ok(PooledEngine {
+            oracle,
+            h,
+            c,
+            batch,
+            train,
+            val,
+            shared: RoundShared::default(),
+            last_good: None,
+        })
+    }
+
+    /// The engine's shared staging cache (stats probe lives here).
+    pub fn shared(&self) -> &RoundShared {
+        &self.shared
+    }
+
+    /// Install the retry policy applied at the chunk-dispatch seam.
+    pub fn set_retry_policy(&self, policy: RetryPolicy) {
+        self.shared.set_retry_policy(policy);
+    }
+
+    /// Start the next selection round: invalidate the round-scoped caches,
+    /// pool the staging buffers, advance the engine-round index.
+    pub fn reset_round(&mut self) {
+        self.shared.reset();
+    }
+
+    /// Answer one request (see [`SelectionEngine::select`]).
+    pub fn select(&mut self, req: &SelectionRequest) -> Result<SelectionReport> {
+        let (mut strategy, _warm) = parse_strategy(&req.strategy, self.batch)?;
+        self.select_with(strategy.as_mut(), req)
+    }
+
+    /// Answer one request with a caller-held strategy instance (see
+    /// [`SelectionEngine::select_with`]).
+    pub fn select_with(
+        &mut self,
+        strategy: &mut dyn Strategy,
+        req: &SelectionRequest,
+    ) -> Result<SelectionReport> {
+        let t0 = Instant::now();
+        let mut rng = req.round_rng();
+        let solved = strategy.select(&mut SelectCtx {
+            src: GradSource::Oracle { oracle: &mut *self.oracle, h: self.h, c: self.c },
+            train: &self.train,
+            ground: &req.ground,
+            val: &self.val,
+            budget: req.budget,
+            lambda: req.lambda,
+            eps: req.eps,
+            is_valid: req.is_valid,
+            rng: &mut rng,
+            round: Some(&self.shared),
+        });
+        let selection = match solved {
+            Ok(sel) => sel,
+            Err(e) => {
+                let (sel, rung) = degrade_selection(self.last_good.as_ref(), req, &e);
+                self.shared.note_degradation(rung);
+                sel
+            }
+        };
+        self.last_good = Some(selection.clone());
+        Ok(finish_report(&self.shared, req, selection, t0))
     }
 }
 
@@ -907,6 +1047,76 @@ mod tests {
             assert_eq!(Degradation::from_str(rung.as_str()).unwrap(), rung);
         }
         assert!(Degradation::from_str("panic").is_err());
+    }
+
+    #[test]
+    fn pooled_engine_is_send() {
+        fn assert_send<T: Send>() {}
+        // the whole point of PooledEngine: par::map_tasks can carry a
+        // run's engine onto a worker thread
+        assert_send::<PooledEngine>();
+    }
+
+    #[test]
+    fn pooled_engine_matches_selection_engine() {
+        use crate::grads::SynthGrads;
+        use crate::tensor::Matrix;
+
+        let (h, c) = (3usize, 2usize);
+        let p = h * c + c;
+        let make = |n: usize, seed: u64| {
+            let mut rng = Rng::new(seed);
+            let x = Matrix::from_vec(n, 4, (0..n * 4).map(|_| rng.gaussian_f32()).collect());
+            let y: Vec<i32> = (0..n).map(|i| (i % c) as i32).collect();
+            Dataset { x, y, classes: c }
+        };
+        let train = Arc::new(make(24, 11));
+        let val = Arc::new(make(8, 12));
+        let mut req = SelectionRequest {
+            strategy: "gradmatch".into(),
+            budget: 6,
+            lambda: 0.5,
+            eps: 1e-10,
+            is_valid: false,
+            seed: 42,
+            rng_tag: 1000,
+            ground: (0..24).collect(),
+        };
+
+        let mut borrowed = SynthGrads::new(8, p);
+        let mut eng = SelectionEngine::with_oracle(&mut borrowed, &train, &val, h, c);
+        let mut pooled = PooledEngine::new(
+            Box::new(SynthGrads::new(8, p)),
+            train.clone(),
+            val.clone(),
+            h,
+            c,
+        )
+        .unwrap();
+
+        // round 1, and a reused round 2, must match the borrowing engine
+        for round in 0..2 {
+            if round > 0 {
+                eng.reset_round(None);
+                pooled.reset_round();
+                req.rng_tag = 1001;
+            }
+            let want = eng.select(&req).unwrap();
+            let got = pooled.select(&req).unwrap();
+            assert_eq!(want.selection, got.selection, "round {round} diverged");
+            assert_eq!(got.stats.engine_round, round);
+            assert_eq!(got.stats.degradation, Degradation::None);
+        }
+
+        // a mismatched class layout is a typed construction error
+        let bad = PooledEngine::new(
+            Box::new(SynthGrads::new(8, p + 1)),
+            train.clone(),
+            val.clone(),
+            h,
+            c,
+        );
+        assert!(bad.is_err());
     }
 
     #[test]

@@ -67,6 +67,45 @@ impl FaultPlan {
             spike_ms: 0,
         }
     }
+
+    /// Parse a `key=value,key=value` spec (the `serve --fault-plan` flag).
+    ///
+    /// Keys mirror the struct fields: `seed`, `dispatch_fail`, `fail_every`,
+    /// `fail_from`, `nan_rate`, `spike_every`, `spike_ms`.  Unset keys keep
+    /// the [`FaultPlan::none`] defaults (seed 0); an unknown key or an
+    /// unparsable value is an error naming the offending pair.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::none(0);
+        for pair in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow!("fault-plan entry '{pair}' is not key=value"))?;
+            let (key, val) = (key.trim(), val.trim());
+            let bad = || anyhow!("fault-plan entry '{pair}': bad value");
+            match key {
+                "seed" => plan.seed = val.parse().map_err(|_| bad())?,
+                "dispatch_fail" => plan.dispatch_fail = val.parse().map_err(|_| bad())?,
+                "fail_every" => plan.fail_every = val.parse().map_err(|_| bad())?,
+                "fail_from" => plan.fail_from = val.parse().map_err(|_| bad())?,
+                "nan_rate" => plan.nan_rate = val.parse().map_err(|_| bad())?,
+                "spike_every" => plan.spike_every = val.parse().map_err(|_| bad())?,
+                "spike_ms" => plan.spike_ms = val.parse().map_err(|_| bad())?,
+                _ => {
+                    return Err(anyhow!(
+                        "fault-plan entry '{pair}': unknown key (expected seed, \
+                         dispatch_fail, fail_every, fail_from, nan_rate, \
+                         spike_every, spike_ms)"
+                    ))
+                }
+            }
+            for rate in [plan.dispatch_fail, plan.nan_rate] {
+                if !(0.0..=1.0).contains(&rate) {
+                    return Err(anyhow!("fault-plan entry '{pair}': rate outside [0, 1]"));
+                }
+            }
+        }
+        Ok(plan)
+    }
 }
 
 /// A [`GradOracle`] decorator that injects the faults of a [`FaultPlan`].
@@ -77,9 +116,14 @@ impl FaultPlan {
 /// ledger let assertions tie observed behavior (retries, quarantined
 /// counts, never-selected indices) back to exactly what was injected.
 ///
+/// Generic over the inner oracle (`T: GradOracle`), so it wraps a borrowed
+/// oracle in tests (`&mut SynthGrads`, via the `&mut T` blanket impl) or an
+/// owned one in the daemon's per-run pool (`FaultyOracle<SynthGrads>` boxed
+/// as `Box<dyn GradOracle + Send>`).
+///
 /// [`poisoned_rows`]: FaultyOracle::poisoned_rows
-pub struct FaultyOracle<'a> {
-    inner: &'a mut dyn GradOracle,
+pub struct FaultyOracle<T: GradOracle> {
+    inner: T,
     pub plan: FaultPlan,
     /// dispatch attempts observed (drives the deterministic schedules)
     pub attempts: u64,
@@ -94,8 +138,8 @@ pub struct FaultyOracle<'a> {
     pub poisoned_rows: Vec<usize>,
 }
 
-impl<'a> FaultyOracle<'a> {
-    pub fn new(inner: &'a mut dyn GradOracle, plan: FaultPlan) -> Self {
+impl<T: GradOracle> FaultyOracle<T> {
+    pub fn new(inner: T, plan: FaultPlan) -> Self {
         FaultyOracle {
             inner,
             plan,
@@ -151,7 +195,7 @@ impl<'a> FaultyOracle<'a> {
     }
 }
 
-impl GradOracle for FaultyOracle<'_> {
+impl<T: GradOracle> GradOracle for FaultyOracle<T> {
     fn chunk_rows(&self) -> usize {
         self.inner.chunk_rows()
     }
@@ -254,6 +298,49 @@ mod tests {
         assert!(faulty.grads_chunk(chunk).is_err());
         assert!(faulty.grads_chunk(chunk).is_err());
         assert_eq!(inner.grad_calls, 2, "the outage never reaches the inner oracle");
+    }
+
+    #[test]
+    fn plan_parse_roundtrip_and_errors() {
+        let p = FaultPlan::parse(
+            "seed=7, dispatch_fail=0.1, fail_every=4, fail_from=9, nan_rate=0.5, \
+             spike_every=3, spike_ms=20",
+        )
+        .unwrap();
+        assert_eq!(
+            p,
+            FaultPlan {
+                seed: 7,
+                dispatch_fail: 0.1,
+                fail_every: 4,
+                fail_from: 9,
+                nan_rate: 0.5,
+                spike_every: 3,
+                spike_ms: 20,
+            }
+        );
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::none(0));
+        assert_eq!(FaultPlan::parse("seed=3").unwrap(), FaultPlan::none(3));
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("seed").is_err());
+        assert!(FaultPlan::parse("dispatch_fail=nope").is_err());
+        assert!(FaultPlan::parse("nan_rate=1.5").is_err());
+    }
+
+    #[test]
+    fn wraps_owned_oracles_too() {
+        // the daemon boxes an owned FaultyOracle<SynthGrads> behind the
+        // GradOracle seam — pin that the owned form injects identically
+        let p = 9;
+        let ds = toy_dataset(4, vec![0, 1, 2, 0], 3, 35);
+        let mut plan = FaultPlan::none(5);
+        plan.fail_every = 2;
+        let mut owned: Box<dyn GradOracle + Send> =
+            Box::new(FaultyOracle::new(SynthGrads::new(4, p), plan));
+        let chunk = &chunks(&ds, 4)[0];
+        assert!(owned.grads_chunk(chunk).is_ok());
+        assert!(owned.grads_chunk(chunk).is_err());
+        assert!(owned.grads_chunk(chunk).is_ok());
     }
 
     #[test]

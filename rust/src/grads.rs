@@ -78,6 +78,71 @@ pub trait GradOracle {
     fn eval_chunk(&mut self, chunk: &PaddedChunk) -> Result<EvalEntries>;
 }
 
+/// A `&mut` reference dispatches through to the referent, so decorators
+/// (`FaultyOracle`, `Retrying`) can be generic over *either* an owned oracle
+/// or a borrowed one — the daemon boxes owned stacks, tests keep borrowing.
+impl<T: GradOracle + ?Sized> GradOracle for &mut T {
+    fn chunk_rows(&self) -> usize {
+        (**self).chunk_rows()
+    }
+
+    fn p(&self) -> usize {
+        (**self).p()
+    }
+
+    fn batch_rows(&self) -> usize {
+        (**self).batch_rows()
+    }
+
+    fn grads_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
+        (**self).grads_chunk(chunk)
+    }
+
+    fn mean_grad_chunk(&mut self, chunk: &PaddedChunk) -> Result<Vec<f32>> {
+        (**self).mean_grad_chunk(chunk)
+    }
+
+    fn batch_gradsum_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
+        (**self).batch_gradsum_chunk(chunk)
+    }
+
+    fn eval_chunk(&mut self, chunk: &PaddedChunk) -> Result<EvalEntries> {
+        (**self).eval_chunk(chunk)
+    }
+}
+
+/// Boxed oracles dispatch through — the engine pool stores per-run oracle
+/// stacks as `Box<dyn GradOracle + Send>`.
+impl GradOracle for Box<dyn GradOracle + Send> {
+    fn chunk_rows(&self) -> usize {
+        (**self).chunk_rows()
+    }
+
+    fn p(&self) -> usize {
+        (**self).p()
+    }
+
+    fn batch_rows(&self) -> usize {
+        (**self).batch_rows()
+    }
+
+    fn grads_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
+        (**self).grads_chunk(chunk)
+    }
+
+    fn mean_grad_chunk(&mut self, chunk: &PaddedChunk) -> Result<Vec<f32>> {
+        (**self).mean_grad_chunk(chunk)
+    }
+
+    fn batch_gradsum_chunk(&mut self, chunk: &PaddedChunk) -> Result<Matrix> {
+        (**self).batch_gradsum_chunk(chunk)
+    }
+
+    fn eval_chunk(&mut self, chunk: &PaddedChunk) -> Result<EvalEntries> {
+        (**self).eval_chunk(chunk)
+    }
+}
+
 /// The production oracle: a model snapshot driven through the runtime.
 pub struct RtGrads<'a> {
     pub rt: &'a Runtime,

@@ -1,12 +1,24 @@
 //! Minimal JSON parser/serializer (serde is not in the offline vendor set).
 //!
 //! Covers the full JSON grammar the project touches: the artifact
-//! `manifest.json` written by `python/compile/aot.py` and the result files
-//! the experiment harness emits.  Numbers are f64; no streaming; inputs are
-//! small (KBs).
+//! `manifest.json` written by `python/compile/aot.py`, the result files the
+//! experiment harness emits, and — since the selection daemon speaks
+//! line-delimited JSON to untrusted clients — hostile wire input.  Numbers
+//! are f64; no streaming; inputs are small (KBs).
+//!
+//! Hardening contract (the daemon relies on all three):
+//! - trailing garbage after the top-level value is rejected;
+//! - nesting beyond [`MAX_DEPTH`] is rejected (bounds parser recursion, so
+//!   a `[[[[...` bomb errors instead of overflowing the stack);
+//! - non-finite numbers (`1e999`) and raw control bytes inside strings are
+//!   rejected (both are invalid JSON that `f64::parse`/raw copy would
+//!   otherwise accept).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+/// Maximum array/object nesting depth accepted by [`Json::parse`].
+pub const MAX_DEPTH: usize = 128;
 
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -36,7 +48,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     /// Parse a JSON document.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), pos: 0 };
+        let mut p = Parser { b: s.as_bytes(), pos: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -189,11 +201,21 @@ fn write_escaped(s: &str, out: &mut String) {
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { pos: self.pos, msg: msg.to_string() }
+    }
+
+    /// Enter one nesting level of array/object; errors past [`MAX_DEPTH`].
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
     }
 
     fn ws(&mut self) {
@@ -271,11 +293,19 @@ impl<'a> Parser<'a> {
                         _ => return Err(self.err("unknown escape")),
                     }
                 }
+                c if c < 0x20 => {
+                    self.pos -= 1;
+                    return Err(self.err("raw control character in string"));
+                }
                 _ => {
                     // copy raw UTF-8 bytes through
                     let start = self.pos - 1;
                     let mut end = self.pos;
-                    while end < self.b.len() && self.b[end] != b'"' && self.b[end] != b'\\' {
+                    while end < self.b.len()
+                        && self.b[end] != b'"'
+                        && self.b[end] != b'\\'
+                        && self.b[end] >= 0x20
+                    {
                         end += 1;
                     }
                     out.push_str(
@@ -313,17 +343,21 @@ impl<'a> Parser<'a> {
         }
         let txt = std::str::from_utf8(&self.b[start..self.pos])
             .map_err(|_| self.err("bad number"))?;
-        txt.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
+        let v = txt.parse::<f64>().map_err(|_| self.err("bad number"))?;
+        if !v.is_finite() {
+            return Err(self.err("number out of range"));
+        }
+        Ok(Json::Num(v))
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.eat(b'[')?;
         let mut items = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -334,6 +368,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -342,11 +377,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.eat(b'{')?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -362,12 +399,63 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
             }
         }
     }
+}
+
+/// A corpus of malformed payloads every layer that parses untrusted JSON must
+/// reject without panicking.  Shared between the unit corpus test below and
+/// the daemon's per-connection isolation test (`tests/daemon.rs`), so the
+/// wire protocol and the parser are hardened against the same inputs.
+///
+/// Entries are single-line (no `\n`) so they can be shipped verbatim over the
+/// line-delimited protocol.
+pub fn hostile_corpus() -> Vec<String> {
+    let mut v: Vec<String> = [
+        "",
+        "   ",
+        "{",
+        "}",
+        "[",
+        "]",
+        "{]",
+        "[}",
+        "[1,]",
+        "{\"a\":}",
+        "{\"a\"}",
+        "{\"a\":1,}",
+        "{a:1}",
+        "{'a':1}",
+        "nul",
+        "truefalse",
+        "+1",
+        "01x",
+        "1 2",
+        "{}garbage",
+        "\"unterminated",
+        "\"bad escape \\q\"",
+        "\"bad unicode \\u12\"",
+        "1e999",
+        "-1e999",
+        "\u{0}",
+        "{\"a\": \"\u{1}\"}",
+        "\u{feff}{}",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    // Nesting bombs: just past the limit, and deep enough that unbounded
+    // recursion would overflow the stack before erroring.
+    v.push("[".repeat(MAX_DEPTH + 1));
+    v.push(format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1)));
+    v.push("[".repeat(100_000));
+    v.push(format!("{}{}", "{\"k\":".repeat(MAX_DEPTH + 1), "}".repeat(MAX_DEPTH + 1)));
+    v
 }
 
 #[cfg(test)]
@@ -429,6 +517,51 @@ mod tests {
         assert_eq!(Json::Num(5.0).as_usize(), Some(5));
         assert_eq!(Json::Num(5.5).as_usize(), None);
         assert_eq!(Json::Num(-1.0).as_usize(), None);
+    }
+
+    #[test]
+    fn hostile_corpus_all_rejected() {
+        for (i, payload) in hostile_corpus().iter().enumerate() {
+            assert!(!payload.contains('\n'), "corpus entry {i} is not single-line");
+            let r = Json::parse(payload);
+            assert!(
+                r.is_err(),
+                "corpus entry {i} ({:?}...) parsed as {:?}",
+                &payload[..payload.len().min(40)],
+                r
+            );
+        }
+    }
+
+    #[test]
+    fn depth_limit_boundary() {
+        // exactly MAX_DEPTH levels parses...
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        // ...one more is a descriptive error, not a stack overflow
+        let over = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let e = Json::parse(&over).unwrap_err();
+        assert!(e.msg.contains("nesting"), "unexpected error: {e}");
+        // siblings do not accumulate depth
+        let wide = format!("[{}[1]]", "[1],".repeat(MAX_DEPTH * 2));
+        assert!(Json::parse(&wide).is_ok());
+    }
+
+    #[test]
+    fn rejects_nonfinite_numbers() {
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+        assert!(Json::parse("1e-999").is_ok()); // underflows to 0, finite
+    }
+
+    #[test]
+    fn rejects_raw_control_chars_but_accepts_escaped() {
+        assert!(Json::parse("\"a\u{1}b\"").is_err());
+        assert!(Json::parse("\"a\nb\"").is_err());
+        assert_eq!(Json::parse("\"a\\nb\"").unwrap().as_str(), Some("a\nb"));
+        // dump() escapes control chars, so every dumped value reparses
+        let j = Json::Str("ctl \u{1} nl \n".into());
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
     }
 
     #[test]

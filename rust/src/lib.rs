@@ -30,6 +30,8 @@
 //! | `submod`      | facility location + lazy greedy (CRAIG, FeatureFL)     |
 //! | `trainer`     | Algorithm 1: weighted-SGD loop driving engine rounds   |
 //! | `overlap`     | background selection worker (double-buffered subsets)  |
+//! | `server`      | selection-as-a-service daemon: engine pool, bounded    |
+//! |               | queue, deadlines, typed shedding, graceful drain       |
 //! | `fault`       | seeded fault injection over the `GradOracle` seam      |
 //! | `coordinator` | config → dataset → engine/trainer; sweeps, baselines   |
 //! | `runtime`     | PJRT client + AOT'd HLO executables                    |
@@ -76,5 +78,7 @@ pub mod overlap;
 pub mod runtime;
 #[cfg(feature = "xla")]
 pub mod selection;
+#[cfg(feature = "xla")]
+pub mod server;
 #[cfg(feature = "xla")]
 pub mod trainer;

@@ -26,6 +26,7 @@ fn run(args: &[String]) -> Result<()> {
         "train" => cmd_train(&cli),
         "sweep" => cmd_sweep(&cli),
         "select" => cmd_select(&cli),
+        "serve" => cmd_serve(&cli),
         "inspect" => cmd_inspect(&cli),
         "list-strategies" => cmd_list_strategies(),
         other => Err(anyhow!("unknown command '{other}'\n\n{}", usage())),
@@ -138,6 +139,56 @@ fn cmd_select(cli: &Cli) -> Result<()> {
     let reports = coord.selection_round(&cfg, &spec_refs)?;
     let doc = arr(reports.iter().map(|r| r.to_json()).collect());
     println!("{}", doc.dump());
+    Ok(())
+}
+
+/// Selection-as-a-service daemon (see `gradmatch::server`).  `--smoke`
+/// runs the self-contained daemon+client round-trip ci.sh drives.
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    use gradmatch::server::{serve, smoke, Bind, ServeOpts};
+    if cli.flag("smoke").map(|v| v != "false").unwrap_or(false) {
+        return smoke();
+    }
+    let bind = match (cli.flag("socket"), cli.flag("tcp")) {
+        (Some(path), None) => Bind::Unix(std::path::PathBuf::from(path)),
+        (None, Some(addr)) => Bind::Tcp(addr.to_string()),
+        (None, None) => Bind::Unix(std::path::PathBuf::from("gradmatch.sock")),
+        (Some(_), Some(_)) => {
+            return Err(anyhow!("serve: pass --socket OR --tcp, not both"));
+        }
+    };
+    let mut opts = ServeOpts::new(bind);
+    opts.install_signal_handlers = true;
+    let parse_flag = |name: &str, default: u64| -> Result<u64> {
+        match cli.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<u64>().map_err(|e| anyhow!("--{name} '{v}': {e}")),
+        }
+    };
+    opts.queue_cap = parse_flag("queue-cap", opts.queue_cap as u64)? as usize;
+    opts.engine_cap = parse_flag("engines", opts.engine_cap as u64)? as usize;
+    opts.max_conns = parse_flag("max-conns", opts.max_conns as u64)? as usize;
+    opts.default_deadline_ms = parse_flag("deadline-ms", opts.default_deadline_ms)?;
+    opts.read_timeout_ms = parse_flag("read-timeout-ms", opts.read_timeout_ms)?;
+    opts.max_request_bytes = parse_flag("max-request-bytes", opts.max_request_bytes as u64)? as usize;
+    if let Some(spec) = cli.flag("fault-plan") {
+        opts.fault_plan = Some(gradmatch::fault::FaultPlan::parse(spec)?);
+    }
+    println!(
+        "serve: {:?} (queue-cap {}, engines {}, deadline {}ms{})",
+        opts.bind,
+        opts.queue_cap,
+        opts.engine_cap,
+        opts.default_deadline_ms,
+        if opts.fault_plan.is_some() { ", fault injection ON" } else { "" }
+    );
+    let stats = serve(opts)?;
+    println!(
+        "serve: done — {} rounds served, {} shed, {} deadline-exceeded",
+        stats.rounds_served,
+        stats.shed_overloaded,
+        stats.deadline_replies + stats.deadline_skipped
+    );
     Ok(())
 }
 

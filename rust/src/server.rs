@@ -1,0 +1,1303 @@
+//! Selection-as-a-service: a multi-tenant daemon in front of the engine.
+//!
+//! The ROADMAP's north star is serving GRAD-MATCH selection to many
+//! concurrent training runs; MILO (PAPERS.md) argues the selection step
+//! should be decoupled from any one training job precisely so it can be
+//! amortized as a service.  This module is that client-facing layer, with
+//! **robustness as the contract**:
+//!
+//! - **Engine pool** — per-run [`PooledEngine`]s keyed by run id, LRU-evicted
+//!   past a capacity bound.  A run's engine is checked *out* while its round
+//!   runs, so one run's rounds can never race (ordering within a run holds),
+//!   while independent runs fan out over [`par::map_tasks`].
+//! - **Backpressure** — a bounded request queue.  Admission counts queued +
+//!   in-flight rounds; past the bound a request is *shed* with a typed
+//!   `overloaded` response immediately, never queued unboundedly.
+//! - **Deadlines** — every select carries a deadline.  A job that expires
+//!   before dispatch is skipped; a round that outlives its budget gets a
+//!   typed `deadline_exceeded` reply while the late result is discarded.
+//!   The accept loop never stalls on a slow round.
+//! - **Isolation** — a malformed payload (see [`crate::jsonlite`]'s hostile
+//!   corpus), an oversized line, a slow writer, or a mid-round disconnect
+//!   poisons only that connection.  Worker panics are caught and surfaced
+//!   as typed `internal` errors; the daemon stays up.
+//! - **Graceful drain** — SIGTERM/SIGINT or a `shutdown` request stops
+//!   admission, finishes every in-flight round, flushes a final stats line,
+//!   and returns the run's [`DaemonStats`].
+//! - **Observability** — a `stats` request exposes queue depth, in-flight
+//!   rounds, per-rung [`Degradation`] counts, and every shed/deadline/error
+//!   counter.
+//!
+//! PR 6's fault layer plugs in underneath: with a [`FaultPlan`]
+//! (`serve --fault-plan`), every pooled engine's oracle is wrapped in a
+//! [`FaultyOracle`], so the stress bench drives outages through the full
+//! daemon path and watches the degradation ladder from the outside.
+//!
+//! # Wire protocol
+//!
+//! Line-delimited JSON over a unix or tcp socket; one request per line, one
+//! response line per request, in order.  Requests:
+//!
+//! ```text
+//! {"type":"ping"}
+//! {"type":"stats"}
+//! {"type":"shutdown"}
+//! {"type":"select","run_id":"r1","dataset":"synmnist","n_train":256,
+//!  "chunk":64,"h":8,"data_seed":"0","deadline_ms":30000,
+//!  "request":{ ...SelectionRequest::to_json... }}
+//! ```
+//!
+//! Responses: `{"type":"pong"}`, `{"type":"stats",...}`,
+//! `{"type":"ok","draining":true}`,
+//! `{"type":"report","run_id":...,"report":{...},"queue_ms":...,"round_ms":...}`,
+//! and typed errors `{"type":"error","code":C,"msg":...}` with `C` one of
+//! `bad_request` | `overloaded` | `deadline_exceeded` | `shutting_down` |
+//! `oversized` | `slow_client` | `internal`.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::DatasetCard;
+use crate::engine::{Degradation, PooledEngine, SelectionRequest};
+use crate::fault::{FaultPlan, FaultyOracle};
+use crate::grads::GradOracle;
+use crate::grads::SynthGrads;
+use crate::jsonlite::{num, obj, s, Json};
+use crate::par;
+
+// ---------------------------------------------------------------------------
+// Options and addressing
+// ---------------------------------------------------------------------------
+
+/// Where the daemon listens.
+#[derive(Clone, Debug)]
+pub enum Bind {
+    /// unix-domain socket at this path (created on bind, removed on drain)
+    Unix(PathBuf),
+    /// tcp address, e.g. `127.0.0.1:7878`
+    Tcp(String),
+}
+
+/// Daemon configuration (all bounds have safe defaults).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    pub bind: Bind,
+    /// admission bound: queued + in-flight selects past this are shed with
+    /// a typed `overloaded` response
+    pub queue_cap: usize,
+    /// pooled per-run engines kept alive (LRU eviction past this)
+    pub engine_cap: usize,
+    /// concurrent client connections; later connects get `overloaded`
+    pub max_conns: usize,
+    /// deadline applied to selects that do not carry `deadline_ms`
+    pub default_deadline_ms: u64,
+    /// request lines longer than this are rejected (`oversized`) and the
+    /// connection closed
+    pub max_request_bytes: usize,
+    /// per-read socket timeout shedding slow/stalled writers (0 = off)
+    pub read_timeout_ms: u64,
+    /// wrap every pooled engine's oracle in a [`FaultyOracle`] with this
+    /// plan (the stress bench's outage path)
+    pub fault_plan: Option<FaultPlan>,
+    /// install SIGTERM/SIGINT handlers that trigger a graceful drain
+    /// (process-wide; in-process tests leave this off)
+    pub install_signal_handlers: bool,
+}
+
+impl ServeOpts {
+    /// Defaults for the given address.
+    pub fn new(bind: Bind) -> ServeOpts {
+        ServeOpts {
+            bind,
+            queue_cap: 64,
+            engine_cap: 8,
+            max_conns: 64,
+            default_deadline_ms: 30_000,
+            max_request_bytes: 1 << 20,
+            read_timeout_ms: 30_000,
+            fault_plan: None,
+            install_signal_handlers: false,
+        }
+    }
+}
+
+/// A per-process-unique unix-socket path under the temp dir (smoke mode and
+/// the test/bench suites bind here).
+pub fn ephemeral_socket_path(tag: &str) -> PathBuf {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "gradmatch-daemon-{}-{}-{}.sock",
+        std::process::id(),
+        tag,
+        n
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Listener / stream abstraction (unix or tcp)
+// ---------------------------------------------------------------------------
+
+enum Listener {
+    Unix(UnixListener, PathBuf),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn bind(bind: &Bind) -> Result<Listener> {
+        match bind {
+            Bind::Unix(path) => {
+                // a stale socket file from a crashed daemon must not block
+                // restart
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .map_err(|e| anyhow!("binding unix socket {}: {e}", path.display()))?;
+                l.set_nonblocking(true)?;
+                Ok(Listener::Unix(l, path.clone()))
+            }
+            Bind::Tcp(addr) => {
+                let l = TcpListener::bind(addr)
+                    .map_err(|e| anyhow!("binding tcp {addr}: {e}"))?;
+                l.set_nonblocking(true)?;
+                Ok(Listener::Tcp(l))
+            }
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Unix(l, _) => l.accept().map(|(st, _)| Stream::Unix(st)),
+            Listener::Tcp(l) => l.accept().map(|(st, _)| Stream::Tcp(st)),
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// A connected client stream (unix or tcp), blocking mode.
+pub enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> std::io::Result<Stream> {
+        match self {
+            Stream::Unix(st) => st.try_clone().map(Stream::Unix),
+            Stream::Tcp(st) => st.try_clone().map(Stream::Tcp),
+        }
+    }
+
+    fn set_timeouts(&self, dur: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(st) => {
+                st.set_read_timeout(dur)?;
+                st.set_write_timeout(dur)
+            }
+            Stream::Tcp(st) => {
+                st.set_read_timeout(dur)?;
+                st.set_write_timeout(dur)
+            }
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(st) => st.set_nonblocking(nb),
+            Stream::Tcp(st) => st.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(st) => st.read(buf),
+            Stream::Tcp(st) => st.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(st) => st.write(buf),
+            Stream::Tcp(st) => st.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(st) => st.flush(),
+            Stream::Tcp(st) => st.flush(),
+        }
+    }
+}
+
+fn write_line(w: &mut impl Write, j: &Json) -> std::io::Result<()> {
+    let mut line = j.dump();
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
+    w.flush()
+}
+
+fn error_json(code: &str, msg: &str) -> Json {
+    obj(vec![
+        ("type", s("error")),
+        ("code", s(code)),
+        ("msg", s(msg)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Per-run engine pool
+// ---------------------------------------------------------------------------
+
+/// The dataset/oracle fingerprint of one tenant run.  A `select` naming an
+/// existing run id with a different fingerprint rebuilds that run's engine
+/// (config change), it never silently serves the old one.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct RunCfg {
+    dataset: String,
+    n_train: usize,
+    chunk: usize,
+    h: usize,
+    data_seed: u64,
+}
+
+struct RunSlot {
+    engine: PooledEngine,
+    cfg: RunCfg,
+    /// rounds served by this engine (reset_round between them)
+    rounds: u64,
+    last_used: u64,
+}
+
+struct EnginePool {
+    cap: usize,
+    tick: u64,
+    slots: HashMap<String, RunSlot>,
+}
+
+// ---------------------------------------------------------------------------
+// Daemon state
+// ---------------------------------------------------------------------------
+
+struct Job {
+    run_id: String,
+    cfg: RunCfg,
+    req: SelectionRequest,
+    deadline: Instant,
+    enqueued: Instant,
+    resp: mpsc::Sender<Json>,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    /// admitted selects not yet answered (queued + in flight) — the
+    /// admission bound counts this, so draining the queue into a dispatch
+    /// batch cannot defeat backpressure
+    outstanding: usize,
+    draining: bool,
+}
+
+#[derive(Default)]
+struct Counters {
+    rounds_served: AtomicU64,
+    shed_overloaded: AtomicU64,
+    shed_shutting_down: AtomicU64,
+    deadline_replies: AtomicU64,
+    deadline_skipped: AtomicU64,
+    bad_requests: AtomicU64,
+    oversized: AtomicU64,
+    read_timeouts: AtomicU64,
+    internal_errors: AtomicU64,
+    dropped_replies: AtomicU64,
+    conns_opened: AtomicU64,
+    conns_rejected: AtomicU64,
+    engines_built: AtomicU64,
+    engines_evicted: AtomicU64,
+    retries: AtomicU64,
+    quarantined: AtomicU64,
+    deg_none: AtomicU64,
+    deg_reused: AtomicU64,
+    deg_random: AtomicU64,
+}
+
+/// Final (or point-in-time) daemon statistics — what the `stats` request
+/// serializes and what [`serve`] returns after the drain.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DaemonStats {
+    pub queue_depth: u64,
+    pub inflight_rounds: u64,
+    pub engines_pooled: u64,
+    pub draining: bool,
+    pub rounds_served: u64,
+    pub shed_overloaded: u64,
+    pub shed_shutting_down: u64,
+    /// typed `deadline_exceeded` replies (round outlived its budget)
+    pub deadline_replies: u64,
+    /// jobs that expired in the queue and were skipped unstarted
+    pub deadline_skipped: u64,
+    pub bad_requests: u64,
+    pub oversized: u64,
+    pub read_timeouts: u64,
+    pub internal_errors: u64,
+    /// round results whose client had already given up or vanished
+    pub dropped_replies: u64,
+    pub conns_opened: u64,
+    pub conns_rejected: u64,
+    pub engines_built: u64,
+    pub engines_evicted: u64,
+    pub retries: u64,
+    pub quarantined: u64,
+    /// per-rung degradation counts: [none, reused-last-round, random-fallback]
+    pub degradation: [u64; 3],
+}
+
+impl DaemonStats {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("type", s("stats")),
+            ("queue_depth", num(self.queue_depth as f64)),
+            ("inflight_rounds", num(self.inflight_rounds as f64)),
+            ("engines_pooled", num(self.engines_pooled as f64)),
+            ("draining", Json::Bool(self.draining)),
+            ("rounds_served", num(self.rounds_served as f64)),
+            ("shed_overloaded", num(self.shed_overloaded as f64)),
+            ("shed_shutting_down", num(self.shed_shutting_down as f64)),
+            ("deadline_replies", num(self.deadline_replies as f64)),
+            ("deadline_skipped", num(self.deadline_skipped as f64)),
+            ("bad_requests", num(self.bad_requests as f64)),
+            ("oversized", num(self.oversized as f64)),
+            ("read_timeouts", num(self.read_timeouts as f64)),
+            ("internal_errors", num(self.internal_errors as f64)),
+            ("dropped_replies", num(self.dropped_replies as f64)),
+            ("conns_opened", num(self.conns_opened as f64)),
+            ("conns_rejected", num(self.conns_rejected as f64)),
+            ("engines_built", num(self.engines_built as f64)),
+            ("engines_evicted", num(self.engines_evicted as f64)),
+            ("retries", num(self.retries as f64)),
+            ("quarantined", num(self.quarantined as f64)),
+            (
+                "degradation",
+                obj(vec![
+                    (Degradation::None.as_str(), num(self.degradation[0] as f64)),
+                    (Degradation::ReusedLastRound.as_str(), num(self.degradation[1] as f64)),
+                    (Degradation::RandomFallback.as_str(), num(self.degradation[2] as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+struct Daemon {
+    queue: Mutex<QueueState>,
+    queue_cv: Condvar,
+    pool: Mutex<EnginePool>,
+    stats: Counters,
+    shutdown: AtomicBool,
+    opts: ServeOpts,
+}
+
+impl Daemon {
+    fn new(opts: ServeOpts) -> Daemon {
+        Daemon {
+            queue: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                outstanding: 0,
+                draining: false,
+            }),
+            queue_cv: Condvar::new(),
+            pool: Mutex::new(EnginePool {
+                cap: opts.engine_cap.max(1),
+                tick: 0,
+                slots: HashMap::new(),
+            }),
+            stats: Counters::default(),
+            shutdown: AtomicBool::new(false),
+            opts,
+        }
+    }
+
+    /// Begin the graceful drain: reject new selects, let the dispatcher
+    /// finish what is queued, wake everything that waits.
+    fn begin_shutdown(&self) {
+        {
+            let mut q = self.queue.lock().unwrap();
+            q.draining = true;
+        }
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue_cv.notify_all();
+    }
+
+    fn snapshot(&self) -> DaemonStats {
+        let (queued, outstanding, draining) = {
+            let q = self.queue.lock().unwrap();
+            (q.jobs.len() as u64, q.outstanding as u64, q.draining)
+        };
+        let pooled = self.pool.lock().unwrap().slots.len() as u64;
+        let c = &self.stats;
+        let get = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        DaemonStats {
+            queue_depth: queued,
+            inflight_rounds: outstanding.saturating_sub(queued),
+            engines_pooled: pooled,
+            draining,
+            rounds_served: get(&c.rounds_served),
+            shed_overloaded: get(&c.shed_overloaded),
+            shed_shutting_down: get(&c.shed_shutting_down),
+            deadline_replies: get(&c.deadline_replies),
+            deadline_skipped: get(&c.deadline_skipped),
+            bad_requests: get(&c.bad_requests),
+            oversized: get(&c.oversized),
+            read_timeouts: get(&c.read_timeouts),
+            internal_errors: get(&c.internal_errors),
+            dropped_replies: get(&c.dropped_replies),
+            conns_opened: get(&c.conns_opened),
+            conns_rejected: get(&c.conns_rejected),
+            engines_built: get(&c.engines_built),
+            engines_evicted: get(&c.engines_evicted),
+            retries: get(&c.retries),
+            quarantined: get(&c.quarantined),
+            degradation: [get(&c.deg_none), get(&c.deg_reused), get(&c.deg_random)],
+        }
+    }
+
+    // -- engine pool --------------------------------------------------------
+
+    /// Take the run's engine out of the pool (building it on first sight or
+    /// on a fingerprint change).  While checked out, no other worker can
+    /// touch this run — one run's rounds stay ordered.
+    fn checkout(&self, run_id: &str, cfg: &RunCfg) -> Result<RunSlot> {
+        let prev = {
+            let mut pool = self.pool.lock().unwrap();
+            pool.slots.remove(run_id)
+        };
+        if let Some(slot) = prev {
+            if slot.cfg == *cfg {
+                return Ok(slot);
+            }
+            // same tenant, new fingerprint: rebuild below
+            self.stats.engines_evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        // build outside the pool lock — dataset generation is not free and
+        // must not block other runs' checkouts
+        let engine = self.build_engine(cfg)?;
+        self.stats.engines_built.fetch_add(1, Ordering::Relaxed);
+        Ok(RunSlot {
+            engine,
+            cfg: cfg.clone(),
+            rounds: 0,
+            last_used: 0,
+        })
+    }
+
+    fn checkin(&self, run_id: String, mut slot: RunSlot) {
+        let mut pool = self.pool.lock().unwrap();
+        pool.tick += 1;
+        slot.last_used = pool.tick;
+        pool.slots.insert(run_id, slot);
+        while pool.slots.len() > pool.cap {
+            let victim = pool
+                .slots
+                .iter()
+                .min_by_key(|(_, sl)| sl.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    pool.slots.remove(&k);
+                    self.stats.engines_evicted.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn build_engine(&self, cfg: &RunCfg) -> Result<PooledEngine> {
+        let card = DatasetCard::by_name(&cfg.dataset).ok_or_else(|| {
+            anyhow!(
+                "unknown dataset card '{}' (`gradmatch inspect` lists the catalog)",
+                cfg.dataset
+            )
+        })?;
+        let c = card.classes;
+        let p = cfg.h * c + c;
+        let splits = card.generate(cfg.data_seed, cfg.n_train);
+        let synth = SynthGrads::new(cfg.chunk, p);
+        let oracle: Box<dyn GradOracle + Send> = match self.opts.fault_plan {
+            Some(plan) => Box::new(FaultyOracle::new(synth, plan)),
+            None => Box::new(synth),
+        };
+        PooledEngine::new(oracle, Arc::new(splits.train), Arc::new(splits.val), cfg.h, c)
+    }
+
+    // -- the worker side ----------------------------------------------------
+
+    /// Run one admitted job to completion and answer its client.  Never
+    /// panics outward: a panicking round is caught and surfaced as a typed
+    /// `internal` error (that run's engine is dropped; the next request
+    /// rebuilds it).
+    fn process(&self, job: &Job) {
+        let response = if Instant::now() >= job.deadline {
+            self.stats.deadline_skipped.fetch_add(1, Ordering::Relaxed);
+            error_json(
+                "deadline_exceeded",
+                "round deadline expired while queued; skipped unstarted",
+            )
+        } else {
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.round(job)
+            }));
+            match caught {
+                Ok(Ok(resp)) => resp,
+                Ok(Err(e)) => {
+                    self.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    error_json("bad_request", &format!("{e:#}"))
+                }
+                Err(_) => {
+                    self.stats.internal_errors.fetch_add(1, Ordering::Relaxed);
+                    error_json("internal", "selection round panicked; engine discarded")
+                }
+            }
+        };
+        if job.resp.send(response).is_err() {
+            // client gave up (deadline) or vanished — the daemon is fine
+            self.stats.dropped_replies.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut q = self.queue.lock().unwrap();
+        q.outstanding = q.outstanding.saturating_sub(1);
+    }
+
+    fn round(&self, job: &Job) -> Result<Json> {
+        let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
+        let mut slot = self.checkout(&job.run_id, &job.cfg)?;
+        if slot.rounds > 0 {
+            slot.engine.reset_round();
+        }
+        let t0 = Instant::now();
+        let solved = slot.engine.select(&job.req);
+        match solved {
+            Ok(report) => {
+                slot.rounds += 1;
+                let c = &self.stats;
+                c.rounds_served.fetch_add(1, Ordering::Relaxed);
+                c.retries.fetch_add(report.stats.retries as u64, Ordering::Relaxed);
+                c.quarantined.fetch_add(report.stats.quarantined as u64, Ordering::Relaxed);
+                match report.stats.degradation {
+                    Degradation::None => c.deg_none.fetch_add(1, Ordering::Relaxed),
+                    Degradation::ReusedLastRound => c.deg_reused.fetch_add(1, Ordering::Relaxed),
+                    Degradation::RandomFallback => c.deg_random.fetch_add(1, Ordering::Relaxed),
+                };
+                let resp = obj(vec![
+                    ("type", s("report")),
+                    ("run_id", s(&job.run_id)),
+                    ("report", report.to_json()),
+                    ("queue_ms", num(queue_ms)),
+                    ("round_ms", num(t0.elapsed().as_secs_f64() * 1e3)),
+                ]);
+                self.checkin(job.run_id.clone(), slot);
+                Ok(resp)
+            }
+            Err(e) => {
+                // an unknown strategy spec etc. — the engine itself is
+                // healthy, keep it pooled
+                self.checkin(job.run_id.clone(), slot);
+                Err(e)
+            }
+        }
+    }
+}
+
+/// The dispatcher: drains the queue in batches, groups jobs by run id
+/// (stable order → one run's rounds execute in arrival order), and fans
+/// independent runs out over [`par::map_tasks`].  Returns only when the
+/// daemon is draining AND the queue is empty — i.e. after every admitted
+/// round has been answered.
+fn dispatcher(d: &Daemon) {
+    loop {
+        let batch: Vec<Job> = {
+            let mut q = d.queue.lock().unwrap();
+            loop {
+                if !q.jobs.is_empty() {
+                    break;
+                }
+                if d.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let (guard, _) = d
+                    .queue_cv
+                    .wait_timeout(q, Duration::from_millis(100))
+                    .unwrap();
+                q = guard;
+            }
+            q.jobs.drain(..).collect()
+        };
+        // group by run id, preserving arrival order within and across runs
+        let mut order: Vec<String> = Vec::new();
+        let mut groups: HashMap<String, Vec<Job>> = HashMap::new();
+        for job in batch {
+            if !groups.contains_key(&job.run_id) {
+                order.push(job.run_id.clone());
+            }
+            groups.entry(job.run_id.clone()).or_default().push(job);
+        }
+        let tasks: Vec<Mutex<Option<Vec<Job>>>> = order
+            .iter()
+            .map(|rid| Mutex::new(groups.remove(rid)))
+            .collect();
+        par::map_tasks(&tasks, |cell| {
+            let jobs = cell.lock().unwrap().take();
+            if let Some(jobs) = jobs {
+                for job in &jobs {
+                    d.process(job);
+                }
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------------
+
+// -- small jsonlite field readers (daemon envelope) -------------------------
+
+fn field_str(j: &Json, k: &str) -> Option<String> {
+    j.get(k).and_then(Json::as_str).map(str::to_string)
+}
+
+fn field_usize(j: &Json, k: &str, default: usize) -> Result<usize> {
+    match j.get(k) {
+        None => Ok(default),
+        Some(v) => v
+            .as_usize()
+            .ok_or_else(|| anyhow!("field '{k}' must be a non-negative integer")),
+    }
+}
+
+fn field_u64(j: &Json, k: &str, default: u64) -> Result<u64> {
+    match j.get(k) {
+        None => Ok(default),
+        Some(Json::Str(v)) => v.parse::<u64>().map_err(|e| anyhow!("field '{k}': {e}")),
+        Some(v) => v
+            .as_usize()
+            .map(|u| u as u64)
+            .ok_or_else(|| anyhow!("field '{k}' must be an integer or decimal string")),
+    }
+}
+
+/// Parse + validate one select envelope into an admissible job skeleton.
+fn parse_select(j: &Json, default_deadline_ms: u64) -> Result<(String, RunCfg, SelectionRequest, Duration)> {
+    let run_id = field_str(j, "run_id").ok_or_else(|| anyhow!("select: missing 'run_id'"))?;
+    if run_id.is_empty() || run_id.len() > 128 {
+        return Err(anyhow!("select: 'run_id' must be 1..=128 bytes"));
+    }
+    let cfg = RunCfg {
+        dataset: field_str(j, "dataset").unwrap_or_else(|| "synmnist".to_string()),
+        n_train: field_usize(j, "n_train", 256)?,
+        chunk: field_usize(j, "chunk", 64)?,
+        h: field_usize(j, "h", 8)?,
+        data_seed: field_u64(j, "data_seed", 0)?,
+    };
+    if cfg.chunk == 0 || cfg.chunk > 4096 {
+        return Err(anyhow!("select: 'chunk' must be in 1..=4096"));
+    }
+    if cfg.h == 0 || cfg.h > 1024 {
+        return Err(anyhow!("select: 'h' must be in 1..=1024"));
+    }
+    if cfg.n_train == 0 || cfg.n_train > 100_000 {
+        return Err(anyhow!("select: 'n_train' must be in 1..=100000"));
+    }
+    let req = SelectionRequest::from_json(
+        j.get("request")
+            .ok_or_else(|| anyhow!("select: missing 'request'"))?,
+    )?;
+    if req.ground.is_empty() {
+        return Err(anyhow!("select: empty ground set"));
+    }
+    if req.ground.len() > cfg.n_train {
+        return Err(anyhow!("select: ground set larger than the dataset"));
+    }
+    if let Some(&bad) = req.ground.iter().find(|&&i| i >= cfg.n_train) {
+        return Err(anyhow!(
+            "select: ground index {bad} out of range (n_train {})",
+            cfg.n_train
+        ));
+    }
+    if req.budget == 0 {
+        return Err(anyhow!("select: budget must be >= 1"));
+    }
+    let deadline_ms = field_u64(j, "deadline_ms", default_deadline_ms)?;
+    let deadline = Duration::from_millis(deadline_ms.clamp(1, 3_600_000));
+    Ok((run_id, cfg, req, deadline))
+}
+
+/// Serve one connection until EOF, a fatal read error, or an
+/// oversized/stalled request.  Every failure mode answers (when possible)
+/// with a typed error and affects only this connection.
+fn handle_conn(d: &Arc<Daemon>, stream: Stream) {
+    let read_timeout = match d.opts.read_timeout_ms {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    };
+    let _ = stream.set_timeouts(read_timeout);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let max = d.opts.max_request_bytes;
+    loop {
+        let mut line: Vec<u8> = Vec::new();
+        let got = (&mut reader).take(max as u64 + 1).read_until(b'\n', &mut line);
+        match got {
+            Ok(0) => return, // clean EOF
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                d.stats.read_timeouts.fetch_add(1, Ordering::Relaxed);
+                let _ = write_line(
+                    &mut writer,
+                    &error_json("slow_client", "read timed out; closing connection"),
+                );
+                return;
+            }
+            Err(_) => return,
+        }
+        if line.len() > max {
+            d.stats.oversized.fetch_add(1, Ordering::Relaxed);
+            let _ = write_line(
+                &mut writer,
+                &error_json("oversized", &format!("request exceeds {max} bytes")),
+            );
+            return; // the rest of the oversized line is unreadable garbage
+        }
+        let text = match std::str::from_utf8(&line) {
+            Ok(t) => t.trim(),
+            Err(_) => {
+                d.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                let _ = write_line(&mut writer, &error_json("bad_request", "invalid utf-8"));
+                continue;
+            }
+        };
+        if text.is_empty() {
+            continue;
+        }
+        let parsed = match Json::parse(text) {
+            Ok(j) => j,
+            Err(e) => {
+                d.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                let _ = write_line(&mut writer, &error_json("bad_request", &e.to_string()));
+                continue;
+            }
+        };
+        match parsed.get("type").and_then(Json::as_str) {
+            Some("ping") => {
+                let _ = write_line(&mut writer, &obj(vec![("type", s("pong"))]));
+            }
+            Some("stats") => {
+                let _ = write_line(&mut writer, &d.snapshot().to_json());
+            }
+            Some("shutdown") => {
+                d.begin_shutdown();
+                let _ = write_line(
+                    &mut writer,
+                    &obj(vec![("type", s("ok")), ("draining", Json::Bool(true))]),
+                );
+            }
+            Some("select") => {
+                let resp = handle_select(d, &parsed);
+                if write_line(&mut writer, &resp).is_err() {
+                    return; // client vanished; nothing else to do
+                }
+            }
+            _ => {
+                d.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                let _ = write_line(
+                    &mut writer,
+                    &error_json("bad_request", "unknown or missing 'type'"),
+                );
+            }
+        }
+    }
+}
+
+/// Admit (or shed) one select and wait — deadline-bounded — for its reply.
+fn handle_select(d: &Arc<Daemon>, j: &Json) -> Json {
+    let (run_id, cfg, req, deadline) = match parse_select(j, d.opts.default_deadline_ms) {
+        Ok(parts) => parts,
+        Err(e) => {
+            d.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+            return error_json("bad_request", &format!("{e:#}"));
+        }
+    };
+    let (tx, rx) = mpsc::channel::<Json>();
+    {
+        let mut q = d.queue.lock().unwrap();
+        if q.draining || d.shutdown.load(Ordering::SeqCst) {
+            d.stats.shed_shutting_down.fetch_add(1, Ordering::Relaxed);
+            return error_json("shutting_down", "daemon is draining; not accepting rounds");
+        }
+        if q.outstanding >= d.opts.queue_cap {
+            // backpressure: shed NOW with a typed response — the client
+            // learns in O(1) that it must retry/back off, instead of
+            // queueing unboundedly behind everyone else
+            d.stats.shed_overloaded.fetch_add(1, Ordering::Relaxed);
+            return error_json(
+                "overloaded",
+                &format!(
+                    "queue full ({} outstanding rounds >= cap {}); retry later",
+                    q.outstanding, d.opts.queue_cap
+                ),
+            );
+        }
+        q.outstanding += 1;
+        let now = Instant::now();
+        q.jobs.push_back(Job {
+            run_id,
+            cfg,
+            req,
+            deadline: now + deadline,
+            enqueued: now,
+            resp: tx,
+        });
+    }
+    d.queue_cv.notify_all();
+    // small grace on top of the deadline: the worker checks the deadline
+    // too, so the common expiry path is its typed reply, not this timeout
+    match rx.recv_timeout(deadline + Duration::from_millis(250)) {
+        Ok(resp) => resp,
+        Err(RecvTimeoutError::Timeout) => {
+            d.stats.deadline_replies.fetch_add(1, Ordering::Relaxed);
+            error_json(
+                "deadline_exceeded",
+                "round still running past its deadline; result discarded",
+            )
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            // worker dropped the sender without answering (should be
+            // impossible — process() always sends)
+            d.stats.internal_errors.fetch_add(1, Ordering::Relaxed);
+            error_json("internal", "round worker vanished")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Signals + serve loop
+// ---------------------------------------------------------------------------
+
+static SIGNALED: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_signal(_sig: i32) {
+    // async-signal-safe: one atomic store
+    SIGNALED.store(true, Ordering::SeqCst);
+}
+
+fn install_signal_handlers() {
+    // libc is already linked by std; declare signal(2) directly rather than
+    // adding a dependency.  The returned previous handler is ignored.
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_signal);
+        signal(SIGINT, on_signal);
+    }
+}
+
+/// Run the daemon until a `shutdown` request or SIGTERM/SIGINT, then drain:
+/// stop accepting, finish every admitted round, flush a final stats line,
+/// and return the final [`DaemonStats`].
+pub fn serve(opts: ServeOpts) -> Result<DaemonStats> {
+    if opts.install_signal_handlers {
+        install_signal_handlers();
+    }
+    let listener = Listener::bind(&opts.bind)?;
+    let max_conns = opts.max_conns.max(1);
+    let daemon = Arc::new(Daemon::new(opts));
+    let dispatch = {
+        let d = daemon.clone();
+        std::thread::Builder::new()
+            .name("gm-dispatch".into())
+            .spawn(move || dispatcher(&d))
+            .map_err(|e| anyhow!("spawning dispatcher: {e}"))?
+    };
+    let conns = Arc::new(AtomicUsize::new(0));
+    while !daemon.shutdown.load(Ordering::SeqCst) {
+        if SIGNALED.load(Ordering::SeqCst) {
+            daemon.begin_shutdown();
+            break;
+        }
+        match listener.accept() {
+            Ok(stream) => {
+                daemon.stats.conns_opened.fetch_add(1, Ordering::Relaxed);
+                if conns.load(Ordering::SeqCst) >= max_conns {
+                    daemon.stats.conns_rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = stream.set_nonblocking(false);
+                    let mut w = stream;
+                    let _ = write_line(
+                        &mut w,
+                        &error_json("overloaded", "connection limit reached; retry later"),
+                    );
+                    continue;
+                }
+                let _ = stream.set_nonblocking(false);
+                conns.fetch_add(1, Ordering::SeqCst);
+                let d = daemon.clone();
+                let cg = conns.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("gm-conn".into())
+                    .spawn(move || {
+                        handle_conn(&d, stream);
+                        cg.fetch_sub(1, Ordering::SeqCst);
+                    });
+                if spawned.is_err() {
+                    conns.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => {
+                // transient accept failure (EMFILE, client reset mid-accept)
+                // must not take the daemon down
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    // drain: the listener drops here (unix socket file removed), the
+    // dispatcher finishes every admitted round, then the final stats flush
+    drop(listener);
+    daemon.begin_shutdown();
+    let _ = dispatch.join();
+    let snap = daemon.snapshot();
+    println!("daemon: drained — {}", snap.to_json().dump());
+    Ok(snap)
+}
+
+// ---------------------------------------------------------------------------
+// Client (smoke mode, tests, stress bench)
+// ---------------------------------------------------------------------------
+
+/// One `select` envelope as a client builds it.
+#[derive(Clone, Debug)]
+pub struct SelectSpec {
+    pub run_id: String,
+    pub dataset: String,
+    pub n_train: usize,
+    pub chunk: usize,
+    pub h: usize,
+    pub data_seed: u64,
+    /// `None` → the daemon's default deadline
+    pub deadline_ms: Option<u64>,
+    pub request: SelectionRequest,
+}
+
+impl SelectSpec {
+    /// A small, fast default tenant configuration around `request`.
+    pub fn new(run_id: &str, request: SelectionRequest) -> SelectSpec {
+        SelectSpec {
+            run_id: run_id.to_string(),
+            dataset: "synmnist".to_string(),
+            n_train: 256,
+            chunk: 64,
+            h: 8,
+            data_seed: 0,
+            deadline_ms: None,
+            request,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("type", s("select")),
+            ("run_id", s(&self.run_id)),
+            ("dataset", s(&self.dataset)),
+            ("n_train", num(self.n_train as f64)),
+            ("chunk", num(self.chunk as f64)),
+            ("h", num(self.h as f64)),
+            ("data_seed", s(&self.data_seed.to_string())),
+            ("request", self.request.to_json()),
+        ];
+        if let Some(ms) = self.deadline_ms {
+            fields.push(("deadline_ms", num(ms as f64)));
+        }
+        obj(fields)
+    }
+}
+
+/// A line-protocol client for the daemon.
+pub struct DaemonClient {
+    writer: Stream,
+    reader: BufReader<Stream>,
+}
+
+impl DaemonClient {
+    /// Connect once.
+    pub fn connect(bind: &Bind) -> Result<DaemonClient> {
+        let stream = match bind {
+            Bind::Unix(path) => UnixStream::connect(path)
+                .map(Stream::Unix)
+                .map_err(|e| anyhow!("connecting {}: {e}", path.display()))?,
+            Bind::Tcp(addr) => TcpStream::connect(addr)
+                .map(Stream::Tcp)
+                .map_err(|e| anyhow!("connecting {addr}: {e}"))?,
+        };
+        let writer = stream.try_clone()?;
+        Ok(DaemonClient {
+            writer,
+            reader: BufReader::new(stream),
+        })
+    }
+
+    /// Connect with retries while the daemon binds (tests start the daemon
+    /// on a thread and race it).
+    pub fn connect_retry(bind: &Bind, budget: Duration) -> Result<DaemonClient> {
+        let t0 = Instant::now();
+        loop {
+            match Self::connect(bind) {
+                Ok(c) => return Ok(c),
+                Err(e) if t0.elapsed() > budget => {
+                    return Err(anyhow!("daemon did not come up within {budget:?}: {e}"))
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+    }
+
+    /// Ship one raw line (no newline appended beyond the protocol's).
+    pub fn send_raw(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    pub fn send(&mut self, j: &Json) -> Result<()> {
+        self.send_raw(&j.dump())
+    }
+
+    /// Read one response line (EOF is an error — the daemon always answers
+    /// or closes deliberately).
+    pub fn recv(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(anyhow!("daemon closed the connection"));
+        }
+        Json::parse(line.trim()).map_err(|e| anyhow!("bad response line: {e}"))
+    }
+
+    pub fn roundtrip(&mut self, j: &Json) -> Result<Json> {
+        self.send(j)?;
+        self.recv()
+    }
+
+    pub fn select(&mut self, spec: &SelectSpec) -> Result<Json> {
+        self.roundtrip(&spec.to_json())
+    }
+
+    pub fn ping(&mut self) -> Result<Json> {
+        self.roundtrip(&obj(vec![("type", s("ping"))]))
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.roundtrip(&obj(vec![("type", s("stats"))]))
+    }
+
+    pub fn shutdown(&mut self) -> Result<Json> {
+        self.roundtrip(&obj(vec![("type", s("shutdown"))]))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Smoke mode (ci.sh)
+// ---------------------------------------------------------------------------
+
+/// `serve --smoke`: bring the daemon up on an ephemeral unix socket, drive
+/// one real client round-trip (ping → two deterministic selects → stats →
+/// shutdown), verify the drain, exit.  A watchdog hard-exits after 45s so a
+/// wedged daemon fails CI instead of hanging it (ci.sh adds `timeout` on
+/// top when available).
+pub fn smoke() -> Result<()> {
+    std::thread::Builder::new()
+        .name("gm-smoke-watchdog".into())
+        .spawn(|| {
+            std::thread::sleep(Duration::from_secs(45));
+            eprintln!("daemon smoke: watchdog fired — daemon wedged");
+            std::process::exit(3);
+        })
+        .ok();
+    let path = ephemeral_socket_path("smoke");
+    let bind = Bind::Unix(path);
+    let mut opts = ServeOpts::new(bind.clone());
+    opts.queue_cap = 8;
+    opts.engine_cap = 2;
+    opts.default_deadline_ms = 20_000;
+    let daemon = std::thread::Builder::new()
+        .name("gm-smoke-daemon".into())
+        .spawn(move || serve(opts))
+        .map_err(|e| anyhow!("spawning smoke daemon: {e}"))?;
+
+    let mut client = DaemonClient::connect_retry(&bind, Duration::from_secs(5))?;
+    let pong = client.ping()?;
+    if pong.get("type").and_then(Json::as_str) != Some("pong") {
+        return Err(anyhow!("smoke: bad ping response: {}", pong.dump()));
+    }
+    let spec = SelectSpec::new(
+        "smoke-run",
+        SelectionRequest {
+            strategy: "gradmatch".to_string(),
+            budget: 16,
+            lambda: 0.5,
+            eps: 1e-10,
+            is_valid: false,
+            seed: 42,
+            rng_tag: 1000,
+            ground: (0..128).collect(),
+        },
+    );
+    let mut spec = spec;
+    spec.n_train = 128;
+    spec.chunk = 32;
+    spec.h = 4;
+    let first = client.select(&spec)?;
+    if first.get("type").and_then(Json::as_str) != Some("report") {
+        return Err(anyhow!("smoke: select failed: {}", first.dump()));
+    }
+    let second = client.select(&spec)?;
+    let indices = |resp: &Json| {
+        resp.path(&["report", "selection", "indices"]).map(|v| v.dump())
+    };
+    if indices(&first) != indices(&second) {
+        return Err(anyhow!("smoke: same request twice must select identically"));
+    }
+    let stats = client.stats()?;
+    let served = stats.get("rounds_served").and_then(Json::as_usize).unwrap_or(0);
+    if served < 2 {
+        return Err(anyhow!("smoke: expected >= 2 rounds served, stats: {}", stats.dump()));
+    }
+    client.shutdown()?;
+    let snap = daemon
+        .join()
+        .map_err(|_| anyhow!("smoke: daemon thread panicked"))??;
+    if snap.rounds_served < 2 || snap.queue_depth != 0 {
+        return Err(anyhow!("smoke: bad drain snapshot: {snap:?}"));
+    }
+    println!(
+        "daemon smoke: OK ({} rounds served, {} engines built)",
+        snap.rounds_served, snap.engines_built
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_spec_roundtrips_through_parse_select() {
+        let spec = SelectSpec::new(
+            "run-a",
+            SelectionRequest {
+                strategy: "craig".into(),
+                budget: 8,
+                lambda: 0.5,
+                eps: 1e-10,
+                is_valid: false,
+                seed: 7,
+                rng_tag: 3,
+                ground: (0..64).collect(),
+            },
+        );
+        let j = spec.to_json();
+        let (run_id, cfg, req, deadline) = parse_select(&j, 1234).unwrap();
+        assert_eq!(run_id, "run-a");
+        assert_eq!(cfg.dataset, "synmnist");
+        assert_eq!(cfg.n_train, 256);
+        assert_eq!(cfg.chunk, 64);
+        assert_eq!(cfg.h, 8);
+        assert_eq!(req.strategy, "craig");
+        assert_eq!(deadline, Duration::from_millis(1234), "daemon default applies");
+        let mut with_deadline = spec.clone();
+        with_deadline.deadline_ms = Some(50);
+        let (_, _, _, d2) = parse_select(&with_deadline.to_json(), 1234).unwrap();
+        assert_eq!(d2, Duration::from_millis(50));
+    }
+
+    #[test]
+    fn parse_select_rejects_hostile_envelopes() {
+        let base = SelectSpec::new(
+            "r",
+            SelectionRequest {
+                strategy: "gradmatch".into(),
+                budget: 4,
+                lambda: 0.5,
+                eps: 1e-10,
+                is_valid: false,
+                seed: 1,
+                rng_tag: 1,
+                ground: vec![0, 1, 2, 3],
+            },
+        );
+        // out-of-range ground index would panic deep in staging — must be
+        // rejected at the door
+        let mut bad = base.clone();
+        bad.request.ground = vec![0, 500];
+        assert!(parse_select(&bad.to_json(), 1000).is_err());
+        let mut bad = base.clone();
+        bad.request.budget = 0;
+        assert!(parse_select(&bad.to_json(), 1000).is_err());
+        let mut bad = base.clone();
+        bad.request.ground.clear();
+        assert!(parse_select(&bad.to_json(), 1000).is_err());
+        let mut bad = base.clone();
+        bad.n_train = 0;
+        assert!(parse_select(&bad.to_json(), 1000).is_err());
+        let mut bad = base.clone();
+        bad.chunk = 0;
+        assert!(parse_select(&bad.to_json(), 1000).is_err());
+        let mut bad = base.clone();
+        bad.run_id = String::new();
+        assert!(parse_select(&bad.to_json(), 1000).is_err());
+        // missing request object
+        let no_req = obj(vec![("type", s("select")), ("run_id", s("r"))]);
+        assert!(parse_select(&no_req, 1000).is_err());
+    }
+
+    #[test]
+    fn run_cfg_fingerprint_equality_drives_rebuilds() {
+        let a = RunCfg {
+            dataset: "synmnist".into(),
+            n_train: 256,
+            chunk: 64,
+            h: 8,
+            data_seed: 0,
+        };
+        let mut b = a.clone();
+        assert_eq!(a, b);
+        b.n_train = 512;
+        assert_ne!(a, b, "config change must not silently reuse the old engine");
+    }
+}

@@ -48,6 +48,14 @@ pub struct TrainOpts {
     /// when its matched-gradient error exceeds `stale_tol` × the target
     /// gradient norm.  `<= 0` (or non-finite) disables the probe.
     pub stale_tol: f32,
+    /// wedged-worker guard for overlapped rounds: when a round is *due*
+    /// but the previous one is still in flight, wait at most this many
+    /// milliseconds for it to land before giving up and selecting
+    /// synchronously (counted into `sync_fallback_rounds`).  Before this
+    /// bound a worker that never answered silently starved the run of
+    /// selection rounds forever.  `0` restores the old skip-and-continue
+    /// behavior.
+    pub overlap_wait_ms: u64,
 }
 
 impl Default for TrainOpts {
@@ -67,6 +75,7 @@ impl Default for TrainOpts {
             early_stop_frac: None,
             overlap: false,
             stale_tol: 2.0,
+            overlap_wait_ms: 2_000,
         }
     }
 }
@@ -285,7 +294,31 @@ pub fn train_overlapped(
             // overlapped mode: poll for a finished round, submit a new one.
             // A dead worker (panicked thread, failed runtime load) is
             // never fatal — the run downgrades to synchronous selection.
-            match sel_worker.try_recv() {
+            //
+            // When a round is DUE but the previous one is still in flight,
+            // the poll becomes a deadline-bounded wait: a slow worker gets
+            // `overlap_wait_ms` to land its round, a wedged one costs that
+            // bound once and the round runs synchronously (its late answer,
+            // if any, is picked up — and staleness-probed — by a later
+            // epoch's poll).  Before this, `inflight > 0` at a due epoch
+            // silently skipped the round, so a worker that never answered
+            // starved the run of selection forever.
+            let mut wedged = false;
+            let landed = if due && sel_worker.inflight > 0 && opts.overlap_wait_ms > 0 {
+                match clock.time(Phase::Select, || {
+                    sel_worker
+                        .recv_timeout(std::time::Duration::from_millis(opts.overlap_wait_ms))
+                }) {
+                    Ok(None) => {
+                        wedged = true;
+                        Ok(None)
+                    }
+                    other => other,
+                }
+            } else {
+                sel_worker.try_recv()
+            };
+            match landed {
                 Ok(Some(report)) => {
                     let SelectionReport { selection: sel, stats, .. } = report;
                     if !sel.indices.is_empty() {
@@ -334,6 +367,14 @@ pub fn train_overlapped(
                     );
                     worker_lost = true;
                 }
+            }
+            if wedged {
+                eprintln!(
+                    "overlap: epoch {epoch}: selection round due but the worker's \
+                     previous round has not landed within {}ms; selecting synchronously",
+                    opts.overlap_wait_ms
+                );
+                need_sync_round = true;
             }
             if !worker_lost && !need_sync_round && due && sel_worker.inflight == 0 {
                 if let Err(e) = sel_worker.request(fs.to_state()?, 1000 + epoch as u64) {
@@ -490,5 +531,6 @@ mod tests {
         assert!((o.lambda - 0.5).abs() < 1e-6);
         assert!((o.kappa - 0.5).abs() < 1e-6);
         assert!((o.stale_tol - 2.0).abs() < 1e-6, "staleness guardrail on by default");
+        assert_eq!(o.overlap_wait_ms, 2_000, "wedged-worker guard on by default");
     }
 }

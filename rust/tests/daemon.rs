@@ -1,0 +1,380 @@
+//! Selection-daemon contracts over real unix sockets.
+//!
+//! Each test runs its own daemon on an ephemeral socket (no shared state,
+//! no port collisions) and drives it with real clients:
+//!
+//! - round-trip: ping → select → report, and the same request twice selects
+//!   identically (the engine-pool reset contract, observed from outside)
+//! - backpressure: a full queue sheds with a typed `overloaded` response
+//!   *promptly* — never a hang, never an unbounded queue
+//! - deadlines: a round that cannot meet its deadline yields a typed
+//!   `deadline_exceeded`, and the daemon survives to serve the next request
+//! - isolation: the jsonlite hostile corpus plus a mid-round disconnector,
+//!   concurrent with a well-formed client whose rounds must all succeed
+//! - graceful drain: a `shutdown` with rounds in flight completes every
+//!   admitted round before `serve` returns its final stats
+//! - fault plumbing: a `--fault-plan`-style outage degrades (ladder) but
+//!   still serves, and the per-rung counts surface in `stats`
+
+use std::time::{Duration, Instant};
+
+use gradmatch::engine::SelectionRequest;
+use gradmatch::fault::FaultPlan;
+use gradmatch::jsonlite::{hostile_corpus, Json};
+use gradmatch::server::{
+    ephemeral_socket_path, serve, Bind, DaemonClient, DaemonStats, SelectSpec, ServeOpts,
+};
+
+// -- harness ----------------------------------------------------------------
+
+fn small_request(rng_tag: u64) -> SelectionRequest {
+    SelectionRequest {
+        strategy: "gradmatch".to_string(),
+        budget: 16,
+        lambda: 0.5,
+        eps: 1e-10,
+        is_valid: false,
+        seed: 42,
+        rng_tag,
+        ground: (0..128).collect(),
+    }
+}
+
+fn small_spec(run_id: &str, rng_tag: u64) -> SelectSpec {
+    let mut spec = SelectSpec::new(run_id, small_request(rng_tag));
+    spec.n_train = 128;
+    spec.chunk = 32;
+    spec.h = 4;
+    spec
+}
+
+/// Start a daemon on an ephemeral unix socket; returns the join handle
+/// (yields the drain snapshot) and the bind address for clients.
+fn start(tag: &str, mut opts_fn: impl FnMut(&mut ServeOpts)) -> (std::thread::JoinHandle<anyhow::Result<DaemonStats>>, Bind) {
+    let bind = Bind::Unix(ephemeral_socket_path(tag));
+    let mut opts = ServeOpts::new(bind.clone());
+    opts_fn(&mut opts);
+    let handle = std::thread::spawn(move || serve(opts));
+    (handle, bind)
+}
+
+fn connect(bind: &Bind) -> DaemonClient {
+    DaemonClient::connect_retry(bind, Duration::from_secs(10)).expect("daemon did not come up")
+}
+
+fn resp_type(j: &Json) -> &str {
+    j.get("type").and_then(Json::as_str).unwrap_or("<none>")
+}
+
+fn err_code(j: &Json) -> &str {
+    j.get("code").and_then(Json::as_str).unwrap_or("<none>")
+}
+
+/// A fault plan whose only effect is a latency spike on every dispatch —
+/// the deterministic way to make rounds slow enough to stack up.
+fn slow_plan(spike_ms: u64) -> FaultPlan {
+    let mut plan = FaultPlan::none(7);
+    plan.spike_every = 1;
+    plan.spike_ms = spike_ms;
+    plan
+}
+
+// -- contracts --------------------------------------------------------------
+
+#[test]
+fn round_trip_determinism_and_stats_over_a_unix_socket() {
+    let (daemon, bind) = start("roundtrip", |_| {});
+    let mut client = connect(&bind);
+
+    let pong = client.ping().unwrap();
+    assert_eq!(resp_type(&pong), "pong");
+
+    let spec = small_spec("tenant-a", 1000);
+    let first = client.select(&spec).unwrap();
+    assert_eq!(resp_type(&first), "report", "got: {}", first.dump());
+    let indices = |r: &Json| r.path(&["report", "selection", "indices"]).map(Json::dump);
+    assert_eq!(
+        first
+            .path(&["report", "selection", "indices"])
+            .and_then(Json::as_arr)
+            .map(Vec::len),
+        Some(16),
+        "budget must be honored"
+    );
+
+    // the same request again must select identically — the pool resets the
+    // engine round and the request's (seed, rng_tag) pins all randomness
+    let second = client.select(&spec).unwrap();
+    assert_eq!(resp_type(&second), "report");
+    assert_eq!(indices(&first), indices(&second));
+
+    // a different rng_tag is a different round
+    let mut other = spec.clone();
+    other.request.rng_tag = 2000;
+    let third = client.select(&other).unwrap();
+    assert_eq!(resp_type(&third), "report");
+
+    let stats = client.stats().unwrap();
+    assert_eq!(resp_type(&stats), "stats");
+    assert_eq!(stats.get("rounds_served").and_then(Json::as_usize), Some(3));
+    assert_eq!(stats.get("queue_depth").and_then(Json::as_usize), Some(0));
+    assert_eq!(stats.get("inflight_rounds").and_then(Json::as_usize), Some(0));
+    assert_eq!(
+        stats.path(&["degradation", "none"]).and_then(Json::as_usize),
+        Some(3),
+        "healthy rounds land on the 'none' rung: {}",
+        stats.dump()
+    );
+    assert_eq!(stats.get("engines_built").and_then(Json::as_usize), Some(1), "one tenant, one engine");
+
+    let ok = client.shutdown().unwrap();
+    assert_eq!(resp_type(&ok), "ok");
+    let snap = daemon.join().unwrap().unwrap();
+    assert_eq!(snap.rounds_served, 3);
+    assert_eq!(snap.queue_depth, 0);
+    assert!(snap.draining);
+}
+
+#[test]
+fn full_queue_sheds_with_typed_overloaded_not_a_hang() {
+    // every dispatch sleeps 150ms → rounds are slow; cap the queue at 2 so
+    // a burst of 8 must shed most of itself
+    let (daemon, bind) = start("overload", |o| {
+        o.fault_plan = Some(slow_plan(150));
+        o.queue_cap = 2;
+    });
+    // make sure the daemon is up before the burst
+    connect(&bind).ping().unwrap();
+
+    let mut workers = Vec::new();
+    for i in 0..8 {
+        let bind = bind.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut client = connect(&bind);
+            // one shared run id: the admitted rounds serialize, keeping the
+            // queue occupied while the shed responses come back
+            let spec = small_spec("hot-tenant", 1000 + i);
+            let t0 = Instant::now();
+            let resp = client.select(&spec).unwrap();
+            (resp, t0.elapsed())
+        }));
+    }
+    let results: Vec<(Json, Duration)> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+
+    let mut reports = 0usize;
+    let mut shed = 0usize;
+    for (resp, elapsed) in &results {
+        match resp_type(resp) {
+            "report" => reports += 1,
+            "error" => {
+                assert_eq!(err_code(resp), "overloaded", "got: {}", resp.dump());
+                shed += 1;
+                assert!(
+                    *elapsed < Duration::from_secs(5),
+                    "shedding must be prompt, took {elapsed:?}"
+                );
+            }
+            other => panic!("unexpected response type '{other}': {}", resp.dump()),
+        }
+    }
+    assert_eq!(reports + shed, 8);
+    assert!(reports >= 1, "the admitted rounds must be served");
+    assert!(shed >= 1, "an 8-burst against queue_cap=2 must shed");
+
+    connect(&bind).shutdown().unwrap();
+    let snap = daemon.join().unwrap().unwrap();
+    assert_eq!(snap.rounds_served as usize, reports);
+    assert_eq!(snap.shed_overloaded as usize, shed);
+}
+
+#[test]
+fn impossible_deadline_is_a_typed_deadline_exceeded() {
+    // the first dispatch alone sleeps 300ms — a 50ms deadline cannot be met
+    let (daemon, bind) = start("deadline", |o| {
+        o.fault_plan = Some(slow_plan(300));
+    });
+    let mut client = connect(&bind);
+
+    let mut spec = small_spec("deadline-tenant", 1000);
+    spec.deadline_ms = Some(50);
+    let t0 = Instant::now();
+    let resp = client.select(&spec).unwrap();
+    assert_eq!(resp_type(&resp), "error", "got: {}", resp.dump());
+    assert_eq!(err_code(&resp), "deadline_exceeded");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "deadline reply must not wait for the slow round"
+    );
+
+    // the daemon survives and the connection is still usable: a round with
+    // a generous deadline succeeds
+    let mut ok_spec = small_spec("deadline-tenant", 2000);
+    ok_spec.deadline_ms = Some(30_000);
+    let resp = client.select(&ok_spec).unwrap();
+    assert_eq!(resp_type(&resp), "report", "got: {}", resp.dump());
+
+    client.shutdown().unwrap();
+    let snap = daemon.join().unwrap().unwrap();
+    assert!(
+        snap.deadline_replies + snap.deadline_skipped >= 1,
+        "the miss must be counted: {snap:?}"
+    );
+    assert!(snap.rounds_served >= 1);
+}
+
+#[test]
+fn hostile_and_disconnecting_clients_do_not_poison_a_well_formed_one() {
+    let (daemon, bind) = start("isolation", |_| {});
+    connect(&bind).ping().unwrap();
+
+    // adversary 1: the full jsonlite hostile corpus down one connection —
+    // every non-blank line must come back as a typed error, never hang or
+    // kill the daemon
+    let hostile_bind = bind.clone();
+    let hostile = std::thread::spawn(move || {
+        let mut client = connect(&hostile_bind);
+        let mut rejected = 0usize;
+        for line in hostile_corpus() {
+            if line.trim().is_empty() {
+                continue; // blank lines are skipped by the protocol, no reply
+            }
+            client.send_raw(&line).expect("send");
+            let resp = client.recv().expect("a malformed line still gets a reply");
+            assert_eq!(resp_type(&resp), "error", "line {line:?} got: {}", resp.dump());
+            rejected += 1;
+        }
+        rejected
+    });
+
+    // adversary 2: submits a real round, then vanishes mid-round
+    let vanish_bind = bind.clone();
+    let vanisher = std::thread::spawn(move || {
+        let mut client = connect(&vanish_bind);
+        client.send(&small_spec("vanisher", 1).to_json()).unwrap();
+        // drop without reading the reply — the daemon must shrug
+    });
+
+    // the well-formed client: every round must succeed throughout
+    let mut client = connect(&bind);
+    for tag in 0..5 {
+        let resp = client.select(&small_spec("good-tenant", 3000 + tag)).unwrap();
+        assert_eq!(resp_type(&resp), "report", "round {tag} got: {}", resp.dump());
+    }
+
+    let rejected = hostile.join().unwrap();
+    assert!(rejected > 20, "the corpus should exercise many rejects, got {rejected}");
+    vanisher.join().unwrap();
+
+    // after all that abuse the daemon still answers
+    let stats = connect(&bind).stats().unwrap();
+    assert!(stats.get("rounds_served").and_then(Json::as_usize).unwrap() >= 5);
+    assert!(stats.get("bad_requests").and_then(Json::as_usize).unwrap() >= rejected);
+
+    connect(&bind).shutdown().unwrap();
+    let snap = daemon.join().unwrap().unwrap();
+    assert!(snap.rounds_served >= 5);
+}
+
+#[test]
+fn oversized_request_is_rejected_and_only_that_connection_closed() {
+    let (daemon, bind) = start("oversized", |o| {
+        o.max_request_bytes = 1024;
+    });
+    let mut fat = connect(&bind);
+    let padding = "x".repeat(4096);
+    fat.send_raw(&format!("{{\"type\":\"ping\",\"pad\":\"{padding}\"}}")).unwrap();
+    let resp = fat.recv().unwrap();
+    assert_eq!(resp_type(&resp), "error");
+    assert_eq!(err_code(&resp), "oversized", "got: {}", resp.dump());
+    // the oversized connection is closed...
+    assert!(fat.ping().is_err(), "oversized connection must be dropped");
+    // ...but a fresh one works fine
+    let mut client = connect(&bind);
+    assert_eq!(resp_type(&client.ping().unwrap()), "pong");
+
+    client.shutdown().unwrap();
+    let snap = daemon.join().unwrap().unwrap();
+    assert!(snap.oversized >= 1);
+}
+
+#[test]
+fn graceful_drain_completes_every_admitted_round() {
+    let (daemon, bind) = start("drain", |o| {
+        o.fault_plan = Some(slow_plan(150));
+    });
+    connect(&bind).ping().unwrap();
+
+    // three tenants submit slow rounds
+    let mut workers = Vec::new();
+    for (i, run) in ["drain-a", "drain-b", "drain-c"].iter().enumerate() {
+        let bind = bind.clone();
+        let run = run.to_string();
+        workers.push(std::thread::spawn(move || {
+            let mut client = connect(&bind);
+            client.select(&small_spec(&run, 100 + i as u64)).unwrap()
+        }));
+    }
+
+    // wait until all three are admitted (queued or in flight), then pull
+    // the plug
+    let mut observer = connect(&bind);
+    let t0 = Instant::now();
+    loop {
+        let stats = observer.stats().unwrap();
+        let pending = stats.get("queue_depth").and_then(Json::as_usize).unwrap_or(0)
+            + stats.get("inflight_rounds").and_then(Json::as_usize).unwrap_or(0);
+        if pending >= 3 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(20), "rounds never became pending");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let ok = observer.shutdown().unwrap();
+    assert_eq!(resp_type(&ok), "ok");
+
+    // every admitted round completes with a real report — a drain finishes
+    // work, it does not drop it
+    for w in workers {
+        let resp = w.join().unwrap();
+        assert_eq!(resp_type(&resp), "report", "got: {}", resp.dump());
+    }
+
+    let snap = daemon.join().unwrap().unwrap();
+    assert_eq!(snap.rounds_served, 3);
+    assert_eq!(snap.queue_depth, 0, "nothing may be left behind");
+    assert!(snap.draining);
+
+    // after the drain, the socket is gone: new selects are refused at
+    // connect time, not silently queued
+    assert!(DaemonClient::connect(&bind).is_err());
+}
+
+#[test]
+fn hard_outage_degrades_through_the_ladder_but_still_serves() {
+    // fail_from=1: every oracle dispatch fails — the engine must walk the
+    // degradation ladder (random fallback on a fresh engine) and the rung
+    // must surface in the daemon's stats
+    let (daemon, bind) = start("outage", |o| {
+        let mut plan = FaultPlan::none(11);
+        plan.fail_from = 1;
+        o.fault_plan = Some(plan);
+    });
+    let mut client = connect(&bind);
+    let resp = client.select(&small_spec("outage-tenant", 500)).unwrap();
+    assert_eq!(resp_type(&resp), "report", "degraded is still served: {}", resp.dump());
+    assert_eq!(
+        resp.path(&["report", "round", "degradation"]).and_then(Json::as_str),
+        Some("random-fallback")
+    );
+    let stats = client.stats().unwrap();
+    assert_eq!(
+        stats.path(&["degradation", "random-fallback"]).and_then(Json::as_usize),
+        Some(1),
+        "per-rung counts must surface: {}",
+        stats.dump()
+    );
+
+    client.shutdown().unwrap();
+    let snap = daemon.join().unwrap().unwrap();
+    assert_eq!(snap.degradation[2], 1);
+}

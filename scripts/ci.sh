@@ -2,11 +2,12 @@
 # CI gate for the workspace: build, tests (default AND no-default
 # features), formatting, lints, and (opt-in) the micro-bench perf diff.
 #
-#   scripts/ci.sh           # everything except benches
-#   scripts/ci.sh --fast    # build + tests only (skip fmt/clippy)
+#   scripts/ci.sh           # everything except benches (incl. daemon smoke)
+#   scripts/ci.sh --fast    # build + tests + smoke only (skip fmt/clippy)
 #   scripts/ci.sh --bench   # also run micro_hotpath and diff the
 #                           # round_* notes against the committed
-#                           # rust/BENCH_micro.json snapshot
+#                           # rust/BENCH_micro.json snapshot, plus the
+#                           # daemon_stress throughput/tail-latency bench
 #
 # Tier-1 (enforced): cargo build --release && cargo test -q.
 # The suite also runs with --no-default-features (the pure-host math
@@ -59,6 +60,17 @@ if [[ -n "$conf_warn" ]]; then
     exit 1
 fi
 
+echo "== daemon smoke: gradmatch serve --smoke=true (ephemeral socket) =="
+# One real daemon+client round-trip: bind an ephemeral unix socket, ping,
+# two deterministic selection rounds, stats, graceful shutdown.  The
+# binary carries its own 45s watchdog (exit 3 when wedged); `timeout`
+# adds a hard outer bound on toolchains that have it.
+if command -v timeout >/dev/null 2>&1; then
+    timeout --signal=TERM 60 target/release/gradmatch serve --smoke=true
+else
+    target/release/gradmatch serve --smoke=true
+fi
+
 if [[ "$bench" == "1" ]]; then
     echo "== bench gate: micro_hotpath vs committed rust/BENCH_micro.json =="
     # stash the committed snapshot BEFORE the bench overwrites the file
@@ -98,7 +110,15 @@ if [[ "$bench" == "1" ]]; then
             exit 1
         fi
         echo "ci: bench notes within tolerance"
+        if [[ "$bootstrap" == "1" ]]; then
+            # the bench just wrote a real snapshot over the hand-seeded
+            # bootstrap; committing it drops the marker and arms the gate
+            echo "ci: NOTE — committed snapshot is still the hand-seeded bootstrap;"
+            echo "    commit the freshly written rust/BENCH_micro.json to arm the perf gate"
+        fi
     fi
+    echo "== daemon stress: rounds/sec + p99 + shed-rate =="
+    cargo bench --bench daemon_stress
 fi
 
 if [[ "$fast" == "1" ]]; then
