@@ -38,6 +38,7 @@ fn spec(run_id: &str, strategy: &str, rng_tag: u64) -> SelectSpec {
             seed: 42,
             rng_tag,
             ground: (0..128).collect(),
+            shards: None,
         },
     );
     s.n_train = 128;
@@ -311,7 +312,7 @@ fn main() {
     );
     rep.note("daemon/all_shape_checks", if all_ok { 1.0 } else { 0.0 });
 
-    rep.write("BENCH_daemon.json").unwrap();
+    rep.write(&bh::bench_out_path("BENCH_daemon.json")).unwrap();
     if !all_ok {
         eprintln!("daemon_stress: shape checks FAILED");
         std::process::exit(1);

@@ -392,6 +392,7 @@ fn main() -> anyhow::Result<()> {
             seed: 42,
             rng_tag: 1,
             ground: (0..n).collect(),
+            shards: None,
         };
         let specs = ["gradmatch", "gradmatch-warm", "craig"];
         let reqs: Vec<SelectionRequest> = specs
@@ -492,6 +493,7 @@ fn main() -> anyhow::Result<()> {
             seed: 42,
             rng_tag: 7,
             ground: (0..n).collect(),
+            shards: None,
         };
         let bare_round = || {
             let mut oracle = SynthGrads::new(chunk, p);
@@ -564,7 +566,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    report.write("BENCH_micro.json")?;
+    report.write(&bh::bench_out_path("BENCH_micro.json"))?;
     Ok(())
 }
 
@@ -695,6 +697,7 @@ fn xla_sections(rt: &Runtime, report: &mut bh::BenchReport) -> anyhow::Result<()
             seed: 42,
             rng_tag: 99,
             ground: ground.clone(),
+            shards: None,
         };
         let engine = SelectionEngine::new(rt, st.clone(), &splits.train, &splits.val);
         let rep = engine.select(&req)?;

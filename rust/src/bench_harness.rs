@@ -36,6 +36,7 @@ pub fn bench_config(dataset: &str, model: &str) -> ExperimentConfig {
         imbalance_keep: 0.1,
         label_noise: 0.0,
         overlap: false,
+        max_staged_rows: 0,
     }
 }
 
@@ -171,6 +172,10 @@ impl BenchReport {
                 crate::engine::Degradation::RandomFallback => 2.0,
             },
         );
+        self.note(&format!("{label}/shards"), stats.shards as f64);
+        self.note(&format!("{label}/shard_stage_secs"), stats.shard_stage_secs);
+        self.note(&format!("{label}/merge_candidates"), stats.merge_candidates as f64);
+        self.note(&format!("{label}/peak_staged_rows"), stats.peak_staged_rows as f64);
     }
 
     /// Serialize to JSON text.
@@ -208,6 +213,21 @@ impl BenchReport {
         std::fs::write(path, self.to_json())?;
         println!("\nwrote {path} ({} records, {} notes)", self.records.len(), self.notes.len());
         Ok(())
+    }
+}
+
+/// Resolve where a bench report file lands: `$BENCH_OUT_DIR/<file>` when
+/// the env var is set (the directory is created if missing), else bare
+/// `<file>` — i.e. the cargo working directory, unchanged historical
+/// behavior.  Every bench binary routes its `BENCH_*.json` through this
+/// so CI and local runs cannot silently write to different places.
+pub fn bench_out_path(file: &str) -> String {
+    match std::env::var("BENCH_OUT_DIR") {
+        Ok(dir) if !dir.is_empty() => {
+            let _ = std::fs::create_dir_all(&dir);
+            format!("{}/{file}", dir.trim_end_matches('/'))
+        }
+        _ => file.to_string(),
     }
 }
 

@@ -108,6 +108,7 @@ impl Cli {
             ("lambda", "selection.lambda"),
             ("kappa", "selection.kappa"),
             ("imbalance", "selection.is_valid"),
+            ("max-staged-rows", "selection.max_staged_rows"),
             ("overlap", "experiment.overlap"),
             ("label-noise", "selection.label_noise"),
             ("artifacts", "paths.artifacts"),
@@ -146,7 +147,11 @@ USAGE:
   gradmatch train   [--config exp.toml] [--dataset synmnist] [--model lenet_s]
                     [--strategy gradmatch-pb-warm] [--budget 0.1] [--epochs 60]
                     [--r 20] [--seed 42] [--runs 1] [--eval-every 5]
-                    [--imbalance true] [--set section.key=value]...
+                    [--imbalance true] [--max-staged-rows N]
+                    [--set section.key=value]...
+                    --max-staged-rows N bounds selection-round memory by
+                    sharding the ground set (two-level hierarchical OMP)
+                    so no staged gradient matrix exceeds N rows
   gradmatch sweep   [--datasets synmnist,syncifar10] [--strategies random,gradmatch-pb]
                     [--budgets 0.05,0.1,0.3] [--epochs 60] ...
   gradmatch select  one-shot engine selection round; prints SelectionReport

@@ -240,6 +240,10 @@ pub struct ExperimentConfig {
     /// training never stalls on a selection round (extension; see
     /// `rust/src/overlap.rs`)
     pub overlap: bool,
+    /// selection memory budget: max ground rows staged at once.  `> 0`
+    /// turns on the two-level sharded OMP path (shard count derived as
+    /// `⌈n / max_staged_rows⌉`; see `engine::ShardPlan`); 0 = flat solve
+    pub max_staged_rows: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -266,6 +270,7 @@ impl Default for ExperimentConfig {
             imbalance_keep: 0.1,
             label_noise: 0.0,
             overlap: false,
+            max_staged_rows: 0,
         }
     }
 }
@@ -296,6 +301,7 @@ impl ExperimentConfig {
             imbalance_keep: t.f64_or("selection.imbalance_keep", d.imbalance_keep)?,
             label_noise: t.f64_or("selection.label_noise", d.label_noise)?,
             overlap: t.bool_or("experiment.overlap", d.overlap)?,
+            max_staged_rows: t.usize_or("selection.max_staged_rows", d.max_staged_rows)?,
         })
     }
 
@@ -410,6 +416,16 @@ artifacts = "artifacts"
         assert_eq!(c.dataset, "synmnist");
         assert_eq!(c.r_interval, 20);
         assert!((c.lambda - 0.5).abs() < 1e-12);
+        assert_eq!(c.max_staged_rows, 0, "sharding is opt-in");
+    }
+
+    #[test]
+    fn max_staged_rows_parses() {
+        let mut t = Table::default();
+        t.set("selection.max_staged_rows=4096").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.max_staged_rows, 4096);
+        assert!(c.validate().is_ok());
     }
 
     #[test]

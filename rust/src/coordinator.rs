@@ -65,6 +65,13 @@ pub struct RunSummary {
     pub sync_fallback_rounds: usize,
     /// overlapped subsets rejected by the staleness probe
     pub stale_rejections: usize,
+    /// rounds that ran the two-level sharded OMP path (shards > 1)
+    pub sharded_rounds: usize,
+    /// most gradient rows any round held staged simultaneously (the
+    /// `max_staged_rows` memory-budget check)
+    pub peak_staged_rows: usize,
+    /// shard winners re-staged by merge rounds, summed across rounds
+    pub merge_candidates: usize,
     /// fraction of training rows never selected (Table 10)
     pub redundant_frac: f64,
     /// (epoch, cum_secs, test_acc) convergence points (Fig. 3j/k)
@@ -112,6 +119,9 @@ impl RunSummary {
                 .count(),
             sync_fallback_rounds: o.sync_fallback_rounds,
             stale_rejections: o.stale_rejections,
+            sharded_rounds: o.round_stats.iter().filter(|r| r.shards > 1).count(),
+            peak_staged_rows: o.round_stats.iter().map(|r| r.peak_staged_rows).max().unwrap_or(0),
+            merge_candidates: o.round_stats.iter().map(|r| r.merge_candidates).sum(),
             redundant_frac: never as f64 / o.ever_selected.len().max(1) as f64,
             convergence: conv,
         }
@@ -148,6 +158,9 @@ impl RunSummary {
             ("degraded_rounds", num(self.degraded_rounds as f64)),
             ("sync_fallback_rounds", num(self.sync_fallback_rounds as f64)),
             ("stale_rejections", num(self.stale_rejections as f64)),
+            ("sharded_rounds", num(self.sharded_rounds as f64)),
+            ("peak_staged_rows", num(self.peak_staged_rows as f64)),
+            ("merge_candidates", num(self.merge_candidates as f64)),
             (
                 "convergence",
                 arr(self
@@ -250,6 +263,7 @@ impl Coordinator {
             overlap: cfg.overlap,
             stale_tol: 2.0,
             overlap_wait_ms: 2_000,
+            max_staged_rows: cfg.max_staged_rows,
         };
         let st = self.rt.init(&cfg.model, seed as i32)?;
         let key = RunKey {
@@ -270,6 +284,10 @@ impl Coordinator {
                 seed,
                 rng_tag: 0,
                 ground: ground.clone(),
+                shards: (cfg.max_staged_rows > 0).then(|| crate::engine::ShardPlan {
+                    shards: 0,
+                    max_staged_rows: cfg.max_staged_rows,
+                }),
             };
             Some(crate::overlap::AsyncSelector::spawn(
                 crate::overlap::SelectorConfig {
@@ -455,6 +473,9 @@ mod tests {
             degraded_rounds: 1,
             sync_fallback_rounds: 2,
             stale_rejections: 1,
+            sharded_rounds: 2,
+            peak_staged_rows: 150,
+            merge_candidates: 40,
             redundant_frac: 0.7,
             convergence: vec![(4, 1.0, 0.8), (9, 2.0, 0.9)],
         };
@@ -471,6 +492,9 @@ mod tests {
         assert_eq!(parsed.get("degraded_rounds").unwrap().as_usize(), Some(1));
         assert_eq!(parsed.get("sync_fallback_rounds").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.get("stale_rejections").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("sharded_rounds").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("peak_staged_rows").unwrap().as_usize(), Some(150));
+        assert_eq!(parsed.get("merge_candidates").unwrap().as_usize(), Some(40));
         assert_eq!(
             parsed.get("convergence").unwrap().as_arr().unwrap().len(),
             2

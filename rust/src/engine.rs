@@ -63,6 +63,61 @@ use crate::runtime::{ModelState, Runtime};
 use crate::selection::{parse_strategy, GradSource, SelectCtx, Selection, Strategy};
 
 // ---------------------------------------------------------------------------
+// ShardPlan
+// ---------------------------------------------------------------------------
+
+/// How a round's ground set is sharded for the two-level hierarchical OMP
+/// path: the ground set is cut into contiguous shards, each shard staged
+/// and solved independently (peak staged rows stay bounded), and a final
+/// merge round re-stages only the shard winners and re-fits weights over
+/// that reduced candidate pool.  `shards == 0` derives the shard count
+/// from `max_staged_rows` (`⌈n / max_staged_rows⌉`); both zero — or an
+/// effective count of 1 — means the flat path runs unchanged (pinned
+/// bit-identical by `tests/shard_conformance.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// explicit shard count (0 ⇒ derive from `max_staged_rows`)
+    pub shards: usize,
+    /// memory budget: max ground rows staged at once (0 ⇒ unbounded —
+    /// shards stage together and the shard solves fan out in parallel)
+    pub max_staged_rows: usize,
+}
+
+impl ShardPlan {
+    /// Effective shard count for a ground set of `n` rows.
+    pub fn shard_count(&self, n: usize) -> usize {
+        let s = if self.shards > 0 {
+            self.shards
+        } else if self.max_staged_rows > 0 {
+            n.div_ceil(self.max_staged_rows)
+        } else {
+            1
+        };
+        s.clamp(1, n.max(1))
+    }
+
+    fn to_json(self) -> Json {
+        obj(vec![
+            ("count", num(self.shards as f64)),
+            ("max_staged_rows", num(self.max_staged_rows as f64)),
+        ])
+    }
+
+    /// Lenient parse: absent/null ⇒ `None` (flat path); missing inner
+    /// fields default to 0 so hand-written daemon requests can name only
+    /// the knob they care about.
+    fn from_json(j: &Json, k: &str) -> Option<ShardPlan> {
+        match j.get(k) {
+            None | Some(Json::Null) => None,
+            Some(p) => Some(ShardPlan {
+                shards: jusize(p, "count").unwrap_or(0),
+                max_staged_rows: jusize(p, "max_staged_rows").unwrap_or(0),
+            }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // SelectionRequest
 // ---------------------------------------------------------------------------
 
@@ -89,6 +144,9 @@ pub struct SelectionRequest {
     pub rng_tag: u64,
     /// ground set: dataset rows eligible for selection
     pub ground: Vec<usize>,
+    /// optional two-level sharding plan (see [`ShardPlan`]); `None` — or
+    /// an effective shard count of 1 — runs the flat path unchanged
+    pub shards: Option<ShardPlan>,
 }
 
 impl SelectionRequest {
@@ -108,6 +166,11 @@ impl SelectionRequest {
             seed: cfg.seed,
             rng_tag: 0,
             ground,
+            shards: if cfg.max_staged_rows > 0 {
+                Some(ShardPlan { shards: 0, max_staged_rows: cfg.max_staged_rows })
+            } else {
+                None
+            },
         }
     }
 
@@ -120,7 +183,7 @@ impl SelectionRequest {
 
     /// Serialize for result files / cross-process hand-off.
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("strategy", s(&self.strategy)),
             ("budget", num(self.budget as f64)),
             ("lambda", num(self.lambda as f64)),
@@ -134,7 +197,11 @@ impl SelectionRequest {
                 "ground",
                 arr(self.ground.iter().map(|&i| num(i as f64)).collect()),
             ),
-        ])
+        ];
+        if let Some(plan) = self.shards {
+            fields.push(("shards", plan.to_json()));
+        }
+        obj(fields)
     }
 
     /// Inverse of [`SelectionRequest::to_json`].
@@ -148,6 +215,7 @@ impl SelectionRequest {
             seed: ju64(j, "seed")?,
             rng_tag: ju64(j, "rng_tag")?,
             ground: jusize_arr(j, "ground")?,
+            shards: ShardPlan::from_json(j, "shards"),
         })
     }
 }
@@ -236,6 +304,20 @@ pub struct RoundStats {
     /// how the answer was produced when the solve failed (see
     /// [`Degradation`]); `None` on a normal round
     pub degradation: Degradation,
+    /// ground-set shards the round solved over: `> 1` for the two-level
+    /// sharded path, 1 when a shard plan resolved to the flat path, 0
+    /// for plan-less rounds and strategies that ignore the plan
+    pub shards: usize,
+    /// seconds the sharded path spent staging shard slices + the merge
+    /// re-stage (a subset of `stage_secs`; 0 on the flat path)
+    pub shard_stage_secs: f64,
+    /// shard winners entering the merge round's candidate pool (0 on the
+    /// flat path)
+    pub merge_candidates: usize,
+    /// most ground rows staged simultaneously — the memory high-water
+    /// mark a [`ShardPlan::max_staged_rows`] budget bounds (`|ground|`
+    /// when a plan resolved to the flat path; 0 for plan-less rounds)
+    pub peak_staged_rows: usize,
 }
 
 /// The engine's answer to one [`SelectionRequest`]: the selection itself
@@ -294,6 +376,10 @@ impl SelectionReport {
                     ("retries", num(self.stats.retries as f64)),
                     ("quarantined", num(self.stats.quarantined as f64)),
                     ("degradation", s(self.stats.degradation.as_str())),
+                    ("shards", num(self.stats.shards as f64)),
+                    ("shard_stage_secs", num(self.stats.shard_stage_secs)),
+                    ("merge_candidates", num(self.stats.merge_candidates as f64)),
+                    ("peak_staged_rows", num(self.stats.peak_staged_rows as f64)),
                 ]),
             ),
         ])
@@ -348,6 +434,12 @@ impl SelectionReport {
                     Some(v) => Degradation::from_str(v)?,
                     None => Degradation::None,
                 },
+                // sharding counters are lenient too: pre-shard reports
+                // parse to the flat-path defaults
+                shards: jusize(round, "shards").unwrap_or(0),
+                shard_stage_secs: jf64(round, "shard_stage_secs").unwrap_or(0.0),
+                merge_candidates: jusize(round, "merge_candidates").unwrap_or(0),
+                peak_staged_rows: jusize(round, "peak_staged_rows").unwrap_or(0),
             },
         })
     }
@@ -445,6 +537,9 @@ pub struct RoundShared {
     /// retry policy applied at the chunk-dispatch seam for every
     /// acquisition pass of the round (run-scoped: survives `reset`)
     retry: Cell<RetryPolicy>,
+    /// the active request's sharding plan (installed per-request by the
+    /// engine before the strategy runs; `None` ⇒ flat path)
+    shard_plan: Cell<Option<ShardPlan>>,
 }
 
 impl RoundShared {
@@ -567,6 +662,40 @@ impl RoundShared {
     /// failed (the degradation ladder's rung).
     pub fn note_degradation(&self, rung: Degradation) {
         self.probe.borrow_mut().degradation = rung;
+    }
+
+    /// Install the active request's sharding plan (engine-internal; the
+    /// strategy reads it back through `SelectCtx::shard_plan`).
+    pub fn set_shard_plan(&self, plan: Option<ShardPlan>) {
+        self.shard_plan.set(plan);
+    }
+
+    /// The active request's sharding plan, if any.
+    pub fn shard_plan(&self) -> Option<ShardPlan> {
+        self.shard_plan.get()
+    }
+
+    /// Fold one shard-scoped staging pass (a shard slice or the merge
+    /// re-stage) into the probe.  Shard stage time/dispatches count into
+    /// BOTH the flat `stage_secs`/`stage_dispatches` totals (so
+    /// `solve_secs = total - stage_secs` stays correct) and the
+    /// shard-specific `shard_stage_secs`.
+    pub fn note_shard_stage(&self, secs: f64, dispatches: usize, quarantined: usize, reused: bool) {
+        let mut probe = self.probe.borrow_mut();
+        probe.stage_secs += secs;
+        probe.shard_stage_secs += secs;
+        probe.stage_dispatches += dispatches;
+        probe.quarantined += quarantined;
+        probe.stage_reused_buffers |= reused;
+    }
+
+    /// Record the round's sharding outcome: shard count, merge-round
+    /// candidate-pool size, and the staged-rows high-water mark.
+    pub fn note_shards(&self, shards: usize, merge_candidates: usize, peak_staged_rows: usize) {
+        let mut probe = self.probe.borrow_mut();
+        probe.shards = shards;
+        probe.merge_candidates = merge_candidates;
+        probe.peak_staged_rows = probe.peak_staged_rows.max(peak_staged_rows);
     }
 
     /// Drain the probe for the request that just finished (the cache
@@ -706,6 +835,7 @@ impl<'a> SelectionEngine<'a> {
     ) -> Result<SelectionReport> {
         let t0 = Instant::now();
         let mut rng = req.round_rng();
+        self.shared.set_shard_plan(req.shards);
         let solved = match &self.backend {
             Backend::Live { rt, state } => strategy.select(&mut SelectCtx {
                 src: GradSource::Live { rt: *rt, state },
@@ -912,6 +1042,7 @@ impl PooledEngine {
     ) -> Result<SelectionReport> {
         let t0 = Instant::now();
         let mut rng = req.round_rng();
+        self.shared.set_shard_plan(req.shards);
         let solved = strategy.select(&mut SelectCtx {
             src: GradSource::Oracle { oracle: &mut *self.oracle, h: self.h, c: self.c },
             train: &self.train,
@@ -953,10 +1084,30 @@ mod tests {
             seed: u64::MAX - 7,
             rng_tag: 1004,
             ground: vec![3, 1, 4, 1, 5, 9],
+            shards: Some(ShardPlan { shards: 3, max_staged_rows: 2 }),
         };
         let parsed = Json::parse(&req.to_json().dump()).unwrap();
         let back = SelectionRequest::from_json(&parsed).unwrap();
         assert_eq!(req, back);
+        // no plan ⇒ the field is omitted on the wire and parses back None
+        let mut flat = req.clone();
+        flat.shards = None;
+        let parsed = Json::parse(&flat.to_json().dump()).unwrap();
+        assert!(parsed.get("shards").is_none());
+        assert_eq!(SelectionRequest::from_json(&parsed).unwrap(), flat);
+    }
+
+    #[test]
+    fn shard_plan_count_derivation() {
+        // explicit count wins
+        assert_eq!(ShardPlan { shards: 4, max_staged_rows: 0 }.shard_count(100), 4);
+        // derived from the memory budget: ⌈n / max_staged_rows⌉
+        assert_eq!(ShardPlan { shards: 0, max_staged_rows: 30 }.shard_count(100), 4);
+        assert_eq!(ShardPlan { shards: 0, max_staged_rows: 100 }.shard_count(100), 1);
+        // both zero ⇒ flat; counts clamp to [1, n]
+        assert_eq!(ShardPlan::default().shard_count(100), 1);
+        assert_eq!(ShardPlan { shards: 500, max_staged_rows: 0 }.shard_count(10), 10);
+        assert_eq!(ShardPlan { shards: 3, max_staged_rows: 0 }.shard_count(0), 1);
     }
 
     #[test]
@@ -1006,6 +1157,10 @@ mod tests {
                 retries: 2,
                 quarantined: 5,
                 degradation: Degradation::ReusedLastRound,
+                shards: 4,
+                shard_stage_secs: 0.375,
+                merge_candidates: 9,
+                peak_staged_rows: 64,
             },
         };
         let parsed = Json::parse(&rep.to_json().dump()).unwrap();
@@ -1035,6 +1190,11 @@ mod tests {
         assert_eq!(rep.stats.retries, 0);
         assert_eq!(rep.stats.quarantined, 0);
         assert_eq!(rep.stats.degradation, Degradation::None);
+        // pre-shard reports parse to the flat-path defaults too
+        assert_eq!(rep.stats.shards, 0);
+        assert_eq!(rep.stats.shard_stage_secs, 0.0);
+        assert_eq!(rep.stats.merge_candidates, 0);
+        assert_eq!(rep.stats.peak_staged_rows, 0);
     }
 
     #[test]
@@ -1081,6 +1241,7 @@ mod tests {
             seed: 42,
             rng_tag: 1000,
             ground: (0..24).collect(),
+            shards: None,
         };
 
         let mut borrowed = SynthGrads::new(8, p);

@@ -687,6 +687,51 @@ pub fn stage_class_grads_reusing(
     Ok((out, reuse, total_quarantined))
 }
 
+// ---------------------------------------------------------------------------
+// sharded staging — the two-level hierarchical-OMP seam
+// ---------------------------------------------------------------------------
+
+/// Deterministic contiguous shard boundaries: `n` ground rows cut into
+/// `shards` near-equal `[start, end)` slices (the first `n % shards`
+/// shards get one extra row).  Contiguous slices keep the per-shard
+/// staging passes riding the same `⌈n_s/chunk⌉` chunk-dispatch contract
+/// as the flat pass, and make the split independent of label layout.
+pub fn shard_bounds(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    let s = shards.clamp(1, n.max(1));
+    let (base, extra) = (n / s, n % s);
+    let mut out = Vec::with_capacity(s);
+    let mut start = 0usize;
+    for i in 0..s {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Stage one shard's slice of the ground set — a thin, name-giving
+/// wrapper over [`stage_class_grads_reusing`]: each shard is staged
+/// independently through the same chunk-dispatch seam (`⌈n_s/chunk⌉`
+/// grads dispatches), and `prev` carries the *previous shard slot's*
+/// buffers, so a budget-bounded sharded round that stages shards one at
+/// a time recycles a single allocation across every shard of equal size
+/// (and hands it on to the merge re-stage).  Quarantine semantics are
+/// inherited unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn stage_shard_grads(
+    oracle: &mut dyn GradOracle,
+    ds: &Dataset,
+    shard_ground: &[usize],
+    h: usize,
+    c: usize,
+    width: StageWidth,
+    want_targets: bool,
+    prev: Vec<ClassStage>,
+) -> Result<(Vec<ClassStage>, bool, usize)> {
+    stage_class_grads_reusing(oracle, ds, shard_ground, h, c, width, want_targets, prev)
+}
+
 /// Validation-side full-P class mean gradients for the **live** classes
 /// of a selection round (`flags[c]` from
 /// [`crate::selection::live_flags`]): one fused `mean_grad_chunk` pass
@@ -977,6 +1022,52 @@ mod tests {
         assert_eq!(o_small.grad_calls, 4); // ⌈7/2⌉
         assert_eq!(o_big.grad_calls, 1); // ⌈7/16⌉
         assert_eq!(o_small.mean_calls, 0);
+    }
+
+    #[test]
+    fn shard_bounds_partition_exactly() {
+        for (n, s) in [(10usize, 3usize), (7, 7), (12, 4), (5, 9), (1, 1), (100, 1)] {
+            let bounds = shard_bounds(n, s);
+            assert_eq!(bounds.len(), s.clamp(1, n.max(1)));
+            assert_eq!(bounds[0].0, 0);
+            assert_eq!(bounds.last().unwrap().1, n);
+            for w in bounds.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            let (min, max) = bounds.iter().fold((usize::MAX, 0), |(lo, hi), &(a, b)| {
+                (lo.min(b - a), hi.max(b - a))
+            });
+            assert!(max - min <= 1, "near-equal shards: {min}..{max}");
+        }
+        // degenerate: empty ground set still yields one (empty) shard
+        assert_eq!(shard_bounds(0, 4), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn shard_staging_recycles_one_buffer_across_equal_shards() {
+        // class-interleaved labels: equal-size contiguous shards have
+        // identical per-class shapes, so the previous shard slot's
+        // buffers are reused by every later shard
+        let (h, c) = (2usize, 2usize);
+        let p = h * c + c;
+        let n = 12usize;
+        let y: Vec<i32> = (0..n).map(|i| (i % c) as i32).collect();
+        let ds = toy_dataset(3, y, c, 21);
+        let ground: Vec<usize> = (0..n).collect();
+        let mut oracle = SynthGrads::new(4, p);
+        let mut prev: Vec<ClassStage> = Vec::new();
+        for (k, &(a, b)) in shard_bounds(n, 3).iter().enumerate() {
+            let (stages, reused, q) = stage_shard_grads(
+                &mut oracle, &ds, &ground[a..b], h, c, StageWidth::ClassSlice, true, prev,
+            )
+            .unwrap();
+            assert_eq!(reused, k > 0, "shard {k} reuse");
+            assert_eq!(q, 0);
+            assert_eq!(stages.iter().map(|s| s.rows.len()).sum::<usize>(), b - a);
+            prev = stages;
+        }
+        // Σ_s ⌈n_s/chunk⌉ = 3 · ⌈4/4⌉
+        assert_eq!(oracle.grad_calls, 3);
     }
 
     #[test]

@@ -74,6 +74,12 @@ fn cmd_train(cli: &Cli) -> Result<()> {
                 r.stale_rejections
             );
         }
+        if r.sharded_rounds > 0 {
+            println!(
+                "            sharded: rounds {}  peak staged rows {}  merge candidates {}",
+                r.sharded_rounds, r.peak_staged_rows, r.merge_candidates
+            );
+        }
     }
     let name = format!(
         "train_{}_{}_{}_{}",

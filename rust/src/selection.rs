@@ -62,11 +62,12 @@
 
 use std::cmp::Ordering;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
-use crate::engine::RoundShared;
+use crate::engine::{RoundShared, ShardPlan};
 use crate::grads::{self, ClassStage, EvalEntries, GradOracle, GradientStore, RtGrads, StageWidth};
 use crate::omp::{omp_select, omp_select_rust, OmpOpts, OmpResult, XlaCorr};
 use crate::par;
@@ -268,6 +269,53 @@ impl<'a> SelectCtx<'a> {
             shared.note_fanout(fanout);
         }
     }
+
+    /// The round's sharding plan, when the request carried one.  Legacy
+    /// rounds (`round = None`) never shard.
+    pub fn shard_plan(&self) -> Option<ShardPlan> {
+        self.round.and_then(|r| r.shard_plan())
+    }
+
+    /// Record sharded-round observability (shard count, merge-pool size,
+    /// peak simultaneously staged rows); no-op on the legacy path.
+    pub fn note_shards(&self, shards: usize, merge_candidates: usize, peak_staged_rows: usize) {
+        if let Some(shared) = self.round {
+            shared.note_shards(shards, merge_candidates, peak_staged_rows);
+        }
+    }
+
+    /// Stage one shard slice of the ground set through the oracle seam —
+    /// same retry wrapping and quarantine as the flat staging pass, but
+    /// the result is NOT inserted into the round's shared cache: shard
+    /// stages are transient, and `prev` lets the caller recycle the
+    /// previous slot's buffers ([`grads::stage_shard_grads`]).  Staging
+    /// time and chunk dispatches are folded into the round probe's
+    /// shard-stage counters.
+    pub fn stage_shard(
+        &mut self,
+        shard_ground: &[usize],
+        width: StageWidth,
+        prev: Vec<ClassStage>,
+    ) -> Result<Vec<ClassStage>> {
+        let (h, c) = self.class_layout();
+        let (round, train) = (self.round, self.train);
+        let t0 = Instant::now();
+        let staged = with_oracle(&mut self.src, round, |oracle| {
+            let chunk = oracle.chunk_rows().max(1);
+            grads::stage_shard_grads(oracle, train, shard_ground, h, c, width, true, prev)
+                .map(|(stages, reused, quarantined)| (stages, reused, quarantined, chunk))
+        });
+        let (stages, reused, quarantined, chunk) = staged?;
+        if let Some(shared) = round {
+            shared.note_shard_stage(
+                t0.elapsed().as_secs_f64(),
+                shard_ground.len().div_ceil(chunk),
+                quarantined,
+                reused,
+            );
+        }
+        Ok(stages)
+    }
 }
 
 /// A selected weighted subset.  `indices` are dataset rows; `weights`
@@ -447,11 +495,27 @@ fn solve_per_class<T: Send>(
 /// average the residual norms into `grad_error`.  Every solve arm (CPU
 /// serial, CPU fan-out, XLA) funnels through this.
 fn merge_class_omp(stages: &[ClassStage], picks: Vec<(usize, OmpResult)>) -> Selection {
+    merge_class_omp_scaled(stages, picks, None)
+}
+
+/// [`merge_class_omp`] with an explicit per-class weight scale.  The
+/// sharded merge round solves over a *reduced* candidate pool whose
+/// per-class row counts are not the class sizes — its weights must still
+/// calibrate to the FULL ground class sizes to stay comparable with the
+/// flat path, so it passes those in via `scales`.
+fn merge_class_omp_scaled(
+    stages: &[ClassStage],
+    picks: Vec<(usize, OmpResult)>,
+    scales: Option<&[f32]>,
+) -> Selection {
     let mut out = Selection::default();
     let mut err_acc = 0.0f64;
     let mut err_n = 0usize;
     for (cls, res) in picks {
-        let scale = stages[cls].rows.len() as f32;
+        let scale = match scales {
+            Some(sc) => sc[cls],
+            None => stages[cls].rows.len() as f32,
+        };
         for (slot, &j) in res.selected.iter().enumerate() {
             out.push(stages[cls].rows[j], res.weights[slot] * scale);
         }
@@ -481,6 +545,21 @@ pub fn solve_classes_omp(
     eps: f32,
     parallel: bool,
 ) -> Result<Selection> {
+    solve_classes_omp_scaled(stages, budgets, targets, lambda, eps, parallel, None)
+}
+
+/// [`solve_classes_omp`] with an explicit per-class weight scale for the
+/// merge ([`merge_class_omp_scaled`]) — the sharded merge round's final
+/// solve over the winner pool.
+pub fn solve_classes_omp_scaled(
+    stages: &[ClassStage],
+    budgets: &[usize],
+    targets: &[Vec<f32>],
+    lambda: f32,
+    eps: f32,
+    parallel: bool,
+    scales: Option<&[f32]>,
+) -> Result<Selection> {
     assert_eq!(stages.len(), budgets.len(), "one budget per class");
     assert_eq!(stages.len(), targets.len(), "one target per class");
     let live = live_classes(stages, budgets);
@@ -495,7 +574,40 @@ pub fn solve_classes_omp(
     for (&cls, res) in live.iter().zip(results) {
         picks.push((cls, res?));
     }
-    Ok(merge_class_omp(stages, picks))
+    Ok(merge_class_omp_scaled(stages, picks, scales))
+}
+
+/// One shard's staged Batch-OMP problem: the shard slice's per-class
+/// stages, per-class nomination budgets, and matching targets (already
+/// sliced to the stage width).
+pub struct ShardOmp {
+    pub stages: Vec<ClassStage>,
+    pub budgets: Vec<usize>,
+    pub targets: Vec<Vec<f32>>,
+}
+
+/// First level of the two-level hierarchical OMP: solve every staged
+/// shard's per-class OMP problem independently, fanned out across the
+/// machine via [`par::map_tasks`] when more than one shard is staged.
+/// The nested per-class fan-out inside each shard solve degrades to
+/// serial through the par depth guard, so shard-level and class-level
+/// parallelism never oversubscribe.  Shard selections come back in
+/// shard order — the merge round's determinism depends on it.
+pub fn solve_shards_omp(
+    problems: &[ShardOmp],
+    lambda: f32,
+    eps: f32,
+    parallel: bool,
+) -> Result<Vec<Selection>> {
+    let solve = |p: &ShardOmp| -> Result<Selection> {
+        solve_classes_omp(&p.stages, &p.budgets, &p.targets, lambda, eps, true)
+    };
+    let results: Vec<Result<Selection>> = if parallel && problems.len() > 1 {
+        par::map_tasks(problems, solve)
+    } else {
+        problems.iter().map(solve).collect()
+    };
+    results.into_iter().collect()
 }
 
 /// [`solve_classes_omp`] twin for full-P solves routed through the XLA
@@ -762,6 +874,15 @@ impl GradMatch {
         if !self.parallel {
             return self.select_per_class_serial(ctx, per_gradient);
         }
+        if let Some(plan) = ctx.shard_plan() {
+            let s = plan.shard_count(ctx.ground.len());
+            if s > 1 {
+                return self.select_sharded(ctx, per_gradient, plan, s);
+            }
+            // an effective 1-shard plan IS the flat path (bit-identical
+            // by construction); just record it in the round probe
+            ctx.note_shards(1, 0, ctx.ground.len());
+        }
         let (h, c) = ctx.class_layout();
         let width = if per_gradient { StageWidth::ClassSlice } else { StageWidth::Full };
         let stages = ctx.class_stages(width, true)?;
@@ -811,6 +932,156 @@ impl GradMatch {
         }
         ctx.note_round(&budgets, omp_fanout_wins(&stages, &budgets));
         solve_classes_omp(&stages, &budgets, &targets, ctx.lambda, ctx.eps, true)
+    }
+
+    /// Two-level hierarchical OMP over a sharded ground set (GreeDi-style
+    /// shard-then-merge; the ROADMAP's million-sample path).  The ground
+    /// set splits into `s` contiguous shards ([`grads::shard_bounds`]);
+    /// each shard is staged independently through the oracle seam and
+    /// solved as its own per-class Batch-OMP problem, nominating an
+    /// oversampled share of the budget into a merge pool.  A second-level
+    /// round re-stages only the shard winners and runs the final
+    /// OMP/weight-refit against the GLOBAL class-mean targets
+    /// (accumulated during shard staging — no extra dispatches), with
+    /// weights calibrated to the full class sizes.
+    ///
+    /// Memory: with `max_staged_rows` set, shards are staged in waves
+    /// that fit under the budget — peak simultaneously staged rows never
+    /// exceeds it (as long as the budget itself fits).  With waves of
+    /// one shard, each slot recycles the previous shard's buffers.
+    ///
+    /// The device (XLA) solve arm is bypassed under sharding: shard
+    /// solves are CPU fan-out by design, and the merge pool is small.
+    fn select_sharded(
+        &self,
+        ctx: &mut SelectCtx<'_>,
+        per_gradient: bool,
+        plan: ShardPlan,
+        s: usize,
+    ) -> Result<Selection> {
+        /// each shard nominates up to this multiple of its proportional
+        /// budget share into the merge pool — oversampling keeps the
+        /// merge round a real contest instead of a pass-through
+        const SHARD_OVERSAMPLE: usize = 2;
+
+        let (h, c) = ctx.class_layout();
+        let p = h * c + c;
+        let width = if per_gradient { StageWidth::ClassSlice } else { StageWidth::Full };
+        let ground = ctx.ground;
+        let n = ground.len();
+        let bounds = grads::shard_bounds(n, s);
+        let shard_sizes: Vec<usize> = bounds.iter().map(|&(a, b)| b - a).collect();
+        let max_shard = shard_sizes.iter().copied().max().unwrap_or(0).max(1);
+        // shards staged (and solved) simultaneously: as many as fit
+        // under the memory budget; unbounded plans stage everything at
+        // once and fan the shard solves across the machine
+        let wave = if plan.max_staged_rows == 0 {
+            s
+        } else {
+            (plan.max_staged_rows / max_shard).max(1).min(s)
+        };
+        // merge-pool size: oversampled budget, capped by the memory
+        // budget (the winner re-stage must fit too), floored at the
+        // budget itself so the final solve can always fill it
+        let cap = if plan.max_staged_rows > 0 { plan.max_staged_rows } else { usize::MAX };
+        let pool_target = ctx
+            .budget
+            .saturating_mul(SHARD_OVERSAMPLE)
+            .min(n)
+            .min(cap)
+            .max(ctx.budget.min(n));
+        let shard_budgets = split_budget(pool_target, &shard_sizes);
+        // L_V targets are global: one val-means pass for every class
+        // present in the ground set, shared by the shard solves and the
+        // merge round
+        let val_means = if ctx.is_valid {
+            let mut flags = vec![false; c];
+            for &i in ground {
+                flags[ctx.train.y[i] as usize] = true;
+            }
+            Some(ctx.val_class_means(&flags)?)
+        } else {
+            None
+        };
+        let val_slice = val_means.as_ref().map(|v| v.as_slice());
+
+        // full-ground per-class target accumulation (f64, mirroring the
+        // flat staging pass): each shard's class mean re-weighted by its
+        // class row count, so the merge round matches the global class
+        // means without an extra dispatch pass
+        let mut acc: Vec<Vec<f64>> = vec![vec![0.0f64; p]; c];
+        let mut counts = vec![0usize; c];
+        let mut winners: Vec<usize> = Vec::new();
+        let mut peak = 0usize;
+        let mut pool: Vec<ClassStage> = Vec::new();
+
+        let mut shard = 0usize;
+        while shard < s {
+            let wave_end = (shard + wave).min(s);
+            let mut problems: Vec<ShardOmp> = Vec::with_capacity(wave_end - shard);
+            let mut alive = 0usize;
+            for si in shard..wave_end {
+                let (a, b) = bounds[si];
+                let prev = std::mem::take(&mut pool);
+                let stages = ctx.stage_shard(&ground[a..b], width, prev)?;
+                alive += b - a;
+                for (cls, st) in stages.iter().enumerate() {
+                    let m = st.rows.len();
+                    if m > 0 {
+                        for (aj, &v) in acc[cls].iter_mut().zip(st.target_full.iter()) {
+                            *aj += v as f64 * m as f64;
+                        }
+                        counts[cls] += m;
+                    }
+                }
+                let sizes: Vec<usize> = stages.iter().map(|st| st.rows.len()).collect();
+                let budgets = split_budget(shard_budgets[si], &sizes);
+                let targets = staged_targets(&stages, h, c, per_gradient, val_slice);
+                problems.push(ShardOmp { stages, budgets, targets });
+            }
+            peak = peak.max(alive);
+            let sels = solve_shards_omp(&problems, ctx.lambda, ctx.eps, problems.len() > 1)?;
+            for sel in sels {
+                winners.extend(sel.indices);
+            }
+            // recycle the last staged shard's buffers into the next slot
+            if wave == 1 {
+                if let Some(last) = problems.pop() {
+                    pool = last.stages;
+                }
+            }
+            shard = wave_end;
+        }
+
+        // merge round: re-stage only the shard winners (one more
+        // ⌈|winners|/chunk⌉ dispatch pass, recycling the last shard's
+        // buffers) and refit over the reduced pool
+        let merge_candidates = winners.len();
+        peak = peak.max(merge_candidates);
+        let mut mstages = ctx.stage_shard(&winners, width, std::mem::take(&mut pool))?;
+        for (cls, st) in mstages.iter_mut().enumerate() {
+            if counts[cls] > 0 && !st.target_full.is_empty() {
+                st.target_full =
+                    acc[cls].iter().map(|&v| (v / counts[cls] as f64) as f32).collect();
+            }
+        }
+        let msizes: Vec<usize> = mstages.iter().map(|st| st.rows.len()).collect();
+        let mbudgets = split_budget(ctx.budget, &msizes);
+        let mtargets = staged_targets(&mstages, h, c, per_gradient, val_slice);
+        // weights calibrate to the FULL class sizes (the flat path's
+        // ×n_c), not the winner-pool sizes
+        let scales: Vec<f32> = counts.iter().map(|&m| m as f32).collect();
+        ctx.note_shards(s, merge_candidates, peak);
+        ctx.note_round(&mbudgets, omp_fanout_wins(&mstages, &mbudgets));
+        solve_classes_omp_scaled(
+            &mstages,
+            &mbudgets,
+            &mtargets,
+            ctx.lambda,
+            ctx.eps,
+            true,
+            Some(&scales),
+        )
     }
 
     /// Pre-engine reference: one padded gradient pass **per class**, a

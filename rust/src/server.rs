@@ -1176,6 +1176,7 @@ pub fn smoke() -> Result<()> {
             seed: 42,
             rng_tag: 1000,
             ground: (0..128).collect(),
+            shards: None,
         },
     );
     let mut spec = spec;
@@ -1229,6 +1230,7 @@ mod tests {
                 seed: 7,
                 rng_tag: 3,
                 ground: (0..64).collect(),
+                shards: Some(crate::engine::ShardPlan { shards: 2, max_staged_rows: 32 }),
             },
         );
         let j = spec.to_json();
@@ -1239,6 +1241,11 @@ mod tests {
         assert_eq!(cfg.chunk, 64);
         assert_eq!(cfg.h, 8);
         assert_eq!(req.strategy, "craig");
+        assert_eq!(
+            req.shards,
+            Some(crate::engine::ShardPlan { shards: 2, max_staged_rows: 32 }),
+            "shard plan survives the daemon wire format"
+        );
         assert_eq!(deadline, Duration::from_millis(1234), "daemon default applies");
         let mut with_deadline = spec.clone();
         with_deadline.deadline_ms = Some(50);
@@ -1259,6 +1266,7 @@ mod tests {
                 seed: 1,
                 rng_tag: 1,
                 ground: vec![0, 1, 2, 3],
+                shards: None,
             },
         );
         // out-of-range ground index would panic deep in staging — must be

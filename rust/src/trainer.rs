@@ -56,6 +56,11 @@ pub struct TrainOpts {
     /// selection rounds forever.  `0` restores the old skip-and-continue
     /// behavior.
     pub overlap_wait_ms: u64,
+    /// memory budget for selection rounds: `> 0` turns on the two-level
+    /// sharded OMP path with shard count auto-derived so no staged
+    /// matrix exceeds this many rows (see `selection.rs`); `0` stages
+    /// the whole ground set flat
+    pub max_staged_rows: usize,
 }
 
 impl Default for TrainOpts {
@@ -76,6 +81,7 @@ impl Default for TrainOpts {
             overlap: false,
             stale_tol: 2.0,
             overlap_wait_ms: 2_000,
+            max_staged_rows: 0,
         }
     }
 }
@@ -236,6 +242,10 @@ pub fn train_overlapped(
         seed: opts.seed,
         rng_tag: 0,
         ground: ground.to_vec(),
+        shards: (opts.max_staged_rows > 0).then(|| crate::engine::ShardPlan {
+            shards: 0,
+            max_staged_rows: opts.max_staged_rows,
+        }),
     };
 
     // FULL-EARLYSTOP truncation

@@ -37,6 +37,7 @@ fn small_request(rng_tag: u64) -> SelectionRequest {
         seed: 42,
         rng_tag,
         ground: (0..128).collect(),
+        shards: None,
     }
 }
 

@@ -44,6 +44,7 @@ fn request(strategy: &str, ground: Vec<usize>, budget: usize, tag: u64) -> Selec
         seed: 42,
         rng_tag: tag,
         ground,
+        shards: None,
     }
 }
 

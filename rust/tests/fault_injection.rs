@@ -56,6 +56,7 @@ fn request(strategy: &str, ground: Vec<usize>, budget: usize) -> SelectionReques
         seed: 42,
         rng_tag: 7,
         ground,
+        shards: None,
     }
 }
 

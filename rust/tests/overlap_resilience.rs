@@ -65,6 +65,7 @@ fn request(ground: Vec<usize>, budget: usize) -> SelectionRequest {
         seed: 42,
         rng_tag: 0,
         ground,
+        shards: None,
     }
 }
 

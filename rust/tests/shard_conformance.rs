@@ -1,0 +1,205 @@
+//! Conformance for the two-level sharded OMP path, pinned device-free on
+//! the synthetic gradient oracle:
+//!
+//! - **1-shard ≡ flat** — a shard plan that resolves to one shard
+//!   (explicit count 1, or a `max_staged_rows` budget the whole ground
+//!   set fits under) is bit-identical to the plan-less flat path for
+//!   EVERY `strategy_specs()` spec, with identical dispatch counts;
+//! - **dispatch contract** — the counting oracle pins the sharded
+//!   round's acquisition cost at `Σ_s ⌈n_s/chunk⌉` shard passes plus
+//!   the `⌈|winners|/chunk⌉` merge re-stage, and the round probe's
+//!   `stage_dispatches` agrees with the oracle's own counter;
+//! - **memory budget** — `peak_staged_rows` never exceeds
+//!   `max_staged_rows` (waves of one shard, buffers recycled), while an
+//!   unbounded explicit-count plan stages everything at once.
+
+use gradmatch::data::Dataset;
+use gradmatch::engine::{SelectionEngine, SelectionRequest, ShardPlan};
+use gradmatch::grads::SynthGrads;
+use gradmatch::rng::Rng;
+use gradmatch::selection::strategy_specs;
+use gradmatch::tensor::Matrix;
+
+const CHUNK: usize = 16;
+const BATCH: usize = 4;
+
+/// Imbalanced synthetic dataset: heavy head, long tail, every class
+/// populated (the same fixture shape the strategy conformance suite
+/// uses, so per-class and scoring strategies all have work).
+fn imbalanced(seed: u64, classes: usize, d: usize) -> Dataset {
+    let mut y: Vec<i32> = Vec::new();
+    for cls in 0..classes {
+        let n_c = match cls % 3 {
+            0 => 37,
+            1 => 11,
+            _ => 4,
+        };
+        y.extend(std::iter::repeat(cls as i32).take(n_c));
+    }
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut y);
+    let n = y.len();
+    let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian_f32()).collect());
+    Dataset { x, y, classes }
+}
+
+/// Balanced synthetic dataset sized exactly `n` (`y = i mod classes`),
+/// for the dispatch-count arithmetic tests.
+fn balanced(seed: u64, n: usize, classes: usize, d: usize) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let y: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
+    let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian_f32()).collect());
+    Dataset { x, y, classes }
+}
+
+fn request(
+    strategy: &str,
+    ground: Vec<usize>,
+    budget: usize,
+    shards: Option<ShardPlan>,
+) -> SelectionRequest {
+    SelectionRequest {
+        strategy: strategy.into(),
+        budget,
+        lambda: 0.5,
+        eps: 1e-10,
+        is_valid: false,
+        seed: 42,
+        rng_tag: 7,
+        ground,
+        shards,
+    }
+}
+
+#[test]
+fn one_shard_plan_is_bit_identical_to_flat_for_every_spec() {
+    let (classes, h, d) = (5usize, 3usize, 6usize);
+    let p = h * classes + classes;
+    let train = imbalanced(61, classes, d);
+    let val = imbalanced(62, classes, d);
+    let n = train.len();
+    let ground: Vec<usize> = (0..n).collect();
+    let budget = n / 4;
+
+    for spec in strategy_specs() {
+        let mut flat_oracle = SynthGrads::with_batch(CHUNK, p, BATCH);
+        let flat = {
+            let engine = SelectionEngine::with_oracle(&mut flat_oracle, &train, &val, h, classes);
+            engine.select(&request(spec, ground.clone(), budget, None)).unwrap()
+        };
+
+        // both 1-shard spellings: an explicit count of 1, and a memory
+        // budget the whole ground set fits under (count auto-derives to 1)
+        let plans = [
+            ShardPlan { shards: 1, max_staged_rows: 0 },
+            ShardPlan { shards: 0, max_staged_rows: n },
+        ];
+        for plan in plans {
+            let mut oracle = SynthGrads::with_batch(CHUNK, p, BATCH);
+            let got = {
+                let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+                engine.select(&request(spec, ground.clone(), budget, Some(plan))).unwrap()
+            };
+            assert_eq!(
+                got.selection, flat.selection,
+                "{spec}: 1-shard plan {plan:?} must be bit-identical to the flat path"
+            );
+            assert_eq!(
+                (oracle.grad_calls, oracle.mean_calls, oracle.gradsum_calls, oracle.eval_calls),
+                (
+                    flat_oracle.grad_calls,
+                    flat_oracle.mean_calls,
+                    flat_oracle.gradsum_calls,
+                    flat_oracle.eval_calls
+                ),
+                "{spec}: 1-shard plan {plan:?} must cost the flat path's dispatches"
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_dispatches_and_peak_rows_obey_the_budget() {
+    let (classes, h, d) = (3usize, 2usize, 5usize);
+    let p = h * classes + classes;
+    let (n, budget, max_rows) = (600usize, 60usize, 150usize);
+    let train = balanced(71, n, classes, d);
+    let val = balanced(72, 60, classes, d);
+    let ground: Vec<usize> = (0..n).collect();
+
+    let mut oracle = SynthGrads::new(CHUNK, p);
+    let plan = ShardPlan { shards: 0, max_staged_rows: max_rows };
+    let report = {
+        let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+        engine.select(&request("gradmatch", ground, budget, Some(plan))).unwrap()
+    };
+    let stats = &report.stats;
+
+    // n / max_rows derives 4 equal shards of exactly max_rows rows
+    assert_eq!(stats.shards, 4, "shard count derivation");
+    assert!(
+        stats.merge_candidates > 0 && stats.merge_candidates <= 2 * budget,
+        "merge pool within the oversample cap: {}",
+        stats.merge_candidates
+    );
+    assert!(
+        stats.peak_staged_rows <= max_rows,
+        "peak staged rows {} must stay under the budget {max_rows}",
+        stats.peak_staged_rows
+    );
+    assert!(
+        stats.shard_stage_secs <= stats.stage_secs + 1e-9,
+        "shard staging time is a subset of staging time"
+    );
+
+    // dispatch contract: Σ_s ⌈n_s/chunk⌉ shard passes + the merge
+    // re-stage over the winners
+    let shard_passes = 4 * max_rows.div_ceil(CHUNK);
+    let merge_passes = stats.merge_candidates.div_ceil(CHUNK);
+    assert_eq!(
+        oracle.grad_calls,
+        shard_passes + merge_passes,
+        "sharded staging must cost Σ_s ⌈n_s/chunk⌉ + ⌈|winners|/chunk⌉"
+    );
+    assert_eq!(
+        stats.stage_dispatches, oracle.grad_calls,
+        "the round probe must agree with the oracle's own counter"
+    );
+    assert_eq!((oracle.mean_calls, oracle.gradsum_calls, oracle.eval_calls), (0, 0, 0));
+
+    // selection sanity: within budget, unique, in range, weights finite
+    let sel = &report.selection;
+    assert!(!sel.indices.is_empty() && sel.indices.len() <= budget);
+    let mut uniq = sel.indices.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    assert_eq!(uniq.len(), sel.indices.len(), "duplicate rows selected");
+    assert!(uniq.iter().all(|&i| i < n), "out-of-range row selected");
+    assert_eq!(sel.weights.len(), sel.indices.len());
+    assert!(sel.weights.iter().all(|w| w.is_finite()));
+}
+
+#[test]
+fn unbounded_explicit_count_stages_everything_at_once() {
+    let (classes, h, d) = (3usize, 2usize, 5usize);
+    let p = h * classes + classes;
+    let (n, budget) = (600usize, 60usize);
+    let train = balanced(81, n, classes, d);
+    let val = balanced(82, 60, classes, d);
+    let ground: Vec<usize> = (0..n).collect();
+
+    let mut oracle = SynthGrads::new(CHUNK, p);
+    let plan = ShardPlan { shards: 3, max_staged_rows: 0 };
+    let report = {
+        let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+        engine.select(&request("gradmatch", ground, budget, Some(plan))).unwrap()
+    };
+    let stats = &report.stats;
+    assert_eq!(stats.shards, 3);
+    // no memory budget: all three shards staged simultaneously, so the
+    // high-water mark is the whole ground set
+    assert_eq!(stats.peak_staged_rows, n);
+    let shard_passes = 3 * (n / 3).div_ceil(CHUNK);
+    let merge_passes = stats.merge_candidates.div_ceil(CHUNK);
+    assert_eq!(oracle.grad_calls, shard_passes + merge_passes);
+}

@@ -8,6 +8,7 @@
 #                           # round_* notes against the committed
 #                           # rust/BENCH_micro.json snapshot, plus the
 #                           # daemon_stress throughput/tail-latency bench
+#                           # and the shard_scale memory-budget bench
 #
 # Tier-1 (enforced): cargo build --release && cargo test -q.
 # The suite also runs with --no-default-features (the pure-host math
@@ -48,12 +49,19 @@ cargo test -q --no-default-features
 echo "== cargo test -q --test fault_injection (fault-tolerance suite) =="
 cargo test -q --test fault_injection
 
-echo "== warnings gate: strategy_conformance + engine_reuse =="
-# cargo replays cached warnings, so a --no-run rebuild of just the two
+echo "== cargo test -q --test shard_conformance (sharded-selection suite) =="
+# explicit so a filtered default run can never silently drop it; the
+# suite is feature-gated behind `xla` (engine/grads modules), so the
+# --no-default-features pass above is where its absence is the contract:
+# cargo skips the target entirely and the pure-host core still builds.
+cargo test -q --test shard_conformance
+
+echo "== warnings gate: strategy_conformance + engine_reuse + shard_conformance =="
+# cargo replays cached warnings, so a --no-run rebuild of just the
 # suites surfaces any warning attributed to their files; fail on match.
-conf_warn=$(cargo test --test strategy_conformance --test engine_reuse --no-run 2>&1 \
+conf_warn=$(cargo test --test strategy_conformance --test engine_reuse --test shard_conformance --no-run 2>&1 \
     | grep -E "^warning" -A 3 \
-    | grep -E "tests/(strategy_conformance|engine_reuse)\.rs" || true)
+    | grep -E "tests/(strategy_conformance|engine_reuse|shard_conformance)\.rs" || true)
 if [[ -n "$conf_warn" ]]; then
     echo "$conf_warn"
     echo "ci: FAIL — warnings in the engine-coverage suites"
@@ -119,6 +127,10 @@ if [[ "$bench" == "1" ]]; then
     fi
     echo "== daemon stress: rounds/sec + p99 + shed-rate =="
     cargo bench --bench daemon_stress
+    echo "== shard scale: >=10x ground-vs-staged + flat-quality tolerance =="
+    # hard checks live in the bench itself (exit 1 on failure); the
+    # report lands in BENCH_shard.json next to the other two
+    cargo bench --bench shard_scale
 fi
 
 if [[ "$fast" == "1" ]]; then
