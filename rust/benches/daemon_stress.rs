@@ -39,6 +39,7 @@ fn spec(run_id: &str, strategy: &str, rng_tag: u64) -> SelectSpec {
             rng_tag,
             ground: (0..128).collect(),
             shards: None,
+            sketch: None,
         },
     );
     s.n_train = 128;

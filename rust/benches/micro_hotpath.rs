@@ -33,9 +33,10 @@ use gradmatch::par;
 use gradmatch::rng::Rng;
 use gradmatch::runtime::Runtime;
 use gradmatch::selection::{
-    solve_classes_omp, split_budget, GradMatch, GradMatchVariant, GradSource, SelectCtx,
-    Selection, Strategy,
+    sketch_col_maps, solve_classes_omp, solve_classes_omp_sketched, split_budget, GradMatch,
+    GradMatchVariant, GradSource, SelectCtx, Selection, Strategy,
 };
+use gradmatch::sketch::Sketcher;
 use gradmatch::submod::{lazy_greedy, naive_greedy, sim_from_sqdist, FacilityLocation};
 use gradmatch::tensor::{self, Matrix};
 
@@ -393,6 +394,7 @@ fn main() -> anyhow::Result<()> {
             rng_tag: 1,
             ground: (0..n).collect(),
             shards: None,
+            sketch: None,
         };
         let specs = ["gradmatch", "gradmatch-warm", "craig"];
         let reqs: Vec<SelectionRequest> = specs
@@ -494,6 +496,7 @@ fn main() -> anyhow::Result<()> {
             rng_tag: 7,
             ground: (0..n).collect(),
             shards: None,
+            sketch: None,
         };
         let bare_round = || {
             let mut oracle = SynthGrads::new(chunk, p);
@@ -546,6 +549,113 @@ fn main() -> anyhow::Result<()> {
                 && degraded.selection.indices == clean.selection.indices,
         );
         report.note_round("round_degraded", &degraded.stats);
+    }
+
+    // --- sketched correlation: width sweep (JL-projected Batch-OMP) ----------
+    // One staged full-width per-class problem, solved flat and at
+    // k ∈ {P/2, P/4, P/8, P/16} with the full-width re-fit on — the
+    // speedup-vs-quality curve for picking `selection.sketch_width`.
+    // The budget is deliberately larger than the narrow widths: sketching
+    // pays when OMP iterations outnumber k, and the sweep shows the
+    // crossover (wide sketches can LOSE — the projection itself costs
+    // `n·P·k`).
+    bh::section("micro — sketched solve: width sweep k ∈ {P/2, P/4, P/8, P/16}");
+    {
+        let (c, h, d, chunk) = (4usize, 64usize, 64usize, 256usize);
+        let p = h * c + c; // 260
+        let (n, budget) = (1024usize, 256usize);
+        let (lambda, eps) = (0.5f32, 1e-12f32);
+        let mut sk_rng = Rng::new(2718);
+        let y: Vec<i32> = (0..n).map(|i| (i % c) as i32).collect();
+        let ds = Dataset {
+            x: Matrix::from_vec(n, d, (0..n * d).map(|_| sk_rng.gaussian_f32()).collect()),
+            y,
+            classes: c,
+        };
+        let ground: Vec<usize> = (0..n).collect();
+        let mut oracle = SynthGrads::new(chunk, p);
+        let stages =
+            stage_class_grads_with(&mut oracle, &ds, &ground, h, c, StageWidth::Full, true)?;
+        let sizes: Vec<usize> = stages.iter().map(|s| s.rows.len()).collect();
+        let budgets = split_budget(budget, &sizes);
+        let targets: Vec<Vec<f32>> = stages.iter().map(|s| s.target_full.clone()).collect();
+        let col_maps = sketch_col_maps(h, c, false, p);
+
+        let (t_flat, _) = report.rec(&format!("sketch sweep P={p} (flat solve)"), 3, || {
+            solve_classes_omp(&stages, &budgets, &targets, lambda, eps, true).unwrap()
+        });
+        // solves are deterministic — one un-timed re-run yields the result
+        let flat_sel = solve_classes_omp(&stages, &budgets, &targets, lambda, eps, true)?;
+
+        // paper-style matched-gradient error of a weighted subset against
+        // the full ground gradient sum (the shard-scale bench's metric)
+        let mut err_oracle = SynthGrads::new(chunk, p);
+        let store = per_sample_grads_with(&mut err_oracle, &ds, &ground)?;
+        let err_of = |sel: &Selection| -> f64 {
+            let mut full = vec![0.0f64; p];
+            for r in 0..store.g.rows {
+                for (j, &v) in store.g.row(r).iter().enumerate() {
+                    full[j] += v as f64;
+                }
+            }
+            let mut sub = vec![0.0f64; p];
+            for (slot, &row) in sel.indices.iter().enumerate() {
+                let w = sel.weights[slot] as f64;
+                for (j, &v) in store.g.row(row).iter().enumerate() {
+                    sub[j] += w * v as f64;
+                }
+            }
+            let num: f64 =
+                full.iter().zip(&sub).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+            let den: f64 = full.iter().map(|a| a * a).sum::<f64>().sqrt();
+            num / den.max(1e-12)
+        };
+        let err_flat = err_of(&flat_sel);
+        report.note("sketch_err_flat", err_flat);
+
+        for (div, tag) in [(2usize, "p2"), (4usize, "p4"), (8usize, "p8"), (16usize, "p16")] {
+            let k = (p / div).max(1);
+            let sk = Sketcher::new(k, 0x5EED, 0);
+            let (t_k, _) = report.rec(&format!("sketch sweep P={p} (k={k}, refit)"), 3, || {
+                solve_classes_omp_sketched(
+                    &stages, &budgets, &targets, lambda, eps, true, None, &sk, &col_maps, true,
+                )
+                .unwrap()
+            });
+            let (sel, sk_secs, rf_secs) = solve_classes_omp_sketched(
+                &stages, &budgets, &targets, lambda, eps, true, None, &sk, &col_maps, true,
+            )?;
+            let speedup = t_flat / t_k.max(1e-12);
+            let err_k = err_of(&sel);
+            report.note(&format!("sketch_speedup_{tag}"), speedup);
+            report.note(&format!("sketch_err_{tag}"), err_k);
+            println!(
+                "  k={k}: {speedup:.2}x vs flat, err {err_k:.4} (flat {err_flat:.4}; project {:.3}ms refit {:.3}ms)",
+                sk_secs * 1e3,
+                rf_secs * 1e3
+            );
+            bh::shape_check(
+                &format!("sketch k={k}: selection within budget and finite"),
+                !sel.indices.is_empty()
+                    && sel.indices.len() <= budget
+                    && sel.weights.iter().all(|w| w.is_finite()),
+            );
+            // quality gate: wide sketches must stay in the flat regime;
+            // narrow ones only need the re-fit to beat the empty subset
+            if div <= 4 {
+                bh::shape_check(
+                    &format!(
+                        "sketch k={k}: error {err_k:.4} within the flat regime ({err_flat:.4})"
+                    ),
+                    err_k <= 3.0 * err_flat + 0.2,
+                );
+            } else {
+                bh::shape_check(
+                    &format!("sketch k={k}: re-fit beats the empty subset ({err_k:.4})"),
+                    err_k < 1.0,
+                );
+            }
+        }
     }
 
     // --- XLA/PJRT-backed sections (need HLO artifacts) -----------------------
@@ -698,6 +808,7 @@ fn xla_sections(rt: &Runtime, report: &mut bh::BenchReport) -> anyhow::Result<()
             rng_tag: 99,
             ground: ground.clone(),
             shards: None,
+            sketch: None,
         };
         let engine = SelectionEngine::new(rt, st.clone(), &splits.train, &splits.val);
         let rep = engine.select(&req)?;

@@ -44,6 +44,7 @@ fn request(n: usize, budget: usize, shards: Option<ShardPlan>) -> SelectionReque
         rng_tag: 7,
         ground: (0..n).collect(),
         shards,
+        sketch: None,
     }
 }
 

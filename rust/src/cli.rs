@@ -109,6 +109,7 @@ impl Cli {
             ("kappa", "selection.kappa"),
             ("imbalance", "selection.is_valid"),
             ("max-staged-rows", "selection.max_staged_rows"),
+            ("sketch-width", "selection.sketch_width"),
             ("overlap", "experiment.overlap"),
             ("label-noise", "selection.label_noise"),
             ("artifacts", "paths.artifacts"),
@@ -147,11 +148,16 @@ USAGE:
   gradmatch train   [--config exp.toml] [--dataset synmnist] [--model lenet_s]
                     [--strategy gradmatch-pb-warm] [--budget 0.1] [--epochs 60]
                     [--r 20] [--seed 42] [--runs 1] [--eval-every 5]
-                    [--imbalance true] [--max-staged-rows N]
+                    [--imbalance true] [--max-staged-rows N] [--sketch-width K]
                     [--set section.key=value]...
                     --max-staged-rows N bounds selection-round memory by
                     sharding the ground set (two-level hierarchical OMP)
                     so no staged gradient matrix exceeds N rows
+                    --sketch-width K runs Batch-OMP on a seeded JL
+                    projection of the staged gradients ([n,P] -> [n,K],
+                    K < P) with a full-width weight re-fit on the selected
+                    support; composes with sharding (per-shard solves
+                    sketch, the merge re-fit stays full width)
   gradmatch sweep   [--datasets synmnist,syncifar10] [--strategies random,gradmatch-pb]
                     [--budgets 0.05,0.1,0.3] [--epochs 60] ...
   gradmatch select  one-shot engine selection round; prints SelectionReport
@@ -263,6 +269,20 @@ mod tests {
             c.flag_list("budgets").unwrap(),
             vec!["0.05".to_string(), "0.1".into(), "0.3".into()]
         );
+    }
+
+    #[test]
+    fn sketch_width_flag_maps_and_zero_is_rejected() {
+        let c = Cli::parse(&args(&["train", "--sketch-width", "128"])).unwrap();
+        assert_eq!(c.experiment_config().unwrap().sketch_width, 128);
+        for bad in ["0", "-4"] {
+            let c = Cli::parse(&args(&["train", "--sketch-width", bad])).unwrap();
+            let msg = c.experiment_config().unwrap_err().to_string();
+            assert!(msg.contains("selection.sketch_width"), "{msg}");
+        }
+        let c = Cli::parse(&args(&["train", "--max-staged-rows", "0"])).unwrap();
+        let msg = c.experiment_config().unwrap_err().to_string();
+        assert!(msg.contains("selection.max_staged_rows"), "{msg}");
     }
 
     #[test]

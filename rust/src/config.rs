@@ -46,6 +46,7 @@ impl Value {
 pub enum ConfigError {
     Parse(usize, String),
     Key(String),
+    Invalid(String, String),
     Unknown(&'static str, String),
     Io(std::io::Error),
 }
@@ -55,6 +56,7 @@ impl std::fmt::Display for ConfigError {
         match self {
             ConfigError::Parse(line, msg) => write!(f, "config parse error on line {line}: {msg}"),
             ConfigError::Key(k) => write!(f, "missing or mistyped key '{k}'"),
+            ConfigError::Invalid(k, why) => write!(f, "invalid value for '{k}': {why}"),
             ConfigError::Unknown(what, v) => write!(f, "unknown {what} '{v}'"),
             ConfigError::Io(e) => write!(f, "io: {e}"),
         }
@@ -142,6 +144,27 @@ impl Table {
         match self.map.get(key) {
             None => Ok(default),
             Some(v) => v.as_usize().ok_or_else(|| ConfigError::Key(key.into())),
+        }
+    }
+
+    /// Presence-aware opt-in count: an *absent* key means `default`
+    /// (feature off), but an explicitly written 0, negative, or fractional
+    /// value is rejected here by name — a degenerate plan must fail at the
+    /// config boundary, not surface as a confusing no-op (or worse)
+    /// downstream.
+    fn opt_in_usize(&self, key: &str, default: usize) -> Result<usize, ConfigError> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                let n = v.as_f64().ok_or_else(|| ConfigError::Key(key.into()))?;
+                if n <= 0.0 || n.fract() != 0.0 {
+                    return Err(ConfigError::Invalid(
+                        key.into(),
+                        format!("expected a positive integer, got {n} (omit the key to disable)"),
+                    ));
+                }
+                Ok(n as usize)
+            }
         }
     }
 
@@ -244,6 +267,10 @@ pub struct ExperimentConfig {
     /// turns on the two-level sharded OMP path (shard count derived as
     /// `⌈n / max_staged_rows⌉`; see `engine::ShardPlan`); 0 = flat solve
     pub max_staged_rows: usize,
+    /// sketched correlation: JL-project the staged `[n, P]` gradients to
+    /// `[n, k]` before Batch-OMP, with a full-width re-fit on the selected
+    /// support (see `engine::SketchPlan` / `sketch.rs`); 0 = full width
+    pub sketch_width: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -271,6 +298,7 @@ impl Default for ExperimentConfig {
             label_noise: 0.0,
             overlap: false,
             max_staged_rows: 0,
+            sketch_width: 0,
         }
     }
 }
@@ -301,7 +329,8 @@ impl ExperimentConfig {
             imbalance_keep: t.f64_or("selection.imbalance_keep", d.imbalance_keep)?,
             label_noise: t.f64_or("selection.label_noise", d.label_noise)?,
             overlap: t.bool_or("experiment.overlap", d.overlap)?,
-            max_staged_rows: t.usize_or("selection.max_staged_rows", d.max_staged_rows)?,
+            max_staged_rows: t.opt_in_usize("selection.max_staged_rows", d.max_staged_rows)?,
+            sketch_width: t.opt_in_usize("selection.sketch_width", d.sketch_width)?,
         })
     }
 
@@ -426,6 +455,37 @@ artifacts = "artifacts"
         let c = ExperimentConfig::from_table(&t).unwrap();
         assert_eq!(c.max_staged_rows, 4096);
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn sketch_width_parses_and_defaults_off() {
+        let c = ExperimentConfig::from_table(&Table::default()).unwrap();
+        assert_eq!(c.sketch_width, 0, "sketching is opt-in");
+        let mut t = Table::default();
+        t.set("selection.sketch_width=256").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.sketch_width, 256);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn explicit_zero_opt_in_keys_are_rejected_by_name() {
+        for key in ["selection.max_staged_rows", "selection.sketch_width"] {
+            for bad in ["0", "-8", "3.5"] {
+                let mut t = Table::default();
+                t.set(&format!("{key}={bad}")).unwrap();
+                let e = ExperimentConfig::from_table(&t).unwrap_err();
+                match &e {
+                    ConfigError::Invalid(k, why) => {
+                        assert_eq!(k, key, "error must name the offending key");
+                        assert!(why.contains("positive integer"), "{why}");
+                    }
+                    other => panic!("{key}={bad} should be Invalid, got {other:?}"),
+                }
+                let msg = e.to_string();
+                assert!(msg.contains(key), "message must name the key: {msg}");
+            }
+        }
     }
 
     #[test]

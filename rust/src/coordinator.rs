@@ -72,6 +72,12 @@ pub struct RunSummary {
     pub peak_staged_rows: usize,
     /// shard winners re-staged by merge rounds, summed across rounds
     pub merge_candidates: usize,
+    /// rounds that solved against a JL-sketched problem (sketch_width > 0)
+    pub sketched_rounds: usize,
+    /// seconds sketched rounds spent projecting staged gradients, summed
+    pub sketch_secs: f64,
+    /// seconds sketched rounds spent on full-width weight re-fits, summed
+    pub refit_secs: f64,
     /// fraction of training rows never selected (Table 10)
     pub redundant_frac: f64,
     /// (epoch, cum_secs, test_acc) convergence points (Fig. 3j/k)
@@ -122,6 +128,9 @@ impl RunSummary {
             sharded_rounds: o.round_stats.iter().filter(|r| r.shards > 1).count(),
             peak_staged_rows: o.round_stats.iter().map(|r| r.peak_staged_rows).max().unwrap_or(0),
             merge_candidates: o.round_stats.iter().map(|r| r.merge_candidates).sum(),
+            sketched_rounds: o.round_stats.iter().filter(|r| r.sketch_width > 0).count(),
+            sketch_secs: o.round_stats.iter().map(|r| r.sketch_secs).sum(),
+            refit_secs: o.round_stats.iter().map(|r| r.refit_secs).sum(),
             redundant_frac: never as f64 / o.ever_selected.len().max(1) as f64,
             convergence: conv,
         }
@@ -161,6 +170,9 @@ impl RunSummary {
             ("sharded_rounds", num(self.sharded_rounds as f64)),
             ("peak_staged_rows", num(self.peak_staged_rows as f64)),
             ("merge_candidates", num(self.merge_candidates as f64)),
+            ("sketched_rounds", num(self.sketched_rounds as f64)),
+            ("sketch_secs", num(self.sketch_secs)),
+            ("refit_secs", num(self.refit_secs)),
             (
                 "convergence",
                 arr(self
@@ -264,6 +276,7 @@ impl Coordinator {
             stale_tol: 2.0,
             overlap_wait_ms: 2_000,
             max_staged_rows: cfg.max_staged_rows,
+            sketch_width: cfg.sketch_width,
         };
         let st = self.rt.init(&cfg.model, seed as i32)?;
         let key = RunKey {
@@ -287,6 +300,10 @@ impl Coordinator {
                 shards: (cfg.max_staged_rows > 0).then(|| crate::engine::ShardPlan {
                     shards: 0,
                     max_staged_rows: cfg.max_staged_rows,
+                }),
+                sketch: (cfg.sketch_width > 0).then(|| crate::engine::SketchPlan {
+                    width: cfg.sketch_width,
+                    ..Default::default()
                 }),
             };
             Some(crate::overlap::AsyncSelector::spawn(
@@ -476,6 +493,9 @@ mod tests {
             sharded_rounds: 2,
             peak_staged_rows: 150,
             merge_candidates: 40,
+            sketched_rounds: 2,
+            sketch_secs: 0.125,
+            refit_secs: 0.0625,
             redundant_frac: 0.7,
             convergence: vec![(4, 1.0, 0.8), (9, 2.0, 0.9)],
         };
@@ -495,6 +515,9 @@ mod tests {
         assert_eq!(parsed.get("sharded_rounds").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.get("peak_staged_rows").unwrap().as_usize(), Some(150));
         assert_eq!(parsed.get("merge_candidates").unwrap().as_usize(), Some(40));
+        assert_eq!(parsed.get("sketched_rounds").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("sketch_secs").unwrap().as_f64(), Some(0.125));
+        assert_eq!(parsed.get("refit_secs").unwrap().as_f64(), Some(0.0625));
         assert_eq!(
             parsed.get("convergence").unwrap().as_arr().unwrap().len(),
             2

@@ -118,6 +118,70 @@ impl ShardPlan {
 }
 
 // ---------------------------------------------------------------------------
+// SketchPlan
+// ---------------------------------------------------------------------------
+
+/// How a round's correlation work is sketched (GRAFT-style): staged
+/// `[n, P]` class matrices are random-projected to `[n, k]` with a
+/// seeded JL projection (`crate::sketch`), Batch-OMP runs against the
+/// sketched Gram, and the weights are optionally re-fit at full width on
+/// the selected support.  A plan whose `width` is 0 — or at least the
+/// staged column count — falls through to the flat path bit-identically
+/// (pinned by `tests/sketch_conformance.rs`).  Composes with
+/// [`ShardPlan`]: per-shard solves sketch, the merge refit runs
+/// full-width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SketchPlan {
+    /// sketch width k (projected columns); 0 ⇒ sketching disabled
+    pub width: usize,
+    /// re-fit the selected support's weights at full width (non-negative
+    /// ridge on the unsketched columns) — default on; off keeps the
+    /// sketch-space weights
+    pub refit: bool,
+    /// extra salt folded into the projection seed so independent sweeps
+    /// can decorrelate their projections at a fixed run seed
+    pub seed_salt: u64,
+}
+
+impl Default for SketchPlan {
+    fn default() -> SketchPlan {
+        SketchPlan { width: 0, refit: true, seed_salt: 0 }
+    }
+}
+
+impl SketchPlan {
+    /// Whether this plan actually sketches a stage of `p` columns: a
+    /// width of 0 or ≥ p is the identity (flat path).
+    pub fn applies(&self, p: usize) -> bool {
+        self.width > 0 && self.width < p
+    }
+
+    fn to_json(self) -> Json {
+        obj(vec![
+            ("width", num(self.width as f64)),
+            ("refit", Json::Bool(self.refit)),
+            // decimal string, like seed/rng_tag: salts above 2^53 must
+            // survive the wire exactly
+            ("seed_salt", s(&self.seed_salt.to_string())),
+        ])
+    }
+
+    /// Lenient parse: absent/null ⇒ `None` (flat path); missing inner
+    /// fields default (`refit` true, `seed_salt` 0) so hand-written
+    /// daemon requests can name only the width.
+    fn from_json(j: &Json, k: &str) -> Option<SketchPlan> {
+        match j.get(k) {
+            None | Some(Json::Null) => None,
+            Some(p) => Some(SketchPlan {
+                width: jusize(p, "width").unwrap_or(0),
+                refit: p.get("refit").and_then(Json::as_bool).unwrap_or(true),
+                seed_salt: ju64(p, "seed_salt").unwrap_or(0),
+            }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // SelectionRequest
 // ---------------------------------------------------------------------------
 
@@ -147,6 +211,10 @@ pub struct SelectionRequest {
     /// optional two-level sharding plan (see [`ShardPlan`]); `None` — or
     /// an effective shard count of 1 — runs the flat path unchanged
     pub shards: Option<ShardPlan>,
+    /// optional JL-sketching plan (see [`SketchPlan`]); `None` — or a
+    /// width of 0 / ≥ the staged column count — runs the flat solve
+    /// unchanged
+    pub sketch: Option<SketchPlan>,
 }
 
 impl SelectionRequest {
@@ -168,6 +236,11 @@ impl SelectionRequest {
             ground,
             shards: if cfg.max_staged_rows > 0 {
                 Some(ShardPlan { shards: 0, max_staged_rows: cfg.max_staged_rows })
+            } else {
+                None
+            },
+            sketch: if cfg.sketch_width > 0 {
+                Some(SketchPlan { width: cfg.sketch_width, ..SketchPlan::default() })
             } else {
                 None
             },
@@ -201,6 +274,9 @@ impl SelectionRequest {
         if let Some(plan) = self.shards {
             fields.push(("shards", plan.to_json()));
         }
+        if let Some(plan) = self.sketch {
+            fields.push(("sketch", plan.to_json()));
+        }
         obj(fields)
     }
 
@@ -216,6 +292,7 @@ impl SelectionRequest {
             rng_tag: ju64(j, "rng_tag")?,
             ground: jusize_arr(j, "ground")?,
             shards: ShardPlan::from_json(j, "shards"),
+            sketch: SketchPlan::from_json(j, "sketch"),
         })
     }
 }
@@ -318,6 +395,17 @@ pub struct RoundStats {
     /// mark a [`ShardPlan::max_staged_rows`] budget bounds (`|ground|`
     /// when a plan resolved to the flat path; 0 for plan-less rounds)
     pub peak_staged_rows: usize,
+    /// sketch width k the round's OMP solves ran at (0 when sketching
+    /// did not apply — no plan, width ≥ the staged column count, or the
+    /// strategy ignores the plan)
+    pub sketch_width: usize,
+    /// seconds spent projecting staged matrices/targets into sketch
+    /// space (solve-side time — NOT part of `stage_secs`)
+    pub sketch_secs: f64,
+    /// seconds spent re-fitting the selected support's weights at full
+    /// width (0 when `SketchPlan::refit` is off or sketching did not
+    /// apply)
+    pub refit_secs: f64,
 }
 
 /// The engine's answer to one [`SelectionRequest`]: the selection itself
@@ -380,6 +468,9 @@ impl SelectionReport {
                     ("shard_stage_secs", num(self.stats.shard_stage_secs)),
                     ("merge_candidates", num(self.stats.merge_candidates as f64)),
                     ("peak_staged_rows", num(self.stats.peak_staged_rows as f64)),
+                    ("sketch_width", num(self.stats.sketch_width as f64)),
+                    ("sketch_secs", num(self.stats.sketch_secs)),
+                    ("refit_secs", num(self.stats.refit_secs)),
                 ]),
             ),
         ])
@@ -440,6 +531,11 @@ impl SelectionReport {
                 shard_stage_secs: jf64(round, "shard_stage_secs").unwrap_or(0.0),
                 merge_candidates: jusize(round, "merge_candidates").unwrap_or(0),
                 peak_staged_rows: jusize(round, "peak_staged_rows").unwrap_or(0),
+                // sketch counters are lenient too: pre-sketch reports
+                // parse to the unsketched defaults
+                sketch_width: jusize(round, "sketch_width").unwrap_or(0),
+                sketch_secs: jf64(round, "sketch_secs").unwrap_or(0.0),
+                refit_secs: jf64(round, "refit_secs").unwrap_or(0.0),
             },
         })
     }
@@ -540,6 +636,9 @@ pub struct RoundShared {
     /// the active request's sharding plan (installed per-request by the
     /// engine before the strategy runs; `None` ⇒ flat path)
     shard_plan: Cell<Option<ShardPlan>>,
+    /// the active request's sketching plan (installed per-request, like
+    /// the shard plan; `None` ⇒ full-width solves)
+    sketch_plan: Cell<Option<SketchPlan>>,
 }
 
 impl RoundShared {
@@ -673,6 +772,30 @@ impl RoundShared {
     /// The active request's sharding plan, if any.
     pub fn shard_plan(&self) -> Option<ShardPlan> {
         self.shard_plan.get()
+    }
+
+    /// Install the active request's sketching plan (engine-internal; the
+    /// strategy reads it back through `SelectCtx::sketch_plan`).
+    pub fn set_sketch_plan(&self, plan: Option<SketchPlan>) {
+        self.sketch_plan.set(plan);
+    }
+
+    /// The active request's sketching plan, if any.
+    pub fn sketch_plan(&self) -> Option<SketchPlan> {
+        self.sketch_plan.get()
+    }
+
+    /// Record one sketched solve's outcome: the width the OMP ran at and
+    /// the projection/refit wall-clock.  Secs accumulate (the sharded
+    /// path sketches per shard); the width records the round's solve
+    /// width.  Sketch/refit time is solve-side — it is deliberately NOT
+    /// folded into `stage_secs`, so `solve_secs = total - stage_secs`
+    /// still covers it.
+    pub fn note_sketch(&self, width: usize, sketch_secs: f64, refit_secs: f64) {
+        let mut probe = self.probe.borrow_mut();
+        probe.sketch_width = probe.sketch_width.max(width);
+        probe.sketch_secs += sketch_secs;
+        probe.refit_secs += refit_secs;
     }
 
     /// Fold one shard-scoped staging pass (a shard slice or the merge
@@ -836,6 +959,7 @@ impl<'a> SelectionEngine<'a> {
         let t0 = Instant::now();
         let mut rng = req.round_rng();
         self.shared.set_shard_plan(req.shards);
+        self.shared.set_sketch_plan(req.sketch);
         let solved = match &self.backend {
             Backend::Live { rt, state } => strategy.select(&mut SelectCtx {
                 src: GradSource::Live { rt: *rt, state },
@@ -1043,6 +1167,7 @@ impl PooledEngine {
         let t0 = Instant::now();
         let mut rng = req.round_rng();
         self.shared.set_shard_plan(req.shards);
+        self.shared.set_sketch_plan(req.sketch);
         let solved = strategy.select(&mut SelectCtx {
             src: GradSource::Oracle { oracle: &mut *self.oracle, h: self.h, c: self.c },
             train: &self.train,
@@ -1085,16 +1210,39 @@ mod tests {
             rng_tag: 1004,
             ground: vec![3, 1, 4, 1, 5, 9],
             shards: Some(ShardPlan { shards: 3, max_staged_rows: 2 }),
+            // salt above 2^53: must survive exactly (travels as a string)
+            sketch: Some(SketchPlan { width: 16, refit: false, seed_salt: u64::MAX - 3 }),
         };
         let parsed = Json::parse(&req.to_json().dump()).unwrap();
         let back = SelectionRequest::from_json(&parsed).unwrap();
         assert_eq!(req, back);
-        // no plan ⇒ the field is omitted on the wire and parses back None
+        // no plans ⇒ the fields are omitted on the wire and parse back None
         let mut flat = req.clone();
         flat.shards = None;
+        flat.sketch = None;
         let parsed = Json::parse(&flat.to_json().dump()).unwrap();
         assert!(parsed.get("shards").is_none());
+        assert!(parsed.get("sketch").is_none());
         assert_eq!(SelectionRequest::from_json(&parsed).unwrap(), flat);
+    }
+
+    #[test]
+    fn sketch_plan_applies_and_lenient_parse() {
+        // identity widths: 0 (disabled) and >= p fall through to flat
+        assert!(!SketchPlan::default().applies(64));
+        assert!(!SketchPlan { width: 64, ..Default::default() }.applies(64));
+        assert!(!SketchPlan { width: 100, ..Default::default() }.applies(64));
+        assert!(SketchPlan { width: 8, ..Default::default() }.applies(64));
+        // lenient parse: a request naming only the width gets refit=true
+        // and salt 0; null/absent plans parse to None
+        let j = Json::parse(r#"{"sketch": {"width": 12}}"#).unwrap();
+        assert_eq!(
+            SketchPlan::from_json(&j, "sketch"),
+            Some(SketchPlan { width: 12, refit: true, seed_salt: 0 })
+        );
+        let null = Json::parse(r#"{"sketch": null}"#).unwrap();
+        assert_eq!(SketchPlan::from_json(&null, "sketch"), None);
+        assert_eq!(SketchPlan::from_json(&Json::parse("{}").unwrap(), "sketch"), None);
     }
 
     #[test]
@@ -1161,6 +1309,9 @@ mod tests {
                 shard_stage_secs: 0.375,
                 merge_candidates: 9,
                 peak_staged_rows: 64,
+                sketch_width: 16,
+                sketch_secs: 0.0625,
+                refit_secs: 0.03125,
             },
         };
         let parsed = Json::parse(&rep.to_json().dump()).unwrap();
@@ -1195,6 +1346,10 @@ mod tests {
         assert_eq!(rep.stats.shard_stage_secs, 0.0);
         assert_eq!(rep.stats.merge_candidates, 0);
         assert_eq!(rep.stats.peak_staged_rows, 0);
+        // and pre-sketch reports parse to the unsketched defaults
+        assert_eq!(rep.stats.sketch_width, 0);
+        assert_eq!(rep.stats.sketch_secs, 0.0);
+        assert_eq!(rep.stats.refit_secs, 0.0);
     }
 
     #[test]
@@ -1242,6 +1397,7 @@ mod tests {
             rng_tag: 1000,
             ground: (0..24).collect(),
             shards: None,
+            sketch: None,
         };
 
         let mut borrowed = SynthGrads::new(8, p);

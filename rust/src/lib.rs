@@ -27,6 +27,7 @@
 //! | `grads`       | gradient acquisition: `GradOracle` seam, single-pass   |
 //! |               | class-sliced staging, streamed scoring                 |
 //! | `omp`         | Batch-OMP (correlation recurrence, Rust + XLA backends)|
+//! | `sketch`      | seeded JL projection: sketched OMP + full-width refit  |
 //! | `submod`      | facility location + lazy greedy (CRAIG, FeatureFL)     |
 //! | `trainer`     | Algorithm 1: weighted-SGD loop driving engine rounds   |
 //! | `overlap`     | background selection worker (double-buffered subsets)  |
@@ -53,6 +54,7 @@ pub mod metrics;
 pub mod omp;
 pub mod par;
 pub mod rng;
+pub mod sketch;
 pub mod stats;
 pub mod submod;
 pub mod tensor;

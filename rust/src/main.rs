@@ -80,6 +80,12 @@ fn cmd_train(cli: &Cli) -> Result<()> {
                 r.sharded_rounds, r.peak_staged_rows, r.merge_candidates
             );
         }
+        if r.sketched_rounds > 0 {
+            println!(
+                "            sketched: rounds {}  project {:.3}s  refit {:.3}s",
+                r.sketched_rounds, r.sketch_secs, r.refit_secs
+            );
+        }
     }
     let name = format!(
         "train_{}_{}_{}_{}",

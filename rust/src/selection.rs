@@ -67,12 +67,13 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
-use crate::engine::{RoundShared, ShardPlan};
+use crate::engine::{RoundShared, ShardPlan, SketchPlan};
 use crate::grads::{self, ClassStage, EvalEntries, GradOracle, GradientStore, RtGrads, StageWidth};
 use crate::omp::{omp_select, omp_select_rust, OmpOpts, OmpResult, XlaCorr};
 use crate::par;
 use crate::rng::Rng;
 use crate::runtime::{ModelState, Runtime};
+use crate::sketch::{SketchSolve, Sketcher};
 use crate::submod::{lazy_greedy, FacilityLocation};
 use crate::tensor::Matrix;
 
@@ -281,6 +282,20 @@ impl<'a> SelectCtx<'a> {
     pub fn note_shards(&self, shards: usize, merge_candidates: usize, peak_staged_rows: usize) {
         if let Some(shared) = self.round {
             shared.note_shards(shards, merge_candidates, peak_staged_rows);
+        }
+    }
+
+    /// The round's sketch plan, when the request carried one.  Legacy
+    /// rounds (`round = None`) never sketch.
+    pub fn sketch_plan(&self) -> Option<SketchPlan> {
+        self.round.and_then(|r| r.sketch_plan())
+    }
+
+    /// Record sketched-solve observability (applied width, projection and
+    /// re-fit seconds); no-op on the legacy path.
+    pub fn note_sketch(&self, width: usize, sketch_secs: f64, refit_secs: f64) {
+        if let Some(shared) = self.round {
+            shared.note_sketch(width, sketch_secs, refit_secs);
         }
     }
 
@@ -610,6 +625,134 @@ pub fn solve_shards_omp(
     results.into_iter().collect()
 }
 
+/// The class fan-out decision for *sketched* solves: same predicate as
+/// [`omp_fanout_wins`], but over the sketched inner-kernel cost `n_c·k`
+/// instead of the full staged width.  Exposed so the round probe records
+/// the exact decision [`solve_classes_omp_sketched`] applies.
+pub fn sketched_fanout_wins(stages: &[ClassStage], budgets: &[usize], k: usize) -> bool {
+    let live = live_classes(stages, budgets);
+    let max_work = live.iter().map(|&cls| stages[cls].g.rows * k).max().unwrap_or(0);
+    par::fanout_wins(live.len(), max_work)
+}
+
+/// Per-class global-column maps for the sketcher: class-sliced stages map
+/// local column `j` to `grads::class_columns(h, c, cls)[j]`, full-width
+/// stages to `j` itself — so every staging path (flat, sharded, merge)
+/// derives the identical projection row for the same gradient dimension.
+pub fn sketch_col_maps(h: usize, c: usize, per_gradient: bool, p: usize) -> Vec<Vec<usize>> {
+    (0..c)
+        .map(|cls| {
+            if per_gradient {
+                grads::class_columns(h, c, cls)
+            } else {
+                (0..p).collect()
+            }
+        })
+        .collect()
+}
+
+/// Derive the round's sketcher from the request RNG and the plan's salt.
+/// `Rng::split` is non-mutating, so rounds whose plan is absent or
+/// inapplicable (`k ≥ P`) leave the stream untouched — the flat
+/// fall-through stays bit-identical.
+pub fn sketcher_for(rng: &Rng, plan: &SketchPlan) -> Sketcher {
+    const SKETCH_SEED_TAG: u64 = 0x4A4C_5348; // "JLSH"
+    let mut s = rng.split(SKETCH_SEED_TAG);
+    Sketcher::new(plan.width, s.next_u64(), plan.seed_salt)
+}
+
+/// Sketched twin of [`solve_classes_omp_scaled`]: each live class's
+/// Batch-OMP runs against a seeded JL projection of its staged gradients
+/// (`[n_c, w] → [n_c, k]`, `k < w`), with weights optionally re-fit at
+/// the full staged width on the selected support
+/// ([`crate::sketch::solve_sketched_omp`]).  Identical merge contract
+/// ([`merge_class_omp_scaled`]).  Returns the selection plus the
+/// aggregate projection / re-fit seconds (summed across class tasks).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_classes_omp_sketched(
+    stages: &[ClassStage],
+    budgets: &[usize],
+    targets: &[Vec<f32>],
+    lambda: f32,
+    eps: f32,
+    parallel: bool,
+    scales: Option<&[f32]>,
+    sketcher: &Sketcher,
+    col_maps: &[Vec<usize>],
+    refit: bool,
+) -> Result<(Selection, f64, f64)> {
+    assert_eq!(stages.len(), budgets.len(), "one budget per class");
+    assert_eq!(stages.len(), targets.len(), "one target per class");
+    assert_eq!(stages.len(), col_maps.len(), "one column map per class");
+    let live = live_classes(stages, budgets);
+    let solve = |cls: &usize| -> Result<SketchSolve> {
+        let cls = *cls;
+        let opts = OmpOpts { k: budgets[cls], lambda, eps };
+        crate::sketch::solve_sketched_omp(
+            sketcher,
+            &stages[cls].g,
+            &col_maps[cls],
+            &targets[cls],
+            opts,
+            refit,
+        )
+    };
+    let fan = parallel && sketched_fanout_wins(stages, budgets, sketcher.width());
+    let results: Vec<Result<SketchSolve>> = solve_per_class(&live, fan, solve);
+    let mut picks = Vec::with_capacity(live.len());
+    let (mut sk_secs, mut rf_secs) = (0.0f64, 0.0f64);
+    for (&cls, res) in live.iter().zip(results) {
+        let s = res?;
+        sk_secs += s.sketch_secs;
+        rf_secs += s.refit_secs;
+        picks.push((
+            cls,
+            OmpResult {
+                selected: s.selected,
+                weights: s.weights,
+                residual_norm: s.residual_norm,
+                iters: s.iters,
+            },
+        ));
+    }
+    Ok((merge_class_omp_scaled(stages, picks, scales), sk_secs, rf_secs))
+}
+
+/// Sketched twin of [`solve_shards_omp`] — the first level of the
+/// two-level hierarchical OMP with every shard solve running in sketch
+/// space.  Shard solves only *nominate* candidates (their weights are
+/// discarded by the merge round), so the full-width re-fit is skipped
+/// here: the merge round's full-width solve over the winner pool IS the
+/// composition's re-fit.  Returns the shard selections (shard order) plus
+/// the aggregate projection seconds.
+pub fn solve_shards_omp_sketched(
+    problems: &[ShardOmp],
+    lambda: f32,
+    eps: f32,
+    parallel: bool,
+    sketcher: &Sketcher,
+    col_maps: &[Vec<usize>],
+) -> Result<(Vec<Selection>, f64)> {
+    let solve = |p: &ShardOmp| -> Result<(Selection, f64, f64)> {
+        solve_classes_omp_sketched(
+            &p.stages, &p.budgets, &p.targets, lambda, eps, true, None, sketcher, col_maps, false,
+        )
+    };
+    let results: Vec<Result<(Selection, f64, f64)>> = if parallel && problems.len() > 1 {
+        par::map_tasks(problems, solve)
+    } else {
+        problems.iter().map(solve).collect()
+    };
+    let mut sels = Vec::with_capacity(problems.len());
+    let mut sk_secs = 0.0f64;
+    for r in results {
+        let (sel, s, _) = r?;
+        sk_secs += s;
+        sels.push(sel);
+    }
+    Ok((sels, sk_secs))
+}
+
 /// [`solve_classes_omp`] twin for full-P solves routed through the XLA
 /// correlation kernel: identical staging, targets, and merge contract
 /// ([`merge_class_omp`]), but solves run serially against the (single)
@@ -911,6 +1054,24 @@ impl GradMatch {
             per_gradient,
             val_means.as_ref().map(|v| v.as_slice()),
         );
+        // sketched solve arm: JL-project each class problem and run OMP
+        // in sketch space, re-fitting weights at the staged width when the
+        // plan asks for it.  An absent plan or `k ≥` the stage width falls
+        // through to the flat solvers below bit-identically (nothing in
+        // this block runs).  The XLA arm is bypassed under sketching —
+        // sketched solves are CPU fan-out by design.
+        let stage_cols = if per_gradient { h + 1 } else { h * c + c };
+        if let Some(splan) = ctx.sketch_plan().filter(|pl| pl.applies(stage_cols)) {
+            let sketcher = sketcher_for(ctx.rng, &splan);
+            let col_maps = sketch_col_maps(h, c, per_gradient, h * c + c);
+            ctx.note_round(&budgets, sketched_fanout_wins(&stages, &budgets, splan.width));
+            let (sel, sk_secs, rf_secs) = solve_classes_omp_sketched(
+                &stages, &budgets, &targets, ctx.lambda, ctx.eps, true, None, &sketcher,
+                &col_maps, splan.refit,
+            )?;
+            ctx.note_sketch(splan.width, sk_secs, rf_secs);
+            return Ok(sel);
+        }
         if !per_gradient && self.use_xla {
             if let Some((rt, state)) = ctx.live() {
                 // full-P solves through the device kernel: the staged pass
@@ -1005,6 +1166,16 @@ impl GradMatch {
         };
         let val_slice = val_means.as_ref().map(|v| v.as_slice());
 
+        // sketch × shard composition: per-shard nomination solves run in
+        // sketch space (their weights are discarded anyway), the merge
+        // solve below stays full width — it IS the composition's re-fit.
+        // Sketching never adds dispatches: it reads the staged buffers.
+        let stage_cols = if per_gradient { h + 1 } else { p };
+        let sketch = ctx.sketch_plan().filter(|pl| pl.applies(stage_cols));
+        let sketcher = sketch.map(|pl| sketcher_for(ctx.rng, &pl));
+        let col_maps = sketch.map(|_| sketch_col_maps(h, c, per_gradient, p));
+        let mut sketch_secs = 0.0f64;
+
         // full-ground per-class target accumulation (f64, mirroring the
         // flat staging pass): each shard's class mean re-weighted by its
         // class row count, so the merge round matches the global class
@@ -1040,7 +1211,21 @@ impl GradMatch {
                 problems.push(ShardOmp { stages, budgets, targets });
             }
             peak = peak.max(alive);
-            let sels = solve_shards_omp(&problems, ctx.lambda, ctx.eps, problems.len() > 1)?;
+            let sels = match (&sketcher, &col_maps) {
+                (Some(sk), Some(maps)) => {
+                    let (sels, secs) = solve_shards_omp_sketched(
+                        &problems,
+                        ctx.lambda,
+                        ctx.eps,
+                        problems.len() > 1,
+                        sk,
+                        maps,
+                    )?;
+                    sketch_secs += secs;
+                    sels
+                }
+                _ => solve_shards_omp(&problems, ctx.lambda, ctx.eps, problems.len() > 1)?,
+            };
             for sel in sels {
                 winners.extend(sel.indices);
             }
@@ -1072,6 +1257,11 @@ impl GradMatch {
         // ×n_c), not the winner-pool sizes
         let scales: Vec<f32> = counts.iter().map(|&m| m as f32).collect();
         ctx.note_shards(s, merge_candidates, peak);
+        if let Some(pl) = sketch {
+            // refit_secs stays 0: the full-width merge solve below is the
+            // composition's re-fit, and it is already on the solve clock
+            ctx.note_sketch(pl.width, sketch_secs, 0.0);
+        }
         ctx.note_round(&mbudgets, omp_fanout_wins(&mstages, &mbudgets));
         solve_classes_omp_scaled(
             &mstages,

@@ -1177,6 +1177,7 @@ pub fn smoke() -> Result<()> {
             rng_tag: 1000,
             ground: (0..128).collect(),
             shards: None,
+            sketch: None,
         },
     );
     let mut spec = spec;
@@ -1231,6 +1232,11 @@ mod tests {
                 rng_tag: 3,
                 ground: (0..64).collect(),
                 shards: Some(crate::engine::ShardPlan { shards: 2, max_staged_rows: 32 }),
+                sketch: Some(crate::engine::SketchPlan {
+                    width: 24,
+                    refit: true,
+                    seed_salt: 9,
+                }),
             },
         );
         let j = spec.to_json();
@@ -1245,6 +1251,11 @@ mod tests {
             req.shards,
             Some(crate::engine::ShardPlan { shards: 2, max_staged_rows: 32 }),
             "shard plan survives the daemon wire format"
+        );
+        assert_eq!(
+            req.sketch,
+            Some(crate::engine::SketchPlan { width: 24, refit: true, seed_salt: 9 }),
+            "sketch plan survives the daemon wire format"
         );
         assert_eq!(deadline, Duration::from_millis(1234), "daemon default applies");
         let mut with_deadline = spec.clone();
@@ -1267,6 +1278,7 @@ mod tests {
                 rng_tag: 1,
                 ground: vec![0, 1, 2, 3],
                 shards: None,
+                sketch: None,
             },
         );
         // out-of-range ground index would panic deep in staging — must be

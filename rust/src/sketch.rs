@@ -1,0 +1,452 @@
+//! JL sketching for the correlation hot path (GRAFT-style).
+//!
+//! GRAD-MATCH's per-round cost bottoms out in correlation work over the
+//! staged `[n, P]` class matrix (`P = h·c + c` gradient dimensions).  GRAFT
+//! (PAPERS.md) shows that greedy gradient matching on a *low-rank sketch*
+//! of that matrix preserves selection quality at a fraction of the cost:
+//! project the staged gradients to `[n, k]` (k ≪ P) once per round, run
+//! Batch-OMP against the sketched Gram, and (optionally) re-fit the
+//! weights at full width on the selected support.
+//!
+//! # Determinism across staging paths
+//!
+//! The projection row for a gradient dimension is derived from the
+//! dimension's **global column index** (`Rng::new(seed ^ TAG).split(salt)
+//! .split(col)`), not from its position inside whatever slice happens to be
+//! staged.  A class-sliced stage, a full-width stage, and a per-shard stage
+//! therefore all see the *same* projection for the same dimension — which
+//! is what lets the sharded path sketch per-shard solves while the merge
+//! re-fit runs full width, and what makes sketched selections reproducible
+//! from `(seed, seed_salt)` alone.
+//!
+//! # Memory
+//!
+//! The projection is applied column-block-wise: nothing wider than a
+//! `[BLOCK, k]` strip of projection rows plus the `[n, k]` output is ever
+//! materialized, so sketching never exceeds the staged buffers it reads.
+//!
+//! # JL guarantee
+//!
+//! For `k ≳ 8·ln(n)/ε²` the (Rademacher or Gaussian) projection preserves
+//! pairwise distances to `(1 ± ε)` with high probability (Johnson &
+//! Lindenstrauss; Achlioptas 2003 for the ±1 case).  [`pairwise_distortion`]
+//! measures the empirical distortion so `theory.rs` can pin the bound, and
+//! [`jl_width_for`] inverts it to a suggested width.
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::{residual, ridge_weights_nonneg};
+use crate::omp::{omp_select_rust, OmpOpts, OmpResult};
+use crate::rng::Rng;
+use crate::tensor::{axpy, norm2, Matrix};
+
+/// Stream tag decorrelating sketch projections from every other consumer
+/// of the run seed (data synthesis, shuffling, fault injection, ...).
+const SKETCH_STREAM_TAG: u64 = 0x5EED_C0DE_u64;
+
+/// Columns of projection rows generated per strip while sketching.
+const COL_BLOCK: usize = 128;
+
+/// Entry distribution of the random projection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SketchKind {
+    /// ±1/√k entries (Achlioptas) — one random bit per entry, the default.
+    Rademacher,
+    /// N(0, 1/k) entries — the classic JL matrix.
+    Gaussian,
+}
+
+/// A seeded, deterministic `P → k` random projection.
+///
+/// Cheap to construct (no state beyond the parameters); projection rows
+/// are regenerated on demand from the (seed, salt, global column) triple.
+#[derive(Clone, Copy, Debug)]
+pub struct Sketcher {
+    width: usize,
+    seed: u64,
+    salt: u64,
+    kind: SketchKind,
+}
+
+impl Sketcher {
+    /// Rademacher sketcher of the given width.  `width` must be > 0.
+    pub fn new(width: usize, seed: u64, salt: u64) -> Sketcher {
+        Sketcher::with_kind(width, seed, salt, SketchKind::Rademacher)
+    }
+
+    /// Sketcher with an explicit entry distribution.
+    pub fn with_kind(width: usize, seed: u64, salt: u64, kind: SketchKind) -> Sketcher {
+        assert!(width > 0, "sketch width must be positive");
+        Sketcher {
+            width,
+            seed,
+            salt,
+            kind,
+        }
+    }
+
+    /// Sketch dimension `k`.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// The `k` projection entries for one **global** gradient dimension.
+    pub fn projection_row(&self, global_col: usize) -> Vec<f32> {
+        let mut row = vec![0.0f32; self.width];
+        self.fill_projection_row(global_col, &mut row);
+        row
+    }
+
+    fn fill_projection_row(&self, global_col: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.width);
+        let mut rng = Rng::new(self.seed ^ SKETCH_STREAM_TAG)
+            .split(self.salt)
+            .split(global_col as u64);
+        let scale = 1.0 / (self.width as f32).sqrt();
+        match self.kind {
+            SketchKind::Rademacher => {
+                // one u64 buys 64 sign bits
+                let mut bits = 0u64;
+                for (t, slot) in out.iter_mut().enumerate() {
+                    if t % 64 == 0 {
+                        bits = rng.next_u64();
+                    }
+                    *slot = if bits & 1 == 1 { scale } else { -scale };
+                    bits >>= 1;
+                }
+            }
+            SketchKind::Gaussian => {
+                for slot in out.iter_mut() {
+                    *slot = rng.gaussian_f32() * scale;
+                }
+            }
+        }
+    }
+
+    /// Project a staged `[n, w]` matrix to `[n, k]`.
+    ///
+    /// `cols[j]` is the **global** gradient-dimension index of local column
+    /// `j` (for a full-width stage just pass `0..w`; class-sliced and
+    /// sharded stages pass their `class_columns` map) — so every staging
+    /// path applies the identical projection.
+    pub fn sketch_matrix(&self, g: &Matrix, cols: &[usize]) -> Matrix {
+        assert_eq!(
+            g.cols,
+            cols.len(),
+            "sketch_matrix: column map must cover the staged width"
+        );
+        let k = self.width;
+        let mut out = Matrix::zeros(g.rows, k);
+        let mut strip = Matrix::zeros(COL_BLOCK.min(cols.len().max(1)), k);
+        let mut start = 0;
+        while start < cols.len() {
+            let end = (start + COL_BLOCK).min(cols.len());
+            for (bj, &col) in cols[start..end].iter().enumerate() {
+                self.fill_projection_row(col, strip.row_mut(bj));
+            }
+            for r in 0..g.rows {
+                let grow = &g.row(r)[start..end];
+                let orow = out.row_mut(r);
+                for (bj, &gv) in grow.iter().enumerate() {
+                    if gv != 0.0 {
+                        axpy(gv, strip.row(bj), orow);
+                    }
+                }
+            }
+            start = end;
+        }
+        out
+    }
+
+    /// Project a full-width vector (e.g. the matching target) to `[k]`.
+    pub fn sketch_vec(&self, v: &[f32], cols: &[usize]) -> Vec<f32> {
+        assert_eq!(
+            v.len(),
+            cols.len(),
+            "sketch_vec: column map must cover the vector"
+        );
+        let mut out = vec![0.0f32; self.width];
+        let mut row = vec![0.0f32; self.width];
+        for (&gv, &col) in v.iter().zip(cols) {
+            if gv != 0.0 {
+                self.fill_projection_row(col, &mut row);
+                axpy(gv, &row, &mut out);
+            }
+        }
+        out
+    }
+}
+
+/// Outcome of a sketched OMP solve (plus the optional full-width re-fit).
+#[derive(Clone, Debug)]
+pub struct SketchSolve {
+    /// Row indices into the staged matrix, in pick order.
+    pub selected: Vec<usize>,
+    /// Non-negative weights aligned with `selected` (full-width when
+    /// `refit` ran, sketch-space otherwise).
+    pub weights: Vec<f32>,
+    /// Residual norm in whichever space the weights live in.
+    pub residual_norm: f32,
+    /// OMP iterations in sketch space.
+    pub iters: usize,
+    /// Seconds spent projecting the matrix + target.
+    pub sketch_secs: f64,
+    /// Seconds spent on the full-width re-fit (0 when `refit` is off).
+    pub refit_secs: f64,
+}
+
+/// Run Batch-OMP on the sketched problem, optionally re-fitting weights at
+/// full width on the selected support.
+///
+/// `g`/`target` are the full-width staged matrix and matching target;
+/// `cols` maps local columns to global gradient dimensions (see
+/// [`Sketcher::sketch_matrix`]).  The caller is responsible for only
+/// invoking this when `sketcher.width() < g.cols` — at `k ≥ P` the flat
+/// solver is both cheaper and exact.
+pub fn solve_sketched_omp(
+    sketcher: &Sketcher,
+    g: &Matrix,
+    cols: &[usize],
+    target: &[f32],
+    opts: OmpOpts,
+    refit: bool,
+) -> Result<SketchSolve> {
+    let t0 = std::time::Instant::now();
+    let sk_g = sketcher.sketch_matrix(g, cols);
+    let sk_target = sketcher.sketch_vec(target, cols);
+    let sketch_secs = t0.elapsed().as_secs_f64();
+
+    let OmpResult {
+        selected,
+        mut weights,
+        mut residual_norm,
+        iters,
+    } = omp_select_rust(&sk_g, &sk_target, opts)?;
+
+    let mut refit_secs = 0.0;
+    if refit && !selected.is_empty() {
+        let t1 = std::time::Instant::now();
+        let (w, rnorm) = refit_full_width(&g.gather_rows(&selected), target, opts.lambda)?;
+        weights = w;
+        residual_norm = rnorm;
+        refit_secs = t1.elapsed().as_secs_f64();
+    }
+    Ok(SketchSolve {
+        selected,
+        weights,
+        residual_norm,
+        iters,
+        sketch_secs,
+        refit_secs,
+    })
+}
+
+/// Non-negative ridge re-fit of a selected support at full width.
+///
+/// Returns the weights (length = rows of `g_sel`, zeros where the
+/// non-negativity clamp dropped a row) and the full-width residual norm.
+pub fn refit_full_width(g_sel: &Matrix, target: &[f32], lambda: f32) -> Result<(Vec<f32>, f32)> {
+    let w = ridge_weights_nonneg(g_sel, target, lambda)
+        .map_err(|e| anyhow!("full-width refit failed: {e:?}"))?;
+    let rnorm = norm2(&residual(g_sel, &w, target));
+    Ok((w, rnorm))
+}
+
+/// Smallest sketch width with the JL `(1 ± ε)` pairwise guarantee for `n`
+/// points: `⌈8·ln(n)/ε²⌉` (the usual constant for the ±1/Gaussian case).
+pub fn jl_width_for(n: usize, eps: f64) -> usize {
+    assert!(eps > 0.0 && eps < 1.0, "jl_width_for: eps must be in (0,1)");
+    let n = n.max(2) as f64;
+    (8.0 * n.ln() / (eps * eps)).ceil() as usize
+}
+
+/// Empirical max pairwise-distance distortion `|‖S(x−y)‖²/‖x−y‖² − 1|`
+/// between rows of `g` (full width) and rows of `sk` (its sketch).
+///
+/// Pairs are enumerated deterministically with a stride that covers at
+/// most `max_pairs` of them; degenerate pairs (‖x−y‖ ≈ 0) are skipped.
+pub fn pairwise_distortion(g: &Matrix, sk: &Matrix, max_pairs: usize) -> f64 {
+    assert_eq!(g.rows, sk.rows, "pairwise_distortion: row count mismatch");
+    let n = g.rows;
+    if n < 2 || max_pairs == 0 {
+        return 0.0;
+    }
+    let total = n * (n - 1) / 2;
+    let stride = total.div_ceil(max_pairs).max(1);
+    let mut worst = 0.0f64;
+    let mut idx = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if idx % stride == 0 {
+                let d_full = sq_dist(g.row(i), g.row(j));
+                if d_full > 1e-12 {
+                    let d_sk = sq_dist(sk.row(i), sk.row(j));
+                    worst = worst.max((d_sk / d_full - 1.0).abs());
+                }
+            }
+            idx += 1;
+        }
+    }
+    worst
+}
+
+fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.set(r, c, rng.gaussian_f32());
+            }
+        }
+        m
+    }
+
+    fn all_cols(w: usize) -> Vec<usize> {
+        (0..w).collect()
+    }
+
+    #[test]
+    fn deterministic_and_salted() {
+        let mut rng = Rng::new(11);
+        let g = random_matrix(&mut rng, 6, 40);
+        let cols = all_cols(40);
+        let a = Sketcher::new(8, 7, 3).sketch_matrix(&g, &cols);
+        let b = Sketcher::new(8, 7, 3).sketch_matrix(&g, &cols);
+        assert_eq!(a.data, b.data, "same (seed, salt) must reproduce exactly");
+        let c = Sketcher::new(8, 7, 4).sketch_matrix(&g, &cols);
+        assert_ne!(a.data, c.data, "different salt must decorrelate");
+        let d = Sketcher::new(8, 9, 3).sketch_matrix(&g, &cols);
+        assert_ne!(a.data, d.data, "different seed must decorrelate");
+    }
+
+    #[test]
+    fn projection_is_linear() {
+        let sk = Sketcher::new(16, 42, 0);
+        let mut rng = Rng::new(5);
+        let cols = all_cols(64);
+        let x: Vec<f32> = (0..64).map(|_| rng.gaussian_f32()).collect();
+        let y: Vec<f32> = (0..64).map(|_| rng.gaussian_f32()).collect();
+        let combo: Vec<f32> = x.iter().zip(&y).map(|(a, b)| 2.0 * a - 0.5 * b).collect();
+        let sx = sk.sketch_vec(&x, &cols);
+        let sy = sk.sketch_vec(&y, &cols);
+        let s_combo = sk.sketch_vec(&combo, &cols);
+        for t in 0..16 {
+            let expect = 2.0 * sx[t] - 0.5 * sy[t];
+            assert!(
+                (s_combo[t] - expect).abs() < 1e-4,
+                "projection must be linear: {} vs {expect}",
+                s_combo[t]
+            );
+        }
+    }
+
+    #[test]
+    fn column_partition_sums_to_full_sketch() {
+        // The sharded path sketches column slices against their GLOBAL ids;
+        // linearity over a column partition is exactly what makes that
+        // consistent with sketching the full-width stage in one go.
+        let mut rng = Rng::new(23);
+        let g = random_matrix(&mut rng, 5, 30);
+        let sk = Sketcher::new(10, 99, 1);
+        let full = sk.sketch_matrix(&g, &all_cols(30));
+        let left_cols: Vec<usize> = (0..13).collect();
+        let right_cols: Vec<usize> = (13..30).collect();
+        let left = sk.sketch_matrix(&g.gather_cols(&left_cols), &left_cols);
+        let right = sk.sketch_matrix(&g.gather_cols(&right_cols), &right_cols);
+        for r in 0..5 {
+            for t in 0..10 {
+                let sum = left.at(r, t) + right.at(r, t);
+                assert!(
+                    (full.at(r, t) - sum).abs() < 1e-4,
+                    "slice sketches must sum to the full sketch"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn distortion_shrinks_with_width() {
+        let mut rng = Rng::new(31);
+        let g = random_matrix(&mut rng, 24, 256);
+        let cols = all_cols(256);
+        let narrow = Sketcher::new(8, 17, 0);
+        let wide = Sketcher::new(128, 17, 0);
+        let d_narrow = pairwise_distortion(&g, &narrow.sketch_matrix(&g, &cols), 500);
+        let d_wide = pairwise_distortion(&g, &wide.sketch_matrix(&g, &cols), 500);
+        assert!(
+            d_wide < d_narrow,
+            "wider sketch must distort less: k=128 gives {d_wide}, k=8 gives {d_narrow}"
+        );
+        assert!(d_wide < 0.5, "k=128 over 256 dims should be accurate: {d_wide}");
+    }
+
+    #[test]
+    fn gaussian_kind_also_concentrates() {
+        let mut rng = Rng::new(37);
+        let g = random_matrix(&mut rng, 16, 200);
+        let cols = all_cols(200);
+        let sk = Sketcher::with_kind(96, 41, 0, SketchKind::Gaussian);
+        let d = pairwise_distortion(&g, &sk.sketch_matrix(&g, &cols), 200);
+        assert!(d < 0.6, "gaussian sketch at k=96 should concentrate: {d}");
+    }
+
+    #[test]
+    fn refit_recovers_planted_combination() {
+        let mut rng = Rng::new(43);
+        let g_sel = random_matrix(&mut rng, 2, 50);
+        let mut target = vec![0.0f32; 50];
+        axpy(2.0, g_sel.row(0), &mut target);
+        axpy(3.0, g_sel.row(1), &mut target);
+        let (w, rnorm) = refit_full_width(&g_sel, &target, 1e-6).unwrap();
+        assert!((w[0] - 2.0).abs() < 1e-2, "w0={}", w[0]);
+        assert!((w[1] - 3.0).abs() < 1e-2, "w1={}", w[1]);
+        assert!(rnorm < 1e-2, "planted combination must refit exactly: {rnorm}");
+    }
+
+    #[test]
+    fn sketched_omp_finds_planted_atom() {
+        let mut rng = Rng::new(53);
+        let p = 64;
+        let g = random_matrix(&mut rng, 32, p);
+        let planted = 17usize;
+        let target: Vec<f32> = g.row(planted).iter().map(|v| 5.0 * v).collect();
+        let sk = Sketcher::new(p / 4, 71, 0);
+        let opts = OmpOpts {
+            k: 4,
+            lambda: 1e-4,
+            eps: 1e-6,
+        };
+        let solve = solve_sketched_omp(&sk, &g, &all_cols(p), &target, opts, true).unwrap();
+        assert_eq!(
+            solve.selected[0], planted,
+            "a 5x planted atom must dominate the sketched correlations"
+        );
+        let wi = solve.selected.iter().position(|&s| s == planted).unwrap();
+        assert!(
+            (solve.weights[wi] - 5.0).abs() < 0.5,
+            "full-width refit should recover the planted weight: {}",
+            solve.weights[wi]
+        );
+        assert!(solve.sketch_secs >= 0.0 && solve.refit_secs >= 0.0);
+    }
+
+    #[test]
+    fn jl_width_formula_sane() {
+        // n=1024, eps=0.5 → 8·ln(1024)/0.25 ≈ 222
+        let k = jl_width_for(1024, 0.5);
+        assert!((200..250).contains(&k), "k={k}");
+        assert!(jl_width_for(1024, 0.25) > k, "tighter eps needs more width");
+    }
+}

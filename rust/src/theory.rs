@@ -14,7 +14,11 @@
 //! - the **Theorem-1 bound evaluators** (cases 1 and 3),
 //! - a **γ-weak-submodularity estimator** for `F_λ(X) = L_max − E_λ(X)`
 //!   that empirically tests `F(j|S) ≥ γ·F(j|T)` for nested `S ⊆ T` and
-//!   compares with the Theorem-2 lower bound `λ/(λ + k·∇²_max)`.
+//!   compares with the Theorem-2 lower bound `λ/(λ + k·∇²_max)`,
+//! - a **Johnson–Lindenstrauss distortion evaluator** pinning the sketched
+//!   correlation path (`crate::sketch`): empirical pairwise-distance
+//!   distortion of the seeded projection vs the `(1 ± ε)` bound at the
+//!   prescribed width `k = ⌈8·ln(n)/ε²⌉`.
 //!
 //! The property tests in this module are the reproduction of the paper's
 //! theoretical contribution; `rust/benches` covers the empirical one.
@@ -301,6 +305,42 @@ pub fn gamma_lower_bound(g: &Matrix, k: usize, lambda: f32) -> f64 {
     lambda as f64 / (lambda as f64 + k as f64 * max_norm2)
 }
 
+// ---------------------------------------------------------------------------
+// Johnson–Lindenstrauss distortion (the sketch subsystem's correctness pin)
+// ---------------------------------------------------------------------------
+
+/// Empirical max pairwise-distance distortion of the seeded projection the
+/// sketched selection path uses ([`crate::sketch::Sketcher`]) on the rows
+/// of `g`, at sketch width `width`: `max |‖Sx−Sy‖²/‖x−y‖² − 1|` over at
+/// most `max_pairs` deterministically-strided row pairs.
+pub fn jl_max_distortion(
+    g: &Matrix,
+    width: usize,
+    seed: u64,
+    salt: u64,
+    max_pairs: usize,
+) -> f64 {
+    let sk = crate::sketch::Sketcher::new(width, seed, salt);
+    let cols: Vec<usize> = (0..g.cols).collect();
+    crate::sketch::pairwise_distortion(g, &sk.sketch_matrix(g, &cols), max_pairs)
+}
+
+/// Evaluate the `(1 ± ε)` JL guarantee at the width
+/// [`crate::sketch::jl_width_for`] prescribes for `g.rows` points.
+/// Returns `(width, distortion)`; the guarantee holds when
+/// `distortion <= eps` — with high probability over `(seed, salt)`, which
+/// is exactly what the lemma promises.
+pub fn jl_bound_check(
+    g: &Matrix,
+    eps: f64,
+    seed: u64,
+    salt: u64,
+    max_pairs: usize,
+) -> (usize, f64) {
+    let width = crate::sketch::jl_width_for(g.rows, eps);
+    (width, jl_max_distortion(g, width, seed, salt, max_pairs))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -470,5 +510,64 @@ mod tests {
         let lb_big = gamma_lower_bound(&g, 8, 10.0);
         assert!(lb_big > lb_small);
         assert!(lb_small > 0.0 && lb_big < 1.0);
+    }
+
+    /// Per-sample gradient ground set of a logistic problem at θ = 0 —
+    /// the same kind of `[n, P]` matrix the sketched selection path
+    /// projects, so the JL pin runs on the actual object of interest.
+    fn gradient_ground_set(seed: u64, n: usize, d: usize) -> Matrix {
+        let p = problem(seed, n, d);
+        let theta = vec![0.0f32; d];
+        let mut g = Matrix::zeros(n, d);
+        for i in 0..n {
+            g.row_mut(i).copy_from_slice(&p.sample_grad(&theta, i));
+        }
+        g
+    }
+
+    #[test]
+    fn jl_distortion_respects_epsilon_at_prescribed_width() {
+        // The JL lemma is a with-high-probability statement over the
+        // projection draw, so the pin mirrors it: at the prescribed
+        // k = ⌈8·ln(n)/ε²⌉, a majority of independent salts must land
+        // within ε, and every one of them within the coarse 2ε ceiling.
+        let g = gradient_ground_set(21, 64, 256);
+        let eps = 0.5;
+        let mut width_seen = 0;
+        let mut hits = 0;
+        for salt in 0..3u64 {
+            let (width, dist) = jl_bound_check(&g, eps, 1234, salt, 64);
+            width_seen = width;
+            if dist <= eps {
+                hits += 1;
+            }
+            assert!(
+                dist <= 2.0 * eps,
+                "salt {salt}: distortion {dist} far outside the (1±ε) bound at k={width}"
+            );
+        }
+        assert!(
+            width_seen > 8 && width_seen < g.cols,
+            "prescribed width {width_seen} should be a real reduction of P={}",
+            g.cols
+        );
+        assert!(
+            hits >= 2,
+            "JL (1±ε) bound must hold w.h.p. at prescribed width {width_seen}: {hits}/3 salts within ε={eps}"
+        );
+    }
+
+    #[test]
+    fn jl_distortion_is_deterministic_and_decays_with_width() {
+        let g = gradient_ground_set(22, 48, 192);
+        let a = jl_max_distortion(&g, 96, 77, 5, 300);
+        let b = jl_max_distortion(&g, 96, 77, 5, 300);
+        assert_eq!(a, b, "fixed (seed, salt) must reproduce the distortion exactly");
+        let narrow = jl_max_distortion(&g, 12, 77, 5, 300);
+        assert!(
+            a < narrow,
+            "k=96 must distort less than k=12: {a} vs {narrow}"
+        );
+        assert!(narrow > 0.0, "a 12-wide sketch of 192 dims cannot be exact");
     }
 }

@@ -61,6 +61,11 @@ pub struct TrainOpts {
     /// matrix exceeds this many rows (see `selection.rs`); `0` stages
     /// the whole ground set flat
     pub max_staged_rows: usize,
+    /// sketched selection rounds: `> 0` JL-projects each staged class
+    /// problem to this width before Batch-OMP, re-fitting weights at full
+    /// width on the selected support (see `engine::SketchPlan` /
+    /// `sketch.rs`); `0` solves at the full staged width
+    pub sketch_width: usize,
 }
 
 impl Default for TrainOpts {
@@ -82,6 +87,7 @@ impl Default for TrainOpts {
             stale_tol: 2.0,
             overlap_wait_ms: 2_000,
             max_staged_rows: 0,
+            sketch_width: 0,
         }
     }
 }
@@ -245,6 +251,10 @@ pub fn train_overlapped(
         shards: (opts.max_staged_rows > 0).then(|| crate::engine::ShardPlan {
             shards: 0,
             max_staged_rows: opts.max_staged_rows,
+        }),
+        sketch: (opts.sketch_width > 0).then(|| crate::engine::SketchPlan {
+            width: opts.sketch_width,
+            ..Default::default()
         }),
     };
 

@@ -18,7 +18,7 @@
 
 use std::time::{Duration, Instant};
 
-use gradmatch::engine::SelectionRequest;
+use gradmatch::engine::{SelectionRequest, SketchPlan};
 use gradmatch::fault::FaultPlan;
 use gradmatch::jsonlite::{hostile_corpus, Json};
 use gradmatch::server::{
@@ -38,6 +38,7 @@ fn small_request(rng_tag: u64) -> SelectionRequest {
         rng_tag,
         ground: (0..128).collect(),
         shards: None,
+        sketch: None,
     }
 }
 
@@ -348,6 +349,86 @@ fn graceful_drain_completes_every_admitted_round() {
     // after the drain, the socket is gone: new selects are refused at
     // connect time, not silently queued
     assert!(DaemonClient::connect(&bind).is_err());
+}
+
+#[test]
+fn sketch_plan_round_trips_and_lenient_wire_stays_compatible() {
+    // mirrors PR 8's ShardPlan wire pinning for the sketch fields: new
+    // clients round-trip the plan and the probe counters; old clients
+    // (no 'sketch' key), width-only plans, unknown fields, and explicit
+    // nulls all parse leniently and get served
+    let (daemon, bind) = start("sketchwire", |_| {});
+    let mut client = connect(&bind);
+
+    // a new client's sketched round: 'gradmatch' stages h+1 = 5 columns
+    // per class, so width 3 applies, and the probe fields come back
+    let mut spec = small_spec("sketch-tenant", 1000);
+    spec.request.sketch = Some(SketchPlan { width: 3, refit: true, seed_salt: 5 });
+    let resp = client.select(&spec).unwrap();
+    assert_eq!(resp_type(&resp), "report", "got: {}", resp.dump());
+    assert_eq!(
+        resp.path(&["report", "round", "sketch_width"]).and_then(Json::as_usize),
+        Some(3),
+        "the applied sketch width must survive the wire: {}",
+        resp.dump()
+    );
+    for key in ["sketch_secs", "refit_secs"] {
+        let secs = resp.path(&["report", "round", key]).and_then(Json::as_f64);
+        assert!(
+            secs.is_some_and(|v| v >= 0.0),
+            "round probe must carry '{key}': {}",
+            resp.dump()
+        );
+    }
+
+    // an old client omitting the key entirely: served, unsketched
+    let legacy = small_spec("legacy-tenant", 2000).to_json().dump();
+    assert!(!legacy.contains("sketch"), "a None plan must be omitted on the wire: {legacy}");
+    client.send_raw(&legacy).unwrap();
+    let resp = client.recv().unwrap();
+    assert_eq!(resp_type(&resp), "report", "got: {}", resp.dump());
+    assert_eq!(
+        resp.path(&["report", "round", "sketch_width"]).and_then(Json::as_usize),
+        Some(0),
+        "legacy requests stay flat: {}",
+        resp.dump()
+    );
+
+    // a hand-written width-only plan with unknown inner AND outer fields:
+    // lenient parse (refit defaults on, salt 0, unknowns ignored), round
+    // still sketches
+    let base = small_spec("fwd-tenant", 3000).to_json().dump();
+    let doctored = base.replacen(
+        "\"request\":{",
+        "\"request\":{\"sketch\":{\"width\":3,\"future_knob\":true},\"future_field\":\"x\",",
+        1,
+    );
+    assert_ne!(doctored, base, "doctoring must hit the request object");
+    client.send_raw(&doctored).unwrap();
+    let resp = client.recv().unwrap();
+    assert_eq!(resp_type(&resp), "report", "unknown fields must be tolerated: {}", resp.dump());
+    assert_eq!(
+        resp.path(&["report", "round", "sketch_width"]).and_then(Json::as_usize),
+        Some(3),
+        "a width-only plan must sketch with default refit/salt: {}",
+        resp.dump()
+    );
+
+    // an explicit null plan is the flat path
+    let base = small_spec("null-tenant", 4000).to_json().dump();
+    let doctored = base.replacen("\"request\":{", "\"request\":{\"sketch\":null,", 1);
+    assert_ne!(doctored, base);
+    client.send_raw(&doctored).unwrap();
+    let resp = client.recv().unwrap();
+    assert_eq!(resp_type(&resp), "report", "got: {}", resp.dump());
+    assert_eq!(
+        resp.path(&["report", "round", "sketch_width"]).and_then(Json::as_usize),
+        Some(0)
+    );
+
+    client.shutdown().unwrap();
+    let snap = daemon.join().unwrap().unwrap();
+    assert_eq!(snap.rounds_served, 4);
 }
 
 #[test]

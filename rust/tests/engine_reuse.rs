@@ -45,6 +45,7 @@ fn request(strategy: &str, ground: Vec<usize>, budget: usize, tag: u64) -> Selec
         rng_tag: tag,
         ground,
         shards: None,
+        sketch: None,
     }
 }
 

@@ -57,6 +57,7 @@ fn request(strategy: &str, ground: Vec<usize>, budget: usize) -> SelectionReques
         rng_tag: 7,
         ground,
         shards: None,
+        sketch: None,
     }
 }
 

@@ -66,6 +66,7 @@ fn request(ground: Vec<usize>, budget: usize) -> SelectionRequest {
         rng_tag: 0,
         ground,
         shards: None,
+        sketch: None,
     }
 }
 

@@ -68,6 +68,7 @@ fn request(
         rng_tag: 7,
         ground,
         shards,
+        sketch: None,
     }
 }
 

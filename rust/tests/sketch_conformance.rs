@@ -1,0 +1,308 @@
+//! Conformance for the JL-sketched correlation path, pinned device-free
+//! on the synthetic gradient oracle:
+//!
+//! - **inapplicable plan ≡ flat** — a sketch plan whose width is at
+//!   least the staged column count (or a width of 0) is bit-identical to
+//!   the plan-less flat path for EVERY `strategy_specs()` spec, with
+//!   identical dispatch counts;
+//! - **quality** — at `k = P/8` with full-width re-fit, the sketched
+//!   subset's matched-gradient error stays in the flat solve's regime,
+//!   and sketching adds ZERO oracle dispatches (it reads staged buffers);
+//! - **determinism** — a sketched round is reproducible from
+//!   `(seed, rng_tag, seed_salt)` alone;
+//! - **sketch × shard composition** — per-shard solves sketch while the
+//!   merge re-fit runs full width: the two-level dispatch contract
+//!   `Σ_s ⌈n_s/chunk⌉ + ⌈|winners|/chunk⌉` is unchanged, the round
+//!   probe records the sketch width, and `refit_secs` stays 0 (the merge
+//!   solve IS the composition's re-fit).
+
+use gradmatch::data::Dataset;
+use gradmatch::engine::{SelectionEngine, SelectionRequest, ShardPlan, SketchPlan};
+use gradmatch::grads::{self, SynthGrads};
+use gradmatch::rng::Rng;
+use gradmatch::selection::{strategy_specs, Selection};
+use gradmatch::tensor::Matrix;
+
+const CHUNK: usize = 16;
+const BATCH: usize = 4;
+
+/// Imbalanced synthetic dataset (the strategy-conformance fixture shape:
+/// heavy head, long tail, every class populated).
+fn imbalanced(seed: u64, classes: usize, d: usize) -> Dataset {
+    let mut y: Vec<i32> = Vec::new();
+    for cls in 0..classes {
+        let n_c = match cls % 3 {
+            0 => 37,
+            1 => 11,
+            _ => 4,
+        };
+        y.extend(std::iter::repeat(cls as i32).take(n_c));
+    }
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut y);
+    let n = y.len();
+    let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian_f32()).collect());
+    Dataset { x, y, classes }
+}
+
+/// Balanced synthetic dataset sized exactly `n` (`y = i mod classes`).
+fn balanced(seed: u64, n: usize, classes: usize, d: usize) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let y: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
+    let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian_f32()).collect());
+    Dataset { x, y, classes }
+}
+
+fn request(
+    strategy: &str,
+    ground: Vec<usize>,
+    budget: usize,
+    shards: Option<ShardPlan>,
+    sketch: Option<SketchPlan>,
+) -> SelectionRequest {
+    SelectionRequest {
+        strategy: strategy.into(),
+        budget,
+        lambda: 0.5,
+        eps: 1e-10,
+        is_valid: false,
+        seed: 42,
+        rng_tag: 7,
+        ground,
+        shards,
+        sketch,
+    }
+}
+
+/// Paper-style matching error of a weighted subset against the full
+/// ground gradient sum: `‖Σ wᵢgᵢ − Σ g‖ / ‖Σ g‖` (the shard-scale
+/// bench's metric — weights are class-sum calibrated on both paths).
+fn subset_error(store: &grads::GradientStore, sel: &Selection) -> f64 {
+    let p = store.g.cols;
+    let mut full = vec![0.0f64; p];
+    for r in 0..store.g.rows {
+        for (j, &v) in store.g.row(r).iter().enumerate() {
+            full[j] += v as f64;
+        }
+    }
+    let mut sub = vec![0.0f64; p];
+    for (slot, &row) in sel.indices.iter().enumerate() {
+        let w = sel.weights[slot] as f64;
+        for (j, &v) in store.g.row(row).iter().enumerate() {
+            sub[j] += w * v as f64;
+        }
+    }
+    let num: f64 = full.iter().zip(&sub).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+    let den: f64 = full.iter().map(|a| a * a).sum::<f64>().sqrt();
+    num / den.max(1e-12)
+}
+
+#[test]
+fn inapplicable_sketch_plan_is_bit_identical_to_flat_for_every_spec() {
+    let (classes, h, d) = (5usize, 3usize, 6usize);
+    let p = h * classes + classes;
+    let train = imbalanced(91, classes, d);
+    let val = imbalanced(92, classes, d);
+    let n = train.len();
+    let ground: Vec<usize> = (0..n).collect();
+    let budget = n / 4;
+
+    for spec in strategy_specs() {
+        let mut flat_oracle = SynthGrads::with_batch(CHUNK, p, BATCH);
+        let flat = {
+            let engine = SelectionEngine::with_oracle(&mut flat_oracle, &train, &val, h, classes);
+            engine.select(&request(spec, ground.clone(), budget, None, None)).unwrap()
+        };
+
+        // two inapplicable spellings: k = the full staged width (no
+        // reduction) and k well past it — both are the identity
+        let plans = [
+            SketchPlan { width: p, refit: true, seed_salt: 0 },
+            SketchPlan { width: 2 * p, refit: false, seed_salt: 3 },
+        ];
+        for plan in plans {
+            let mut oracle = SynthGrads::with_batch(CHUNK, p, BATCH);
+            let got = {
+                let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+                engine
+                    .select(&request(spec, ground.clone(), budget, None, Some(plan)))
+                    .unwrap()
+            };
+            assert_eq!(
+                got.selection, flat.selection,
+                "{spec}: inapplicable sketch plan {plan:?} must be bit-identical to the flat path"
+            );
+            assert_eq!(
+                got.stats.sketch_width, 0,
+                "{spec}: an inapplicable plan must not record a sketch width"
+            );
+            assert_eq!(
+                (oracle.grad_calls, oracle.mean_calls, oracle.gradsum_calls, oracle.eval_calls),
+                (
+                    flat_oracle.grad_calls,
+                    flat_oracle.mean_calls,
+                    flat_oracle.gradsum_calls,
+                    flat_oracle.eval_calls
+                ),
+                "{spec}: inapplicable sketch plan {plan:?} must cost the flat path's dispatches"
+            );
+        }
+    }
+}
+
+#[test]
+fn sketched_solve_stays_in_the_flat_quality_regime() {
+    // full-width staging ("gradmatch-perclass") so P is large enough for
+    // a real P/8 reduction
+    let (classes, h, d) = (4usize, 16usize, 6usize);
+    let p = h * classes + classes; // 68
+    let (n, budget) = (240usize, 48usize);
+    let k = p / 8; // 8
+    let train = balanced(93, n, classes, d);
+    let val = balanced(94, 60, classes, d);
+    let ground: Vec<usize> = (0..n).collect();
+
+    let mut flat_oracle = SynthGrads::new(CHUNK, p);
+    let flat = {
+        let engine = SelectionEngine::with_oracle(&mut flat_oracle, &train, &val, h, classes);
+        engine
+            .select(&request("gradmatch-perclass", ground.clone(), budget, None, None))
+            .unwrap()
+    };
+
+    let plan = SketchPlan { width: k, refit: true, seed_salt: 0 };
+    let mut sk_oracle = SynthGrads::new(CHUNK, p);
+    let sketched = {
+        let engine = SelectionEngine::with_oracle(&mut sk_oracle, &train, &val, h, classes);
+        engine
+            .select(&request("gradmatch-perclass", ground.clone(), budget, None, Some(plan)))
+            .unwrap()
+    };
+
+    // sketching reads the staged buffers — it must not add dispatches
+    assert_eq!(
+        (sk_oracle.grad_calls, sk_oracle.mean_calls, sk_oracle.gradsum_calls),
+        (flat_oracle.grad_calls, flat_oracle.mean_calls, flat_oracle.gradsum_calls),
+        "a sketched round must cost exactly the flat round's dispatches"
+    );
+    assert_eq!(sketched.stats.sketch_width, k, "round probe records the applied width");
+    assert!(sketched.stats.sketch_secs >= 0.0 && sketched.stats.refit_secs >= 0.0);
+
+    // selection sanity
+    let sel = &sketched.selection;
+    assert!(!sel.indices.is_empty() && sel.indices.len() <= budget);
+    let mut uniq = sel.indices.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    assert_eq!(uniq.len(), sel.indices.len(), "duplicate rows selected");
+    assert!(uniq.iter().all(|&i| i < n), "out-of-range row selected");
+    assert!(sel.weights.iter().all(|w| w.is_finite() && *w >= 0.0));
+
+    // quality: the sketched support is chosen from noisy k-dim proxies,
+    // but the full-width re-fit re-weights it optimally — the matching
+    // error must stay in the flat solve's regime, not collapse to noise
+    let mut err_oracle = SynthGrads::new(CHUNK, p);
+    let store = grads::per_sample_grads_with(&mut err_oracle, &train, &ground)
+        .expect("per-sample gradients for the error metric");
+    let err_flat = subset_error(&store, &flat.selection);
+    let err_sketch = subset_error(&store, &sketched.selection);
+    assert!(
+        err_sketch <= 3.0 * err_flat + 0.15,
+        "sketched error {err_sketch:.4} far outside the flat regime {err_flat:.4} at k={k}"
+    );
+    assert!(err_sketch < 1.0, "re-fit weights must beat the empty subset: {err_sketch:.4}");
+}
+
+#[test]
+fn sketched_selection_is_deterministic_in_seed_and_salt() {
+    let (classes, h, d) = (4usize, 16usize, 6usize);
+    let p = h * classes + classes;
+    let (n, budget) = (240usize, 48usize);
+    let train = balanced(95, n, classes, d);
+    let val = balanced(96, 60, classes, d);
+    let ground: Vec<usize> = (0..n).collect();
+    let plan = SketchPlan { width: p / 8, refit: true, seed_salt: 0 };
+
+    let run = |plan: SketchPlan| {
+        let mut oracle = SynthGrads::new(CHUNK, p);
+        let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+        engine
+            .select(&request("gradmatch-perclass", ground.clone(), budget, None, Some(plan)))
+            .unwrap()
+    };
+
+    let a = run(plan);
+    let b = run(plan);
+    assert_eq!(
+        a.selection, b.selection,
+        "a sketched round must be reproducible from (seed, rng_tag, seed_salt)"
+    );
+    assert_eq!(a.stats.sketch_width, b.stats.sketch_width);
+
+    // a different projection salt is a different (valid) round
+    let salted = run(SketchPlan { seed_salt: 1, ..plan });
+    assert_eq!(salted.stats.sketch_width, p / 8);
+    assert!(!salted.selection.indices.is_empty());
+    assert!(salted.selection.indices.len() <= budget);
+    assert!(salted.selection.weights.iter().all(|w| w.is_finite()));
+}
+
+#[test]
+fn sketch_composes_with_sharding_without_extra_dispatches() {
+    // per-gradient staging ("gradmatch-rust"): staged width is h+1, so
+    // the sketch must be narrower than that to apply
+    let (classes, h, d) = (3usize, 12usize, 5usize);
+    let p = h * classes + classes;
+    let (n, budget, max_rows) = (600usize, 60usize, 150usize);
+    let width = 8usize; // < h+1 = 13
+    let train = balanced(97, n, classes, d);
+    let val = balanced(98, 60, classes, d);
+    let ground: Vec<usize> = (0..n).collect();
+
+    let shards = ShardPlan { shards: 0, max_staged_rows: max_rows };
+    let sketch = SketchPlan { width, refit: true, seed_salt: 0 };
+    let mut oracle = SynthGrads::new(CHUNK, p);
+    let report = {
+        let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+        engine
+            .select(&request("gradmatch-rust", ground, budget, Some(shards), Some(sketch)))
+            .unwrap()
+    };
+    let stats = &report.stats;
+
+    assert_eq!(stats.shards, 4, "shard count derivation is unchanged under sketching");
+    assert!(stats.peak_staged_rows <= max_rows, "memory budget holds under sketching");
+    assert_eq!(stats.sketch_width, width, "round probe records the shard solves' width");
+    assert!(
+        stats.refit_secs == 0.0,
+        "sharded sketched rounds skip the per-shard re-fit — the full-width merge \
+         solve IS the composition's re-fit (got {})",
+        stats.refit_secs
+    );
+
+    // the two-level dispatch contract is untouched: sketching reads the
+    // staged shard buffers, so acquisition stays
+    // Σ_s ⌈n_s/chunk⌉ + ⌈|winners|/chunk⌉
+    let shard_passes = 4 * max_rows.div_ceil(CHUNK);
+    let merge_passes = stats.merge_candidates.div_ceil(CHUNK);
+    assert_eq!(
+        oracle.grad_calls,
+        shard_passes + merge_passes,
+        "sketching must add zero dispatches to the sharded contract"
+    );
+    assert_eq!(
+        stats.stage_dispatches, oracle.grad_calls,
+        "the round probe must agree with the oracle's own counter"
+    );
+    assert!(stats.merge_candidates > 0 && stats.merge_candidates <= 2 * budget);
+
+    // selection sanity
+    let sel = &report.selection;
+    assert!(!sel.indices.is_empty() && sel.indices.len() <= budget);
+    let mut uniq = sel.indices.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    assert_eq!(uniq.len(), sel.indices.len(), "duplicate rows selected");
+    assert!(uniq.iter().all(|&i| i < n), "out-of-range row selected");
+    assert!(sel.weights.iter().all(|w| w.is_finite()));
+}

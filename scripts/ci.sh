@@ -5,17 +5,19 @@
 #   scripts/ci.sh           # everything except benches (incl. daemon smoke)
 #   scripts/ci.sh --fast    # build + tests + smoke only (skip fmt/clippy)
 #   scripts/ci.sh --bench   # also run micro_hotpath and diff the
-#                           # round_* notes against the committed
+#                           # round_*/sketch_* notes against the committed
 #                           # rust/BENCH_micro.json snapshot, plus the
 #                           # daemon_stress throughput/tail-latency bench
 #                           # and the shard_scale memory-budget bench
+#                           # (its notes diffed vs rust/BENCH_shard.json)
 #
 # Tier-1 (enforced): cargo build --release && cargo test -q.
 # The suite also runs with --no-default-features (the pure-host math
 # core, no `xla` stub at all) so the feature seam cannot rot; the
 # fault-injection suite runs explicitly so a filtered default run can
-# never silently drop it; and the two engine-coverage suites
-# (strategy_conformance, engine_reuse) are gated warning-free.
+# never silently drop it; and the engine-coverage suites
+# (strategy_conformance, engine_reuse, shard/sketch_conformance) are
+# gated warning-free.
 # fmt/clippy run when the components are installed; a missing component
 # is reported but does not fail the gate (offline toolchains may omit
 # them), while an installed component failing DOES fail.
@@ -56,12 +58,15 @@ echo "== cargo test -q --test shard_conformance (sharded-selection suite) =="
 # cargo skips the target entirely and the pure-host core still builds.
 cargo test -q --test shard_conformance
 
-echo "== warnings gate: strategy_conformance + engine_reuse + shard_conformance =="
+echo "== cargo test -q --test sketch_conformance (sketched-selection suite) =="
+cargo test -q --test sketch_conformance
+
+echo "== warnings gate: strategy_conformance + engine_reuse + shard_conformance + sketch_conformance =="
 # cargo replays cached warnings, so a --no-run rebuild of just the
 # suites surfaces any warning attributed to their files; fail on match.
-conf_warn=$(cargo test --test strategy_conformance --test engine_reuse --test shard_conformance --no-run 2>&1 \
+conf_warn=$(cargo test --test strategy_conformance --test engine_reuse --test shard_conformance --test sketch_conformance --no-run 2>&1 \
     | grep -E "^warning" -A 3 \
-    | grep -E "tests/(strategy_conformance|engine_reuse|shard_conformance)\.rs" || true)
+    | grep -E "tests/(strategy_conformance|engine_reuse|shard_conformance|sketch_conformance)\.rs" || true)
 if [[ -n "$conf_warn" ]]; then
     echo "$conf_warn"
     echo "ci: FAIL — warnings in the engine-coverage suites"
@@ -130,7 +135,48 @@ if [[ "$bench" == "1" ]]; then
     echo "== shard scale: >=10x ground-vs-staged + flat-quality tolerance =="
     # hard checks live in the bench itself (exit 1 on failure); the
     # report lands in BENCH_shard.json next to the other two
+    old_shard=$(git show HEAD:rust/BENCH_shard.json 2>/dev/null || true)
     cargo bench --bench shard_scale
+    echo "== bench gate: shard_scale vs committed rust/BENCH_shard.json =="
+    if [[ -z "$old_shard" ]]; then
+        echo "ci: no committed BENCH_shard.json at HEAD — skipping shard notes diff"
+    else
+        sbootstrap=0
+        grep -q '"snapshot_bootstrap"' <<<"$old_shard" && sbootstrap=1
+        sfail=0
+        while read -r key new; do
+            oldv=$(notes <<<"$old_shard" | awk -v k="$key" '$1==k{print $2; exit}')
+            [[ -z "$oldv" || "$oldv" == "null" || "$new" == "null" ]] && continue
+            case "$key" in
+                *speedup*|*scale_ratio*)
+                    bad=$(awk -v n="$new" -v o="$oldv" 'BEGIN{print (n < 0.75*o) ? 1 : 0}')
+                    kind="ratio regressed (new $new < 0.75 x old $oldv)" ;;
+                *dispatches*)
+                    bad=$(awk -v n="$new" -v o="$oldv" 'BEGIN{print (n > 1.25*o) ? 1 : 0}')
+                    kind="dispatch count grew (new $new > 1.25 x old $oldv)" ;;
+                *err*)
+                    # selection is deterministic, so matching-error notes
+                    # only move when the algorithm changes; small absolute
+                    # slack absorbs f32 reduction-order noise
+                    bad=$(awk -v n="$new" -v o="$oldv" 'BEGIN{print (n > 1.25*o + 0.01) ? 1 : 0}')
+                    kind="matching error grew (new $new > 1.25 x old $oldv + 0.01)" ;;
+                *) continue ;;   # raw timings etc. are machine-dependent
+            esac
+            if [[ "$bad" == "1" ]]; then
+                if [[ "$sbootstrap" == "1" ]]; then
+                    echo "ci: WARN (bootstrap snapshot) — $key: $kind"
+                else
+                    echo "ci: FAIL — $key: $kind"
+                    sfail=1
+                fi
+            fi
+        done < <(notes < rust/BENCH_shard.json)
+        if [[ "$sfail" == "1" ]]; then
+            echo "ci: FAIL — bench regression vs committed BENCH_shard.json"
+            exit 1
+        fi
+        echo "ci: shard bench notes within tolerance"
+    fi
 fi
 
 if [[ "$fast" == "1" ]]; then
