@@ -1,0 +1,265 @@
+//! Subset-transferability bench (`BENCH_transfer.json`): quantifies what
+//! `selection.reuse_across_arms` actually trades away.  Across a
+//! strategies × budgets grid, arm A solves its rounds fresh and memoizes
+//! them in a [`SelectionCache`]; arm B — the same round signature over a
+//! *perturbed* gradient landscape (the device-free stand-in for a sweep
+//! arm tuning the model or learning rate, which the cache key
+//! deliberately ignores) — is measured both ways:
+//!
+//! - **per-arm**: B re-solves against its own gradients (the
+//!   `reuse_across_arms = false` cost), and
+//! - **reused**: B replays A's memoized subset via a cache hit (zero
+//!   oracle dispatches).
+//!
+//! The accuracy proxy is the paper's gradient-matching error
+//! `‖Σ wᵢgᵢ − Σ g‖ / ‖Σ g‖` evaluated on B's OWN gradients, so
+//! `err_reused − err_fresh` is the staleness cost of transferring the
+//! subset (Balles et al.'s caution, measured), and the wall-clock pair
+//! is the amortization win.
+//!
+//! Hard checks (exit code 1 on failure — CI runs this under `--bench`):
+//! - every reused round is a cache hit with ZERO oracle dispatches and
+//!   is bit-identical to arm A's subset;
+//! - under a small perturbation, the reused subset's matching error
+//!   stays in the fresh solve's regime (ratio + absolute tolerance);
+//! - the reused path is not slower than the per-arm path in aggregate.
+
+use gradmatch::bench_harness as bh;
+use gradmatch::data::Dataset;
+use gradmatch::engine::{SelectionCache, SelectionEngine, SelectionReport, SelectionRequest};
+use gradmatch::grads::{self, SynthGrads};
+use gradmatch::rng::Rng;
+use gradmatch::selection::Selection;
+use gradmatch::tensor::Matrix;
+
+const CHUNK: usize = 256;
+const CLASSES: usize = 10;
+const H: usize = 8;
+const D: usize = 8;
+const N: usize = 3_000;
+/// gaussian drift applied to arm B's inputs (unit-scale features)
+const DRIFT: f32 = 0.05;
+const SCOPE: u64 = 0x7A45_FE12;
+
+const STRATEGIES: [&str; 2] = ["gradmatch-rust", "gradmatch-pb-rust"];
+const BUDGETS: [usize; 2] = [150, 300];
+
+fn labels(n: usize) -> Vec<i32> {
+    (0..n).map(|i| (i % CLASSES) as i32).collect()
+}
+
+fn request(strategy: &str, budget: usize) -> SelectionRequest {
+    SelectionRequest {
+        strategy: strategy.into(),
+        budget,
+        lambda: 0.5,
+        eps: 1e-10,
+        is_valid: false,
+        seed: 42,
+        rng_tag: 7,
+        ground: (0..N).collect(),
+        shards: None,
+        sketch: None,
+    }
+}
+
+fn solve(train: &Dataset, val: &Dataset, p: usize, req: &SelectionRequest) -> (SelectionReport, usize) {
+    let mut oracle = SynthGrads::new(CHUNK, p);
+    let rep = {
+        let engine = SelectionEngine::with_oracle(&mut oracle, train, val, H, CLASSES);
+        engine.select(req).expect("round must solve")
+    };
+    let calls = oracle.grad_calls + oracle.mean_calls + oracle.gradsum_calls + oracle.eval_calls;
+    (rep, calls)
+}
+
+/// Paper-style matching error of a weighted subset against the full
+/// ground gradient sum (same metric as `benches/shard_scale.rs`).
+fn subset_error(store: &grads::GradientStore, sel: &Selection) -> f64 {
+    let p = store.g.cols;
+    let mut full = vec![0.0f64; p];
+    for r in 0..store.g.rows {
+        for (j, &v) in store.g.row(r).iter().enumerate() {
+            full[j] += v as f64;
+        }
+    }
+    let mut sub = vec![0.0f64; p];
+    for (slot, &row) in sel.indices.iter().enumerate() {
+        let w = sel.weights[slot] as f64;
+        for (j, &v) in store.g.row(row).iter().enumerate() {
+            sub[j] += w * v as f64;
+        }
+    }
+    let num: f64 = full.iter().zip(&sub).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+    let den: f64 = full.iter().map(|a| a * a).sum::<f64>().sqrt();
+    num / den.max(1e-12)
+}
+
+fn main() {
+    let p = H * CLASSES + CLASSES;
+    let mut report = bh::BenchReport::new("sweep_transfer");
+    let mut ok = true;
+
+    // arm A's data, and arm B's drifted copy of it (same labels — only
+    // the gradient landscape moves, exactly what model/lr tuning does)
+    let mut rng = Rng::new(31);
+    let xs_a: Vec<f32> = (0..N * D).map(|_| rng.gaussian_f32()).collect();
+    let xs_b: Vec<f32> = xs_a.iter().map(|&v| v + DRIFT * rng.gaussian_f32()).collect();
+    let train_a = Dataset { x: Matrix::from_vec(N, D, xs_a), y: labels(N), classes: CLASSES };
+    let train_b = Dataset { x: Matrix::from_vec(N, D, xs_b), y: labels(N), classes: CLASSES };
+    let val = {
+        let mut vrng = Rng::new(32);
+        let n_val = 300;
+        Dataset {
+            x: Matrix::from_vec(n_val, D, (0..n_val * D).map(|_| vrng.gaussian_f32()).collect()),
+            y: labels(n_val),
+            classes: CLASSES,
+        }
+    };
+
+    // B's own per-sample gradients, shared by every arm's error metric
+    let ground: Vec<usize> = (0..N).collect();
+    let mut store_oracle = SynthGrads::new(CHUNK, p);
+    let store_b = grads::per_sample_grads_with(&mut store_oracle, &train_b, &ground)
+        .expect("per-sample gradients for the error metric");
+
+    let cache = SelectionCache::new(64);
+    let mut wall_perarm = 0.0f64;
+    let mut wall_reused = 0.0f64;
+    let mut dispatches_perarm = 0usize;
+    let mut dispatches_reused = 0usize;
+    let mut deltas: Vec<f64> = Vec::new();
+
+    for strat in STRATEGIES {
+        for budget in BUDGETS {
+            let tag = format!("{strat}_{budget}");
+            bh::section(&format!("sweep_transfer — arm {tag} (n={N}, drift={DRIFT})"));
+            let req = request(strat, budget);
+
+            // arm A: the cold solve that seeds the cache
+            let (arm_a, _) = bh::timed(|| {
+                cache
+                    .round(SCOPE, &req, || {
+                        let mut oracle = SynthGrads::new(CHUNK, p);
+                        let engine =
+                            SelectionEngine::with_oracle(&mut oracle, &train_a, &val, H, CLASSES);
+                        engine.select(&req)
+                    })
+                    .expect("arm A must solve")
+            });
+            ok &= bh::shape_check(
+                &format!("{tag}: arm A is a cold store"),
+                !arm_a.stats.cache_hit && arm_a.stats.cache_stored,
+            );
+
+            // arm B, per-arm path: a fresh solve on B's own gradients
+            let ((fresh_b, fresh_calls), t_fresh) =
+                bh::timed(|| solve(&train_b, &val, p, &req));
+            // arm B, reused path: the cache replays arm A's subset
+            let mut hit_oracle = SynthGrads::new(CHUNK, p);
+            let (reused_b, t_reused) = bh::timed(|| {
+                cache
+                    .round(SCOPE, &req, || {
+                        let engine = SelectionEngine::with_oracle(
+                            &mut hit_oracle,
+                            &train_b,
+                            &val,
+                            H,
+                            CLASSES,
+                        );
+                        engine.select(&req)
+                    })
+                    .expect("reused arm must be served")
+            });
+            let hit_calls = hit_oracle.grad_calls
+                + hit_oracle.mean_calls
+                + hit_oracle.gradsum_calls
+                + hit_oracle.eval_calls;
+            ok &= bh::shape_check(
+                &format!("{tag}: reused arm is a zero-dispatch cache hit"),
+                reused_b.stats.cache_hit && hit_calls == 0,
+            );
+            ok &= bh::shape_check(
+                &format!("{tag}: reused subset is bit-identical to arm A's"),
+                reused_b.selection == arm_a.selection,
+            );
+
+            let err_fresh = subset_error(&store_b, &fresh_b.selection);
+            let err_reused = subset_error(&store_b, &reused_b.selection);
+            let delta = err_reused - err_fresh;
+            println!(
+                "  err: fresh {err_fresh:.4}  reused {err_reused:.4}  delta {delta:+.4}  \
+                 wall: per-arm {t_fresh:.3}s  reused {t_reused:.3}s"
+            );
+            // tolerance: a DRIFT-sized perturbation must not push the
+            // transferred subset out of the fresh solve's quality regime
+            const TOL_RATIO: f64 = 2.0;
+            const TOL_ABS: f64 = 0.05;
+            ok &= bh::shape_check(
+                &format!(
+                    "{tag}: reused err {err_reused:.4} <= {TOL_RATIO}x fresh {err_fresh:.4} + {TOL_ABS}"
+                ),
+                err_reused <= TOL_RATIO * err_fresh + TOL_ABS,
+            );
+
+            wall_perarm += t_fresh;
+            wall_reused += t_reused;
+            dispatches_perarm += fresh_calls;
+            dispatches_reused += hit_calls;
+            deltas.push(delta);
+            report.note(&format!("transfer_{tag}/err_fresh"), err_fresh);
+            report.note(&format!("transfer_{tag}/err_reused"), err_reused);
+            report.note(&format!("transfer_{tag}/err_delta"), delta);
+            report.note(&format!("transfer_{tag}/secs_perarm"), t_fresh);
+            report.note(&format!("transfer_{tag}/secs_reused"), t_reused);
+        }
+    }
+
+    // one headline record so the bench shows up in the timing table
+    let rec_req = request(STRATEGIES[0], BUDGETS[0]);
+    report.rec("transfer/perarm_solve", 3, || {
+        solve(&train_b, &val, p, &rec_req).0.selection.indices.len()
+    });
+    report.rec("transfer/reused_round", 3, || {
+        cache
+            .round(SCOPE, &rec_req, || panic!("primed round must hit"))
+            .expect("hit")
+            .selection
+            .indices
+            .len()
+    });
+
+    let arms = (STRATEGIES.len() * BUDGETS.len()) as f64;
+    let mean_delta = deltas.iter().sum::<f64>() / arms;
+    let (depth, hits, stores, _evictions) = cache.stats();
+    println!(
+        "  grid: {arms} arms  mean err delta {mean_delta:+.4}  \
+         wall per-arm {wall_perarm:.3}s vs reused {wall_reused:.3}s  \
+         cache depth {depth} hits {hits} stores {stores}"
+    );
+    ok &= bh::shape_check(
+        "reused grid wall-clock <= per-arm grid wall-clock",
+        wall_reused <= wall_perarm,
+    );
+    ok &= bh::shape_check(
+        &format!("every arm hit once ({hits} hits >= {arms} arms)"),
+        hits as f64 >= arms,
+    );
+    report.note("transfer/arms", arms);
+    report.note("transfer/mean_err_delta", mean_delta);
+    report.note("transfer/wall_secs_perarm", wall_perarm);
+    report.note("transfer/wall_secs_reused", wall_reused);
+    report.note(
+        "transfer/amortized_speedup",
+        wall_perarm / wall_reused.max(1e-9),
+    );
+    report.note("transfer/dispatches_perarm", dispatches_perarm as f64);
+    report.note("transfer/dispatches_reused", dispatches_reused as f64);
+    report.note("transfer/cache_hits", hits as f64);
+    report.note("transfer/checks_passed", if ok { 1.0 } else { 0.0 });
+
+    report.write(&bh::bench_out_path("BENCH_transfer.json")).expect("write bench report");
+    if !ok {
+        std::process::exit(1);
+    }
+}

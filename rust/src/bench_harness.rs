@@ -37,6 +37,8 @@ pub fn bench_config(dataset: &str, model: &str) -> ExperimentConfig {
         label_noise: 0.0,
         overlap: false,
         max_staged_rows: 0,
+        sketch_width: 0,
+        reuse_across_arms: false,
     }
 }
 

@@ -110,6 +110,7 @@ impl Cli {
             ("imbalance", "selection.is_valid"),
             ("max-staged-rows", "selection.max_staged_rows"),
             ("sketch-width", "selection.sketch_width"),
+            ("reuse-subsets", "selection.reuse_across_arms"),
             ("overlap", "experiment.overlap"),
             ("label-noise", "selection.label_noise"),
             ("artifacts", "paths.artifacts"),
@@ -158,8 +159,14 @@ USAGE:
                     K < P) with a full-width weight re-fit on the selected
                     support; composes with sharding (per-shard solves
                     sketch, the merge re-fit stays full width)
+                    --reuse-subsets true memoizes solved selection rounds
+                    in a cross-arm SelectionCache keyed by (dataset
+                    fingerprint, strategy spec, round signature): later
+                    sweep arms sharing a signature replay the subset with
+                    zero staging dispatches (off by default; see the
+                    sweep_transfer bench before flipping it)
   gradmatch sweep   [--datasets synmnist,syncifar10] [--strategies random,gradmatch-pb]
-                    [--budgets 0.05,0.1,0.3] [--epochs 60] ...
+                    [--budgets 0.05,0.1,0.3] [--epochs 60] [--reuse-subsets true] ...
   gradmatch select  one-shot engine selection round; prints SelectionReport
                     JSON (indices+weights plus staging/solve observability
                     and the engine-reuse counters).  --strategies a,b,c
@@ -176,6 +183,9 @@ USAGE:
                     `deadline_exceeded`), slow/oversized client shedding
                     (--read-timeout-ms, --max-request-bytes), optional fault
                     injection under every engine (--fault-plan \"spec\"),
+                    a daemon-wide cross-arm selection cache
+                    (--selection-cache-cap N rounds, LRU; depth + hit
+                    counters in `stats`),
                     graceful drain on SIGTERM/SIGINT or a shutdown request.
                     --smoke=true runs a self-contained daemon+client
                     round-trip on an ephemeral socket and exits (CI hook)
@@ -283,6 +293,16 @@ mod tests {
         let c = Cli::parse(&args(&["train", "--max-staged-rows", "0"])).unwrap();
         let msg = c.experiment_config().unwrap_err().to_string();
         assert!(msg.contains("selection.max_staged_rows"), "{msg}");
+    }
+
+    #[test]
+    fn reuse_subsets_flag_maps_and_defaults_off() {
+        let c = Cli::parse(&args(&["sweep"])).unwrap();
+        assert!(!c.experiment_config().unwrap().reuse_across_arms);
+        let c = Cli::parse(&args(&["sweep", "--reuse-subsets", "true"])).unwrap();
+        assert!(c.experiment_config().unwrap().reuse_across_arms);
+        let c = Cli::parse(&args(&["sweep", "--reuse-subsets=false"])).unwrap();
+        assert!(!c.experiment_config().unwrap().reuse_across_arms);
     }
 
     #[test]

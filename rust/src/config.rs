@@ -271,6 +271,13 @@ pub struct ExperimentConfig {
     /// `[n, k]` before Batch-OMP, with a full-width re-fit on the selected
     /// support (see `engine::SketchPlan` / `sketch.rs`); 0 = full width
     pub sketch_width: usize,
+    /// reuse selections across sweep arms: memoize each solved round in a
+    /// coordinator-level `engine::SelectionCache` keyed by (dataset
+    /// fingerprint, strategy spec, round signature), so later arms
+    /// sharing a signature replay the subset with zero staging dispatches
+    /// (MILO-style amortization; default off until the `sweep_transfer`
+    /// bench justifies flipping it)
+    pub reuse_across_arms: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -299,6 +306,7 @@ impl Default for ExperimentConfig {
             overlap: false,
             max_staged_rows: 0,
             sketch_width: 0,
+            reuse_across_arms: false,
         }
     }
 }
@@ -331,6 +339,7 @@ impl ExperimentConfig {
             overlap: t.bool_or("experiment.overlap", d.overlap)?,
             max_staged_rows: t.opt_in_usize("selection.max_staged_rows", d.max_staged_rows)?,
             sketch_width: t.opt_in_usize("selection.sketch_width", d.sketch_width)?,
+            reuse_across_arms: t.bool_or("selection.reuse_across_arms", d.reuse_across_arms)?,
         })
     }
 
@@ -465,6 +474,17 @@ artifacts = "artifacts"
         t.set("selection.sketch_width=256").unwrap();
         let c = ExperimentConfig::from_table(&t).unwrap();
         assert_eq!(c.sketch_width, 256);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn reuse_across_arms_parses_and_defaults_off() {
+        let c = ExperimentConfig::from_table(&Table::default()).unwrap();
+        assert!(!c.reuse_across_arms, "cross-arm subset reuse is opt-in");
+        let mut t = Table::default();
+        t.set("selection.reuse_across_arms=true").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert!(c.reuse_across_arms);
         assert!(c.validate().is_ok());
     }
 

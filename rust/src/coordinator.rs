@@ -12,14 +12,17 @@ use anyhow::{anyhow, Result};
 
 use crate::config::ExperimentConfig;
 use crate::data::{imbalance_indices, DatasetCard, Splits};
-use crate::engine::{Degradation, SelectionEngine, SelectionReport, SelectionRequest};
+use crate::engine::{
+    scope_fingerprint, Degradation, SelectionCache, SelectionEngine, SelectionReport,
+    SelectionRequest,
+};
 use crate::jsonlite::{arr, num, obj, s, Json};
 use crate::metrics::Phase;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::selection::parse_strategy;
 use crate::stats;
-use crate::trainer::{train, TrainOpts, TrainOutcome};
+use crate::trainer::{TrainOpts, TrainOutcome};
 
 /// Summary of one (strategy × budget × seed) run.
 #[derive(Clone, Debug)]
@@ -78,6 +81,14 @@ pub struct RunSummary {
     pub sketch_secs: f64,
     /// seconds sketched rounds spent on full-width weight re-fits, summed
     pub refit_secs: f64,
+    /// rounds replayed from the cross-arm `SelectionCache` — each cost
+    /// zero staging dispatches and built no engine
+    pub cache_hit_rounds: usize,
+    /// rounds whose solved selection was memoized for later arms
+    pub cache_store_rounds: usize,
+    /// wall-clock seconds the hits saved (the original solves' recorded
+    /// stage+solve cost, summed)
+    pub cache_hit_secs_saved: f64,
     /// fraction of training rows never selected (Table 10)
     pub redundant_frac: f64,
     /// (epoch, cum_secs, test_acc) convergence points (Fig. 3j/k)
@@ -131,6 +142,9 @@ impl RunSummary {
             sketched_rounds: o.round_stats.iter().filter(|r| r.sketch_width > 0).count(),
             sketch_secs: o.round_stats.iter().map(|r| r.sketch_secs).sum(),
             refit_secs: o.round_stats.iter().map(|r| r.refit_secs).sum(),
+            cache_hit_rounds: o.round_stats.iter().filter(|r| r.cache_hit).count(),
+            cache_store_rounds: o.round_stats.iter().filter(|r| r.cache_stored).count(),
+            cache_hit_secs_saved: o.round_stats.iter().map(|r| r.cache_saved_secs).sum(),
             redundant_frac: never as f64 / o.ever_selected.len().max(1) as f64,
             convergence: conv,
         }
@@ -173,6 +187,9 @@ impl RunSummary {
             ("sketched_rounds", num(self.sketched_rounds as f64)),
             ("sketch_secs", num(self.sketch_secs)),
             ("refit_secs", num(self.refit_secs)),
+            ("cache_hit_rounds", num(self.cache_hit_rounds as f64)),
+            ("cache_store_rounds", num(self.cache_store_rounds as f64)),
+            ("cache_hit_secs_saved", num(self.cache_hit_secs_saved)),
             (
                 "convergence",
                 arr(self
@@ -193,13 +210,69 @@ struct RunKey {
     budget_frac: f64,
 }
 
+/// How many solved rounds the coordinator's cross-arm [`SelectionCache`]
+/// retains (LRU past this).  A sweep arm re-selects every `R` epochs, so
+/// this covers hundreds of arms' worth of round signatures.
+const SELECTION_CACHE_ROUNDS: usize = 512;
+
+/// Fingerprint of every config field that shapes a *full-training*
+/// baseline run: the dataset/model pair, the epoch budget, and the
+/// split/optimizer/imbalance knobs (`n_train`, `lr0`, `eval_every`,
+/// `is_valid`, imbalance fractions, `label_noise`, the data seed) plus
+/// the run seed.  [`Coordinator::full_baseline`] keys its skyline cache
+/// on this — the old `(dataset, model, epochs, seed)` tuple silently
+/// served a stale skyline to sweeps varying any of the other knobs.
+pub fn baseline_fingerprint(cfg: &ExperimentConfig, seed: u64) -> u64 {
+    scope_fingerprint(
+        &format!("{}|{}", cfg.dataset, cfg.model),
+        &[
+            cfg.epochs as u64,
+            cfg.n_train as u64,
+            cfg.lr0.to_bits(),
+            cfg.eval_every as u64,
+            cfg.is_valid as u64,
+            cfg.imbalance_frac.to_bits(),
+            cfg.imbalance_keep.to_bits(),
+            cfg.label_noise.to_bits(),
+            cfg.seed,
+            seed,
+        ],
+    )
+}
+
+/// The dataset-scope half of a cross-arm cache key: everything that pins
+/// the *rows a ground index refers to* — the card, the split seed and
+/// size override, label noise, and the imbalance transform.  Two arms
+/// sharing this scope (and a round signature) see identical data, so
+/// replaying a subset between them is sound.
+fn dataset_scope(cfg: &ExperimentConfig) -> u64 {
+    scope_fingerprint(
+        &cfg.dataset,
+        &[
+            cfg.seed,
+            cfg.n_train as u64,
+            cfg.label_noise.to_bits(),
+            cfg.is_valid as u64,
+            cfg.imbalance_frac.to_bits(),
+            cfg.imbalance_keep.to_bits(),
+        ],
+    )
+}
+
 /// Orchestrates runs over one shared runtime.
 pub struct Coordinator {
     pub rt: Runtime,
     /// dataset cache keyed by (card, seed, n_override)
     splits: HashMap<(String, u64, usize), Splits>,
-    /// full-training baselines keyed by (dataset, model, epochs, seed)
-    full_cache: HashMap<(String, String, usize, u64), RunSummary>,
+    /// full-training baselines keyed by [`baseline_fingerprint`]
+    full_cache: HashMap<u64, RunSummary>,
+    /// full-training runs actually executed (cache misses) — lets tests
+    /// pin that a sweep computes its skyline exactly once
+    baseline_solves: usize,
+    /// cross-arm selection memoization, built lazily the first time a
+    /// run with `reuse_across_arms` executes (coordinator-lifetime, so
+    /// `sweep` and `run_multi` arms share it)
+    sel_cache: Option<SelectionCache>,
 }
 
 impl Coordinator {
@@ -208,7 +281,21 @@ impl Coordinator {
             rt: Runtime::load(artifacts_dir)?,
             splits: HashMap::new(),
             full_cache: HashMap::new(),
+            baseline_solves: 0,
+            sel_cache: None,
         })
+    }
+
+    /// Full-training baseline runs actually executed so far (skyline
+    /// cache misses).
+    pub fn baseline_solves(&self) -> usize {
+        self.baseline_solves
+    }
+
+    /// `(depth, hits, stores, evictions)` of the cross-arm selection
+    /// cache; zeros when no reuse-enabled run has executed yet.
+    pub fn selection_cache_stats(&self) -> (usize, u64, u64, u64) {
+        self.sel_cache.as_ref().map(|c| c.stats()).unwrap_or((0, 0, 0, 0))
     }
 
     /// Generate (or fetch cached) splits for a dataset card.
@@ -317,7 +404,15 @@ impl Coordinator {
         } else {
             None
         };
-        let (_st, outcome) = crate::trainer::train_overlapped(
+        if cfg.reuse_across_arms && self.sel_cache.is_none() {
+            self.sel_cache = Some(SelectionCache::new(SELECTION_CACHE_ROUNDS));
+        }
+        let cache = if cfg.reuse_across_arms {
+            self.sel_cache.as_ref().map(|c| (c, dataset_scope(cfg)))
+        } else {
+            None
+        };
+        let (_st, outcome) = crate::trainer::train_with_cache(
             &self.rt,
             st,
             &splits,
@@ -325,6 +420,7 @@ impl Coordinator {
             strategy.as_mut(),
             &opts,
             selector.as_mut(),
+            cache,
         )?;
         Ok(RunSummary::from_outcome(&key, seed, &outcome))
     }
@@ -370,9 +466,12 @@ impl Coordinator {
             .collect()
     }
 
-    /// Full-training skyline for (dataset, model, epochs, seed) — cached.
+    /// Full-training skyline for a config + seed — cached under
+    /// [`baseline_fingerprint`], so sweeps varying `n_train`/`lr0`/
+    /// imbalance knobs each get their own skyline instead of silently
+    /// reusing the first one computed.
     pub fn full_baseline(&mut self, cfg: &ExperimentConfig, seed: u64) -> Result<RunSummary> {
-        let key = (cfg.dataset.clone(), cfg.model.clone(), cfg.epochs, seed);
+        let key = baseline_fingerprint(cfg, seed);
         if let Some(hit) = self.full_cache.get(&key) {
             return Ok(hit.clone());
         }
@@ -380,6 +479,7 @@ impl Coordinator {
         full_cfg.strategy = "full".into();
         full_cfg.budget_frac = 1.0;
         let summary = self.run_one(&full_cfg, seed)?;
+        self.baseline_solves += 1;
         self.full_cache.insert(key, summary.clone());
         Ok(summary)
     }
@@ -400,21 +500,7 @@ impl Coordinator {
                 cfg.strategy = strat.to_string();
                 cfg.budget_frac = b;
                 let runs = self.run_multi(&cfg)?;
-                let accs: Vec<f64> = runs.iter().map(|r| r.test_acc).collect();
-                let times: Vec<f64> = runs.iter().map(|r| r.total_secs).collect();
-                let energies: Vec<f64> = runs.iter().map(|r| r.energy_kwh).collect();
-                rows.push(SweepRow {
-                    summary: runs[0].clone(),
-                    acc_mean: stats::mean(&accs),
-                    acc_std: stats::stddev(&accs),
-                    rel_err_pct: stats::relative_error_pct(
-                        stats::mean(&accs) * 100.0,
-                        full.test_acc * 100.0,
-                    ),
-                    speedup: stats::speedup(stats::mean(&times), full.total_secs),
-                    energy_ratio: full.energy_kwh / stats::mean(&energies).max(1e-12),
-                    full_acc: full.test_acc,
-                });
+                rows.push(SweepRow::from_runs(&runs, &full));
             }
         }
         Ok(rows)
@@ -434,6 +520,30 @@ pub struct SweepRow {
 }
 
 impl SweepRow {
+    /// Assemble one sweep row from a finished arm's seed-runs and the
+    /// full-training skyline — the Fig. 3 math in one place so tests can
+    /// pin it against hand-computed values: `rel_err_pct` is the
+    /// accuracy gap relative to FULL (in percent of FULL's accuracy),
+    /// `speedup` is FULL's wall-clock over the arm's mean, and
+    /// `energy_ratio` is FULL's simulated energy over the arm's mean.
+    pub fn from_runs(runs: &[RunSummary], full: &RunSummary) -> SweepRow {
+        let accs: Vec<f64> = runs.iter().map(|r| r.test_acc).collect();
+        let times: Vec<f64> = runs.iter().map(|r| r.total_secs).collect();
+        let energies: Vec<f64> = runs.iter().map(|r| r.energy_kwh).collect();
+        SweepRow {
+            summary: runs[0].clone(),
+            acc_mean: stats::mean(&accs),
+            acc_std: stats::stddev(&accs),
+            rel_err_pct: stats::relative_error_pct(
+                stats::mean(&accs) * 100.0,
+                full.test_acc * 100.0,
+            ),
+            speedup: stats::speedup(stats::mean(&times), full.total_secs),
+            energy_ratio: full.energy_kwh / stats::mean(&energies).max(1e-12),
+            full_acc: full.test_acc,
+        }
+    }
+
     /// Paper-shaped table line.
     pub fn format(&self) -> String {
         format!(
@@ -496,6 +606,9 @@ mod tests {
             sketched_rounds: 2,
             sketch_secs: 0.125,
             refit_secs: 0.0625,
+            cache_hit_rounds: 2,
+            cache_store_rounds: 1,
+            cache_hit_secs_saved: 1.5,
             redundant_frac: 0.7,
             convergence: vec![(4, 1.0, 0.8), (9, 2.0, 0.9)],
         };
@@ -518,9 +631,122 @@ mod tests {
         assert_eq!(parsed.get("sketched_rounds").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.get("sketch_secs").unwrap().as_f64(), Some(0.125));
         assert_eq!(parsed.get("refit_secs").unwrap().as_f64(), Some(0.0625));
+        assert_eq!(parsed.get("cache_hit_rounds").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("cache_store_rounds").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("cache_hit_secs_saved").unwrap().as_f64(), Some(1.5));
         assert_eq!(
             parsed.get("convergence").unwrap().as_arr().unwrap().len(),
             2
         );
+    }
+
+    /// Minimal summary for the device-free sweep-math tests below.
+    fn summary(acc: f64, total_secs: f64, energy_kwh: f64) -> RunSummary {
+        RunSummary {
+            dataset: "synmnist".into(),
+            model: "lenet_s".into(),
+            strategy: "gradmatch".into(),
+            budget_frac: 0.1,
+            seed: 42,
+            test_acc: acc,
+            train_secs: total_secs * 0.8,
+            select_secs: total_secs * 0.2,
+            total_secs,
+            energy_kwh,
+            selections: 3,
+            steps: 100,
+            mean_grad_error: None,
+            select_stage_secs: 0.0,
+            select_solve_secs: 0.0,
+            stage_dispatches: 0,
+            stage_shared_rounds: 0,
+            engine_reused_rounds: 0,
+            stage_buffer_reuses: 0,
+            select_retries: 0,
+            quarantined_rows: 0,
+            degraded_rounds: 0,
+            sync_fallback_rounds: 0,
+            stale_rejections: 0,
+            sharded_rounds: 0,
+            peak_staged_rows: 0,
+            merge_candidates: 0,
+            sketched_rounds: 0,
+            sketch_secs: 0.0,
+            refit_secs: 0.0,
+            cache_hit_rounds: 0,
+            cache_store_rounds: 0,
+            cache_hit_secs_saved: 0.0,
+            redundant_frac: 0.0,
+            convergence: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn sweep_row_math_matches_hand_computed_values() {
+        // FULL skyline: 90% accuracy, 100s, 0.02 kWh
+        let full = summary(0.90, 100.0, 0.02);
+        // arm: two seed-runs, accs 0.80/0.84, times 20s/30s, 0.004/0.006 kWh
+        let runs = vec![summary(0.80, 20.0, 0.004), summary(0.84, 30.0, 0.006)];
+        let row = SweepRow::from_runs(&runs, &full);
+        // mean acc = 0.82; rel-err = 100·(90 − 82)/90 = 8.888…%
+        assert!((row.acc_mean - 0.82).abs() < 1e-12);
+        assert!((row.rel_err_pct - 100.0 * (90.0 - 82.0) / 90.0).abs() < 1e-9);
+        // stddev (n−1): |0.80 − 0.82| = 0.02 ⇒ √(2·0.0004/1) … = 0.02828…
+        assert!((row.acc_std - (0.0008f64).sqrt()).abs() < 1e-12);
+        // speedup = 100 / mean(20, 30) = 4.0
+        assert!((row.speedup - 4.0).abs() < 1e-12);
+        // energy ratio = 0.02 / mean(0.004, 0.006) = 4.0
+        assert!((row.energy_ratio - 4.0).abs() < 1e-12);
+        assert_eq!(row.full_acc, 0.90);
+        // the row's headline summary is the FIRST seed-run
+        assert_eq!(row.summary.total_secs, 20.0);
+        // a single run pins the degenerate stats: std 0, mean = the run
+        let solo = SweepRow::from_runs(&[summary(0.9, 50.0, 0.01)], &full);
+        assert_eq!(solo.acc_std, 0.0);
+        assert!((solo.rel_err_pct - 0.0).abs() < 1e-9);
+        assert!((solo.speedup - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn baseline_fingerprint_separates_configs() {
+        let base = ExperimentConfig::default();
+        let key = baseline_fingerprint(&base, 42);
+        assert_eq!(key, baseline_fingerprint(&base.clone(), 42), "deterministic");
+        // the PR-10 regression: two configs differing ONLY in n_train
+        // must produce distinct skylines
+        let mut n_train = base.clone();
+        n_train.n_train = 512;
+        assert_ne!(key, baseline_fingerprint(&n_train, 42));
+        // and the other knobs the old (dataset, model, epochs, seed)
+        // tuple ignored
+        let mut lr = base.clone();
+        lr.lr0 = 0.01;
+        assert_ne!(key, baseline_fingerprint(&lr, 42));
+        let mut valid = base.clone();
+        valid.is_valid = true;
+        assert_ne!(key, baseline_fingerprint(&valid, 42));
+        let mut imb = base.clone();
+        imb.imbalance_keep = 0.2;
+        assert_ne!(key, baseline_fingerprint(&imb, 42));
+        let mut noise = base.clone();
+        noise.label_noise = 0.1;
+        assert_ne!(key, baseline_fingerprint(&noise, 42));
+        let mut data_seed = base.clone();
+        data_seed.seed = 7;
+        assert_ne!(key, baseline_fingerprint(&data_seed, 42));
+        // run seed and the original tuple fields still separate
+        assert_ne!(key, baseline_fingerprint(&base, 43));
+        let mut epochs = base.clone();
+        epochs.epochs = base.epochs + 1;
+        assert_ne!(key, baseline_fingerprint(&epochs, 42));
+        let mut model = base.clone();
+        model.model = "lenet_narrow".into();
+        assert_ne!(key, baseline_fingerprint(&model, 42));
+        // strategy/budget are overridden to full/1.0 by full_baseline, so
+        // they deliberately do NOT split the key
+        let mut strat = base.clone();
+        strat.strategy = "craig".into();
+        strat.budget_frac = 0.3;
+        assert_eq!(key, baseline_fingerprint(&strat, 42));
     }
 }

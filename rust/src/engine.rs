@@ -49,7 +49,7 @@
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -74,7 +74,7 @@ use crate::selection::{parse_strategy, GradSource, SelectCtx, Selection, Strateg
 /// from `max_staged_rows` (`⌈n / max_staged_rows⌉`); both zero — or an
 /// effective count of 1 — means the flat path runs unchanged (pinned
 /// bit-identical by `tests/shard_conformance.rs`).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub struct ShardPlan {
     /// explicit shard count (0 ⇒ derive from `max_staged_rows`)
     pub shards: usize,
@@ -130,7 +130,7 @@ impl ShardPlan {
 /// (pinned by `tests/sketch_conformance.rs`).  Composes with
 /// [`ShardPlan`]: per-shard solves sketch, the merge refit runs
 /// full-width.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct SketchPlan {
     /// sketch width k (projected columns); 0 ⇒ sketching disabled
     pub width: usize,
@@ -406,6 +406,15 @@ pub struct RoundStats {
     /// width (0 when `SketchPlan::refit` is off or sketching did not
     /// apply)
     pub refit_secs: f64,
+    /// the round was served from a [`SelectionCache`] hit — no engine
+    /// was built, no gradients staged, zero dispatches issued
+    pub cache_hit: bool,
+    /// the round's selection was stored into a [`SelectionCache`] for
+    /// later arms sharing its signature
+    pub cache_stored: bool,
+    /// wall-clock seconds the hit saved: the cached entry's recorded
+    /// solve cost (0 unless `cache_hit`)
+    pub cache_saved_secs: f64,
 }
 
 /// The engine's answer to one [`SelectionRequest`]: the selection itself
@@ -471,6 +480,9 @@ impl SelectionReport {
                     ("sketch_width", num(self.stats.sketch_width as f64)),
                     ("sketch_secs", num(self.stats.sketch_secs)),
                     ("refit_secs", num(self.stats.refit_secs)),
+                    ("cache_hit", Json::Bool(self.stats.cache_hit)),
+                    ("cache_stored", Json::Bool(self.stats.cache_stored)),
+                    ("cache_saved_secs", num(self.stats.cache_saved_secs)),
                 ]),
             ),
         ])
@@ -536,6 +548,11 @@ impl SelectionReport {
                 sketch_width: jusize(round, "sketch_width").unwrap_or(0),
                 sketch_secs: jf64(round, "sketch_secs").unwrap_or(0.0),
                 refit_secs: jf64(round, "refit_secs").unwrap_or(0.0),
+                // cross-arm cache counters are lenient too: pre-cache
+                // reports parse to the uncached defaults
+                cache_hit: jbool(round, "cache_hit").unwrap_or(false),
+                cache_stored: jbool(round, "cache_stored").unwrap_or(false),
+                cache_saved_secs: jf64(round, "cache_saved_secs").unwrap_or(0.0),
             },
         })
     }
@@ -593,12 +610,225 @@ fn jusize_arr(j: &Json, k: &str) -> Result<Vec<usize>> {
 }
 
 // ---------------------------------------------------------------------------
+// SelectionCache — cross-arm selection memoization (MILO-style)
+// ---------------------------------------------------------------------------
+
+/// Everything that pins a round's solved subset *except* the model being
+/// trained: the dataset scope, the strategy spec, and the round
+/// signature (seed / rng epoch-tag / budget / ground-set FNV /
+/// [`ShardPlan`] / [`SketchPlan`] / λ, ε, L-vs-L_V).  The model and
+/// learning rate are deliberately NOT part of the key — reusing one
+/// arm's subsets while tuning those is exactly the MILO-style
+/// decoupling `benches/sweep_transfer.rs` measures.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    scope: u64,
+    strategy: String,
+    seed: u64,
+    rng_tag: u64,
+    budget: usize,
+    ground_fnv: u64,
+    shards: Option<ShardPlan>,
+    sketch: Option<SketchPlan>,
+    lambda_bits: u32,
+    eps_bits: u32,
+    is_valid: bool,
+}
+
+impl CacheKey {
+    /// Key for `req` under a caller-chosen dataset `scope` fingerprint
+    /// (the coordinator hashes the dataset name + split/imbalance knobs;
+    /// the daemon hashes the tenant's run config).
+    pub fn for_request(scope: u64, req: &SelectionRequest) -> CacheKey {
+        CacheKey {
+            scope,
+            strategy: req.strategy.clone(),
+            seed: req.seed,
+            rng_tag: req.rng_tag,
+            budget: req.budget,
+            ground_fnv: ground_fingerprint(&req.ground),
+            shards: req.shards,
+            sketch: req.sketch,
+            lambda_bits: req.lambda.to_bits(),
+            eps_bits: req.eps.to_bits(),
+            is_valid: req.is_valid,
+        }
+    }
+}
+
+struct CacheEntry {
+    selection: Selection,
+    /// wall-clock the original solve cost — credited to
+    /// `RoundStats::cache_saved_secs` on a hit
+    cost_secs: f64,
+    /// logical insert/touch time driving LRU eviction
+    last_used: u64,
+}
+
+struct CacheInner {
+    cap: usize,
+    tick: u64,
+    map: HashMap<CacheKey, CacheEntry>,
+    hits: u64,
+    stores: u64,
+    evictions: u64,
+}
+
+/// Cross-arm selection memoization: a bounded LRU of solved
+/// [`Selection`]s keyed by [`CacheKey`], so the second and later sweep
+/// arms sharing a round signature replay the subset and pay **zero**
+/// staging dispatches for that round (pinned by `tests/sweep_cache.rs`).
+///
+/// The coordinator owns one per sweep/run-batch when
+/// `selection.reuse_across_arms` is on; the daemon owns one per process
+/// (`--selection-cache-cap`), scoped per tenant run config.  Interior
+/// mutability is a `Mutex` so a single instance serves the
+/// single-threaded coordinator and the daemon's worker pool alike.
+pub struct SelectionCache {
+    inner: Mutex<CacheInner>,
+}
+
+impl SelectionCache {
+    /// `cap` bounds the number of memoized rounds; 0 disables storage
+    /// (every lookup misses).
+    pub fn new(cap: usize) -> SelectionCache {
+        SelectionCache {
+            inner: Mutex::new(CacheInner {
+                cap,
+                tick: 0,
+                map: HashMap::new(),
+                hits: 0,
+                stores: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// Cached selection for `key`, touching its LRU slot.  Returns the
+    /// subset plus the wall-clock the original solve cost.
+    pub fn get(&self, key: &CacheKey) -> Option<(Selection, f64)> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                let out = (e.selection.clone(), e.cost_secs);
+                inner.hits += 1;
+                Some(out)
+            }
+            None => None,
+        }
+    }
+
+    /// Memoize a solved round.  Past `cap`, the least-recently-used
+    /// entry is evicted first; re-storing an existing key refreshes it.
+    pub fn put(&self, key: CacheKey, selection: Selection, cost_secs: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.cap == 0 {
+            return;
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        if !inner.map.contains_key(&key) {
+            while inner.map.len() >= inner.cap {
+                let oldest = inner
+                    .map
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| k.clone());
+                match oldest {
+                    Some(k) => {
+                        inner.map.remove(&k);
+                        inner.evictions += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        inner
+            .map
+            .insert(key, CacheEntry { selection, cost_secs, last_used: tick });
+        inner.stores += 1;
+    }
+
+    /// `(depth, hits, stores, evictions)` — surfaced by the daemon's
+    /// `stats` reply and the coordinator's run summary.
+    pub fn stats(&self) -> (usize, u64, u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.map.len(), inner.hits, inner.stores, inner.evictions)
+    }
+
+    /// The full hit/miss protocol for one round, shared by the trainer,
+    /// the daemon, and the conformance tests so their key/get/put logic
+    /// cannot drift: a hit replays the memoized subset as a report with
+    /// `cache_hit` set and ZERO staging work; a miss runs `solve`, then
+    /// memoizes the result — unless the solve degraded, because a
+    /// reused-last-round or random-fallback subset must never poison
+    /// later arms.
+    pub fn round<F>(
+        &self,
+        scope: u64,
+        req: &SelectionRequest,
+        solve: F,
+    ) -> Result<SelectionReport>
+    where
+        F: FnOnce() -> Result<SelectionReport>,
+    {
+        let key = CacheKey::for_request(scope, req);
+        if let Some((selection, cost_secs)) = self.get(&key) {
+            return Ok(SelectionReport {
+                strategy: req.strategy.clone(),
+                budget: req.budget,
+                selection,
+                stats: RoundStats {
+                    cache_hit: true,
+                    cache_saved_secs: cost_secs,
+                    ..RoundStats::default()
+                },
+            });
+        }
+        let mut report = solve()?;
+        if report.stats.degradation == Degradation::None {
+            let cost = report.stats.stage_secs + report.stats.solve_secs;
+            self.put(key, report.selection.clone(), cost);
+            report.stats.cache_stored = true;
+        }
+        Ok(report)
+    }
+}
+
+/// FNV-1a fold of one `u64` into a running scope hash — the coordinator
+/// and daemon build their dataset-scope fingerprints from this so the
+/// two ends hash identically simple ingredients.
+pub fn scope_fold(h: u64, v: u64) -> u64 {
+    let mut h = h ^ v;
+    h = h.wrapping_mul(0x1_0000_0000_01b3);
+    h
+}
+
+/// Scope fingerprint from a string plus numeric knobs (FNV-1a over the
+/// bytes, then each knob folded in).
+pub fn scope_fingerprint(name: &str, knobs: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in name.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    for &k in knobs {
+        h = scope_fold(h, k);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
 // RoundShared — the round-scoped staging cache + observability probe
 // ---------------------------------------------------------------------------
 
 /// FNV-1a over the ground indices — the cache key component that lets two
-/// requests share a stage only when they select from the same ground set.
-fn ground_fingerprint(ground: &[usize]) -> u64 {
+/// requests share a stage only when they select from the same ground set
+/// (and, via [`SelectionCache`], across sweep arms).
+pub fn ground_fingerprint(ground: &[usize]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &i in ground {
         h ^= i as u64;
@@ -1312,6 +1542,9 @@ mod tests {
                 sketch_width: 16,
                 sketch_secs: 0.0625,
                 refit_secs: 0.03125,
+                cache_hit: true,
+                cache_stored: true,
+                cache_saved_secs: 0.75,
             },
         };
         let parsed = Json::parse(&rep.to_json().dump()).unwrap();
@@ -1350,6 +1583,10 @@ mod tests {
         assert_eq!(rep.stats.sketch_width, 0);
         assert_eq!(rep.stats.sketch_secs, 0.0);
         assert_eq!(rep.stats.refit_secs, 0.0);
+        // and pre-cache reports parse to the uncached defaults
+        assert!(!rep.stats.cache_hit);
+        assert!(!rep.stats.cache_stored);
+        assert_eq!(rep.stats.cache_saved_secs, 0.0);
     }
 
     #[test]
@@ -1444,5 +1681,145 @@ mod tests {
         assert_eq!(a, ground_fingerprint(&[1, 2, 3]));
         assert_ne!(a, b, "order matters — stages scatter in ground order");
         assert_ne!(a, c);
+    }
+
+    fn cache_req(tag: u64) -> SelectionRequest {
+        SelectionRequest {
+            strategy: "gradmatch".into(),
+            budget: 4,
+            lambda: 0.5,
+            eps: 1e-10,
+            is_valid: false,
+            seed: 42,
+            rng_tag: tag,
+            ground: (0..16).collect(),
+            shards: None,
+            sketch: None,
+        }
+    }
+
+    fn cache_sel(mark: usize) -> Selection {
+        Selection { indices: vec![mark, mark + 1], weights: vec![1.0, 2.0], grad_error: None }
+    }
+
+    #[test]
+    fn selection_cache_hit_miss_and_counters() {
+        let cache = SelectionCache::new(8);
+        let key = CacheKey::for_request(1, &cache_req(1000));
+        assert!(cache.get(&key).is_none());
+        cache.put(key.clone(), cache_sel(3), 0.5);
+        let (sel, cost) = cache.get(&key).expect("stored entry must hit");
+        assert_eq!(sel, cache_sel(3));
+        assert_eq!(cost, 0.5);
+        // a different scope is a different dataset — must miss
+        assert!(cache.get(&CacheKey::for_request(2, &cache_req(1000))).is_none());
+        let (depth, hits, stores, evictions) = cache.stats();
+        assert_eq!((depth, hits, stores, evictions), (1, 1, 1, 0));
+    }
+
+    #[test]
+    fn selection_cache_key_is_signature_sensitive() {
+        let base = cache_req(1000);
+        let key = CacheKey::for_request(7, &base);
+        // every round-signature knob must force a distinct key
+        let mut seed = base.clone();
+        seed.seed = 43;
+        let mut tag = base.clone();
+        tag.rng_tag = 1020;
+        let mut budget = base.clone();
+        budget.budget = 5;
+        let mut strat = base.clone();
+        strat.strategy = "craig".into();
+        let mut ground = base.clone();
+        ground.ground = (0..15).collect();
+        let mut shards = base.clone();
+        shards.shards = Some(ShardPlan { shards: 2, max_staged_rows: 0 });
+        let mut sketch = base.clone();
+        sketch.sketch = Some(SketchPlan { width: 4, ..SketchPlan::default() });
+        let mut valid = base.clone();
+        valid.is_valid = true;
+        for (name, req) in [
+            ("seed", &seed),
+            ("rng_tag", &tag),
+            ("budget", &budget),
+            ("strategy", &strat),
+            ("ground", &ground),
+            ("shards", &shards),
+            ("sketch", &sketch),
+            ("is_valid", &valid),
+        ] {
+            assert_ne!(key, CacheKey::for_request(7, req), "{name} must change the key");
+        }
+        // and an identical request reproduces it exactly
+        assert_eq!(key, CacheKey::for_request(7, &base.clone()));
+    }
+
+    #[test]
+    fn selection_cache_lru_evicts_oldest() {
+        let cache = SelectionCache::new(2);
+        let k = |tag: u64| CacheKey::for_request(0, &cache_req(tag));
+        cache.put(k(1), cache_sel(1), 0.1);
+        cache.put(k(2), cache_sel(2), 0.2);
+        // touch k(1) so k(2) becomes the LRU entry
+        assert!(cache.get(&k(1)).is_some());
+        cache.put(k(3), cache_sel(3), 0.3);
+        assert!(cache.get(&k(2)).is_none(), "LRU entry must be evicted");
+        assert!(cache.get(&k(1)).is_some());
+        assert!(cache.get(&k(3)).is_some());
+        let (depth, _, _, evictions) = cache.stats();
+        assert_eq!(depth, 2);
+        assert_eq!(evictions, 1);
+        // cap 0 disables storage entirely
+        let off = SelectionCache::new(0);
+        off.put(k(1), cache_sel(1), 0.1);
+        assert!(off.get(&k(1)).is_none());
+    }
+
+    #[test]
+    fn selection_cache_round_protocol() {
+        let cache = SelectionCache::new(4);
+        let req = cache_req(1000);
+        let solved = SelectionReport {
+            strategy: req.strategy.clone(),
+            budget: req.budget,
+            selection: cache_sel(5),
+            stats: RoundStats {
+                stage_secs: 0.25,
+                solve_secs: 0.5,
+                stage_dispatches: 2,
+                ..RoundStats::default()
+            },
+        };
+        // miss: solve runs, result is stored and marked
+        let first = cache
+            .round(9, &req, || Ok(solved.clone()))
+            .unwrap();
+        assert!(first.stats.cache_stored && !first.stats.cache_hit);
+        // hit: the closure must NOT run — it would panic
+        let second = cache
+            .round(9, &req, || panic!("hit must not re-solve"))
+            .unwrap();
+        assert!(second.stats.cache_hit);
+        assert_eq!(second.selection, solved.selection, "hit replays bit-identically");
+        assert_eq!(second.stats.stage_dispatches, 0);
+        assert_eq!(second.stats.cache_saved_secs, 0.75);
+        // a degraded solve is served but never memoized
+        let mut degraded = solved.clone();
+        degraded.stats.degradation = Degradation::RandomFallback;
+        let other = cache_req(1001);
+        let served = cache.round(9, &other, || Ok(degraded.clone())).unwrap();
+        assert!(!served.stats.cache_stored);
+        assert!(cache
+            .get(&CacheKey::for_request(9, &other))
+            .is_none(), "degraded rounds must not poison the cache");
+    }
+
+    #[test]
+    fn scope_fingerprint_separates_ingredients() {
+        let a = scope_fingerprint("synmnist", &[256, 0]);
+        assert_eq!(a, scope_fingerprint("synmnist", &[256, 0]));
+        assert_ne!(a, scope_fingerprint("syncifar", &[256, 0]));
+        assert_ne!(a, scope_fingerprint("synmnist", &[128, 0]));
+        assert_ne!(a, scope_fingerprint("synmnist", &[256, 1]));
     }
 }

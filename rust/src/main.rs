@@ -86,6 +86,12 @@ fn cmd_train(cli: &Cli) -> Result<()> {
                 r.sketched_rounds, r.sketch_secs, r.refit_secs
             );
         }
+        if r.cache_hit_rounds > 0 || r.cache_store_rounds > 0 {
+            println!(
+                "            cache: hits {}  stores {}  saved {:.3}s",
+                r.cache_hit_rounds, r.cache_store_rounds, r.cache_hit_secs_saved
+            );
+        }
     }
     let name = format!(
         "train_{}_{}_{}_{}",
@@ -183,6 +189,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     opts.default_deadline_ms = parse_flag("deadline-ms", opts.default_deadline_ms)?;
     opts.read_timeout_ms = parse_flag("read-timeout-ms", opts.read_timeout_ms)?;
     opts.max_request_bytes = parse_flag("max-request-bytes", opts.max_request_bytes as u64)? as usize;
+    opts.selection_cache_cap =
+        parse_flag("selection-cache-cap", opts.selection_cache_cap as u64)? as usize;
     if let Some(spec) = cli.flag("fault-plan") {
         opts.fault_plan = Some(gradmatch::fault::FaultPlan::parse(spec)?);
     }

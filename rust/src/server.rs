@@ -21,6 +21,12 @@
 //!   corpus), an oversized line, a slow writer, or a mid-round disconnect
 //!   poisons only that connection.  Worker panics are caught and surfaced
 //!   as typed `internal` errors; the daemon stays up.
+//! - **Cross-arm memoization** — a daemon-wide [`SelectionCache`] keyed by
+//!   (tenant dataset fingerprint, strategy, round signature).  Two tenants
+//!   (or two sweep arms) issuing signature-identical rounds pay ONE solve:
+//!   the second is replayed with zero staging dispatches and never touches
+//!   the engine pool.  Bounded LRU (`--selection-cache-cap`, 0 disables);
+//!   depth + hit counters surface in `stats`.
 //! - **Graceful drain** — SIGTERM/SIGINT or a `shutdown` request stops
 //!   admission, finishes every in-flight round, flushes a final stats line,
 //!   and returns the run's [`DaemonStats`].
@@ -67,7 +73,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::data::DatasetCard;
-use crate::engine::{Degradation, PooledEngine, SelectionRequest};
+use crate::engine::{scope_fingerprint, Degradation, PooledEngine, SelectionCache, SelectionRequest};
 use crate::fault::{FaultPlan, FaultyOracle};
 use crate::grads::GradOracle;
 use crate::grads::SynthGrads;
@@ -105,6 +111,9 @@ pub struct ServeOpts {
     pub max_request_bytes: usize,
     /// per-read socket timeout shedding slow/stalled writers (0 = off)
     pub read_timeout_ms: u64,
+    /// daemon-wide cross-arm selection cache: memoized rounds kept (LRU).
+    /// 0 disables memoization entirely
+    pub selection_cache_cap: usize,
     /// wrap every pooled engine's oracle in a [`FaultyOracle`] with this
     /// plan (the stress bench's outage path)
     pub fault_plan: Option<FaultPlan>,
@@ -124,6 +133,7 @@ impl ServeOpts {
             default_deadline_ms: 30_000,
             max_request_bytes: 1 << 20,
             read_timeout_ms: 30_000,
+            selection_cache_cap: 256,
             fault_plan: None,
             install_signal_handlers: false,
         }
@@ -366,6 +376,12 @@ pub struct DaemonStats {
     pub engines_evicted: u64,
     pub retries: u64,
     pub quarantined: u64,
+    /// memoized rounds currently held by the cross-arm selection cache
+    pub cache_depth: u64,
+    /// rounds served straight from the cache (zero staging dispatches)
+    pub cache_hits: u64,
+    /// clean solves memoized for later signature-identical rounds
+    pub cache_stores: u64,
     /// per-rung degradation counts: [none, reused-last-round, random-fallback]
     pub degradation: [u64; 3],
 }
@@ -394,6 +410,9 @@ impl DaemonStats {
             ("engines_evicted", num(self.engines_evicted as f64)),
             ("retries", num(self.retries as f64)),
             ("quarantined", num(self.quarantined as f64)),
+            ("cache_depth", num(self.cache_depth as f64)),
+            ("cache_hits", num(self.cache_hits as f64)),
+            ("cache_stores", num(self.cache_stores as f64)),
             (
                 "degradation",
                 obj(vec![
@@ -410,9 +429,22 @@ struct Daemon {
     queue: Mutex<QueueState>,
     queue_cv: Condvar,
     pool: Mutex<EnginePool>,
+    /// cross-arm round memoization, daemon-wide (scoped per tenant
+    /// fingerprint inside the key, so tenants never cross-contaminate)
+    sel_cache: SelectionCache,
     stats: Counters,
     shutdown: AtomicBool,
     opts: ServeOpts,
+}
+
+/// The cache scope of one tenant configuration: every RunCfg field folds in,
+/// so two tenants share memoized rounds only when their synthetic dataset —
+/// and hence their staged gradients — are bit-identical.
+fn run_scope(cfg: &RunCfg) -> u64 {
+    scope_fingerprint(
+        &cfg.dataset,
+        &[cfg.n_train as u64, cfg.chunk as u64, cfg.h as u64, cfg.data_seed],
+    )
 }
 
 impl Daemon {
@@ -429,6 +461,7 @@ impl Daemon {
                 tick: 0,
                 slots: HashMap::new(),
             }),
+            sel_cache: SelectionCache::new(opts.selection_cache_cap),
             stats: Counters::default(),
             shutdown: AtomicBool::new(false),
             opts,
@@ -452,6 +485,7 @@ impl Daemon {
             (q.jobs.len() as u64, q.outstanding as u64, q.draining)
         };
         let pooled = self.pool.lock().unwrap().slots.len() as u64;
+        let (cache_depth, cache_hits, cache_stores, _evictions) = self.sel_cache.stats();
         let c = &self.stats;
         let get = |a: &AtomicU64| a.load(Ordering::Relaxed);
         DaemonStats {
@@ -475,6 +509,9 @@ impl Daemon {
             engines_evicted: get(&c.engines_evicted),
             retries: get(&c.retries),
             quarantined: get(&c.quarantined),
+            cache_depth: cache_depth as u64,
+            cache_hits,
+            cache_stores,
             degradation: [get(&c.deg_none), get(&c.deg_reused), get(&c.deg_random)],
         }
     }
@@ -586,41 +623,41 @@ impl Daemon {
 
     fn round(&self, job: &Job) -> Result<Json> {
         let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
-        let mut slot = self.checkout(&job.run_id, &job.cfg)?;
-        if slot.rounds > 0 {
-            slot.engine.reset_round();
-        }
         let t0 = Instant::now();
-        let solved = slot.engine.select(&job.req);
-        match solved {
-            Ok(report) => {
+        // cache consult happens BEFORE the checkout: a signature-identical
+        // round served earlier is replayed without touching the engine pool
+        let report = self.sel_cache.round(run_scope(&job.cfg), &job.req, || {
+            let mut slot = self.checkout(&job.run_id, &job.cfg)?;
+            if slot.rounds > 0 {
+                slot.engine.reset_round();
+            }
+            let solved = slot.engine.select(&job.req);
+            if solved.is_ok() {
                 slot.rounds += 1;
-                let c = &self.stats;
-                c.rounds_served.fetch_add(1, Ordering::Relaxed);
-                c.retries.fetch_add(report.stats.retries as u64, Ordering::Relaxed);
-                c.quarantined.fetch_add(report.stats.quarantined as u64, Ordering::Relaxed);
-                match report.stats.degradation {
-                    Degradation::None => c.deg_none.fetch_add(1, Ordering::Relaxed),
-                    Degradation::ReusedLastRound => c.deg_reused.fetch_add(1, Ordering::Relaxed),
-                    Degradation::RandomFallback => c.deg_random.fetch_add(1, Ordering::Relaxed),
-                };
-                let resp = obj(vec![
-                    ("type", s("report")),
-                    ("run_id", s(&job.run_id)),
-                    ("report", report.to_json()),
-                    ("queue_ms", num(queue_ms)),
-                    ("round_ms", num(t0.elapsed().as_secs_f64() * 1e3)),
-                ]);
-                self.checkin(job.run_id.clone(), slot);
-                Ok(resp)
             }
-            Err(e) => {
-                // an unknown strategy spec etc. — the engine itself is
-                // healthy, keep it pooled
-                self.checkin(job.run_id.clone(), slot);
-                Err(e)
-            }
-        }
+            // an unknown strategy spec etc. leaves the engine healthy: keep
+            // it pooled even on error.  A panicking round unwinds past this
+            // checkin and drops the slot — that engine IS discarded.
+            self.checkin(job.run_id.clone(), slot);
+            solved
+        })?;
+        let c = &self.stats;
+        // cache hits still count as served rounds — the client got a report
+        c.rounds_served.fetch_add(1, Ordering::Relaxed);
+        c.retries.fetch_add(report.stats.retries as u64, Ordering::Relaxed);
+        c.quarantined.fetch_add(report.stats.quarantined as u64, Ordering::Relaxed);
+        match report.stats.degradation {
+            Degradation::None => c.deg_none.fetch_add(1, Ordering::Relaxed),
+            Degradation::ReusedLastRound => c.deg_reused.fetch_add(1, Ordering::Relaxed),
+            Degradation::RandomFallback => c.deg_random.fetch_add(1, Ordering::Relaxed),
+        };
+        Ok(obj(vec![
+            ("type", s("report")),
+            ("run_id", s(&job.run_id)),
+            ("report", report.to_json()),
+            ("queue_ms", num(queue_ms)),
+            ("round_ms", num(t0.elapsed().as_secs_f64() * 1e3)),
+        ]))
     }
 }
 
@@ -1200,6 +1237,13 @@ pub fn smoke() -> Result<()> {
     if served < 2 {
         return Err(anyhow!("smoke: expected >= 2 rounds served, stats: {}", stats.dump()));
     }
+    let hits = stats.get("cache_hits").and_then(Json::as_usize).unwrap_or(0);
+    if hits < 1 {
+        return Err(anyhow!(
+            "smoke: the second identical select must hit the selection cache, stats: {}",
+            stats.dump()
+        ));
+    }
     client.shutdown()?;
     let snap = daemon
         .join()
@@ -1319,5 +1363,42 @@ mod tests {
         assert_eq!(a, b);
         b.n_train = 512;
         assert_ne!(a, b, "config change must not silently reuse the old engine");
+    }
+
+    #[test]
+    fn run_scope_separates_tenant_configs() {
+        let base = RunCfg {
+            dataset: "synmnist".into(),
+            n_train: 256,
+            chunk: 64,
+            h: 8,
+            data_seed: 0,
+        };
+        let scope = run_scope(&base);
+        assert_eq!(scope, run_scope(&base.clone()), "deterministic");
+        let mutations: [fn(&mut RunCfg); 5] = [
+            |c| c.dataset = "syncifar10".into(),
+            |c| c.n_train = 512,
+            |c| c.chunk = 32,
+            |c| c.h = 4,
+            |c| c.data_seed = 7,
+        ];
+        for mutate in mutations {
+            let mut other = base.clone();
+            mutate(&mut other);
+            assert_ne!(scope, run_scope(&other), "{other:?} must not share memoized rounds");
+        }
+    }
+
+    #[test]
+    fn daemon_stats_serialize_the_cache_counters() {
+        let mut st = DaemonStats::default();
+        st.cache_depth = 3;
+        st.cache_hits = 5;
+        st.cache_stores = 4;
+        let j = st.to_json();
+        assert_eq!(j.get("cache_depth").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("cache_hits").and_then(Json::as_usize), Some(5));
+        assert_eq!(j.get("cache_stores").and_then(Json::as_usize), Some(4));
     }
 }

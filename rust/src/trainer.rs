@@ -13,7 +13,9 @@
 use anyhow::Result;
 
 use crate::data::{padded_chunks, weighted_batches, Dataset, Splits};
-use crate::engine::{RoundStats, SelectionEngine, SelectionReport, SelectionRequest};
+use crate::engine::{
+    RoundStats, SelectionCache, SelectionEngine, SelectionReport, SelectionRequest,
+};
 use crate::metrics::{Phase, PhaseClock, PowerModel};
 use crate::rng::Rng;
 use crate::runtime::{ModelState, Runtime};
@@ -219,7 +221,28 @@ pub fn train_overlapped(
     ground: &[usize],
     strategy: &mut dyn Strategy,
     opts: &TrainOpts,
+    selector: Option<&mut crate::overlap::AsyncSelector>,
+) -> Result<(ModelState, TrainOutcome)> {
+    train_with_cache(rt, st, splits, ground, strategy, opts, selector, None)
+}
+
+/// [`train_overlapped`] with an optional cross-arm [`SelectionCache`]
+/// (plus the caller's dataset-scope fingerprint): a synchronous selection
+/// round whose signature is already memoized replays the cached subset
+/// *before* any model snapshot or engine exists for the round — zero
+/// staging dispatches, no host-side state marshalling.  Only synchronous
+/// rounds consult the cache (an overlapped worker's rounds are solved
+/// off the critical path already, and their stale-probe must still run).
+#[allow(clippy::too_many_arguments)]
+pub fn train_with_cache(
+    rt: &Runtime,
+    st: ModelState,
+    splits: &Splits,
+    ground: &[usize],
+    strategy: &mut dyn Strategy,
+    opts: &TrainOpts,
     mut selector: Option<&mut crate::overlap::AsyncSelector>,
+    cache: Option<(&SelectionCache, u64)>,
 ) -> Result<(ModelState, TrainOutcome)> {
     let n = ground.len();
     let budget = ((opts.budget_frac * n as f64).round() as usize).clamp(1, n);
@@ -413,15 +436,28 @@ pub fn train_overlapped(
         if (selector.is_none() && due && (strategy.is_adaptive() || !selected_once))
             || need_sync_round
         {
-            let st_snap = fs.to_state()?;
             sel_req.rng_tag = 1000 + epoch as u64;
+            // the cache consult happens BEFORE the snapshot: a hit round
+            // never marshals host-side state and never builds an engine
             let report = clock.time(Phase::Select, || {
-                if engine.is_none() {
-                    engine = Some(SelectionEngine::new(rt, st_snap, &splits.train, &splits.val));
-                } else {
-                    engine.as_mut().unwrap().reset_round(Some(st_snap));
+                let fs = &mut fs;
+                let engine = &mut engine;
+                let strategy = &mut *strategy;
+                let sel_req = &sel_req;
+                let solve = move || {
+                    let st_snap = fs.to_state()?;
+                    if engine.is_none() {
+                        *engine =
+                            Some(SelectionEngine::new(rt, st_snap, &splits.train, &splits.val));
+                    } else {
+                        engine.as_mut().unwrap().reset_round(Some(st_snap));
+                    }
+                    engine.as_ref().unwrap().select_with(strategy, sel_req)
+                };
+                match cache {
+                    Some((c, scope)) => c.round(scope, sel_req, solve),
+                    None => solve(),
                 }
-                engine.as_ref().unwrap().select_with(&mut *strategy, &sel_req)
             })?;
             let SelectionReport { selection: sel, stats, .. } = report;
             if !sel.indices.is_empty() {

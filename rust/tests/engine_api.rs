@@ -205,6 +205,7 @@ fn report_and_request_roundtrip_through_jsonlite() {
             retries: 2,
             quarantined: 1,
             degradation: Degradation::RandomFallback,
+            ..RoundStats::default()
         },
     };
     let back =

@@ -1,0 +1,428 @@
+//! Conformance for the cross-arm [`SelectionCache`] (MILO-style subset
+//! reuse), pinned device-free on the counting oracle:
+//!
+//! - **zero-dispatch hits** — the first arm of a signature-shared round
+//!   pays the full `⌈n/chunk⌉` staging cost; the second arm replays the
+//!   memoized subset bit-identically with ZERO oracle dispatches (the
+//!   solve closure is never even invoked);
+//! - **key sensitivity** — seed, rng_tag, budget, strategy spec,
+//!   [`ShardPlan`], [`SketchPlan`], and the dataset scope each force a
+//!   miss: no signature ingredient may silently alias another arm;
+//! - **LRU bound** — past the cap the least-recently-used entry is
+//!   evicted and re-misses, while a touched entry survives;
+//! - **transparency** — the cache wrapper's miss path returns exactly
+//!   the direct engine solve (selection and dispatch counts) for every
+//!   `strategy_specs()` spec, so `reuse_across_arms = false` — which
+//!   skips the wrapper entirely — cannot change any result;
+//!
+//! plus live-runtime coverage (skips without HLO artifacts) for the
+//! coordinator plumbing: re-running an identical arm hits the cache and
+//! reproduces the run, `runs = 0` clamps to one seed-run, and the full
+//! skyline is solved exactly once per `baseline_fingerprint`.
+
+mod common;
+
+use gradmatch::config::ExperimentConfig;
+use gradmatch::coordinator::Coordinator;
+use gradmatch::data::Dataset;
+use gradmatch::engine::{
+    SelectionCache, SelectionEngine, SelectionRequest, ShardPlan, SketchPlan,
+};
+use gradmatch::grads::SynthGrads;
+use gradmatch::rng::Rng;
+use gradmatch::selection::strategy_specs;
+use gradmatch::tensor::Matrix;
+
+const CHUNK: usize = 16;
+const BATCH: usize = 4;
+/// An arbitrary dataset-scope fingerprint shared by "arms" in these tests.
+const SCOPE: u64 = 0xA17E_5C0F;
+
+/// Balanced synthetic dataset sized exactly `n` (`y = i mod classes`) —
+/// keeps the `⌈n/chunk⌉` dispatch arithmetic exact.
+fn balanced(seed: u64, n: usize, classes: usize, d: usize) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let y: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
+    let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian_f32()).collect());
+    Dataset { x, y, classes }
+}
+
+/// Imbalanced fixture (heavy head, long tail) so per-class and scoring
+/// strategies all have work in the transparency sweep.
+fn imbalanced(seed: u64, classes: usize, d: usize) -> Dataset {
+    let mut y: Vec<i32> = Vec::new();
+    for cls in 0..classes {
+        let n_c = match cls % 3 {
+            0 => 37,
+            1 => 11,
+            _ => 4,
+        };
+        y.extend(std::iter::repeat(cls as i32).take(n_c));
+    }
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut y);
+    let n = y.len();
+    let x = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.gaussian_f32()).collect());
+    Dataset { x, y, classes }
+}
+
+fn request(strategy: &str, ground: Vec<usize>, budget: usize) -> SelectionRequest {
+    SelectionRequest {
+        strategy: strategy.into(),
+        budget,
+        lambda: 0.5,
+        eps: 1e-10,
+        is_valid: false,
+        seed: 42,
+        rng_tag: 7,
+        ground,
+        shards: None,
+        sketch: None,
+    }
+}
+
+/// Oracle dispatch total across every kind of call — a cache hit must
+/// leave all of them at zero.
+fn dispatches(o: &SynthGrads) -> usize {
+    o.grad_calls + o.mean_calls + o.gradsum_calls + o.eval_calls
+}
+
+#[test]
+fn second_arm_is_served_with_zero_staging_dispatches() {
+    // arm 1 pays the full staging pass; arm 2 (fresh engine + oracle,
+    // same round signature) must not touch its oracle at all
+    let (classes, h, d) = (3usize, 2usize, 5usize);
+    let p = h * classes + classes;
+    let n = 96usize;
+    let train = balanced(81, n, classes, d);
+    let val = balanced(82, 24, classes, d);
+    let ground: Vec<usize> = (0..n).collect();
+    let req = request("gradmatch", ground, n / 4);
+    let cache = SelectionCache::new(64);
+
+    let mut oracle1 = SynthGrads::new(CHUNK, p);
+    let cold = cache
+        .round(SCOPE, &req, || {
+            let engine = SelectionEngine::with_oracle(&mut oracle1, &train, &val, h, classes);
+            engine.select(&req)
+        })
+        .unwrap();
+    assert!(!cold.stats.cache_hit);
+    assert!(cold.stats.cache_stored, "a clean solve must be memoized");
+    assert_eq!(oracle1.grad_calls, n.div_ceil(CHUNK), "cold arm pays ⌈n/chunk⌉");
+    assert_eq!(cold.stats.stage_dispatches, n.div_ceil(CHUNK));
+
+    let mut oracle2 = SynthGrads::new(CHUNK, p);
+    let hit = cache
+        .round(SCOPE, &req, || {
+            let engine = SelectionEngine::with_oracle(&mut oracle2, &train, &val, h, classes);
+            engine.select(&req)
+        })
+        .unwrap();
+    assert!(hit.stats.cache_hit);
+    assert!(!hit.stats.cache_stored);
+    assert_eq!(dispatches(&oracle2), 0, "a hit performs ZERO staging dispatches");
+    assert_eq!(hit.stats.stage_dispatches, 0);
+    assert_eq!(
+        hit.selection, cold.selection,
+        "the replayed subset must be bit-identical to the cold solve"
+    );
+    assert_eq!(hit.strategy, cold.strategy);
+    assert_eq!(hit.budget, cold.budget);
+    assert!(hit.stats.cache_saved_secs >= 0.0);
+
+    // the sharded path is memoized the same way: cold pays the per-shard
+    // passes + merge re-stage, the hit pays nothing
+    let mut sharded_req = req.clone();
+    sharded_req.shards = Some(ShardPlan { shards: 2, max_staged_rows: 0 });
+    let mut oracle3 = SynthGrads::new(CHUNK, p);
+    let sharded_cold = cache
+        .round(SCOPE, &sharded_req, || {
+            let engine = SelectionEngine::with_oracle(&mut oracle3, &train, &val, h, classes);
+            engine.select(&sharded_req)
+        })
+        .unwrap();
+    assert!(!sharded_cold.stats.cache_hit, "a shard plan is its own signature");
+    assert!(dispatches(&oracle3) > 0);
+    let mut oracle4 = SynthGrads::new(CHUNK, p);
+    let sharded_hit = cache
+        .round(SCOPE, &sharded_req, || {
+            let engine = SelectionEngine::with_oracle(&mut oracle4, &train, &val, h, classes);
+            engine.select(&sharded_req)
+        })
+        .unwrap();
+    assert!(sharded_hit.stats.cache_hit);
+    assert_eq!(dispatches(&oracle4), 0);
+    assert_eq!(sharded_hit.selection, sharded_cold.selection);
+}
+
+#[test]
+fn every_signature_ingredient_forces_a_miss() {
+    let (classes, h, d) = (3usize, 3usize, 5usize);
+    let p = h * classes + classes;
+    let n = 64usize;
+    let train = balanced(91, n, classes, d);
+    let val = balanced(92, 24, classes, d);
+    let ground: Vec<usize> = (0..n).collect();
+    let base = request("gradmatch", ground.clone(), n / 4);
+    let cache = SelectionCache::new(64);
+
+    // prime the cache with the base signature
+    let mut oracle = SynthGrads::new(CHUNK, p);
+    cache
+        .round(SCOPE, &base, || {
+            let engine = SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+            engine.select(&base)
+        })
+        .unwrap();
+
+    // each single-ingredient variation must re-pay real staging work
+    let variations: Vec<(&str, u64, SelectionRequest)> = vec![
+        ("seed", SCOPE, {
+            let mut r = base.clone();
+            r.seed = 43;
+            r
+        }),
+        ("rng_tag", SCOPE, {
+            let mut r = base.clone();
+            r.rng_tag = 8;
+            r
+        }),
+        ("budget", SCOPE, {
+            let mut r = base.clone();
+            r.budget = n / 4 - 1;
+            r
+        }),
+        ("strategy", SCOPE, {
+            let mut r = base.clone();
+            r.strategy = "craig".into();
+            r
+        }),
+        ("shards", SCOPE, {
+            let mut r = base.clone();
+            r.shards = Some(ShardPlan { shards: 2, max_staged_rows: 0 });
+            r
+        }),
+        ("sketch", SCOPE, {
+            let mut r = base.clone();
+            r.sketch = Some(SketchPlan { width: 3, refit: true, seed_salt: 5 });
+            r
+        }),
+        ("scope", SCOPE ^ 1, base.clone()),
+    ];
+    for (what, scope, req) in variations {
+        let mut oracle = SynthGrads::new(CHUNK, p);
+        let report = cache
+            .round(scope, &req, || {
+                let engine =
+                    SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+                engine.select(&req)
+            })
+            .unwrap();
+        assert!(!report.stats.cache_hit, "changing '{what}' must force a miss");
+        assert!(dispatches(&oracle) > 0, "'{what}' variation must re-pay staging");
+    }
+
+    // and the unchanged signature still hits — the misses above did not
+    // evict or corrupt the original entry
+    let hit = cache
+        .round(SCOPE, &base, || panic!("identical signature must hit"))
+        .unwrap();
+    assert!(hit.stats.cache_hit);
+}
+
+#[test]
+fn lru_cap_evicts_the_oldest_entry_which_re_misses() {
+    let (classes, h, d) = (3usize, 2usize, 5usize);
+    let p = h * classes + classes;
+    let n = 48usize;
+    let train = balanced(101, n, classes, d);
+    let val = balanced(102, 24, classes, d);
+    let ground: Vec<usize> = (0..n).collect();
+    let key = |tag: u64| {
+        let mut r = request("gradmatch", ground.clone(), n / 4);
+        r.rng_tag = tag;
+        r
+    };
+    let solve = |req: &SelectionRequest, cache: &SelectionCache| {
+        let mut oracle = SynthGrads::new(CHUNK, p);
+        let report = cache
+            .round(SCOPE, req, || {
+                let engine =
+                    SelectionEngine::with_oracle(&mut oracle, &train, &val, h, classes);
+                engine.select(req)
+            })
+            .unwrap();
+        (report, dispatches(&oracle))
+    };
+
+    let cache = SelectionCache::new(2);
+    let (r1, c1) = solve(&key(1), &cache);
+    let (_r2, c2) = solve(&key(2), &cache);
+    assert!(!r1.stats.cache_hit && c1 > 0 && c2 > 0);
+
+    // touch key 1 so key 2 becomes the LRU victim
+    let touched = cache
+        .round(SCOPE, &key(1), || panic!("key 1 must still be cached"))
+        .unwrap();
+    assert!(touched.stats.cache_hit);
+
+    // a third key over cap 2 evicts key 2 (oldest by last use), not key 1
+    let (_r3, c3) = solve(&key(3), &cache);
+    assert!(c3 > 0);
+    let again = cache
+        .round(SCOPE, &key(1), || panic!("the touched entry must survive eviction"))
+        .unwrap();
+    assert!(again.stats.cache_hit);
+    let (r2_again, c2_again) = solve(&key(2), &cache);
+    assert!(
+        !r2_again.stats.cache_hit && c2_again > 0,
+        "the evicted entry must re-pay the full solve"
+    );
+    let (_depth, _hits, _stores, evictions) = cache.stats();
+    assert!(evictions >= 1, "the cap must have evicted at least once");
+}
+
+#[test]
+fn miss_path_is_bit_transparent_for_every_spec() {
+    // reuse_across_arms = false skips the cache wrapper entirely; this
+    // pins the complementary invariant — the wrapper's MISS path is the
+    // direct engine solve, selection- and dispatch-identical — so turning
+    // the flag on cannot change any first-arm result either
+    let (classes, h, d) = (5usize, 3usize, 6usize);
+    let p = h * classes + classes;
+    let train = imbalanced(111, classes, d);
+    let val = imbalanced(112, classes, d);
+    let n = train.len();
+    let ground: Vec<usize> = (0..n).collect();
+    let budget = n / 4;
+
+    for spec in strategy_specs() {
+        let req = request(spec, ground.clone(), budget);
+
+        let mut direct_oracle = SynthGrads::with_batch(CHUNK, p, BATCH);
+        let direct = {
+            let engine =
+                SelectionEngine::with_oracle(&mut direct_oracle, &train, &val, h, classes);
+            engine.select(&req).unwrap()
+        };
+
+        let cache = SelectionCache::new(64); // fresh per spec: always a miss
+        let mut wrapped_oracle = SynthGrads::with_batch(CHUNK, p, BATCH);
+        let wrapped = cache
+            .round(SCOPE, &req, || {
+                let engine =
+                    SelectionEngine::with_oracle(&mut wrapped_oracle, &train, &val, h, classes);
+                engine.select(&req)
+            })
+            .unwrap();
+
+        assert_eq!(
+            wrapped.selection, direct.selection,
+            "{spec}: the wrapper's miss path must not perturb the solve"
+        );
+        assert_eq!(
+            (
+                wrapped_oracle.grad_calls,
+                wrapped_oracle.mean_calls,
+                wrapped_oracle.gradsum_calls,
+                wrapped_oracle.eval_calls
+            ),
+            (
+                direct_oracle.grad_calls,
+                direct_oracle.mean_calls,
+                direct_oracle.gradsum_calls,
+                direct_oracle.eval_calls
+            ),
+            "{spec}: miss-path dispatch counts must equal the direct solve"
+        );
+        assert_eq!(wrapped.stats.stage_dispatches, direct.stats.stage_dispatches, "{spec}");
+        assert!(!wrapped.stats.cache_hit, "{spec}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// live-runtime coordinator plumbing (skips without HLO artifacts)
+// ---------------------------------------------------------------------------
+
+fn mini_cfg(strategy: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: "synmnist".into(),
+        model: "lenet_narrow".into(),
+        strategy: strategy.into(),
+        budget_frac: 0.10,
+        epochs: 8,
+        r_interval: 4,
+        lr0: 0.05,
+        n_train: 800,
+        eval_every: 0,
+        artifacts_dir: common::artifacts_dir(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn rerunning_an_identical_arm_hits_the_cache_and_reproduces_the_run() {
+    if !common::runtime_available() {
+        return;
+    }
+    let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
+    let mut cfg = mini_cfg("gradmatch-pb");
+    cfg.reuse_across_arms = true;
+    let r1 = coord.run_one(&cfg, 42).unwrap();
+    assert!(r1.cache_store_rounds >= 1, "first arm must memoize its rounds");
+    assert_eq!(r1.cache_hit_rounds, 0, "nothing to hit on a cold cache");
+    let r2 = coord.run_one(&cfg, 42).unwrap();
+    assert!(r2.cache_hit_rounds >= 1, "the identical arm must replay rounds");
+    assert_eq!(
+        r2.test_acc, r1.test_acc,
+        "replayed subsets must reproduce the run exactly"
+    );
+    assert!(r2.cache_hit_secs_saved >= 0.0);
+    let (depth, hits, stores, _evictions) = coord.selection_cache_stats();
+    assert!(depth >= 1);
+    assert!(hits >= r2.cache_hit_rounds as u64);
+    assert!(stores >= r1.cache_store_rounds as u64);
+}
+
+#[test]
+fn reuse_off_keeps_the_cache_untouched() {
+    if !common::runtime_available() {
+        return;
+    }
+    let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
+    let cfg = mini_cfg("gradmatch-pb"); // reuse_across_arms defaults off
+    let r = coord.run_one(&cfg, 42).unwrap();
+    assert_eq!(r.cache_hit_rounds, 0);
+    assert_eq!(r.cache_store_rounds, 0);
+    assert_eq!(coord.selection_cache_stats(), (0, 0, 0, 0));
+}
+
+#[test]
+fn sweep_clamps_runs_and_solves_the_skyline_once_per_fingerprint() {
+    if !common::runtime_available() {
+        return;
+    }
+    let mut coord = Coordinator::new(&common::artifacts_dir()).unwrap();
+    let mut cfg = mini_cfg("gradmatch-pb");
+    cfg.epochs = 4;
+    cfg.r_interval = 2;
+    cfg.runs = 0; // run_multi must clamp to one seed-run per arm
+    let rows = coord.sweep(&cfg, &["random", "gradmatch-pb"], &[0.1, 0.3]).unwrap();
+    assert_eq!(rows.len(), 4);
+    assert_eq!(coord.baseline_solves(), 1, "one sweep, one full skyline");
+    for row in &rows {
+        assert_eq!(row.acc_std, 0.0, "a single clamped run has no spread");
+        assert_eq!(row.full_acc, rows[0].full_acc, "all arms share the skyline");
+    }
+    // a second sweep over the same base config reuses the cached skyline
+    let rows2 = coord.sweep(&cfg, &["random"], &[0.1]).unwrap();
+    assert_eq!(coord.baseline_solves(), 1);
+    assert_eq!(rows2[0].full_acc, rows[0].full_acc);
+    // the PR-10 regression: differing only in n_train must re-solve — the
+    // old (dataset, model, epochs, seed) key silently reused the skyline
+    let mut other = cfg.clone();
+    other.n_train = 600;
+    coord.sweep(&other, &["random"], &[0.1]).unwrap();
+    assert_eq!(coord.baseline_solves(), 2, "n_train must split the skyline cache");
+}

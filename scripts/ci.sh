@@ -10,14 +10,16 @@
 #                           # daemon_stress throughput/tail-latency bench
 #                           # and the shard_scale memory-budget bench
 #                           # (its notes diffed vs rust/BENCH_shard.json)
+#                           # and the sweep_transfer reuse bench (notes
+#                           # diffed vs rust/BENCH_transfer.json)
 #
 # Tier-1 (enforced): cargo build --release && cargo test -q.
 # The suite also runs with --no-default-features (the pure-host math
 # core, no `xla` stub at all) so the feature seam cannot rot; the
 # fault-injection suite runs explicitly so a filtered default run can
 # never silently drop it; and the engine-coverage suites
-# (strategy_conformance, engine_reuse, shard/sketch_conformance) are
-# gated warning-free.
+# (strategy_conformance, engine_reuse, shard/sketch_conformance,
+# sweep_cache) are gated warning-free.
 # fmt/clippy run when the components are installed; a missing component
 # is reported but does not fail the gate (offline toolchains may omit
 # them), while an installed component failing DOES fail.
@@ -61,12 +63,15 @@ cargo test -q --test shard_conformance
 echo "== cargo test -q --test sketch_conformance (sketched-selection suite) =="
 cargo test -q --test sketch_conformance
 
-echo "== warnings gate: strategy_conformance + engine_reuse + shard_conformance + sketch_conformance =="
+echo "== cargo test -q --test sweep_cache (cross-arm SelectionCache suite) =="
+cargo test -q --test sweep_cache
+
+echo "== warnings gate: strategy_conformance + engine_reuse + shard_conformance + sketch_conformance + sweep_cache =="
 # cargo replays cached warnings, so a --no-run rebuild of just the
 # suites surfaces any warning attributed to their files; fail on match.
-conf_warn=$(cargo test --test strategy_conformance --test engine_reuse --test shard_conformance --test sketch_conformance --no-run 2>&1 \
+conf_warn=$(cargo test --test strategy_conformance --test engine_reuse --test shard_conformance --test sketch_conformance --test sweep_cache --no-run 2>&1 \
     | grep -E "^warning" -A 3 \
-    | grep -E "tests/(strategy_conformance|engine_reuse|shard_conformance|sketch_conformance)\.rs" || true)
+    | grep -E "tests/(strategy_conformance|engine_reuse|shard_conformance|sketch_conformance|sweep_cache)\.rs" || true)
 if [[ -n "$conf_warn" ]]; then
     echo "$conf_warn"
     echo "ci: FAIL — warnings in the engine-coverage suites"
@@ -176,6 +181,56 @@ if [[ "$bench" == "1" ]]; then
             exit 1
         fi
         echo "ci: shard bench notes within tolerance"
+    fi
+    echo "== sweep transfer: reused-vs-per-arm subsets across the strategies x budgets grid =="
+    # hard checks live in the bench itself (exit 1 on failure): every
+    # reused round is a zero-dispatch cache hit bit-identical to the
+    # seeding arm, and its matching error stays in the fresh solve's
+    # regime under drift
+    old_transfer=$(git show HEAD:rust/BENCH_transfer.json 2>/dev/null || true)
+    cargo bench --bench sweep_transfer
+    echo "== bench gate: sweep_transfer vs committed rust/BENCH_transfer.json =="
+    if [[ -z "$old_transfer" ]]; then
+        echo "ci: no committed BENCH_transfer.json at HEAD — skipping transfer notes diff"
+    else
+        tbootstrap=0
+        grep -q '"snapshot_bootstrap"' <<<"$old_transfer" && tbootstrap=1
+        tfail=0
+        while read -r key new; do
+            oldv=$(notes <<<"$old_transfer" | awk -v k="$key" '$1==k{print $2; exit}')
+            [[ -z "$oldv" || "$oldv" == "null" || "$new" == "null" ]] && continue
+            case "$key" in
+                *speedup*)
+                    bad=$(awk -v n="$new" -v o="$oldv" 'BEGIN{print (n < 0.75*o) ? 1 : 0}')
+                    kind="amortization regressed (new $new < 0.75 x old $oldv)" ;;
+                *dispatches*)
+                    # note the reused baseline is 0, so ANY dispatch on
+                    # the reused path fails here — that is the contract
+                    bad=$(awk -v n="$new" -v o="$oldv" 'BEGIN{print (n > 1.25*o) ? 1 : 0}')
+                    kind="dispatch count grew (new $new > 1.25 x old $oldv)" ;;
+                *err*)
+                    bad=$(awk -v n="$new" -v o="$oldv" 'BEGIN{print (n > 1.25*o + 0.01) ? 1 : 0}')
+                    kind="matching error grew (new $new > 1.25 x old $oldv + 0.01)" ;;
+                *) continue ;;   # raw timings etc. are machine-dependent
+            esac
+            if [[ "$bad" == "1" ]]; then
+                if [[ "$tbootstrap" == "1" ]]; then
+                    echo "ci: WARN (bootstrap snapshot) — $key: $kind"
+                else
+                    echo "ci: FAIL — $key: $kind"
+                    tfail=1
+                fi
+            fi
+        done < <(notes < rust/BENCH_transfer.json)
+        if [[ "$tfail" == "1" ]]; then
+            echo "ci: FAIL — bench regression vs committed BENCH_transfer.json"
+            exit 1
+        fi
+        echo "ci: transfer bench notes within tolerance"
+        if [[ "$tbootstrap" == "1" ]]; then
+            echo "ci: NOTE — committed transfer snapshot is still the hand-seeded bootstrap;"
+            echo "    commit the freshly written rust/BENCH_transfer.json to arm the perf gate"
+        fi
     fi
 fi
 
